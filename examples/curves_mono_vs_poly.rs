@@ -1,0 +1,78 @@
+//! Experiment E1 (paper Figures 3-4): learning curves of the two
+//! implementations — mono (MonoBeast-style, in-process) vs poly
+//! (PolyBeast-style, TCP env servers) — on the same envs with the same
+//! seeds.  The paper's claim is the two are *on par*; the CSV output
+//! feeds scripts/plot_curves.py, and the summary table printed at the
+//! end states the final returns side by side.
+//!
+//! ```bash
+//! cargo run --release --example curves_mono_vs_poly            # quick (catch+gridworld)
+//! cargo run --release --example curves_mono_vs_poly -- --full  # 4 envs, longer
+//! ```
+
+use torchbeast::config::{Mode, TrainConfig};
+use torchbeast::coordinator;
+
+struct RunSpec {
+    tag: &'static str,
+    steps: u64,
+}
+
+fn run(tag: &str, mode: Mode, steps: u64, seed: u64) -> anyhow::Result<(f64, f64)> {
+    let cfg = TrainConfig {
+        artifact_dir: format!("artifacts/{tag}").into(),
+        mode,
+        num_actors: 6,
+        total_steps: steps,
+        seed,
+        log_interval: 0,
+        log_path: Some(format!("runs/e1_{tag}_{}_s{seed}.csv", mode.as_str()).into()),
+        ..TrainConfig::default()
+    };
+    let report = coordinator::train(&cfg)?;
+    let last = report.history.last().map(|r| r.mean_return).unwrap_or(f64::NAN);
+    Ok((last, report.fps))
+}
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let specs: Vec<RunSpec> = if full {
+        vec![
+            RunSpec { tag: "catch", steps: 600 },
+            RunSpec { tag: "gridworld", steps: 600 },
+            RunSpec { tag: "breakout", steps: 400 },
+            RunSpec { tag: "space_invaders", steps: 400 },
+        ]
+    } else {
+        vec![
+            RunSpec { tag: "catch", steps: 400 },
+            RunSpec { tag: "gridworld", steps: 400 },
+        ]
+    };
+    let seeds: &[u64] = if full { &[1, 2] } else { &[1] };
+
+    println!("== E1: mono vs poly learning curves (paper Fig. 3-4 analog) ==");
+    println!(
+        "{:<16} {:>5} {:>6} {:>12} {:>12} {:>10}",
+        "env", "seed", "steps", "mono_return", "poly_return", "|diff|"
+    );
+    let mut max_rel_gap: f64 = 0.0;
+    for spec in &specs {
+        for &seed in seeds {
+            let (mono_ret, _) = run(spec.tag, Mode::Mono, spec.steps, seed)?;
+            let (poly_ret, _) = run(spec.tag, Mode::Poly, spec.steps, seed)?;
+            let diff = (mono_ret - poly_ret).abs();
+            println!(
+                "{:<16} {:>5} {:>6} {:>12.3} {:>12.3} {:>10.3}",
+                spec.tag, seed, spec.steps, mono_ret, poly_ret, diff
+            );
+            // normalize the gap by the score scale of the env
+            let scale = mono_ret.abs().max(poly_ret.abs()).max(0.5);
+            max_rel_gap = max_rel_gap.max(diff / scale);
+        }
+    }
+    println!("\nmax relative final-return gap: {:.1}%", 100.0 * max_rel_gap);
+    println!("curves: runs/e1_*.csv  (plot with scripts/plot_curves.py)");
+    println!("paper claim: the two implementations are on par (Fig. 3-4).");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Distributed (poly) demo: environment servers in *separate
+//! processes*, learner connecting over TCP — the paper's §5.2
+//! multi-process PolyBeast topology on one machine.
+//!
+//! ```bash
+//! make artifacts && cargo build --release
+//! cargo run --release --example distributed
+//! ```
+//!
+//! Spawns two `torchbeast env-server` child processes, waits for them
+//! to listen, then trains with `--mode poly --server_addresses [...]`.
+//! The same binary + flags work across machines: run the servers
+//! remotely and list their host:port here.
+
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use torchbeast::config::{Mode, TrainConfig};
+use torchbeast::coordinator;
+
+struct ServerProc {
+    child: Child,
+}
+
+impl Drop for ServerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_server(port: u16) -> anyhow::Result<ServerProc> {
+    // target/{release,debug}/torchbeast next to this example binary
+    let me = std::env::current_exe()?;
+    let bin = me
+        .parent() // .../target/release/examples
+        .and_then(|p| p.parent()) // .../target/release
+        .map(|p| p.join("torchbeast"))
+        .filter(|p| p.exists())
+        .ok_or_else(|| anyhow::anyhow!("torchbeast binary not built (cargo build --release)"))?;
+    let child = Command::new(bin)
+        .args(["env-server", "--listen", &format!("127.0.0.1:{port}")])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()?;
+    Ok(ServerProc { child })
+}
+
+fn wait_listening(addr: &str) -> bool {
+    for _ in 0..100 {
+        if std::net::TcpStream::connect(addr).is_ok() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    false
+}
+
+fn main() -> anyhow::Result<()> {
+    let ports = [39117u16, 39118u16];
+    println!("== distributed poly demo: 2 env-server processes + learner ==");
+    let _servers: Vec<ServerProc> = ports
+        .iter()
+        .map(|&p| spawn_server(p))
+        .collect::<anyhow::Result<_>>()?;
+    let addresses: Vec<String> = ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
+    for a in &addresses {
+        anyhow::ensure!(wait_listening(a), "server {a} did not come up");
+        println!("env-server up: {a}");
+    }
+
+    let mut cfg = TrainConfig {
+        artifact_dir: "artifacts/catch".into(),
+        mode: Mode::Poly,
+        num_actors: 8,
+        total_steps: 300,
+        seed: 5,
+        server_addresses: addresses,
+        log_interval: 50,
+        log_path: Some("runs/distributed_catch.csv".into()),
+        ..TrainConfig::default()
+    };
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    cfg.apply_args(&args)?;
+
+    let report = coordinator::train(&cfg)?;
+    println!(
+        "\ntrained over TCP: {} frames at {:.0} fps, {} episodes",
+        report.frames, report.fps, report.episodes
+    );
+    let last = report.history.last().map(|r| r.mean_return).unwrap_or(f64::NAN);
+    println!("final mean return: {last:.3}");
+    println!(
+        "dynamic batcher: mean batch {:.2}, p50 wait {:.0} µs",
+        report.batcher.mean_batch_size(),
+        report.batcher.wait_summary().p50()
+    );
+    println!("(servers are killed on exit)");
+    Ok(())
+}

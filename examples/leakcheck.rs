@@ -1,0 +1,61 @@
+//! Memory-regression harness for the runtime hot paths.
+//!
+//! The published `xla` crate's Literal-based `execute` leaks every
+//! input device buffer per call (xla_rs.cc: `buffer.release()` with no
+//! owner) — it OOM-killed hour-long training runs before the runtime
+//! switched to caller-owned buffers + `execute_b` (EXPERIMENTS.md
+//! §Perf #5).  This binary watches RSS across tight loops of each hot
+//! path so the regression stays visible:
+//!
+//! ```bash
+//! cargo run --release --example leakcheck -- literal   # Literal create/drop
+//! cargo run --release --example leakcheck -- infer     # 20k inference calls
+//! cargo run --release --example leakcheck -- learner   # 300 learner steps
+//! ```
+//!
+//! Healthy output grows by at most a few MB; hundreds of MB means a
+//! leak is back.
+
+use torchbeast::runtime::tensor::*;
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap();
+    let pages: f64 = s.split_whitespace().nth(1).unwrap().parse().unwrap();
+    pages * 4096.0 / 1e6
+}
+fn main() -> anyhow::Result<()> {
+    let which = std::env::args().nth(1).unwrap_or_default();
+    match which.as_str() {
+        "literal" => {
+            println!("before {:.0} MB", rss_mb());
+            for _ in 0..200_000 {
+                let l = f32s_to_literal(&vec![0.5f32; 64], &[8, 8])?;
+                std::hint::black_box(&l);
+            }
+            println!("after literal x200k: {:.0} MB", rss_mb());
+        }
+        "infer" => {
+            let mut e = torchbeast::runtime::InferenceEngine::load(std::path::Path::new("artifacts/catch"))?;
+            let p = e.init_params(1)?;
+            e.set_params(&p, 1)?;
+            let obs = vec![0.1f32; 8 * 50];
+            println!("before {:.0} MB", rss_mb());
+            for _ in 0..20_000 {
+                std::hint::black_box(e.infer(&obs, 8)?);
+            }
+            println!("after infer x20k: {:.0} MB", rss_mb());
+        }
+        "learner" => {
+            let mut e = torchbeast::runtime::LearnerEngine::load(std::path::Path::new("artifacts/catch"))?;
+            e.init_params(1)?;
+            let m = e.manifest.clone();
+            let batch = torchbeast::runtime::LearnerBatch::zeros(&m);
+            println!("before {:.0} MB", rss_mb());
+            for _ in 0..300 {
+                std::hint::black_box(e.step(&batch)?);
+            }
+            println!("after learner x300: {:.0} MB", rss_mb());
+        }
+        _ => eprintln!("usage: literal|infer|learner"),
+    }
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! Watch a policy play: ASCII-renders episodes of any env, driven by a
+//! trained checkpoint (greedy) or a random policy.
+//!
+//! ```bash
+//! cargo run --release --example play -- --env minatar/breakout --episodes 2
+//! cargo run --release --example play -- --artifact_dir artifacts/catch \
+//!     --init_checkpoint runs/ckpt_test.ckpt --fps 15
+//! ```
+//!
+//! Rendering: one glyph per cell; when several channels overlap the
+//! highest-numbered channel wins. Channel glyphs are per-env-agnostic
+//! (`#`, `o`, `.`, `*`, ...), enough to eyeball behaviour.
+
+use std::io::Write;
+
+use torchbeast::agent::argmax_action;
+use torchbeast::config::TrainConfig;
+use torchbeast::env::{make_env, Environment};
+use torchbeast::runtime::{checkpoint, InferenceEngine};
+use torchbeast::util::rng::Rng;
+
+const GLYPHS: &[u8] = b"#o.*%@+x~$";
+
+fn render(obs: &[f32], c: usize, h: usize, w: usize) -> String {
+    let mut out = String::new();
+    for y in 0..h {
+        for x in 0..w {
+            let mut glyph = b' ';
+            for ch in 0..c {
+                if obs[ch * h * w + y * w + x] > 0.5 {
+                    glyph = GLYPHS[ch % GLYPHS.len()];
+                }
+            }
+            out.push(glyph as char);
+            out.push(' ');
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut env_name = "minatar/breakout".to_string();
+    let mut episodes = 1usize;
+    let mut fps = 10u64;
+    let mut cfg = TrainConfig::default();
+    let mut passthrough = Vec::new();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--env" => {
+                i += 1;
+                env_name = args[i].clone();
+            }
+            "--episodes" => {
+                i += 1;
+                episodes = args[i].parse()?;
+            }
+            "--fps" => {
+                i += 1;
+                fps = args[i].parse()?;
+            }
+            other => {
+                passthrough.push(other.to_string());
+                if let Some(next) = args.get(i + 1) {
+                    if !next.starts_with("--") && !other.contains('=') {
+                        i += 1;
+                        passthrough.push(next.clone());
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    cfg.apply_args(&passthrough)?;
+
+    // Policy: checkpoint -> greedy via the inference artifact; else random.
+    let engine = match &cfg.init_checkpoint {
+        Some(path) => {
+            let mut e = InferenceEngine::load(&cfg.artifact_dir)?;
+            let params = checkpoint::load(path, &e.manifest)?;
+            e.set_params(&params, 1)?;
+            env_name = e.manifest.env.clone();
+            println!("policy: greedy from {}", path.display());
+            Some(e)
+        }
+        None => {
+            println!("policy: random (pass --init_checkpoint for a trained one)");
+            None
+        }
+    };
+
+    let mut env = make_env(&env_name, 42)?;
+    let spec = env.spec().clone();
+    let mut obs = vec![0.0f32; spec.obs_len()];
+    let mut rng = Rng::new(7);
+    let frame_time = std::time::Duration::from_millis(1000 / fps.max(1));
+
+    for ep in 0..episodes {
+        env.reset(&mut obs);
+        let mut ep_return = 0.0f32;
+        let mut steps = 0;
+        loop {
+            let action = match &engine {
+                Some(e) => {
+                    let (logits, _) = e.infer(&obs, 1)?;
+                    argmax_action(&logits)
+                }
+                None => rng.below(spec.num_actions),
+            };
+            let st = env.step(action, &mut obs);
+            ep_return += st.reward;
+            steps += 1;
+            print!(
+                "\x1b[2J\x1b[H== {} | episode {} step {} | action {} | return {:.1} ==\n{}",
+                spec.name,
+                ep + 1,
+                steps,
+                action,
+                ep_return,
+                render(&obs, spec.channels, spec.height, spec.width)
+            );
+            std::io::stdout().flush()?;
+            std::thread::sleep(frame_time);
+            if st.done || steps > 1000 {
+                println!("episode over: return {ep_return:.1} in {steps} steps");
+                std::thread::sleep(std::time::Duration::from_millis(600));
+                break;
+            }
+        }
+    }
+    Ok(())
+}

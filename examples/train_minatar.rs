@@ -1,0 +1,83 @@
+//! Headline end-to-end driver (EXPERIMENTS.md E1/E7): train the
+//! paper's Figure-2 MinAtar agent on MinAtar Breakout for a few
+//! hundred learner steps, logging the full loss/return curve.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example train_minatar                 # breakout
+//! cargo run --release --example train_minatar -- \
+//!     --artifact_dir artifacts/space_invaders                 # E7: swap env
+//! ```
+//!
+//! The paper's Figure 1-2 point is that switching environments/models
+//! is a two-line change; here it is a *zero*-line change — the
+//! artifact bundle carries both the env choice and the net, and this
+//! driver only points at a different bundle.
+
+use torchbeast::config::TrainConfig;
+use torchbeast::coordinator;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = TrainConfig {
+        artifact_dir: "artifacts/breakout".into(),
+        num_actors: 8,
+        total_steps: 400,
+        seed: 11,
+        log_interval: 25,
+        log_path: None, // set below from the artifact tag
+        ..TrainConfig::default()
+    };
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    cfg.apply_args(&args)?;
+    if cfg.log_path.is_none() {
+        let tag = cfg
+            .artifact_dir
+            .file_name()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_else(|| "run".into());
+        cfg.log_path = Some(format!("runs/train_{tag}.csv").into());
+    }
+
+    println!("== train_minatar: IMPALA ({}) ==", cfg.artifact_dir.display());
+    let report = coordinator::train(&cfg)?;
+
+    println!("\n-- curve (every 25 learner steps) --");
+    println!(
+        "{:>6} {:>9} {:>12} {:>10} {:>10} {:>10}",
+        "step", "frames", "loss", "pg", "entropy", "return"
+    );
+    for row in report.history.iter().step_by(25) {
+        println!(
+            "{:>6} {:>9} {:>12.2} {:>10.2} {:>10.2} {:>10.3}",
+            row.step,
+            row.frames,
+            row.stats.total_loss(),
+            row.stats.pg_loss(),
+            row.stats.entropy_loss(),
+            row.mean_return
+        );
+    }
+
+    let first = report
+        .history
+        .iter()
+        .find(|r| !r.mean_return.is_nan())
+        .map(|r| r.mean_return)
+        .unwrap_or(f64::NAN);
+    let last = report.history.last().map(|r| r.mean_return).unwrap_or(f64::NAN);
+    println!(
+        "\n{} frames at {:.0} fps; {} episodes; return {first:.3} -> {last:.3}",
+        report.frames, report.fps, report.episodes
+    );
+    println!(
+        "dynamic batcher: mean batch {:.2} ({} full / {} timeout)",
+        report.batcher.mean_batch_size(),
+        report.batcher.full_batches,
+        report.batcher.timeout_batches
+    );
+    println!("learner step mean: {:?}", report.learner_step_time);
+    if let Some(p) = &cfg.log_path {
+        println!("curve CSV: {}", p.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,354 @@
+"""AOT exporter: lower the L2/L1 computations to HLO text + manifest.
+
+This is the *only* place Python touches the system: ``make artifacts``
+runs it once per training config; afterwards the Rust binary is fully
+self-contained.  Per config it emits into ``artifacts/<tag>/``:
+
+    init.hlo.txt       (seed i32[])                    -> (params...,)
+    inference.hlo.txt  (params..., obs[Bi,C,H,W])      -> (logits[Bi,A], baseline[Bi])
+    learner.hlo.txt    (params..., opt..., rollout...) -> (params'..., opt'..., stats[6])
+    vtrace.hlo.txt     (log_rhos, discounts, rewards,
+                        values [T,B], bootstrap [B])   -> (vs, pg_adv)   # bench/E8
+    manifest.json      ordered leaf names/shapes/dtypes + all baked dims
+
+Interchange is HLO *text*, not ``HloModuleProto.serialize()`` — jax
+>= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+All shapes are static: T, B, the inference batch Bi, obs shape and
+num_actions are baked at export time and recorded in the manifest.
+The Rust dynamic batcher pads partial inference batches to Bi and
+slices results (one compiled executable instead of one per batch size,
+the same trade TorchBeast's batcher makes with its maximum batch size).
+
+Usage:
+    python -m compile.aot --env catch --model minatar --out-dir ../artifacts
+    python -m compile.aot --all   # every config in DEFAULT_CONFIGS
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import envspec, impala_loss, model as model_lib, optim
+from .kernels import vtrace_pallas
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def leaf_entries(tree) -> List[Dict[str, Any]]:
+    """Flatten a pytree to [{name, shape, dtype}] in tree_flatten order."""
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in paths:
+        name = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out.append(
+            {"name": name, "shape": list(leaf.shape), "dtype": str(leaf.dtype)}
+        )
+    return out
+
+
+STATS_NAMES = [
+    "total_loss",
+    "pg_loss",
+    "baseline_loss",
+    "entropy_loss",
+    "mean_rho",
+    "grad_norm",
+]
+
+
+class Exporter:
+    def __init__(
+        self,
+        env: str,
+        model_name: str,
+        unroll_length: int,
+        batch_size: int,
+        inference_batch: int,
+        hp: Dict[str, Any],
+    ):
+        self.env = env
+        self.spec = envspec.get(env)
+        self.model = model_lib.make_model(
+            model_name, self.spec.obs_shape, self.spec.num_actions
+        )
+        self.model_name = model_name
+        self.T = unroll_length
+        self.B = batch_size
+        self.Bi = inference_batch
+        self.hp = hp
+        self.opt_cfg = optim.OptConfig(
+            lr=hp["learning_rate"],
+            decay=hp["rmsprop_decay"],
+            eps=hp["rmsprop_eps"],
+            momentum=hp["rmsprop_momentum"],
+            grad_clip=hp["grad_clip"],
+            total_steps=hp["total_steps"],
+        )
+        self.update_fn = optim.UPDATES[hp.get("optimizer", "rmsprop")]
+
+        # Example pytrees (shapes only — lowering is shape-driven).
+        key = jax.random.PRNGKey(0)
+        self.params0 = self.model.init(key)
+        self.opt0 = optim.init_state(self.params0)
+        self.treedef_p = jax.tree_util.tree_structure(self.params0)
+        self.treedef_o = jax.tree_util.tree_structure(self.opt0)
+
+    # -- jitted functions ---------------------------------------------------
+
+    def init_fn(self, seed):
+        key = jax.random.PRNGKey(seed)
+        params = self.model.init(key)
+        return tuple(jax.tree_util.tree_leaves(params))
+
+    def inference_fn(self, *args):
+        n_p = self.treedef_p.num_leaves
+        params = jax.tree_util.tree_unflatten(self.treedef_p, args[:n_p])
+        obs = args[n_p]
+        logits, baseline = self.model.forward(params, obs)
+        return (logits, baseline)
+
+    def learner_fn(self, *args, use_pallas: bool = True):
+        n_p = self.treedef_p.num_leaves
+        n_o = self.treedef_o.num_leaves
+        params = jax.tree_util.tree_unflatten(self.treedef_p, args[:n_p])
+        opt_state = jax.tree_util.tree_unflatten(
+            self.treedef_o, args[n_p : n_p + n_o]
+        )
+        obs, actions, rewards, dones, behavior_logits = args[n_p + n_o :]
+
+        def loss_fn(p):
+            return impala_loss.rollout_loss(
+                self.model,
+                p,
+                obs,
+                actions,
+                rewards,
+                dones,
+                behavior_logits,
+                discounting=self.hp["discounting"],
+                baseline_cost=self.hp["baseline_cost"],
+                entropy_cost=self.hp["entropy_cost"],
+                clip_rho_threshold=self.hp["clip_rho"],
+                clip_c_threshold=self.hp["clip_c"],
+                reward_clip=self.hp["reward_clip"],
+                use_pallas=use_pallas,
+            )
+
+        (_, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt, gnorm = self.update_fn(params, grads, opt_state, self.opt_cfg)
+        stats_vec = jnp.stack(
+            [
+                stats.total_loss,
+                stats.pg_loss,
+                stats.baseline_loss,
+                stats.entropy_loss,
+                stats.mean_rho,
+                gnorm,
+            ]
+        )
+        return tuple(jax.tree_util.tree_leaves(new_params)) + tuple(
+            jax.tree_util.tree_leaves(new_opt)
+        ) + (stats_vec,)
+
+    def vtrace_fn(self, log_rhos, discounts, rewards, values, bootstrap):
+        vt = vtrace_pallas.vtrace_from_importance_weights(
+            log_rhos,
+            discounts,
+            rewards,
+            values,
+            bootstrap,
+            clip_rho_threshold=self.hp["clip_rho"],
+            clip_c_threshold=self.hp["clip_c"],
+        )
+        return (vt.vs, vt.pg_advantages)
+
+    # -- lowering -----------------------------------------------------------
+
+    def _shape(self, arr):
+        return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+
+    def inference_sizes(self) -> list:
+        """Power-of-2 batch buckets up to Bi (perf: a partial batch of n
+        runs in the smallest compiled size >= n instead of padding all
+        the way to Bi — see EXPERIMENTS.md §Perf)."""
+        sizes, s = [], 1
+        while s < self.Bi:
+            sizes.append(s)
+            s *= 2
+        sizes.append(self.Bi)
+        return sizes
+
+    def lower_all(self) -> Dict[str, str]:
+        C, H, W = self.spec.obs_shape
+        A = self.spec.num_actions
+        T, B, Bi = self.T, self.B, self.Bi
+        f32, i32 = jnp.float32, jnp.int32
+
+        p_shapes = [self._shape(x) for x in jax.tree_util.tree_leaves(self.params0)]
+        o_shapes = [self._shape(x) for x in jax.tree_util.tree_leaves(self.opt0)]
+
+        init = jax.jit(self.init_fn).lower(jax.ShapeDtypeStruct((), i32))
+        inference_mods = {
+            f"inference_{n}": jax.jit(self.inference_fn).lower(
+                *p_shapes, jax.ShapeDtypeStruct((n, C, H, W), f32)
+            )
+            for n in self.inference_sizes()
+        }
+        learner_shapes = (
+            *p_shapes,
+            *o_shapes,
+            jax.ShapeDtypeStruct((T + 1, B, C, H, W), f32),
+            jax.ShapeDtypeStruct((T, B), i32),
+            jax.ShapeDtypeStruct((T, B), f32),
+            jax.ShapeDtypeStruct((T, B), f32),
+            jax.ShapeDtypeStruct((T, B, A), f32),
+        )
+        learner = jax.jit(self.learner_fn).lower(*learner_shapes)
+        # Ablation variant: plain-XLA (scan) V-trace instead of the
+        # Pallas kernel — bench target `ablation` compares the two.
+        learner_nopallas = jax.jit(
+            functools.partial(self.learner_fn, use_pallas=False)
+        ).lower(*learner_shapes)
+        vtrace = jax.jit(self.vtrace_fn).lower(
+            *(jax.ShapeDtypeStruct((T, B), f32) for _ in range(4)),
+            jax.ShapeDtypeStruct((B,), f32),
+        )
+        out = {
+            "init": to_hlo_text(init),
+            "learner": to_hlo_text(learner),
+            "learner_nopallas": to_hlo_text(learner_nopallas),
+            "vtrace": to_hlo_text(vtrace),
+        }
+        for name, mod in inference_mods.items():
+            out[name] = to_hlo_text(mod)
+        # back-compat alias: inference.hlo.txt is the full-Bi module
+        out["inference"] = out[f"inference_{Bi}"]
+        return out
+
+    def manifest(self) -> Dict[str, Any]:
+        C, H, W = self.spec.obs_shape
+        A = self.spec.num_actions
+        return {
+            "version": 1,
+            "env": self.env,
+            "model": self.model_name,
+            "obs_shape": [C, H, W],
+            "num_actions": A,
+            "unroll_length": self.T,
+            "batch_size": self.B,
+            "inference_batch": self.Bi,
+            "inference_sizes": self.inference_sizes(),
+            "param_count": model_lib.param_count(self.params0),
+            "hyperparams": self.hp,
+            "params": leaf_entries(self.params0),
+            "opt_state": leaf_entries(self.opt0),
+            "stats_names": STATS_NAMES,
+            "learner_extra_inputs": [
+                {"name": "observations", "shape": [self.T + 1, self.B, C, H, W], "dtype": "float32"},
+                {"name": "actions", "shape": [self.T, self.B], "dtype": "int32"},
+                {"name": "rewards", "shape": [self.T, self.B], "dtype": "float32"},
+                {"name": "dones", "shape": [self.T, self.B], "dtype": "float32"},
+                {"name": "behavior_logits", "shape": [self.T, self.B, A], "dtype": "float32"},
+            ],
+            "vmem_bytes_estimate": vtrace_pallas.vmem_bytes(self.T),
+        }
+
+
+# IMPALA Table G.1 hyperparameters (shallow-model column), with the
+# paper-noted exceptions for small envs; see configs/*.yaml for the
+# runtime-side mirror.
+TABLE_G1 = {
+    "optimizer": "rmsprop",
+    "learning_rate": 6e-4,
+    "rmsprop_decay": 0.99,
+    "rmsprop_eps": 0.01,
+    "rmsprop_momentum": 0.0,
+    "grad_clip": 40.0,
+    "discounting": 0.99,
+    "baseline_cost": 0.5,
+    "entropy_cost": 0.0006,
+    "clip_rho": 1.0,
+    "clip_c": 1.0,
+    "reward_clip": 1.0,
+    "total_steps": 0,
+}
+
+DEFAULT_CONFIGS = [
+    # (tag, env, model, T, B, Bi, hp_overrides)
+    ("catch", "catch", "minatar", 20, 8, 16, {"entropy_cost": 0.01}),
+    ("gridworld", "gridworld", "minatar", 20, 8, 16, {"entropy_cost": 0.01}),
+    ("breakout", "minatar/breakout", "minatar", 20, 16, 32, {"entropy_cost": 0.01, "learning_rate": 3e-4}),
+    ("space_invaders", "minatar/space_invaders", "minatar", 20, 16, 32, {"entropy_cost": 0.01, "learning_rate": 3e-4}),
+    ("breakout_deep", "minatar/breakout", "impala_deep", 20, 8, 16, {"entropy_cost": 0.01, "learning_rate": 3e-4}),
+]
+
+
+def export_config(tag, env, model_name, T, B, Bi, hp_over, out_dir) -> str:
+    hp = dict(TABLE_G1, **hp_over)
+    ex = Exporter(env, model_name, T, B, Bi, hp)
+    texts = ex.lower_all()
+    d = os.path.join(out_dir, tag)
+    os.makedirs(d, exist_ok=True)
+    digest = hashlib.sha256()
+    for name, text in texts.items():
+        path = os.path.join(d, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest.update(text.encode())
+    man = ex.manifest()
+    man["hlo_sha256"] = digest.hexdigest()
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=2)
+    total = sum(len(t) for t in texts.values())
+    print(f"[aot] {tag}: {len(texts)} modules, {total/1e6:.2f} MB HLO, "
+          f"{man['param_count']} params -> {d}")
+    return d
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--config", action="append", default=None,
+                    help="tag from DEFAULT_CONFIGS; repeatable; default: all")
+    ap.add_argument("--env", default=None, help="custom single export: env name")
+    ap.add_argument("--model", default="minatar")
+    ap.add_argument("--unroll-length", type=int, default=20)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--inference-batch", type=int, default=16)
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+
+    out = os.path.abspath(args.out_dir)
+    if args.env:
+        tag = args.tag or args.env.replace("/", "_")
+        export_config(tag, args.env, args.model, args.unroll_length,
+                      args.batch_size, args.inference_batch, {}, out)
+        return
+    want = set(args.config) if args.config else None
+    for tag, env, mdl, T, B, Bi, hp in DEFAULT_CONFIGS:
+        if want is None or tag in want:
+            export_config(tag, env, mdl, T, B, Bi, hp, out)
+
+
+if __name__ == "__main__":
+    main()

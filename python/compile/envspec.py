@@ -1,0 +1,43 @@
+"""Environment specs shared between the Python compile path and Rust.
+
+This table is the *contract*: `aot.py` bakes obs_shape/num_actions into
+the HLO artifacts and records them in manifest.json; the Rust env suite
+(`rust/src/env`) implements the same shapes.  `rust/src/runtime/manifest.rs`
+asserts the manifest matches the chosen env at startup, and
+`python/tests/test_envspec.py` asserts this file matches the constants
+in the Rust sources, so the two sides cannot silently drift.
+
+Observation layout is channels-first (C, H, W) float32 in [0, 1].
+MinAtar games follow Young & Tian (2019): 10x10 grids, one channel per
+object type (incl. "trail" channels that encode motion, which is why
+frame stacking defaults to 1 for them).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+
+class EnvSpec(NamedTuple):
+    obs_shape: Tuple[int, int, int]  # (C, H, W)
+    num_actions: int
+
+
+ENV_SPECS: Dict[str, EnvSpec] = {
+    # Classic control-style test envs
+    "catch": EnvSpec((1, 10, 5), 3),  # left / stay / right
+    "gridworld": EnvSpec((3, 8, 8), 4),  # up / down / left / right
+    # MinAtar suite (paper Figures 1-2 adaptation target)
+    "minatar/breakout": EnvSpec((4, 10, 10), 6),
+    "minatar/space_invaders": EnvSpec((6, 10, 10), 6),
+    "minatar/asterix": EnvSpec((4, 10, 10), 6),
+    "minatar/freeway": EnvSpec((7, 10, 10), 3),  # minimal action set
+    "minatar/seaquest": EnvSpec((10, 10, 10), 6),
+}
+
+
+def get(name: str) -> EnvSpec:
+    try:
+        return ENV_SPECS[name]
+    except KeyError:
+        raise ValueError(f"unknown env {name!r}; have {sorted(ENV_SPECS)}") from None

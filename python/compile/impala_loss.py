@@ -1,0 +1,143 @@
+"""IMPALA loss: V-trace policy gradient + baseline + entropy.
+
+Matches TorchBeast's ``polybeast.py`` compute_loss / the IMPALA paper
+Section 4:
+
+    L = L_pg + baseline_cost * L_v + entropy_cost * L_H
+    L_pg = - sum_t log pi(a_t|x_t) * pg_adv_t          (pg_adv from V-trace)
+    L_v  = 1/2 sum_t (vs_t - V(x_t))^2
+    L_H  = sum_t sum_a pi(a|x_t) log pi(a|x_t)          (negative entropy)
+
+Sums (not means) over the T*B batch, matching TorchBeast/IMPALA
+conventions — the learning-rate in Table G.1 assumes summed losses.
+
+The rollout convention follows TorchBeast: a rollout carries T+1
+observations/dones and T actions/rewards/behaviour-logits; the last
+observation only provides the bootstrap value.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import vtrace_pallas
+
+
+class LossStats(NamedTuple):
+    total_loss: jax.Array
+    pg_loss: jax.Array
+    baseline_loss: jax.Array
+    entropy_loss: jax.Array
+    mean_rho: jax.Array  # mean clipped importance weight (staleness signal)
+
+
+def impala_loss(
+    target_logits: jax.Array,  # [T, B, A] from current params
+    target_values: jax.Array,  # [T, B]   V(x_t) current params
+    bootstrap_value: jax.Array,  # [B]     V(x_T) current params
+    behavior_logits: jax.Array,  # [T, B, A] recorded by actors
+    actions: jax.Array,  # [T, B] int32
+    rewards: jax.Array,  # [T, B]
+    discounts: jax.Array,  # [T, B] gamma * (1 - done)
+    *,
+    baseline_cost: float = 0.5,
+    entropy_cost: float = 0.0006,
+    clip_rho_threshold: float = 1.0,
+    clip_c_threshold: float = 1.0,
+    reward_clip: float = 0.0,  # 0 disables; >0 clamps to [-c, c]
+    use_pallas: bool = True,
+) -> Tuple[jax.Array, LossStats]:
+    if reward_clip > 0.0:
+        rewards = jnp.clip(rewards, -reward_clip, reward_clip)
+
+    vtrace_fn = vtrace_pallas.vtrace_from_logits if use_pallas else ref.vtrace_from_logits
+    vt = vtrace_fn(
+        behavior_logits=behavior_logits,
+        target_logits=target_logits,
+        actions=actions,
+        discounts=discounts,
+        rewards=rewards,
+        values=jax.lax.stop_gradient(target_values),
+        bootstrap_value=jax.lax.stop_gradient(bootstrap_value),
+        clip_rho_threshold=clip_rho_threshold,
+        clip_c_threshold=clip_c_threshold,
+    )
+
+    log_pi = jax.nn.log_softmax(target_logits, axis=-1)
+    log_pi_a = jnp.take_along_axis(log_pi, actions[..., None], axis=-1)[..., 0]
+
+    pg_loss = -jnp.sum(log_pi_a * vt.pg_advantages)
+    baseline_loss = 0.5 * jnp.sum(jnp.square(vt.vs - target_values))
+    pi = jnp.exp(log_pi)
+    entropy_loss = jnp.sum(pi * log_pi)  # = -entropy
+
+    total = pg_loss + baseline_cost * baseline_loss + entropy_cost * entropy_loss
+
+    log_rhos = log_pi_a - jnp.take_along_axis(
+        jax.nn.log_softmax(behavior_logits, axis=-1), actions[..., None], axis=-1
+    )[..., 0]
+    mean_rho = jnp.mean(jnp.minimum(clip_rho_threshold, jnp.exp(log_rhos)))
+
+    stats = LossStats(
+        total_loss=total,
+        pg_loss=pg_loss,
+        baseline_loss=baseline_loss,
+        entropy_loss=entropy_loss,
+        mean_rho=mean_rho,
+    )
+    return total, stats
+
+
+def rollout_loss(
+    model,
+    params,
+    observations: jax.Array,  # [T+1, B, C, H, W]
+    actions: jax.Array,  # [T, B]
+    rewards: jax.Array,  # [T, B]
+    dones: jax.Array,  # [T, B] f32 {0,1}: episode ended at step t
+    behavior_logits: jax.Array,  # [T, B, A]
+    *,
+    discounting: float = 0.99,
+    baseline_cost: float = 0.5,
+    entropy_cost: float = 0.0006,
+    clip_rho_threshold: float = 1.0,
+    clip_c_threshold: float = 1.0,
+    reward_clip: float = 1.0,
+    use_pallas: bool = True,
+) -> Tuple[jax.Array, LossStats]:
+    """Full learner loss over a TorchBeast-layout rollout batch.
+
+    Folds time into the batch for the net forward (the paper's T*B merge),
+    then splits back to time-major for V-trace.
+    """
+    tp1, b = observations.shape[0], observations.shape[1]
+    t = tp1 - 1
+    flat = observations.reshape((tp1 * b,) + observations.shape[2:])
+    logits_flat, values_flat = model.forward(params, flat)
+    logits = logits_flat.reshape(tp1, b, -1)
+    values = values_flat.reshape(tp1, b)
+
+    target_logits = logits[:t]
+    target_values = values[:t]
+    bootstrap_value = values[t]
+    discounts = (1.0 - dones) * discounting
+
+    return impala_loss(
+        target_logits,
+        target_values,
+        bootstrap_value,
+        behavior_logits,
+        actions,
+        rewards,
+        discounts,
+        baseline_cost=baseline_cost,
+        entropy_cost=entropy_cost,
+        clip_rho_threshold=clip_rho_threshold,
+        clip_c_threshold=clip_c_threshold,
+        reward_clip=reward_clip,
+        use_pallas=use_pallas,
+    )

@@ -1,0 +1,107 @@
+"""Pure-jnp V-trace reference — the correctness oracle for the Pallas kernel.
+
+Direct transcription of IMPALA (Espeholt et al., 2018), Section 4.1.
+Given a rollout of length T produced by a *behaviour* policy mu while
+the learner holds the *target* policy pi, V-trace defines corrected
+value targets
+
+    vs_t = V(x_t) + sum_{k=t}^{t+n-1} gamma^{k-t} (prod_{i=t}^{k-1} c_i) delta_k V
+    delta_k V = rho_k (r_k + gamma V(x_{k+1}) - V(x_k))
+    rho_k = min(rho_bar, pi(a_k|x_k)/mu(a_k|x_k))
+    c_k   = min(c_bar,  pi(a_k|x_k)/mu(a_k|x_k))
+
+computed here with the standard reverse recursion
+
+    vs_t = V(x_t) + delta_t V + gamma_t c_t (vs_{t+1} - V(x_{t+1}))
+
+and policy-gradient advantages
+
+    pg_adv_t = rho_t (r_t + gamma_t vs_{t+1} - V(x_t)).
+
+`discounts` is gamma * (1 - done): episode boundaries zero the
+bootstrap, exactly like TorchBeast's ``~done * gamma``.
+
+All functions take time-major [T, B] arrays, matching the paper's
+learner input layout (Section 2, "Actors, learner and rollouts").
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VTraceReturns(NamedTuple):
+    vs: jax.Array  # [T, B] corrected value targets
+    pg_advantages: jax.Array  # [T, B] advantages for the policy gradient
+
+
+def log_probs_from_logits_and_actions(logits: jax.Array, actions: jax.Array) -> jax.Array:
+    """log pi(a_t | x_t) for time-major logits [T, B, A] and actions [T, B]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.take_along_axis(logp, actions[..., None], axis=-1)[..., 0]
+
+
+def vtrace_from_importance_weights(
+    log_rhos: jax.Array,  # [T, B] log(pi/mu) for the taken actions
+    discounts: jax.Array,  # [T, B] gamma * (1 - done)
+    rewards: jax.Array,  # [T, B]
+    values: jax.Array,  # [T, B] V(x_t) under the *current* params
+    bootstrap_value: jax.Array,  # [B]   V(x_T)
+    clip_rho_threshold: float = 1.0,
+    clip_c_threshold: float = 1.0,
+) -> VTraceReturns:
+    """Reference V-trace; mirrors deepmind/scalable_agent vtrace.py."""
+    rhos = jnp.exp(log_rhos)
+    clipped_rhos = jnp.minimum(clip_rho_threshold, rhos)
+    clipped_cs = jnp.minimum(clip_c_threshold, rhos)
+
+    values_tp1 = jnp.concatenate([values[1:], bootstrap_value[None]], axis=0)
+    deltas = clipped_rhos * (rewards + discounts * values_tp1 - values)
+
+    def body(acc, xs):
+        delta, disc, c = xs
+        acc = delta + disc * c * acc
+        return acc, acc
+
+    _, acc = jax.lax.scan(
+        body,
+        jnp.zeros_like(bootstrap_value),
+        (deltas, discounts, clipped_cs),
+        reverse=True,
+    )
+    vs = acc + values
+
+    vs_tp1 = jnp.concatenate([vs[1:], bootstrap_value[None]], axis=0)
+    pg_advantages = clipped_rhos * (rewards + discounts * vs_tp1 - values)
+    return VTraceReturns(
+        vs=jax.lax.stop_gradient(vs),
+        pg_advantages=jax.lax.stop_gradient(pg_advantages),
+    )
+
+
+def vtrace_from_logits(
+    behavior_logits: jax.Array,  # [T, B, A]
+    target_logits: jax.Array,  # [T, B, A]
+    actions: jax.Array,  # [T, B] int32
+    discounts: jax.Array,  # [T, B]
+    rewards: jax.Array,  # [T, B]
+    values: jax.Array,  # [T, B]
+    bootstrap_value: jax.Array,  # [B]
+    clip_rho_threshold: float = 1.0,
+    clip_c_threshold: float = 1.0,
+) -> VTraceReturns:
+    log_rhos = log_probs_from_logits_and_actions(
+        target_logits, actions
+    ) - log_probs_from_logits_and_actions(behavior_logits, actions)
+    return vtrace_from_importance_weights(
+        log_rhos,
+        discounts,
+        rewards,
+        values,
+        bootstrap_value,
+        clip_rho_threshold=clip_rho_threshold,
+        clip_c_threshold=clip_c_threshold,
+    )

@@ -1,0 +1,233 @@
+"""L1 Pallas V-trace kernel.
+
+The paper's compute hot-spot on the learner path (besides the dense
+net) is the V-trace off-policy correction: a length-T reverse linear
+recursion coupled across time but embarrassingly parallel across the
+batch.  On GPU (the paper's testbed) TorchBeast runs it as T small
+PyTorch ops; the TPU-shaped rethink (DESIGN.md §Hardware-Adaptation)
+is:
+
+  * grid over *batch blocks* — B is the vectorizable axis, so it maps
+    onto the VPU lanes; each program instance owns a [T, BLOCK_B] tile.
+  * the T-recursion runs *inside* the kernel as a `fori_loop` over
+    VMEM-resident rows — one HBM->VMEM round-trip for the whole
+    rollout instead of per-timestep kernel launches.
+  * rho/c clipping, deltas, the backward recursion and the pg
+    advantages are all fused into the single kernel, so the
+    intermediate [T, B] tensors never leave VMEM.
+
+VMEM budget (per program instance, f32):
+    inputs  : 4 tiles [T, BLOCK_B] + 1 [1, BLOCK_B]  = (4T + 1) * BLOCK_B * 4 B
+    outputs : 2 tiles [T, BLOCK_B]                   = 2T * BLOCK_B * 4 B
+With the paper's T=20 (Table G.1) and BLOCK_B=128 this is ~62 KiB —
+far below the ~16 MiB VMEM of a TPU core; BLOCK_B=1024 still fits at
+~0.5 MiB, so the kernel is launch-latency bound, not VMEM bound.
+
+`interpret=True` always: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO which the rust
+runtime executes.  Correctness is pytest-checked against ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_B = 128
+
+
+def _vtrace_kernel(
+    log_rhos_ref,  # [T, BB]
+    discounts_ref,  # [T, BB]
+    rewards_ref,  # [T, BB]
+    values_ref,  # [T, BB]
+    bootstrap_ref,  # [1, BB]
+    vs_ref,  # out [T, BB]
+    pg_adv_ref,  # out [T, BB]
+    *,
+    T: int,
+    clip_rho: float,
+    clip_c: float,
+):
+    rhos = jnp.exp(log_rhos_ref[...])
+    clipped_rhos = jnp.minimum(clip_rho, rhos)
+    clipped_cs = jnp.minimum(clip_c, rhos)
+    discounts = discounts_ref[...]
+    rewards = rewards_ref[...]
+    values = values_ref[...]
+    bootstrap = bootstrap_ref[0, :]
+
+    # values_{t+1}: shift up by one, bootstrap at the end.
+    values_tp1 = jnp.concatenate([values[1:], bootstrap[None]], axis=0)
+    deltas = clipped_rhos * (rewards + discounts * values_tp1 - values)
+
+    # Reverse recursion acc_t = delta_t + disc_t * c_t * acc_{t+1}, fully
+    # in-register/VMEM.  fori_loop over T rows; each row is a [BB] vector
+    # op on the lanes.
+    def body(i, carry):
+        t = T - 1 - i
+        acc, vs_acc = carry
+        acc = deltas[t] + discounts[t] * clipped_cs[t] * acc
+        vs_acc = vs_acc.at[t].set(acc)
+        return acc, vs_acc
+
+    acc0 = jnp.zeros_like(bootstrap)
+    _, vs_minus_v = jax.lax.fori_loop(0, T, body, (acc0, jnp.zeros_like(values)))
+
+    vs = vs_minus_v + values
+    vs_ref[...] = vs
+
+    vs_tp1 = jnp.concatenate([vs[1:], bootstrap[None]], axis=0)
+    pg_adv_ref[...] = clipped_rhos * (rewards + discounts * vs_tp1 - values)
+
+
+# V-trace targets are stop-gradient by definition (IMPALA treats vs and
+# pg_adv as constants in the loss), so the kernel needs no VJP.  The
+# custom_vjp wrapper makes that explicit: AD never looks inside the
+# pallas_call (whose in-kernel fori_loop has no linearization rule) and
+# the backward pass emits zero cotangents.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _vtrace_core(log_rhos, discounts, rewards, values, bootstrap_value,
+                 clip_rho, clip_c, block_b, interpret):
+    return _vtrace_impl(log_rhos, discounts, rewards, values, bootstrap_value,
+                        clip_rho, clip_c, block_b, interpret)
+
+
+def _vtrace_core_fwd(log_rhos, discounts, rewards, values, bootstrap_value,
+                     clip_rho, clip_c, block_b, interpret):
+    out = _vtrace_impl(log_rhos, discounts, rewards, values, bootstrap_value,
+                       clip_rho, clip_c, block_b, interpret)
+    shapes = (log_rhos, discounts, rewards, values, bootstrap_value)
+    return out, jax.tree_util.tree_map(jnp.shape, shapes)
+
+
+def _vtrace_core_bwd(clip_rho, clip_c, block_b, interpret, res, _g):
+    return tuple(jnp.zeros(s, jnp.float32) for s in res)
+
+
+_vtrace_core.defvjp(_vtrace_core_fwd, _vtrace_core_bwd)
+
+
+def vtrace_from_importance_weights(
+    log_rhos: jax.Array,  # [T, B]
+    discounts: jax.Array,  # [T, B]
+    rewards: jax.Array,  # [T, B]
+    values: jax.Array,  # [T, B]
+    bootstrap_value: jax.Array,  # [B]
+    clip_rho_threshold: float = 1.0,
+    clip_c_threshold: float = 1.0,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = True,
+) -> ref.VTraceReturns:
+    """Pallas V-trace; drop-in for ref.vtrace_from_importance_weights."""
+    vs, pg_adv = _vtrace_core(
+        log_rhos.astype(jnp.float32),
+        discounts.astype(jnp.float32),
+        rewards.astype(jnp.float32),
+        values.astype(jnp.float32),
+        bootstrap_value.astype(jnp.float32),
+        clip_rho_threshold,
+        clip_c_threshold,
+        block_b,
+        interpret,
+    )
+    return ref.VTraceReturns(
+        vs=jax.lax.stop_gradient(vs), pg_advantages=jax.lax.stop_gradient(pg_adv)
+    )
+
+
+def _vtrace_impl(
+    log_rhos,
+    discounts,
+    rewards,
+    values,
+    bootstrap_value,
+    clip_rho_threshold,
+    clip_c_threshold,
+    block_b,
+    interpret,
+):
+    T, B = log_rhos.shape
+    bb = min(block_b, B)
+    # Pad B to a multiple of the block so the grid tiles exactly. The pad
+    # lanes compute garbage that is sliced off; they cannot NaN because
+    # exp(0)=1 and the recursion over zeros stays zero.
+    pad = (-B) % bb
+    if pad:
+        pad2 = ((0, 0), (0, pad))
+        log_rhos = jnp.pad(log_rhos, pad2)
+        discounts = jnp.pad(discounts, pad2)
+        rewards = jnp.pad(rewards, pad2)
+        values = jnp.pad(values, pad2)
+        bootstrap_value = jnp.pad(bootstrap_value, ((0, pad),))
+    Bp = B + pad
+
+    grid = (Bp // bb,)
+    tb_spec = pl.BlockSpec((T, bb), lambda i: (0, i))
+    boot_spec = pl.BlockSpec((1, bb), lambda i: (0, i))
+
+    kernel = functools.partial(
+        _vtrace_kernel, T=T, clip_rho=clip_rho_threshold, clip_c=clip_c_threshold
+    )
+    vs, pg_adv = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tb_spec, tb_spec, tb_spec, tb_spec, boot_spec],
+        out_specs=[tb_spec, tb_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, Bp), jnp.float32),
+            jax.ShapeDtypeStruct((T, Bp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        log_rhos.astype(jnp.float32),
+        discounts.astype(jnp.float32),
+        rewards.astype(jnp.float32),
+        values.astype(jnp.float32),
+        bootstrap_value.astype(jnp.float32)[None, :],
+    )
+    if pad:
+        vs = vs[:, :B]
+        pg_adv = pg_adv[:, :B]
+    return vs, pg_adv
+
+
+def vtrace_from_logits(
+    behavior_logits: jax.Array,
+    target_logits: jax.Array,
+    actions: jax.Array,
+    discounts: jax.Array,
+    rewards: jax.Array,
+    values: jax.Array,
+    bootstrap_value: jax.Array,
+    clip_rho_threshold: float = 1.0,
+    clip_c_threshold: float = 1.0,
+    block_b: int = DEFAULT_BLOCK_B,
+) -> ref.VTraceReturns:
+    """Logits front-end (log-softmax + gather stay in plain XLA; the
+    recursion — the part XLA cannot fuse across time — is the kernel)."""
+    log_rhos = ref.log_probs_from_logits_and_actions(
+        target_logits, actions
+    ) - ref.log_probs_from_logits_and_actions(behavior_logits, actions)
+    return vtrace_from_importance_weights(
+        log_rhos,
+        discounts,
+        rewards,
+        values,
+        bootstrap_value,
+        clip_rho_threshold=clip_rho_threshold,
+        clip_c_threshold=clip_c_threshold,
+        block_b=block_b,
+    )
+
+
+def vmem_bytes(T: int, block_b: int = DEFAULT_BLOCK_B) -> int:
+    """Estimated per-instance VMEM footprint (f32), for DESIGN.md §Perf."""
+    tiles_in = 4 * T * block_b + block_b
+    tiles_out = 2 * T * block_b
+    return 4 * (tiles_in + tiles_out)

@@ -1,0 +1,206 @@
+"""L2: agent networks in pure JAX (no flax) with explicit param pytrees.
+
+Two architectures, mirroring the paper:
+
+* ``MinAtarNet`` — the Figure-2 network: Conv(C→16, 3x3, stride 1) →
+  ReLU → flatten → Linear(128) → ReLU → {policy, baseline} heads.
+* ``ImpalaResNet`` — the IMPALA "deep network" (Espeholt et al. 2018,
+  Fig. 3 right), adapted per DESIGN.md §Hardware-Adaptation to 10x10xC
+  inputs: three conv-pool-residual sections (16, 32, 32 channels),
+  each section = Conv3x3 → MaxPool3x3/s2 → 2 residual blocks of
+  (ReLU→Conv3x3)x2, then ReLU → Linear(256) → ReLU → heads.  (The LSTM
+  is omitted, matching the paper's §4 experiments.)
+
+Observations are channels-first ``[.., C, H, W]`` float32 (the env
+layer normalizes / one-hot encodes).  ``forward`` maps a flat batch
+``[N, C, H, W] -> (logits [N, A], baseline [N])`` — time is folded
+into the batch by the learner, exactly like TorchBeast's
+``T * B`` merge.
+
+Params are ordered dicts of jnp arrays; ``aot.py`` flattens them with
+``jax.tree_util`` and records the ordering in the artifact manifest so
+the Rust runtime can address leaves by name.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers (match torch.nn defaults, which TorchBeast relies on)
+# ---------------------------------------------------------------------------
+
+
+def _fan_in_uniform(key, shape, fan_in):
+    bound = 1.0 / math.sqrt(fan_in)
+    return jax.random.uniform(key, shape, jnp.float32, -bound, bound)
+
+
+def init_conv(key, in_ch, out_ch, k):
+    wkey, bkey = jax.random.split(key)
+    fan_in = in_ch * k * k
+    return {
+        "w": _fan_in_uniform(wkey, (out_ch, in_ch, k, k), fan_in),
+        "b": _fan_in_uniform(bkey, (out_ch,), fan_in),
+    }
+
+
+def init_linear(key, in_f, out_f):
+    wkey, bkey = jax.random.split(key)
+    return {
+        "w": _fan_in_uniform(wkey, (out_f, in_f), in_f),
+        "b": _fan_in_uniform(bkey, (out_f,), in_f),
+    }
+
+
+def conv2d(p, x, stride=1, padding="VALID"):
+    # x: [N, C, H, W], w: [O, I, kH, kW]
+    y = jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + p["b"][None, :, None, None]
+
+
+def linear(p, x):
+    return x @ p["w"].T + p["b"]
+
+
+def max_pool_3x3_s2(x):
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 1, 3, 3),
+        window_strides=(1, 1, 2, 2),
+        padding=((0, 0), (0, 0), (1, 1), (1, 1)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# MinAtarNet (paper Figure 2)
+# ---------------------------------------------------------------------------
+
+
+class MinAtarNet:
+    """Conv(16,3x3) -> FC(128) -> policy/baseline. ~30-60k params."""
+
+    name = "minatar"
+
+    def __init__(self, obs_shape: Tuple[int, int, int], num_actions: int, hidden: int = 128):
+        self.obs_shape = obs_shape  # (C, H, W)
+        self.num_actions = num_actions
+        self.hidden = hidden
+        c, h, w = obs_shape
+        self.conv_out = 16 * (h - 2) * (w - 2)
+
+    def init(self, key) -> Params:
+        c, _, _ = self.obs_shape
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "conv": init_conv(k1, c, 16, 3),
+            "core": init_linear(k2, self.conv_out, self.hidden),
+            "policy": init_linear(k3, self.hidden, self.num_actions),
+            "baseline": init_linear(k4, self.hidden, 1),
+        }
+
+    def forward(self, params: Params, obs: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        n = obs.shape[0]
+        x = jax.nn.relu(conv2d(params["conv"], obs))
+        x = x.reshape(n, -1)
+        x = jax.nn.relu(linear(params["core"], x))
+        logits = linear(params["policy"], x)
+        baseline = linear(params["baseline"], x)[:, 0]
+        return logits, baseline
+
+
+# ---------------------------------------------------------------------------
+# ImpalaResNet ("deep network", adapted to small grids)
+# ---------------------------------------------------------------------------
+
+
+def _res_block_init(key, ch):
+    k1, k2 = jax.random.split(key)
+    return {"conv0": init_conv(k1, ch, ch, 3), "conv1": init_conv(k2, ch, ch, 3)}
+
+
+def _res_block(p, x):
+    y = jax.nn.relu(x)
+    y = conv2d(p["conv0"], y, padding="SAME")
+    y = jax.nn.relu(y)
+    y = conv2d(p["conv1"], y, padding="SAME")
+    return x + y
+
+
+class ImpalaResNet:
+    """IMPALA deep net: 3 sections of conv+pool+2 residual blocks."""
+
+    name = "impala_deep"
+
+    SECTIONS = (16, 32, 32)
+
+    def __init__(self, obs_shape: Tuple[int, int, int], num_actions: int, hidden: int = 256):
+        self.obs_shape = obs_shape
+        self.num_actions = num_actions
+        self.hidden = hidden
+        c, h, w = obs_shape
+        for _ in self.SECTIONS:
+            h = (h + 1) // 2  # pool 3x3 stride 2 with SAME padding
+            w = (w + 1) // 2
+        self.conv_out = self.SECTIONS[-1] * h * w
+
+    def init(self, key) -> Params:
+        params: Params = {}
+        in_ch = self.obs_shape[0]
+        keys = jax.random.split(key, 3 * len(self.SECTIONS) + 3)
+        ki = 0
+        for s, ch in enumerate(self.SECTIONS):
+            params[f"s{s}_conv"] = init_conv(keys[ki], in_ch, ch, 3)
+            params[f"s{s}_res0"] = _res_block_init(keys[ki + 1], ch)
+            params[f"s{s}_res1"] = _res_block_init(keys[ki + 2], ch)
+            ki += 3
+            in_ch = ch
+        params["core"] = init_linear(keys[ki], self.conv_out, self.hidden)
+        params["policy"] = init_linear(keys[ki + 1], self.hidden, self.num_actions)
+        params["baseline"] = init_linear(keys[ki + 2], self.hidden, 1)
+        return params
+
+    def forward(self, params: Params, obs: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        n = obs.shape[0]
+        x = obs
+        for s, _ in enumerate(self.SECTIONS):
+            x = conv2d(params[f"s{s}_conv"], x, padding="SAME")
+            x = max_pool_3x3_s2(x)
+            x = _res_block(params[f"s{s}_res0"], x)
+            x = _res_block(params[f"s{s}_res1"], x)
+        x = jax.nn.relu(x)
+        x = x.reshape(n, -1)
+        x = jax.nn.relu(linear(params["core"], x))
+        logits = linear(params["policy"], x)
+        baseline = linear(params["baseline"], x)[:, 0]
+        return logits, baseline
+
+
+MODELS = {"minatar": MinAtarNet, "impala_deep": ImpalaResNet}
+
+
+def make_model(name: str, obs_shape, num_actions, **kw):
+    try:
+        cls = MODELS[name]
+    except KeyError:
+        raise ValueError(f"unknown model {name!r}; have {sorted(MODELS)}") from None
+    return cls(tuple(obs_shape), int(num_actions), **kw)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))

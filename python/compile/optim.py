@@ -1,0 +1,137 @@
+"""Optimizers for the AOT learner step, pure JAX.
+
+``rmsprop`` replicates torch.optim.RMSprop with the IMPALA Table-G.1
+hyperparameters (lr tuned per batch size, decay 0.99, momentum 0,
+epsilon 0.01) — the *epsilon inside the sqrt?* question matters:
+torch adds eps **outside** sqrt(avg); TF IMPALA adds it inside. We
+follow torch (what TorchBeast actually ran):
+
+    avg = decay * avg + (1-decay) * g^2
+    p  -= lr * g / (sqrt(avg) + eps)
+
+``linear_lr`` reproduces TorchBeast's LambdaLR schedule
+(linear decay to zero over total_steps), evaluated *inside* the
+exported HLO from a step counter carried in the optimizer state, so
+the Rust runtime never recomputes schedules.
+
+Gradient-norm clipping (Table G.1: 40.0) is applied before the update.
+Optimizer state is a pytree mirroring the param tree plus scalars
+(step count); aot.py flattens it into the manifest alongside params.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptConfig(NamedTuple):
+    lr: float = 6e-4
+    decay: float = 0.99
+    eps: float = 0.01
+    momentum: float = 0.0
+    grad_clip: float = 40.0
+    total_steps: int = 0  # 0 disables the linear schedule
+
+
+def init_state(params) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {
+        "square_avg": zeros,
+        "momentum": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "step": jnp.zeros((), jnp.float32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-6))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), norm
+
+
+def rmsprop_update(
+    params, grads, state, cfg: OptConfig
+) -> Tuple[Any, Dict[str, Any], jax.Array]:
+    """One RMSProp step. Returns (new_params, new_state, grad_norm)."""
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+
+    step = state["step"] + 1.0
+    if cfg.total_steps > 0:
+        frac = jnp.maximum(0.0, 1.0 - state["step"] / float(cfg.total_steps))
+    else:
+        frac = 1.0
+    lr = cfg.lr * frac
+
+    def upd(p, g, avg, mom):
+        avg = cfg.decay * avg + (1.0 - cfg.decay) * jnp.square(g)
+        delta = g / (jnp.sqrt(avg) + cfg.eps)
+        if cfg.momentum > 0:
+            mom = cfg.momentum * mom + delta
+            delta = mom
+        return p - lr * delta, avg, mom
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_avg = jax.tree_util.tree_leaves(state["square_avg"])
+    flat_mom = jax.tree_util.tree_leaves(state["momentum"])
+    out = [upd(p, g, a, m) for p, g, a, m in zip(flat_p, flat_g, flat_avg, flat_mom)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_avg = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_mom = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"square_avg": new_avg, "momentum": new_mom, "step": step}
+    return new_p, new_state, gnorm
+
+
+def sgd_update(params, grads, state, cfg: OptConfig):
+    """Plain SGD (ablation baseline)."""
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    new_p = jax.tree_util.tree_map(lambda p, g: p - cfg.lr * g, params, grads)
+    new_state = dict(state, step=state["step"] + 1.0)
+    return new_p, new_state, gnorm
+
+
+def adam_update(params, grads, state, cfg: OptConfig, b1=0.9, b2=0.999):
+    """Adam (ablation baseline); reuses square_avg as v, momentum as m."""
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state["step"] + 1.0
+
+    def upd(p, g, v, m):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / (1 - b1**step)
+        vhat = v / (1 - b2**step)
+        return p - cfg.lr * mhat / (jnp.sqrt(vhat) + 1e-8), v, m
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    out = [
+        upd(p, g, v, m)
+        for p, g, v, m in zip(
+            flat_p,
+            jax.tree_util.tree_leaves(grads),
+            jax.tree_util.tree_leaves(state["square_avg"]),
+            jax.tree_util.tree_leaves(state["momentum"]),
+        )
+    ]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, {"square_avg": new_v, "momentum": new_m, "step": step}, gnorm
+
+
+UPDATES = {"rmsprop": rmsprop_update, "sgd": sgd_update, "adam": adam_update}

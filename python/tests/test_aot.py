@@ -1,0 +1,257 @@
+"""AOT export tests: manifest consistency + HLO-text round-trip numerics.
+
+The round-trip executes the exported HLO text through xla_client's
+text parser and CPU client — the same parser path the Rust runtime
+uses — and compares against direct jit execution.  This is the strongest
+Python-side guarantee that the artifacts the Rust binary loads compute
+the right numbers.
+"""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, envspec, model as model_lib, optim
+
+jax.config.update("jax_platform_name", "cpu")
+
+T, B, Bi = 4, 2, 4
+HP = dict(aot.TABLE_G1, entropy_cost=0.01)
+
+
+@pytest.fixture(scope="module")
+def exporter():
+    return aot.Exporter("catch", "minatar", T, B, Bi, HP)
+
+
+@pytest.fixture(scope="module")
+def bundle(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    path = aot.export_config("tiny", "catch", "minatar", T, B, Bi,
+                             {"entropy_cost": 0.01}, str(d))
+    return path
+
+
+def load_manifest(bundle):
+    with open(os.path.join(bundle, "manifest.json")) as f:
+        return json.load(f)
+
+
+def run_hlo(path, literals):
+    """Execute an exported HLO text file on the xla_client CPU backend.
+
+    Parses the same HLO *text* the Rust runtime loads (the text parser
+    reassigns instruction ids — the whole reason text is the interchange
+    format), converts to StableHLO, compiles, executes.
+    """
+    from jax._src import compiler
+    from jax._src.interpreters import mlir as jmlir
+    from jax._src.lib.mlir import ir
+    from jaxlib._jax import DeviceList
+
+    with open(path) as f:
+        text = f.read()
+    module = xc._xla.hlo_module_from_text(text)
+    mlir_bytes = xc._xla.mlir.hlo_to_stablehlo(module.as_serialized_hlo_module_proto())
+    backend = jax.devices("cpu")[0].client
+    with jmlir.make_ir_context():
+        mod = ir.Module.parse(mlir_bytes)
+        opts = compiler.get_compile_options(num_replicas=1, num_partitions=1)
+        exe = compiler.backend_compile_and_load(
+            backend, mod, DeviceList(tuple(jax.devices("cpu")[:1])), opts, []
+        )
+    bufs = [backend.buffer_from_pyval(np.asarray(x)) for x in literals]
+    out = exe.execute(bufs)
+    return [np.asarray(o) for o in out]
+
+
+def test_manifest_fields(bundle):
+    man = load_manifest(bundle)
+    spec = envspec.get("catch")
+    assert man["obs_shape"] == list(spec.obs_shape)
+    assert man["num_actions"] == spec.num_actions
+    assert man["unroll_length"] == T
+    assert man["batch_size"] == B
+    assert man["inference_batch"] == Bi
+    assert man["stats_names"] == aot.STATS_NAMES
+    assert man["param_count"] > 0
+    assert len(man["params"]) == 8  # 4 layers x (w, b)
+    # opt state: square_avg + momentum mirror params, plus step scalar
+    assert len(man["opt_state"]) == 2 * len(man["params"]) + 1
+
+
+def test_all_files_exist(bundle):
+    names = ["init", "inference", "learner", "learner_nopallas", "vtrace"]
+    # power-of-2 inference buckets up to Bi
+    n = 1
+    while n < Bi:
+        names.append(f"inference_{n}")
+        n *= 2
+    names.append(f"inference_{Bi}")
+    for name in names:
+        p = os.path.join(bundle, f"{name}.hlo.txt")
+        assert os.path.exists(p), p
+        assert os.path.getsize(p) > 100
+
+
+def test_manifest_inference_sizes(bundle):
+    man = load_manifest(bundle)
+    sizes = man["inference_sizes"]
+    assert sizes[-1] == Bi
+    assert sizes == sorted(sizes)
+    assert all(b > a for a, b in zip(sizes, sizes[1:]))
+
+
+def test_inference_buckets_agree(bundle, exporter):
+    """Every bucket must compute the same logits for the same rows."""
+    rng = np.random.default_rng(4)
+    params = exporter.model.init(jax.random.PRNGKey(3))
+    leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(params)]
+    obs1 = rng.random((1,) + exporter.spec.obs_shape).astype(np.float32)
+    ref_logits, ref_base = None, None
+    for n in exporter.inference_sizes():
+        obs = np.zeros((n,) + exporter.spec.obs_shape, np.float32)
+        obs[0] = obs1[0]
+        outs = run_hlo(os.path.join(bundle, f"inference_{n}.hlo.txt"), leaves + [obs])
+        if ref_logits is None:
+            ref_logits, ref_base = outs[0][0], outs[1][0]
+        else:
+            np.testing.assert_allclose(outs[0][0], ref_logits, rtol=1e-4, atol=1e-5)
+            np.testing.assert_allclose(outs[1][0], ref_base, rtol=1e-4, atol=1e-5)
+
+
+def test_learner_nopallas_equivalent(bundle, exporter):
+    """Ablation module: plain-XLA V-trace lowering must produce the
+    same stats as the Pallas-kernel learner (same inputs)."""
+    rng = np.random.default_rng(6)
+    spec = exporter.spec
+    params = exporter.model.init(jax.random.PRNGKey(8))
+    opt_state = optim.init_state(params)
+    p_leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(params)]
+    o_leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(opt_state)]
+    extra = [
+        rng.random((T + 1, B) + spec.obs_shape).astype(np.float32),
+        rng.integers(0, spec.num_actions, (T, B)).astype(np.int32),
+        rng.normal(0, 1, (T, B)).astype(np.float32),
+        (rng.random((T, B)) < 0.1).astype(np.float32),
+        rng.normal(0, 1, (T, B, spec.num_actions)).astype(np.float32),
+    ]
+    a = run_hlo(os.path.join(bundle, "learner.hlo.txt"), p_leaves + o_leaves + extra)
+    b = run_hlo(os.path.join(bundle, "learner_nopallas.hlo.txt"), p_leaves + o_leaves + extra)
+    assert len(a) == len(b)
+    for i, (x, y) in enumerate(zip(a, b)):
+        np.testing.assert_allclose(x, y, rtol=1e-4, atol=1e-5, err_msg=f"output {i}")
+
+
+def test_leaf_order_is_deterministic(exporter):
+    e2 = aot.Exporter("catch", "minatar", T, B, Bi, HP)
+    n1 = [e["name"] for e in aot.leaf_entries(exporter.params0)]
+    n2 = [e["name"] for e in aot.leaf_entries(e2.params0)]
+    assert n1 == n2
+    # names are slash paths like 'conv/b'
+    assert all("/" in n for n in n1)
+
+
+def test_init_roundtrip(bundle, exporter):
+    """init.hlo.txt(seed) == model.init(PRNGKey(seed)) leaf-for-leaf."""
+    outs = run_hlo(os.path.join(bundle, "init.hlo.txt"), [np.int32(123)])
+    direct = jax.tree_util.tree_leaves(
+        exporter.model.init(jax.random.PRNGKey(123))
+    )
+    assert len(outs) == len(direct)
+    for o, d in zip(outs, direct):
+        np.testing.assert_allclose(o, d, rtol=1e-6, atol=1e-6)
+
+
+def test_inference_roundtrip(bundle, exporter):
+    rng = np.random.default_rng(0)
+    params = exporter.model.init(jax.random.PRNGKey(5))
+    leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(params)]
+    obs = rng.random((Bi,) + exporter.spec.obs_shape).astype(np.float32)
+    outs = run_hlo(os.path.join(bundle, "inference.hlo.txt"), leaves + [obs])
+    logits, baseline = exporter.model.forward(params, jnp.asarray(obs))
+    np.testing.assert_allclose(outs[0], logits, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(outs[1], baseline, rtol=1e-4, atol=1e-5)
+
+
+def test_learner_roundtrip(bundle, exporter):
+    """One learner step through the exported HLO == direct jax call."""
+    rng = np.random.default_rng(1)
+    spec = exporter.spec
+    params = exporter.model.init(jax.random.PRNGKey(7))
+    opt_state = optim.init_state(params)
+    p_leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(params)]
+    o_leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(opt_state)]
+
+    obs = rng.random((T + 1, B) + spec.obs_shape).astype(np.float32)
+    actions = rng.integers(0, spec.num_actions, (T, B)).astype(np.int32)
+    rewards = rng.normal(0, 1, (T, B)).astype(np.float32)
+    dones = (rng.random((T, B)) < 0.1).astype(np.float32)
+    bl = rng.normal(0, 1, (T, B, spec.num_actions)).astype(np.float32)
+
+    extra = [obs, actions, rewards, dones, bl]
+    outs = run_hlo(os.path.join(bundle, "learner.hlo.txt"), p_leaves + o_leaves + extra)
+
+    direct = exporter.learner_fn(
+        *[jnp.asarray(x) for x in p_leaves],
+        *[jnp.asarray(x) for x in o_leaves],
+        *[jnp.asarray(x) for x in extra],
+    )
+    assert len(outs) == len(direct)
+    for i, (o, d) in enumerate(zip(outs, direct)):
+        np.testing.assert_allclose(o, np.asarray(d), rtol=5e-4, atol=5e-5, err_msg=f"output {i}")
+    # stats vector sits last; total loss must be finite
+    stats = outs[-1]
+    assert stats.shape == (len(aot.STATS_NAMES),)
+    assert np.isfinite(stats).all()
+
+
+def test_learner_changes_params(bundle, exporter):
+    rng = np.random.default_rng(2)
+    spec = exporter.spec
+    params = exporter.model.init(jax.random.PRNGKey(9))
+    opt_state = optim.init_state(params)
+    p_leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(params)]
+    o_leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(opt_state)]
+    extra = [
+        rng.random((T + 1, B) + spec.obs_shape).astype(np.float32),
+        rng.integers(0, spec.num_actions, (T, B)).astype(np.int32),
+        rng.normal(0, 1, (T, B)).astype(np.float32),
+        np.zeros((T, B), np.float32),
+        rng.normal(0, 1, (T, B, spec.num_actions)).astype(np.float32),
+    ]
+    outs = run_hlo(os.path.join(bundle, "learner.hlo.txt"), p_leaves + o_leaves + extra)
+    n_p = len(p_leaves)
+    moved = [not np.allclose(outs[i], p_leaves[i]) for i in range(n_p)]
+    assert all(moved), moved
+
+
+def test_vtrace_artifact_matches_ref(bundle):
+    from compile.kernels import ref
+
+    rng = np.random.default_rng(3)
+    log_rhos = rng.normal(0, 0.5, (T, B)).astype(np.float32)
+    discounts = (rng.random((T, B)) > 0.1).astype(np.float32) * 0.99
+    rewards = rng.normal(0, 1, (T, B)).astype(np.float32)
+    values = rng.normal(0, 1, (T, B)).astype(np.float32)
+    boot = rng.normal(0, 1, (B,)).astype(np.float32)
+    outs = run_hlo(
+        os.path.join(bundle, "vtrace.hlo.txt"),
+        [log_rhos, discounts, rewards, values, boot],
+    )
+    r = ref.vtrace_from_importance_weights(
+        jnp.asarray(log_rhos), jnp.asarray(discounts), jnp.asarray(rewards),
+        jnp.asarray(values), jnp.asarray(boot),
+    )
+    np.testing.assert_allclose(outs[0], r.vs, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(outs[1], r.pg_advantages, rtol=2e-5, atol=2e-5)
+
+
+def test_hlo_sha_recorded(bundle):
+    man = load_manifest(bundle)
+    assert len(man["hlo_sha256"]) == 64

@@ -1,0 +1,86 @@
+"""Spec-drift guard: envspec.py (the Python contract baked into the
+artifacts) must match the Rust env suite's constants.
+
+Parses the SPEC blocks out of rust/src/env/**/*.rs — crude but
+effective: if either side changes an obs shape or action count without
+the other, this test and `Manifest::validate_env` both fail.
+"""
+
+import os
+import re
+
+import pytest
+
+from compile import envspec
+
+RUST_ENV_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "src", "env")
+
+SPEC_RE = re.compile(
+    r'pub const SPEC: EnvSpec = EnvSpec \{\s*'
+    r'name: "(?P<name>[^"]+)",\s*'
+    r"channels: (?P<channels>\w+),.*?"
+    r"height: (?P<height>\w+),.*?"
+    r"width: (?P<width>\w+),.*?"
+    r"num_actions: (?P<actions>\d+)",
+    re.DOTALL,
+)
+
+CONST_RE = re.compile(r"pub const (\w+): usize = (\d+);")
+
+
+def rust_specs():
+    """Extract {name: (C, H, W, A)} from the Rust sources."""
+    specs = {}
+    consts_by_file = {}
+    for root, _dirs, files in os.walk(RUST_ENV_DIR):
+        for fname in files:
+            if not fname.endswith(".rs"):
+                continue
+            path = os.path.join(root, fname)
+            text = open(path).read()
+            consts = dict(CONST_RE.findall(text))
+            # GRID lives in minatar/mod.rs
+            consts.setdefault("GRID", "10")
+            consts_by_file[path] = consts
+
+            for m in SPEC_RE.finditer(text):
+                def resolve(token):
+                    if token.isdigit():
+                        return int(token)
+                    if token in consts:
+                        return int(consts[token])
+                    if token == "GRID":
+                        return 10
+                    raise ValueError(f"cannot resolve {token} in {path}")
+
+                specs[m.group("name")] = (
+                    resolve(m.group("channels")),
+                    resolve(m.group("height")),
+                    resolve(m.group("width")),
+                    int(m.group("actions")),
+                )
+    return specs
+
+
+def test_rust_sources_found():
+    assert os.path.isdir(RUST_ENV_DIR), RUST_ENV_DIR
+    specs = rust_specs()
+    assert len(specs) >= 7, f"only parsed {sorted(specs)}"
+
+
+@pytest.mark.parametrize("env", sorted(envspec.ENV_SPECS))
+def test_spec_matches_rust(env):
+    rust = rust_specs()
+    assert env in rust, f"{env} missing from Rust env suite"
+    c, h, w, a = rust[env]
+    spec = envspec.get(env)
+    assert spec.obs_shape == (c, h, w), f"{env}: python {spec.obs_shape} vs rust {(c, h, w)}"
+    assert spec.num_actions == a, f"{env}: python {spec.num_actions} vs rust {a}"
+
+
+def test_no_rust_only_envs():
+    """Every Rust env must be exported to Python too (else it cannot be
+    trained — no artifact can be built for it)."""
+    rust = rust_specs()
+    missing = set(rust) - set(envspec.ENV_SPECS)
+    assert not missing, f"rust envs without python spec: {missing}"

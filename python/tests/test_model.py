@@ -1,0 +1,105 @@
+"""L2 model tests: shapes, init determinism, finiteness, both nets."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import envspec, model as model_lib
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("env", sorted(envspec.ENV_SPECS))
+@pytest.mark.parametrize("model_name", ["minatar", "impala_deep"])
+def test_forward_shapes(env, model_name):
+    spec = envspec.get(env)
+    m = model_lib.make_model(model_name, spec.obs_shape, spec.num_actions)
+    params = m.init(jax.random.PRNGKey(0))
+    n = 7
+    obs = jnp.zeros((n,) + spec.obs_shape, jnp.float32)
+    logits, baseline = m.forward(params, obs)
+    assert logits.shape == (n, spec.num_actions)
+    assert baseline.shape == (n,)
+
+
+def test_init_deterministic():
+    spec = envspec.get("catch")
+    m = model_lib.make_model("minatar", spec.obs_shape, spec.num_actions)
+    p1 = m.init(jax.random.PRNGKey(42))
+    p2 = m.init(jax.random.PRNGKey(42))
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_init_seed_sensitivity():
+    spec = envspec.get("catch")
+    m = model_lib.make_model("minatar", spec.obs_shape, spec.num_actions)
+    p1 = m.init(jax.random.PRNGKey(0))
+    p2 = m.init(jax.random.PRNGKey(1))
+    diffs = [
+        not np.allclose(a, b)
+        for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2))
+    ]
+    assert all(diffs)
+
+
+def test_outputs_finite_on_random_input():
+    spec = envspec.get("minatar/breakout")
+    for name in ("minatar", "impala_deep"):
+        m = model_lib.make_model(name, spec.obs_shape, spec.num_actions)
+        params = m.init(jax.random.PRNGKey(0))
+        obs = jax.random.uniform(jax.random.PRNGKey(1), (16,) + spec.obs_shape)
+        logits, baseline = m.forward(params, obs)
+        assert np.all(np.isfinite(logits)) and np.all(np.isfinite(baseline))
+
+
+def test_param_counts_sane():
+    spec = envspec.get("minatar/breakout")
+    small = model_lib.make_model("minatar", spec.obs_shape, spec.num_actions)
+    deep = model_lib.make_model("impala_deep", spec.obs_shape, spec.num_actions)
+    n_small = model_lib.param_count(small.init(jax.random.PRNGKey(0)))
+    n_deep = model_lib.param_count(deep.init(jax.random.PRNGKey(0)))
+    # Fig-2 net: one conv + dense dominated (~130k on 4x10x10).
+    assert 10_000 < n_small < 200_000
+    # Deep net: 15 convs; on 10x10 grids the dense layer shrinks so raw
+    # counts are comparable — check conv depth instead of raw size.
+    deep_params = deep.init(jax.random.PRNGKey(0))
+    conv_leaves = [k for k in deep_params if k.startswith("s")]
+    assert len(conv_leaves) == 9  # 3 sections x (conv + 2 res blocks)
+    assert 50_000 < n_deep < 1_000_000
+
+
+def test_init_bounds_match_torch_defaults():
+    """fan-in uniform: every leaf within +-1/sqrt(fan_in)."""
+    spec = envspec.get("catch")
+    m = model_lib.make_model("minatar", spec.obs_shape, spec.num_actions)
+    params = m.init(jax.random.PRNGKey(0))
+    w = params["core"]["w"]
+    bound = 1.0 / np.sqrt(m.conv_out)
+    assert np.abs(np.array(w)).max() <= bound + 1e-7
+    # and actually spreads out (not degenerate)
+    assert np.abs(np.array(w)).max() > 0.5 * bound
+
+
+def test_unknown_model_raises():
+    with pytest.raises(ValueError, match="unknown model"):
+        model_lib.make_model("nope", (1, 10, 5), 3)
+
+
+def test_unknown_env_raises():
+    with pytest.raises(ValueError, match="unknown env"):
+        envspec.get("atari/pong")
+
+
+def test_batch_independence():
+    """Row i of the output depends only on row i of the input."""
+    spec = envspec.get("catch")
+    m = model_lib.make_model("minatar", spec.obs_shape, spec.num_actions)
+    params = m.init(jax.random.PRNGKey(0))
+    obs = jax.random.uniform(jax.random.PRNGKey(2), (4,) + spec.obs_shape)
+    full_logits, full_base = m.forward(params, obs)
+    for i in range(4):
+        li, bi = m.forward(params, obs[i : i + 1])
+        np.testing.assert_allclose(full_logits[i], li[0], rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(full_base[i], bi[0], rtol=1e-5, atol=1e-6)

@@ -1,0 +1,169 @@
+"""L1 correctness: Pallas V-trace kernel vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, clip thresholds, discount structure and block
+sizes; deterministic tests pin the analytic corner cases (on-policy,
+zero discounts, single-step).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, vtrace_pallas as vp
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_inputs(rng, T, B, done_p=0.1, gamma=0.99, rho_scale=0.5):
+    log_rhos = jnp.asarray(rng.normal(0, rho_scale, (T, B)), jnp.float32)
+    discounts = jnp.asarray(rng.random((T, B)) > done_p, jnp.float32) * gamma
+    rewards = jnp.asarray(rng.normal(0, 1, (T, B)), jnp.float32)
+    values = jnp.asarray(rng.normal(0, 1, (T, B)), jnp.float32)
+    bootstrap = jnp.asarray(rng.normal(0, 1, (B,)), jnp.float32)
+    return log_rhos, discounts, rewards, values, bootstrap
+
+
+def assert_matches_ref(args, block_b, clip_rho=1.0, clip_c=1.0):
+    r = ref.vtrace_from_importance_weights(*args, clip_rho, clip_c)
+    p = vp.vtrace_from_importance_weights(
+        *args,
+        clip_rho_threshold=clip_rho,
+        clip_c_threshold=clip_c,
+        block_b=block_b,
+    )
+    np.testing.assert_allclose(r.vs, p.vs, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(r.pg_advantages, p.pg_advantages, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    T=st.integers(1, 40),
+    B=st.integers(1, 48),
+    block_b=st.sampled_from([1, 4, 8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_shapes(T, B, block_b, seed):
+    rng = np.random.default_rng(seed)
+    assert_matches_ref(make_inputs(rng, T, B), block_b)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    clip_rho=st.floats(0.1, 4.0),
+    clip_c=st.floats(0.1, 4.0),
+    rho_scale=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_clips(clip_rho, clip_c, rho_scale, seed):
+    rng = np.random.default_rng(seed)
+    args = make_inputs(rng, 16, 8, rho_scale=rho_scale)
+    assert_matches_ref(args, 8, clip_rho, clip_c)
+
+
+@settings(max_examples=10, deadline=None)
+@given(done_p=st.floats(0.0, 1.0), gamma=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_matches_ref_discount_structure(done_p, gamma, seed):
+    rng = np.random.default_rng(seed)
+    args = make_inputs(rng, 20, 6, done_p=done_p, gamma=gamma)
+    assert_matches_ref(args, 4)
+
+
+def test_on_policy_equals_n_step_return():
+    """With rho = c = 1 (on-policy) and no clipping bite, vs_t is the
+    n-step Bellman target: vs_t = sum gamma^k r_{t+k} + gamma^{T-t} V(x_T)."""
+    rng = np.random.default_rng(7)
+    T, B = 5, 3
+    log_rhos = jnp.zeros((T, B), jnp.float32)
+    gamma = 0.9
+    discounts = jnp.full((T, B), gamma, jnp.float32)
+    rewards = jnp.asarray(rng.normal(0, 1, (T, B)), jnp.float32)
+    values = jnp.asarray(rng.normal(0, 1, (T, B)), jnp.float32)
+    bootstrap = jnp.asarray(rng.normal(0, 1, (B,)), jnp.float32)
+
+    out = vp.vtrace_from_importance_weights(log_rhos, discounts, rewards, values, bootstrap)
+    expected = np.zeros((T, B), np.float32)
+    acc = np.array(bootstrap)
+    for t in reversed(range(T)):
+        acc = np.array(rewards[t]) + gamma * acc
+        expected[t] = acc
+    np.testing.assert_allclose(out.vs, expected, rtol=1e-4, atol=1e-4)
+
+
+def test_zero_discount_gives_one_step():
+    """discount == 0 everywhere: vs_t = V + rho (r - V) per-step."""
+    rng = np.random.default_rng(3)
+    T, B = 8, 4
+    log_rhos = jnp.asarray(rng.normal(0, 0.5, (T, B)), jnp.float32)
+    discounts = jnp.zeros((T, B), jnp.float32)
+    rewards = jnp.asarray(rng.normal(0, 1, (T, B)), jnp.float32)
+    values = jnp.asarray(rng.normal(0, 1, (T, B)), jnp.float32)
+    bootstrap = jnp.zeros((B,), jnp.float32)
+    out = vp.vtrace_from_importance_weights(log_rhos, discounts, rewards, values, bootstrap)
+    rho = np.minimum(1.0, np.exp(np.array(log_rhos)))
+    expected = np.array(values) + rho * (np.array(rewards) - np.array(values))
+    np.testing.assert_allclose(out.vs, expected, rtol=1e-5, atol=1e-5)
+
+
+def test_single_step():
+    args = make_inputs(np.random.default_rng(0), 1, 1)
+    assert_matches_ref(args, 1)
+
+
+def test_from_logits_matches_ref():
+    rng = np.random.default_rng(11)
+    T, B, A = 12, 6, 5
+    behavior = jnp.asarray(rng.normal(0, 1, (T, B, A)), jnp.float32)
+    target = jnp.asarray(rng.normal(0, 1, (T, B, A)), jnp.float32)
+    actions = jnp.asarray(rng.integers(0, A, (T, B)), jnp.int32)
+    _, discounts, rewards, values, bootstrap = make_inputs(rng, T, B)
+    r = ref.vtrace_from_logits(behavior, target, actions, discounts, rewards, values, bootstrap)
+    p = vp.vtrace_from_logits(behavior, target, actions, discounts, rewards, values, bootstrap, block_b=4)
+    np.testing.assert_allclose(r.vs, p.vs, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(r.pg_advantages, p.pg_advantages, rtol=2e-5, atol=2e-5)
+
+
+def test_extreme_log_rhos_clipped_finite():
+    """Huge importance ratios must clip, not overflow."""
+    T, B = 6, 4
+    log_rhos = jnp.full((T, B), 30.0, jnp.float32)  # exp(30) ~ 1e13
+    discounts = jnp.full((T, B), 0.99, jnp.float32)
+    rewards = jnp.ones((T, B), jnp.float32)
+    values = jnp.zeros((T, B), jnp.float32)
+    bootstrap = jnp.zeros((B,), jnp.float32)
+    out = vp.vtrace_from_importance_weights(log_rhos, discounts, rewards, values, bootstrap)
+    assert np.all(np.isfinite(out.vs))
+    assert np.all(np.isfinite(out.pg_advantages))
+    # fully clipped to rho = c = 1 -> on-policy n-step return of all-ones rewards
+    r = ref.vtrace_from_importance_weights(jnp.zeros((T, B)), discounts, rewards, values, bootstrap)
+    np.testing.assert_allclose(out.vs, r.vs, rtol=1e-5)
+
+
+def test_gradients_are_zero():
+    """The kernel is stop-gradient: cotangents through it must be zero."""
+    rng = np.random.default_rng(5)
+    args = make_inputs(rng, 8, 4)
+
+    def f(values):
+        out = vp.vtrace_from_importance_weights(args[0], args[1], args[2], values, args[4])
+        return jnp.sum(out.vs) + jnp.sum(out.pg_advantages)
+
+    g = jax.grad(f)(args[3])
+    np.testing.assert_allclose(g, np.zeros_like(g))
+
+
+def test_block_padding_independence():
+    """Result must not depend on block_b (padding lanes sliced off)."""
+    rng = np.random.default_rng(9)
+    args = make_inputs(rng, 10, 13)  # 13 not divisible by most blocks
+    base = vp.vtrace_from_importance_weights(*args, block_b=13)
+    for bb in (1, 2, 4, 5, 8, 128):
+        out = vp.vtrace_from_importance_weights(*args, block_b=bb)
+        np.testing.assert_allclose(base.vs, out.vs, rtol=1e-6, atol=1e-6)
+
+
+def test_vmem_estimate_within_budget():
+    """Paper config (T=20, BLOCK_B=128) must fit VMEM with huge margin."""
+    assert vp.vmem_bytes(20, 128) < 1 << 20  # < 1 MiB
+    assert vp.vmem_bytes(80, 1024) < 8 << 20  # even 4x unroll, 8x block

@@ -1,0 +1,57 @@
+//! Bench: raw environment step rates (the substrate E1/E2 stand on).
+//! Also measures the wrapper stack's overhead — the Rust analog of the
+//! paper's footnote that "even the resizing method can impact
+//! performance": preprocessing cost is real and must be known.
+
+use torchbeast::env::wrappers::WrapperCfg;
+use torchbeast::env::{make_env, make_wrapped, ENV_NAMES};
+use torchbeast::util::rng::Rng;
+use torchbeast::util::stats::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let mut bench = Bench::new("envs: steps/sec per game (single thread)");
+    for name in ENV_NAMES {
+        let mut env = make_env(name, 0)?;
+        let spec = env.spec().clone();
+        let mut obs = vec![0.0f32; spec.obs_len()];
+        env.reset(&mut obs);
+        let mut rng = Rng::new(1);
+        bench.run(name, || {
+            for _ in 0..100 {
+                let st = env.step(rng.below(spec.num_actions), &mut obs);
+                if st.done {
+                    env.reset(&mut obs);
+                }
+            }
+        });
+    }
+
+    // wrapper stack overhead on breakout
+    let cfg = WrapperCfg {
+        action_repeat: 4,
+        frame_stack: 4,
+        reward_clip: 1.0,
+        sticky_action_p: 0.25,
+        time_limit: 10_000,
+        noop_max: 30,
+        episodic_life: false,
+        env_cost_us: 0,
+    };
+    let mut env = make_wrapped("minatar/breakout", 0, &cfg)?;
+    let spec = env.spec().clone();
+    let mut obs = vec![0.0f32; spec.obs_len()];
+    env.reset(&mut obs);
+    let mut rng = Rng::new(2);
+    bench.run("breakout + full wrapper stack (x100)", || {
+        for _ in 0..100 {
+            let st = env.step(rng.below(spec.num_actions), &mut obs);
+            if st.done {
+                env.reset(&mut obs);
+            }
+        }
+    });
+
+    bench.report();
+    println!("(each iteration = 100 env steps; divide mean by 100 for per-step cost)");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Bench E2: end-to-end training throughput (FPS), mono vs poly, vs
+//! actor count — regenerates the paper's §4 "on par in throughput"
+//! comparison on this testbed.
+//!
+//! `cargo bench --bench throughput` (uses artifacts/catch).
+
+use std::time::Instant;
+
+use torchbeast::config::{Mode, TrainConfig};
+use torchbeast::coordinator;
+use torchbeast::util::stats::Bench;
+
+fn fps(mode: Mode, actors: usize, steps: u64) -> anyhow::Result<(f64, f64)> {
+    let cfg = TrainConfig {
+        artifact_dir: "artifacts/catch".into(),
+        mode,
+        num_actors: actors,
+        total_steps: steps,
+        seed: 1,
+        log_interval: 0,
+        ..TrainConfig::default()
+    };
+    let t0 = Instant::now();
+    let report = coordinator::train(&cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+    Ok((report.frames as f64 / wall, report.batcher.mean_batch_size()))
+}
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/catch/manifest.json").exists() {
+        eprintln!("SKIP bench throughput: run `make artifacts` first");
+        return Ok(());
+    }
+    let mut b = Bench::new("throughput (E2): end-to-end FPS, catch, 30 learner steps");
+    println!("{:>8} {:>12} {:>12} {:>10}", "actors", "mono_fps", "poly_fps", "ratio");
+    for &n in &[1usize, 2, 4, 8, 16] {
+        let (mono, _) = fps(Mode::Mono, n, 30)?;
+        let (poly, _) = fps(Mode::Poly, n, 30)?;
+        println!("{:>8} {:>12.0} {:>12.0} {:>10.2}", n, mono, poly, poly / mono);
+        b.record(
+            &format!("mono actors={n}"),
+            1,
+            std::time::Duration::from_secs_f64(1.0 / mono.max(1e-9)),
+        );
+        b.record(
+            &format!("poly actors={n}"),
+            1,
+            std::time::Duration::from_secs_f64(1.0 / poly.max(1e-9)),
+        );
+    }
+    b.report();
+    println!("\n(rows are seconds-per-frame; see the fps table above)");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Bench E8: V-trace three ways — pure Rust, vs the AOT-compiled
+//! Pallas-kernel HLO artifact (interpret=True lowering) executed via
+//! PJRT — across rollout shapes.  The Rust implementation is the CPU
+//! baseline; the artifact number is the *CPU execution* of the
+//! TPU-shaped kernel (real-TPU performance is estimated from the VMEM
+//! analysis in DESIGN.md §Hardware-Adaptation, not measurable here).
+
+use std::path::Path;
+
+use torchbeast::runtime::tensor::{literal_to_f32s, upload_f32};
+use torchbeast::runtime::Module;
+use torchbeast::util::rng::Rng;
+use torchbeast::util::stats::Bench;
+use torchbeast::vtrace;
+
+fn rand_mat(rng: &mut Rng, t: usize, b: usize) -> Vec<Vec<f32>> {
+    (0..t)
+        .map(|_| (0..b).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut bench = Bench::new("vtrace (E8): rust vs Pallas-HLO artifact");
+    let mut rng = Rng::new(0);
+
+    for &(t, b) in &[(20usize, 8usize), (20, 64), (80, 32), (160, 128)] {
+        let log_rhos = rand_mat(&mut rng, t, b);
+        let discounts = rand_mat(&mut rng, t, b);
+        let rewards = rand_mat(&mut rng, t, b);
+        let values = rand_mat(&mut rng, t, b);
+        let boot: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+        bench.run(&format!("rust T={t} B={b}"), || {
+            let out = vtrace::from_importance_weights(
+                &log_rhos, &discounts, &rewards, &values, &boot, 1.0, 1.0,
+            );
+            std::hint::black_box(out);
+        });
+    }
+
+    // The artifact is compiled for the manifest's (T, B); bench that shape.
+    let dir = Path::new("artifacts/catch");
+    if dir.join("vtrace.hlo.txt").exists() {
+        let manifest = torchbeast::runtime::Manifest::load(dir)?;
+        let (t, b) = (manifest.unroll_length, manifest.batch_size);
+        let client = xla::PjRtClient::cpu()?;
+        let module = Module::load(&client, "vtrace", &dir.join("vtrace.hlo.txt"))?;
+        let flat = |m: &Vec<Vec<f32>>| m.iter().flatten().cloned().collect::<Vec<f32>>();
+        let log_rhos = rand_mat(&mut rng, t, b);
+        let discounts = rand_mat(&mut rng, t, b);
+        let rewards = rand_mat(&mut rng, t, b);
+        let values = rand_mat(&mut rng, t, b);
+        let boot: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+        let args = [
+            upload_f32(&client, &flat(&log_rhos), &[t, b])?,
+            upload_f32(&client, &flat(&discounts), &[t, b])?,
+            upload_f32(&client, &flat(&rewards), &[t, b])?,
+            upload_f32(&client, &flat(&values), &[t, b])?,
+            upload_f32(&client, &boot, &[b])?,
+        ];
+        let arg_refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        bench.run(&format!("pallas-hlo artifact T={t} B={b} (incl host<->literal)"), || {
+            let out = module.run_buffers(&arg_refs).unwrap();
+            std::hint::black_box(out);
+        });
+
+        // correctness cross-check while we're here (three-way agreement)
+        let out = module.run_buffers(&arg_refs)?;
+        let vs_hlo = literal_to_f32s(&out[0])?;
+        let rust_out = vtrace::from_importance_weights(
+            &log_rhos, &discounts, &rewards, &values, &boot, 1.0, 1.0,
+        );
+        let mut max_diff = 0.0f32;
+        for ti in 0..t {
+            for bi in 0..b {
+                max_diff = max_diff.max((vs_hlo[ti * b + bi] - rust_out.vs[ti][bi]).abs());
+            }
+        }
+        println!("cross-check rust vs artifact: max |vs diff| = {max_diff:.2e}");
+        assert!(max_diff < 1e-4);
+    } else {
+        println!("(artifacts/catch missing: artifact rows skipped; run `make artifacts`)");
+    }
+
+    bench.report();
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Action selection from policy logits.
+//!
+//! The actor threads sample from the categorical policy on the host
+//! (the inference artifact returns raw logits; sampling in Rust keeps
+//! the artifact free of PRNG state and lets each actor own an
+//! independent, reproducible stream).
+
+use crate::util::rng::Rng;
+use crate::vtrace::softmax;
+
+/// Sample an action from categorical logits by inverse-CDF on the
+/// softmax (f64 accumulation: the tail action must remain reachable).
+pub fn sample_action(logits: &[f32], rng: &mut Rng) -> usize {
+    debug_assert!(!logits.is_empty());
+    let probs = softmax(logits);
+    let u = rng.next_f64();
+    let mut acc = 0.0f64;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p as f64;
+        if u < acc {
+            return i;
+        }
+    }
+    probs.len() - 1 // numeric slack: u ~ 1.0
+}
+
+/// Greedy action (evaluation mode).
+pub fn argmax_action(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Epsilon-greedy over the sampled policy (exploration ablation).
+pub fn epsilon_action(logits: &[f32], epsilon: f32, rng: &mut Rng) -> usize {
+    if rng.chance(epsilon) {
+        rng.below(logits.len())
+    } else {
+        sample_action(logits, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_respects_distribution() {
+        // peaked logits: the hot action dominates
+        let logits = [5.0f32, 0.0, 0.0];
+        let mut rng = Rng::new(0);
+        let n = 10_000;
+        let hot = (0..n).filter(|_| sample_action(&logits, &mut rng) == 0).count();
+        let p0 = softmax(&logits)[0] as f64;
+        let frac = hot as f64 / n as f64;
+        assert!((frac - p0).abs() < 0.02, "{frac} vs {p0}");
+    }
+
+    #[test]
+    fn sample_uniform_covers_all() {
+        let logits = [0.0f32; 6];
+        let mut rng = Rng::new(1);
+        let mut counts = [0usize; 6];
+        for _ in 0..12_000 {
+            counts[sample_action(&logits, &mut rng)] += 1;
+        }
+        for &c in &counts {
+            let f = c as f64 / 12_000.0;
+            assert!((f - 1.0 / 6.0).abs() < 0.03, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn sample_handles_extreme_logits() {
+        let logits = [1000.0f32, -1000.0];
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            assert_eq!(sample_action(&logits, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn argmax_correct() {
+        assert_eq!(argmax_action(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax_action(&[7.0]), 0);
+    }
+
+    #[test]
+    fn epsilon_one_is_uniform() {
+        let logits = [100.0f32, 0.0, 0.0, 0.0];
+        let mut rng = Rng::new(3);
+        let n = 8000;
+        let hot = (0..n)
+            .filter(|_| epsilon_action(&logits, 1.0, &mut rng) == 0)
+            .count();
+        let f = hot as f64 / n as f64;
+        assert!((f - 0.25).abs() < 0.03, "{f}");
+    }
+
+    #[test]
+    fn deterministic_stream() {
+        let logits = [0.3f32, 0.5, 0.2];
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for _ in 0..100 {
+            assert_eq!(sample_action(&logits, &mut a), sample_action(&logits, &mut b));
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! Run configuration: JSON config files + command-line overrides.
+//!
+//! The flag surface mirrors TorchBeast's `polybeast.py` flags (env,
+//! num_actors, batch_size, unroll_length, total_steps, ...) plus the
+//! artifact/mode machinery of this reproduction.  `configs/*.json`
+//! ship the experiment presets (E1/E2/E6); every field can be
+//! overridden on the command line as `--key value` or `--key=value`.
+
+use std::path::{Path, PathBuf};
+
+use crate::env::wrappers::WrapperCfg;
+use crate::util::json::Json;
+
+/// Data-plane mode: the paper's two implementations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// MonoBeast: actors and learner in one process, channel queues.
+    Mono,
+    /// PolyBeast: environments behind TCP env servers.
+    Poly,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> anyhow::Result<Mode> {
+        match s {
+            "mono" => Ok(Mode::Mono),
+            "poly" => Ok(Mode::Poly),
+            other => anyhow::bail!("mode must be mono|poly, got {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Mode::Mono => "mono",
+            Mode::Poly => "poly",
+        }
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Artifact bundle directory (contains manifest.json + *.hlo.txt).
+    pub artifact_dir: PathBuf,
+    pub mode: Mode,
+    pub num_actors: usize,
+    /// Learner gradient steps to run.
+    pub total_steps: u64,
+    pub seed: u64,
+    /// Dynamic batcher: max wait for a full inference batch.
+    pub inference_timeout_us: u64,
+    /// Learner queue capacity (rollouts) — backpressure bound.
+    pub queue_capacity: usize,
+    /// Env servers to connect to in poly mode (spawned if empty).
+    pub server_addresses: Vec<String>,
+    /// Environment wrapper stack (applied env-side).
+    pub wrappers: WrapperCfg,
+    /// CSV curve output; None disables.
+    pub log_path: Option<PathBuf>,
+    /// Save the final parameter snapshot here (TBCK1 format).
+    pub checkpoint_path: Option<PathBuf>,
+    /// Start from this checkpoint instead of seeded init.
+    pub init_checkpoint: Option<PathBuf>,
+    /// Print a progress line every n learner steps; 0 disables.
+    pub log_interval: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifact_dir: PathBuf::from("artifacts/catch"),
+            mode: Mode::Mono,
+            num_actors: 4,
+            total_steps: 200,
+            seed: 1,
+            inference_timeout_us: 2000,
+            queue_capacity: 16,
+            server_addresses: Vec::new(),
+            wrappers: WrapperCfg::default(),
+            log_path: None,
+            checkpoint_path: None,
+            init_checkpoint: None,
+            log_interval: 50,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load a JSON config file (all fields optional; defaults fill in).
+    pub fn from_file(path: &Path) -> anyhow::Result<TrainConfig> {
+        let j = crate::util::json::parse_file(path)?;
+        let mut cfg = TrainConfig::default();
+        cfg.apply_json(&j)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_json(&mut self, j: &Json) -> anyhow::Result<()> {
+        let pairs = match j {
+            Json::Obj(kv) => kv,
+            _ => anyhow::bail!("config root must be an object"),
+        };
+        for (k, v) in pairs {
+            self.set(k, v)?;
+        }
+        Ok(())
+    }
+
+    /// Set one field from a JSON value (shared by file + CLI paths).
+    pub fn set(&mut self, key: &str, v: &Json) -> anyhow::Result<()> {
+        let num = |v: &Json| -> anyhow::Result<f64> {
+            v.as_f64()
+                .ok_or_else(|| anyhow::anyhow!("{key} expects a number"))
+        };
+        let st = |v: &Json| -> anyhow::Result<String> {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("{key} expects a string"))
+        };
+        match key {
+            "artifact_dir" => self.artifact_dir = PathBuf::from(st(v)?),
+            "mode" => self.mode = Mode::parse(&st(v)?)?,
+            "num_actors" => self.num_actors = num(v)? as usize,
+            "total_steps" => self.total_steps = num(v)? as u64,
+            "seed" => self.seed = num(v)? as u64,
+            "inference_timeout_us" => self.inference_timeout_us = num(v)? as u64,
+            "queue_capacity" => self.queue_capacity = num(v)? as usize,
+            "server_addresses" => {
+                self.server_addresses = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("server_addresses expects a list"))?
+                    .iter()
+                    .map(|s| s.as_str().unwrap_or_default().to_string())
+                    .collect()
+            }
+            "log_path" => self.log_path = Some(PathBuf::from(st(v)?)),
+            "checkpoint_path" => self.checkpoint_path = Some(PathBuf::from(st(v)?)),
+            "init_checkpoint" => self.init_checkpoint = Some(PathBuf::from(st(v)?)),
+            "log_interval" => self.log_interval = num(v)? as u64,
+            // wrapper knobs
+            "action_repeat" => self.wrappers.action_repeat = num(v)? as usize,
+            "frame_stack" => self.wrappers.frame_stack = num(v)? as usize,
+            "reward_clip" => self.wrappers.reward_clip = num(v)? as f32,
+            "sticky_action_p" => self.wrappers.sticky_action_p = num(v)? as f32,
+            "time_limit" => self.wrappers.time_limit = num(v)? as u32,
+            "noop_max" => self.wrappers.noop_max = num(v)? as u32,
+            "episodic_life" => {
+                self.wrappers.episodic_life = v
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("episodic_life expects a bool"))?
+            }
+            "env_cost_us" => self.wrappers.env_cost_us = num(v)? as u64,
+            // informational keys in preset files are ignored
+            "comment" | "experiment" | "hyperparams" => {}
+            other => anyhow::bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Apply CLI args: `--key value`, `--key=value`, or `--config file`.
+    pub fn apply_args(&mut self, args: &[String]) -> anyhow::Result<()> {
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            let Some(stripped) = arg.strip_prefix("--") else {
+                anyhow::bail!("expected --key, got {arg:?}");
+            };
+            let (key, value) = if let Some((k, v)) = stripped.split_once('=') {
+                (k.to_string(), v.to_string())
+            } else {
+                i += 1;
+                let v = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--{stripped} needs a value"))?;
+                (stripped.to_string(), v.clone())
+            };
+            if key == "config" {
+                let j = crate::util::json::parse_file(Path::new(&value))?;
+                self.apply_json(&j)?;
+            } else {
+                self.set(&key, &parse_cli_value(&value))?;
+            }
+            i += 1;
+        }
+        Ok(())
+    }
+}
+
+/// CLI strings: try number, bool, JSON list; fall back to string.
+fn parse_cli_value(s: &str) -> Json {
+    match s {
+        "true" => return Json::Bool(true),
+        "false" => return Json::Bool(false),
+        _ => {}
+    }
+    if let Ok(n) = s.parse::<f64>() {
+        return Json::Num(n);
+    }
+    if s.starts_with('[') {
+        if let Ok(j) = Json::parse(s) {
+            return j;
+        }
+    }
+    Json::Str(s.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = TrainConfig::default();
+        assert_eq!(c.mode, Mode::Mono);
+        assert!(c.num_actors > 0);
+    }
+
+    #[test]
+    fn json_round() {
+        let mut c = TrainConfig::default();
+        let j = Json::parse(
+            r#"{"mode": "poly", "num_actors": 16, "total_steps": 1000,
+                "frame_stack": 4, "episodic_life": true,
+                "server_addresses": ["127.0.0.1:7001", "127.0.0.1:7002"]}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.mode, Mode::Poly);
+        assert_eq!(c.num_actors, 16);
+        assert_eq!(c.wrappers.frame_stack, 4);
+        assert!(c.wrappers.episodic_life);
+        assert_eq!(c.server_addresses.len(), 2);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = TrainConfig::default();
+        let args: Vec<String> = [
+            "--mode=poly",
+            "--num_actors",
+            "8",
+            "--seed=99",
+            "--artifact_dir",
+            "artifacts/breakout",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.mode, Mode::Poly);
+        assert_eq!(c.num_actors, 8);
+        assert_eq!(c.seed, 99);
+        assert_eq!(c.artifact_dir, PathBuf::from("artifacts/breakout"));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = TrainConfig::default();
+        assert!(c.set("num_actros", &Json::Num(4.0)).is_err());
+    }
+
+    #[test]
+    fn bad_cli_shapes_rejected() {
+        let mut c = TrainConfig::default();
+        assert!(c.apply_args(&["oops".to_string()]).is_err());
+        assert!(c.apply_args(&["--num_actors".to_string()]).is_err());
+        assert!(c
+            .apply_args(&["--mode".to_string(), "dual".to_string()])
+            .is_err());
+    }
+
+    #[test]
+    fn config_file_loading() {
+        let dir = std::env::temp_dir().join("tb_config_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.json");
+        std::fs::write(
+            &path,
+            r#"{"num_actors": 3, "total_steps": 42, "comment": "test preset"}"#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_file(&path).unwrap();
+        assert_eq!(c.num_actors, 3);
+        assert_eq!(c.total_steps, 42);
+        // and via --config
+        let mut c2 = TrainConfig::default();
+        c2.apply_args(&[
+            "--config".to_string(),
+            path.to_str().unwrap().to_string(),
+            "--num_actors=5".to_string(),
+        ])
+        .unwrap();
+        assert_eq!(c2.num_actors, 5, "later CLI overrides config file");
+        assert_eq!(c2.total_steps, 42);
+    }
+
+    #[test]
+    fn cli_value_typing() {
+        assert_eq!(parse_cli_value("3"), Json::Num(3.0));
+        assert_eq!(parse_cli_value("true"), Json::Bool(true));
+        assert_eq!(parse_cli_value("mono"), Json::Str("mono".into()));
+        assert_eq!(
+            parse_cli_value(r#"["a","b"]"#).as_arr().unwrap().len(),
+            2
+        );
+    }
+}

@@ -1,0 +1,286 @@
+//! Learner queue: bounded rollout queue with batch dequeue — the
+//! `BatchingQueue(FLAGS.batch_size, batch_dim=1)` of the paper's
+//! pseudocode, and the free/full-queue discipline of MonoBeast (§5.1).
+//!
+//! Actors block when the queue is full (backpressure: the learner is
+//! the bottleneck, so actors must not run unboundedly off-policy —
+//! staleness is bounded by `capacity + batch_size` rollouts).  The
+//! learner blocks until `batch_size` rollouts are available, then
+//! receives exactly that many, FIFO.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct State<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+struct Shared<T> {
+    state: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+/// Producer handle (clone per actor).
+pub struct QueueSender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Clone for QueueSender<T> {
+    fn clone(&self) -> Self {
+        QueueSender {
+            shared: self.shared.clone(),
+        }
+    }
+}
+
+/// Consumer handle (learner thread).
+pub struct QueueReceiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum SendError {
+    Closed,
+}
+
+impl<T> QueueSender<T> {
+    /// Blocking send; returns Err if the queue has been closed.
+    pub fn send(&self, item: T) -> Result<(), SendError> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(SendError::Closed);
+            }
+            if st.queue.len() < self.shared.capacity {
+                st.queue.push_back(item);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.shared.not_full.wait(st).unwrap();
+        }
+    }
+
+    pub fn close(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.closed = true;
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> QueueReceiver<T> {
+    /// Block until `n` items are available; returns them FIFO.
+    /// Returns None when closed and fewer than `n` remain.
+    pub fn recv_batch(&self, n: usize) -> Option<Vec<T>> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if st.queue.len() >= n {
+                let batch: Vec<T> = st.queue.drain(..n).collect();
+                // wake all blocked producers — n slots opened
+                self.shared.not_full.notify_all();
+                return Some(batch);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking single dequeue (drain paths).
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        let item = st.queue.pop_front();
+        if item.is_some() {
+            self.shared.not_full.notify_one();
+        }
+        item
+    }
+
+    pub fn close(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.closed = true;
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Create a bounded batching queue.
+pub fn batching_queue<T>(capacity: usize) -> (QueueSender<T>, QueueReceiver<T>) {
+    assert!(capacity > 0);
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            queue: VecDeque::with_capacity(capacity),
+            closed: false,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+        capacity,
+    });
+    (
+        QueueSender {
+            shared: shared.clone(),
+        },
+        QueueReceiver { shared },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_batches() {
+        let (tx, rx) = batching_queue(8);
+        for i in 0..6 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(rx.recv_batch(3).unwrap(), vec![0, 1, 2]);
+        assert_eq!(rx.recv_batch(3).unwrap(), vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn backpressure_blocks_producer() {
+        let (tx, rx) = batching_queue(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let t = {
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let t0 = std::time::Instant::now();
+                tx.send(3).unwrap(); // must block until consumer drains
+                t0.elapsed()
+            })
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv_batch(2).unwrap(), vec![1, 2]);
+        let blocked_for = t.join().unwrap();
+        assert!(
+            blocked_for >= Duration::from_millis(15),
+            "producer should have blocked, blocked {blocked_for:?}"
+        );
+        assert_eq!(rx.recv_batch(1).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn consumer_blocks_until_full_batch() {
+        let (tx, rx) = batching_queue(8);
+        let consumer = std::thread::spawn(move || rx.recv_batch(4).unwrap());
+        std::thread::sleep(Duration::from_millis(10));
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(consumer.join().unwrap(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn close_unblocks_everyone() {
+        let (tx, rx) = batching_queue::<i32>(2);
+        let consumer = std::thread::spawn(move || rx.recv_batch(1));
+        std::thread::sleep(Duration::from_millis(5));
+        tx.close();
+        assert_eq!(consumer.join().unwrap(), None);
+        assert_eq!(tx.send(1), Err(SendError::Closed));
+    }
+
+    #[test]
+    fn close_drains_remaining_full_batches() {
+        let (tx, rx) = batching_queue(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        tx.close();
+        // a full batch of 4 is still served
+        assert_eq!(rx.recv_batch(4).unwrap(), vec![0, 1, 2, 3]);
+        // the remaining 1 < 4 is not
+        assert_eq!(rx.recv_batch(4), None);
+        // but try_recv can drain it
+        assert_eq!(rx.try_recv(), Some(4));
+        assert_eq!(rx.try_recv(), None);
+    }
+
+    #[test]
+    fn exactly_once_delivery_under_contention() {
+        // property: N producers x M items, every item delivered once
+        let mut rng = Rng::new(7);
+        for _case in 0..4 {
+            let producers = 1 + rng.below(8);
+            let per = 20 + rng.below(50);
+            let cap = 1 + rng.below(6);
+            let batch = 1 + rng.below(4);
+            let (tx, rx) = batching_queue(cap);
+            let handles: Vec<_> = (0..producers)
+                .map(|p| {
+                    let tx = tx.clone();
+                    std::thread::spawn(move || {
+                        for k in 0..per {
+                            tx.send((p, k)).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            let total = producers * per;
+            let consumer = std::thread::spawn(move || {
+                let mut seen = std::collections::HashSet::new();
+                let mut got = 0;
+                while got < total {
+                    let take = batch.min(total - got);
+                    let items = rx.recv_batch(take).unwrap();
+                    got += items.len();
+                    for it in items {
+                        assert!(seen.insert(it), "duplicate {it:?}");
+                    }
+                }
+                seen.len()
+            });
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(consumer.join().unwrap(), total);
+        }
+    }
+
+    #[test]
+    fn per_producer_order_preserved() {
+        let (tx, rx) = batching_queue(4);
+        let producer = {
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                for k in 0..100 {
+                    tx.send(k).unwrap();
+                }
+            })
+        };
+        let mut last = -1i64;
+        let mut got = 0;
+        while got < 100 {
+            for v in rx.recv_batch(1).unwrap() {
+                assert!((v as i64) > last);
+                last = v as i64;
+                got += 1;
+            }
+        }
+        producer.join().unwrap();
+    }
+}

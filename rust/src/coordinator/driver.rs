@@ -1,0 +1,297 @@
+//! Training driver: wires the whole system together and runs it.
+//!
+//! This is the Rust analog of `polybeast.py`'s `main()` (paper §5.2
+//! pseudocode): build the queues, spawn the inference thread and the
+//! actor pool, run the learner loop inline, and tear everything down
+//! in order.  `Mode::Mono` uses in-process environments; `Mode::Poly`
+//! connects `RemoteEnv`s to environment servers (spawning local ones
+//! if no addresses are configured — the single-machine poly setup).
+//!
+//! Layer discipline: everything here is coordination; all ML compute
+//! happens inside the AOT artifacts via [`runtime`].
+
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::{Mode, TrainConfig};
+use crate::coordinator::actor_pool::{ActorConfig, ActorPool};
+use crate::coordinator::batching_queue::batching_queue;
+use crate::coordinator::dynamic_batcher::{dynamic_batcher, BatcherStats};
+use crate::coordinator::rollout::{stack_rollouts, Rollout};
+use crate::coordinator::weights::WeightsStore;
+use crate::env::{self, Environment};
+use crate::metrics::{CurveLogger, Metrics, Snapshot};
+use crate::rpc::{EnvServer, RemoteEnv};
+use crate::runtime::{InferenceEngine, LearnerBatch, LearnerEngine, LearnerStats, ParamVecs};
+
+/// One row of the training curve (CSV mirror, kept in memory too).
+#[derive(Debug, Clone)]
+pub struct CurveRow {
+    pub step: u64,
+    pub frames: u64,
+    pub elapsed_s: f64,
+    pub stats: LearnerStats,
+    pub mean_return: f64,
+    pub episodes: u64,
+}
+
+/// Final report of a training run.
+pub struct TrainReport {
+    pub steps: u64,
+    pub frames: u64,
+    pub episodes: u64,
+    pub elapsed: Duration,
+    pub fps: f64,
+    pub final_params: ParamVecs,
+    pub history: Vec<CurveRow>,
+    pub batcher: BatcherStats,
+    pub final_snapshot: Snapshot,
+    pub learner_step_time: Duration,
+}
+
+/// Run a full training job per `cfg`. Blocks until `total_steps`
+/// learner steps have been taken, then shuts the pipeline down.
+pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
+    let t_start = Instant::now();
+
+    // -- engines (compile artifacts; learner + inference each own a
+    // client — xla handles are not Send, so the inference engine is
+    // constructed *inside* the inference thread below)
+    let mut learner = LearnerEngine::load(&cfg.artifact_dir)
+        .with_context(|| format!("loading artifacts from {}", cfg.artifact_dir.display()))?;
+    let manifest = learner.manifest.clone();
+    anyhow::ensure!(
+        cfg.wrappers.frame_stack <= 1,
+        "frame_stack changes the obs channel count; bake it into the artifact \
+         (python -m compile.aot) rather than wrapping at runtime"
+    );
+
+    // -- initial parameters (seeded init, or a checkpoint to resume)
+    let initial = match &cfg.init_checkpoint {
+        Some(path) => {
+            let params = crate::runtime::checkpoint::load(path, &manifest)?;
+            learner.set_params(&params)?;
+            eprintln!("[train] resumed params from {}", path.display());
+            params
+        }
+        None => learner.init_params(cfg.seed as i32)?,
+    };
+    let weights = WeightsStore::new();
+    weights.publish(initial.clone());
+
+    // -- queues
+    // Close inference batches at min(compiled batch, actor count): with
+    // fewer actors than the compiled batch size a batch can never fill,
+    // and every request would wait out the full timeout (measured: p50
+    // wait ≈ timeout before this cap; see EXPERIMENTS.md §Perf).
+    let target_batch = manifest.inference_batch.min(cfg.num_actors.max(1));
+    let (infer_client, infer_stream) = dynamic_batcher(
+        target_batch,
+        Duration::from_micros(cfg.inference_timeout_us),
+    );
+    // recv_batch(B) needs B rollouts resident at once: a capacity below
+    // the batch size would deadlock the learner against backpressure.
+    anyhow::ensure!(
+        cfg.queue_capacity >= manifest.batch_size,
+        "queue_capacity {} must be >= batch_size {}",
+        cfg.queue_capacity,
+        manifest.batch_size
+    );
+    let (rollout_tx, rollout_rx) = batching_queue::<Rollout>(cfg.queue_capacity);
+    let metrics = Metrics::shared();
+
+    // -- environments (mono: local; poly: remote streams)
+    let mut local_servers: Vec<EnvServer> = Vec::new();
+    let envs = build_envs(cfg, &manifest.env, &mut local_servers)?;
+
+    // -- inference thread (constructs its own engine: xla is !Send)
+    let num_actions = manifest.num_actions;
+    let weights_for_inference = weights.clone();
+    let artifact_dir = cfg.artifact_dir.clone();
+    let inference_thread = std::thread::Builder::new()
+        .name("inference".into())
+        .spawn(move || -> Result<()> {
+            let mut engine = InferenceEngine::load(&artifact_dir)?;
+            let obs_len = engine.manifest.obs_len();
+            while let Some(batch) = infer_stream.next_batch() {
+                // adopt the newest weights before evaluating
+                let (v, params) = weights_for_inference.latest();
+                if v > engine.param_version {
+                    engine.set_params(&params, v)?;
+                }
+                let n = batch.len();
+                let mut obs = Vec::with_capacity(n * obs_len);
+                for r in &batch.requests {
+                    obs.extend_from_slice(&r.obs);
+                }
+                let (logits, baselines) = engine.infer(&obs, n)?;
+                batch.respond(&logits, &baselines, num_actions);
+            }
+            Ok(())
+        })?;
+
+    // -- actor pool
+    let pool = ActorPool::spawn(
+        envs,
+        infer_client.clone(),
+        rollout_tx.clone(),
+        metrics.clone(),
+        ActorConfig {
+            unroll_length: manifest.unroll_length,
+            num_actions,
+            obs_len: manifest.obs_len(),
+            seed: cfg.seed,
+        },
+    );
+
+    // -- learner loop (inline on this thread)
+    let mut logger = match &cfg.log_path {
+        Some(p) => Some(CurveLogger::create(p)?),
+        None => None,
+    };
+    let mut history = Vec::new();
+    let mut batch = LearnerBatch::zeros(&manifest);
+    let mut final_params = initial;
+    for step in 1..=cfg.total_steps {
+        let Some(rollouts) = rollout_rx.recv_batch(manifest.batch_size) else {
+            break;
+        };
+        stack_rollouts(&rollouts, &manifest, &mut batch);
+        let (stats, snapshot) = learner.step(&batch)?;
+        weights.publish(snapshot.clone());
+        final_params = snapshot;
+        metrics.record_learner_step(stats.total_loss());
+
+        let snap = metrics.snapshot();
+        if let Some(log) = logger.as_mut() {
+            log.log(step, &snap, &stats)?;
+        }
+        history.push(CurveRow {
+            step,
+            frames: snap.frames,
+            elapsed_s: snap.elapsed_s,
+            stats: stats.clone(),
+            mean_return: snap.mean_return,
+            episodes: snap.episodes,
+        });
+        if cfg.log_interval > 0 && step % cfg.log_interval == 0 {
+            eprintln!(
+                "[train {}] step {step}/{} frames {} fps {:.0} loss {:.3} return {:.3}",
+                cfg.mode.as_str(),
+                cfg.total_steps,
+                snap.frames,
+                snap.fps,
+                stats.total_loss(),
+                snap.mean_return,
+            );
+        }
+    }
+
+    // -- orderly shutdown: stop actors first, then inference
+    rollout_rx.close();
+    infer_client.shutdown_for_tests();
+    weights.close();
+    pool.join();
+    inference_thread
+        .join()
+        .map_err(|_| anyhow::anyhow!("inference thread panicked"))??;
+    let batcher_stats = infer_client.stats_snapshot();
+    for server in &mut local_servers {
+        server.shutdown();
+    }
+
+    if let Some(path) = &cfg.checkpoint_path {
+        crate::runtime::checkpoint::save(path, &manifest, &final_params)?;
+        eprintln!("[train] checkpoint written to {}", path.display());
+    }
+
+    let snap = metrics.snapshot();
+    Ok(TrainReport {
+        steps: cfg.total_steps.min(snap.learner_steps),
+        frames: snap.frames,
+        episodes: snap.episodes,
+        elapsed: t_start.elapsed(),
+        fps: snap.fps,
+        final_params,
+        history,
+        batcher: batcher_stats,
+        final_snapshot: snap,
+        learner_step_time: learner.mean_step_time(),
+    })
+}
+
+/// Build the actor environments for the configured mode.
+fn build_envs(
+    cfg: &TrainConfig,
+    env_name: &str,
+    local_servers: &mut Vec<EnvServer>,
+) -> Result<Vec<Box<dyn Environment>>> {
+    match cfg.mode {
+        Mode::Mono => (0..cfg.num_actors)
+            .map(|id| env::make_wrapped(env_name, env::actor_seed(cfg.seed, id), &cfg.wrappers))
+            .collect(),
+        Mode::Poly => {
+            let addresses = if cfg.server_addresses.is_empty() {
+                // single-machine poly: spawn local env servers, one per
+                // ~8 actors (paper: limit connections per server)
+                let n_servers = cfg.num_actors.div_ceil(8).max(1);
+                for _ in 0..n_servers {
+                    local_servers.push(EnvServer::start("127.0.0.1:0")?);
+                }
+                local_servers
+                    .iter()
+                    .map(|s| s.addr.to_string())
+                    .collect::<Vec<_>>()
+            } else {
+                cfg.server_addresses.clone()
+            };
+            (0..cfg.num_actors)
+                .map(|id| {
+                    let addr = &addresses[id % addresses.len()];
+                    let env = RemoteEnv::connect(
+                        addr,
+                        env_name,
+                        env::actor_seed(cfg.seed, id),
+                        &cfg.wrappers,
+                    )
+                    .with_context(|| format!("connecting actor {id} to {addr}"))?;
+                    Ok(Box::new(env) as Box<dyn Environment>)
+                })
+                .collect()
+        }
+    }
+}
+
+/// Greedy-policy evaluation of a parameter snapshot: fresh inference
+/// engine, argmax actions, `episodes` episodes. Returns mean return.
+pub fn evaluate(
+    artifact_dir: &std::path::Path,
+    params: &ParamVecs,
+    episodes: usize,
+    seed: u64,
+) -> Result<f64> {
+    let mut engine = InferenceEngine::load(artifact_dir)?;
+    engine.set_params(params, 1)?;
+    let manifest = engine.manifest.clone();
+    let mut env = env::make_env(&manifest.env, seed)?;
+    let mut obs = vec![0.0f32; manifest.obs_len()];
+    let mut total = 0.0f64;
+    for _ in 0..episodes {
+        env.reset(&mut obs);
+        let mut ep = 0.0f64;
+        let mut guard = 0;
+        loop {
+            let (logits, _) = engine.infer(&obs, 1)?;
+            let action = crate::agent::argmax_action(&logits);
+            let st = env.step(action, &mut obs);
+            ep += st.reward as f64;
+            guard += 1;
+            if st.done || guard > 10_000 {
+                break;
+            }
+        }
+        total += ep;
+    }
+    Ok(total / episodes as f64)
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator: the paper's system contribution.
+//!
+//! * [`dynamic_batcher`] — batcher.cc reproduction (inference queue);
+//! * [`batching_queue`] — learner queue with backpressure;
+//! * [`rollout`] — rollout buffers + time-major batch stacking;
+//! * [`actor_pool`] — actor threads (local or remote envs);
+//! * [`weights`] — versioned learner→inference parameter store;
+//! * [`driver`] — `train()`: wires everything, runs the learner loop.
+
+pub mod actor_pool;
+pub mod batching_queue;
+pub mod driver;
+pub mod dynamic_batcher;
+pub mod rollout;
+pub mod weights;
+
+pub use driver::{evaluate, train, TrainReport};

@@ -1,0 +1,229 @@
+//! Rollout buffers: the paper's learner-input dict
+//! (`observation/reward/done/policy_logits/action`, Section 2) as flat
+//! reusable buffers.
+//!
+//! Each actor fills a [`Rollout`] of `unroll_length` transitions
+//! (plus the T+1-th bootstrap observation); the learner stacks
+//! `batch_size` of them into the time-major [`LearnerBatch`] layout
+//! the learner artifact was compiled for (`[T, B, ...]`, index
+//! `t * B + b`).
+
+use crate::runtime::{LearnerBatch, Manifest};
+
+/// One actor's T-step rollout (batch dimension absent).
+#[derive(Debug, Clone)]
+pub struct Rollout {
+    pub t: usize,
+    pub obs_len: usize,
+    pub num_actions: usize,
+    /// `[T+1, obs_len]`
+    pub observations: Vec<f32>,
+    /// `[T]`
+    pub actions: Vec<i32>,
+    /// `[T]`
+    pub rewards: Vec<f32>,
+    /// `[T]` 1.0 where the episode ended
+    pub dones: Vec<f32>,
+    /// `[T, A]` behaviour-policy logits
+    pub behavior_logits: Vec<f32>,
+    /// How many transitions are filled (== t when complete).
+    pub filled: usize,
+}
+
+impl Rollout {
+    pub fn new(t: usize, obs_len: usize, num_actions: usize) -> Rollout {
+        Rollout {
+            t,
+            obs_len,
+            num_actions,
+            observations: vec![0.0; (t + 1) * obs_len],
+            actions: vec![0; t],
+            rewards: vec![0.0; t],
+            dones: vec![0.0; t],
+            behavior_logits: vec![0.0; t * num_actions],
+            filled: 0,
+        }
+    }
+
+    /// Write the observation for step `i` (0..=T).
+    pub fn set_obs(&mut self, i: usize, obs: &[f32]) {
+        debug_assert!(i <= self.t);
+        debug_assert_eq!(obs.len(), self.obs_len);
+        self.observations[i * self.obs_len..(i + 1) * self.obs_len].copy_from_slice(obs);
+    }
+
+    /// Record transition `i`: the action taken from obs_i, its logits,
+    /// and the resulting reward/done.
+    pub fn set_transition(
+        &mut self,
+        i: usize,
+        action: usize,
+        logits: &[f32],
+        reward: f32,
+        done: bool,
+    ) {
+        debug_assert!(i < self.t);
+        debug_assert_eq!(logits.len(), self.num_actions);
+        self.actions[i] = action as i32;
+        self.rewards[i] = reward;
+        self.dones[i] = if done { 1.0 } else { 0.0 };
+        self.behavior_logits[i * self.num_actions..(i + 1) * self.num_actions]
+            .copy_from_slice(logits);
+        self.filled = self.filled.max(i + 1);
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.filled == self.t
+    }
+
+    /// Reset for reuse (buffer-recycling discipline of §5.1). The
+    /// T+1-th observation of the previous rollout becomes observation
+    /// 0 of the next (contiguous experience, like TorchBeast).
+    pub fn roll_over(&mut self) {
+        let last = self.t * self.obs_len;
+        let (head, tail) = self.observations.split_at_mut(last);
+        head[..self.obs_len].copy_from_slice(&tail[..self.obs_len]);
+        self.filled = 0;
+    }
+}
+
+/// Stack B rollouts into the learner's time-major batch.
+/// `batch` buffers are reused across calls (no allocation).
+pub fn stack_rollouts(rollouts: &[Rollout], m: &Manifest, batch: &mut LearnerBatch) {
+    let (t, b, a) = (m.unroll_length, m.batch_size, m.num_actions);
+    let obs_len = m.obs_len();
+    assert_eq!(rollouts.len(), b, "need exactly B rollouts");
+    for r in rollouts {
+        assert!(r.is_complete(), "incomplete rollout");
+        assert_eq!(r.t, t);
+        assert_eq!(r.obs_len, obs_len);
+    }
+    for (bi, r) in rollouts.iter().enumerate() {
+        for ti in 0..=t {
+            let dst = (ti * b + bi) * obs_len;
+            let src = ti * obs_len;
+            batch.observations[dst..dst + obs_len]
+                .copy_from_slice(&r.observations[src..src + obs_len]);
+        }
+        for ti in 0..t {
+            let idx = ti * b + bi;
+            batch.actions[idx] = r.actions[ti];
+            batch.rewards[idx] = r.rewards[ti];
+            batch.dones[idx] = r.dones[ti];
+            let dst = idx * a;
+            batch.behavior_logits[dst..dst + a]
+                .copy_from_slice(&r.behavior_logits[ti * a..(ti + 1) * a]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{DType, LeafSpec};
+    use std::path::PathBuf;
+
+    fn tiny_manifest(t: usize, b: usize) -> Manifest {
+        Manifest {
+            dir: PathBuf::new(),
+            env: "catch".into(),
+            model: "minatar".into(),
+            obs_shape: [1, 2, 2],
+            num_actions: 3,
+            unroll_length: t,
+            batch_size: b,
+            inference_batch: 4,
+            inference_sizes: vec![4],
+            param_count: 1,
+            params: vec![LeafSpec {
+                name: "w".into(),
+                shape: vec![1],
+                dtype: DType::F32,
+            }],
+            opt_state: vec![],
+            stats_names: vec![],
+            hyperparams: crate::util::json::Json::Obj(vec![]),
+            hlo_sha256: String::new(),
+        }
+    }
+
+    fn fill_rollout(r: &mut Rollout, tag: f32) {
+        for i in 0..=r.t {
+            let obs: Vec<f32> = (0..r.obs_len).map(|k| tag + i as f32 + k as f32 * 0.1).collect();
+            r.set_obs(i, &obs);
+        }
+        for i in 0..r.t {
+            let logits: Vec<f32> = (0..r.num_actions).map(|k| tag + k as f32).collect();
+            r.set_transition(i, i % r.num_actions, &logits, tag + i as f32, i == r.t - 1);
+        }
+    }
+
+    #[test]
+    fn rollout_fill_and_complete() {
+        let mut r = Rollout::new(4, 4, 3);
+        assert!(!r.is_complete());
+        fill_rollout(&mut r, 10.0);
+        assert!(r.is_complete());
+        assert_eq!(r.actions, vec![0, 1, 2, 0]);
+        assert_eq!(r.dones, vec![0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn roll_over_carries_last_obs() {
+        let mut r = Rollout::new(3, 2, 2);
+        fill_rollout(&mut r, 0.0);
+        let last_obs = r.observations[3 * 2..4 * 2].to_vec();
+        r.roll_over();
+        assert_eq!(&r.observations[..2], &last_obs[..]);
+        assert_eq!(r.filled, 0);
+    }
+
+    #[test]
+    fn stacking_layout_time_major() {
+        let m = tiny_manifest(2, 3);
+        let mut rollouts = Vec::new();
+        for bi in 0..3 {
+            let mut r = Rollout::new(2, 4, 3);
+            fill_rollout(&mut r, 100.0 * bi as f32);
+            rollouts.push(r);
+        }
+        let mut batch = LearnerBatch::zeros(&m);
+        stack_rollouts(&rollouts, &m, &mut batch);
+        let (t, b, a, obs_len) = (2, 3, 3, 4);
+        for bi in 0..b {
+            let tag = 100.0 * bi as f32;
+            for ti in 0..t {
+                let idx = ti * b + bi;
+                assert_eq!(batch.rewards[idx], tag + ti as f32, "reward [{ti},{bi}]");
+                assert_eq!(batch.actions[idx], (ti % a) as i32);
+                // obs row
+                let dst = (ti * b + bi) * obs_len;
+                assert_eq!(batch.observations[dst], tag + ti as f32);
+                // logits row
+                let l = idx * a;
+                assert_eq!(batch.behavior_logits[l], tag);
+                assert_eq!(batch.behavior_logits[l + 2], tag + 2.0);
+            }
+            // bootstrap obs at t = T
+            let dst = (t * b + bi) * obs_len;
+            assert_eq!(batch.observations[dst], tag + t as f32);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "need exactly B rollouts")]
+    fn stack_wrong_count_panics() {
+        let m = tiny_manifest(2, 3);
+        let mut batch = LearnerBatch::zeros(&m);
+        stack_rollouts(&[], &m, &mut batch);
+    }
+
+    #[test]
+    #[should_panic(expected = "incomplete rollout")]
+    fn stack_incomplete_panics() {
+        let m = tiny_manifest(2, 1);
+        let r = Rollout::new(2, 4, 3);
+        let mut batch = LearnerBatch::zeros(&m);
+        stack_rollouts(&[r], &m, &mut batch);
+    }
+}

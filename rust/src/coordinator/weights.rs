@@ -1,0 +1,135 @@
+//! Versioned parameter store: learner → inference weight propagation.
+//!
+//! The learner publishes a host snapshot (`Vec<Vec<f32>>`, manifest
+//! leaf order) after every gradient step; the inference thread adopts
+//! the newest version before serving the next batch.  The version
+//! counter doubles as the staleness signal: the behaviour-policy lag
+//! of a rollout is `learner_version - version_used_by_actor`, the
+//! quantity V-trace corrects for.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::runtime::ParamVecs;
+
+struct State {
+    version: u64,
+    params: Arc<ParamVecs>,
+    closed: bool,
+}
+
+/// Shared store (cheap to clone).
+#[derive(Clone)]
+pub struct WeightsStore {
+    state: Arc<(Mutex<State>, Condvar)>,
+}
+
+impl WeightsStore {
+    pub fn new() -> WeightsStore {
+        WeightsStore {
+            state: Arc::new((
+                Mutex::new(State {
+                    version: 0,
+                    params: Arc::new(Vec::new()),
+                    closed: false,
+                }),
+                Condvar::new(),
+            )),
+        }
+    }
+
+    /// Publish a new snapshot; returns its version.
+    pub fn publish(&self, params: ParamVecs) -> u64 {
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        st.version += 1;
+        st.params = Arc::new(params);
+        cv.notify_all();
+        st.version
+    }
+
+    /// Latest snapshot (no blocking). Version 0 = nothing published.
+    pub fn latest(&self) -> (u64, Arc<ParamVecs>) {
+        let (lock, _) = &*self.state;
+        let st = lock.lock().unwrap();
+        (st.version, st.params.clone())
+    }
+
+    /// Block until a version newer than `than` exists (or closed).
+    pub fn wait_newer(&self, than: u64) -> Option<(u64, Arc<ParamVecs>)> {
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        loop {
+            if st.version > than {
+                return Some((st.version, st.params.clone()));
+            }
+            if st.closed {
+                return None;
+            }
+            st = cv.wait(st).unwrap();
+        }
+    }
+
+    pub fn close(&self) {
+        let (lock, cv) = &*self.state;
+        lock.lock().unwrap().closed = true;
+        cv.notify_all();
+    }
+
+    pub fn version(&self) -> u64 {
+        self.state.0.lock().unwrap().version
+    }
+}
+
+impl Default for WeightsStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn publish_bumps_version() {
+        let w = WeightsStore::new();
+        assert_eq!(w.version(), 0);
+        assert_eq!(w.publish(vec![vec![1.0]]), 1);
+        assert_eq!(w.publish(vec![vec![2.0]]), 2);
+        let (v, p) = w.latest();
+        assert_eq!(v, 2);
+        assert_eq!(p[0][0], 2.0);
+    }
+
+    #[test]
+    fn wait_newer_blocks_then_wakes() {
+        let w = WeightsStore::new();
+        let w2 = w.clone();
+        let waiter = std::thread::spawn(move || w2.wait_newer(0));
+        std::thread::sleep(Duration::from_millis(10));
+        w.publish(vec![vec![3.0]]);
+        let (v, p) = waiter.join().unwrap().unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(p[0][0], 3.0);
+    }
+
+    #[test]
+    fn close_releases_waiters() {
+        let w = WeightsStore::new();
+        let w2 = w.clone();
+        let waiter = std::thread::spawn(move || w2.wait_newer(99));
+        std::thread::sleep(Duration::from_millis(5));
+        w.close();
+        assert!(waiter.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn snapshots_immutable_under_publish() {
+        let w = WeightsStore::new();
+        w.publish(vec![vec![1.0, 2.0]]);
+        let (_, old) = w.latest();
+        w.publish(vec![vec![9.0, 9.0]]);
+        assert_eq!(old[0], vec![1.0, 2.0], "old snapshot unchanged");
+    }
+}

@@ -1,0 +1,209 @@
+//! GridWorld: 8x8 navigation with walls — the deterministic-dynamics
+//! test env (only the start position is random).
+//!
+//! The agent starts in a random free cell of the left half, the goal
+//! sits at the bottom-right.  Two interior wall segments force a
+//! detour.  Reward: +1 at the goal (terminal), -0.01 per step
+//! (encourages short paths), episode capped at 64 steps.
+
+use super::{set, EnvSpec, Environment, Step};
+use crate::util::rng::Rng;
+
+pub const SIZE: usize = 8;
+pub const MAX_STEPS: u32 = 64;
+pub const STEP_PENALTY: f32 = -0.01;
+
+pub const SPEC: EnvSpec = EnvSpec {
+    name: "gridworld",
+    channels: 3, // agent, goal, walls
+    height: SIZE,
+    width: SIZE,
+    num_actions: 4, // up, down, left, right
+};
+
+const GOAL: (usize, usize) = (SIZE - 2, SIZE - 2); // (y, x)
+
+/// Fixed wall layout: a vertical segment with a gap and a horizontal
+/// stub. `true` = wall.
+fn is_wall(y: usize, x: usize) -> bool {
+    (x == 4 && (1..=5).contains(&y) && y != 3) || (y == 6 && (2..=3).contains(&x))
+}
+
+pub struct GridWorld {
+    rng: Rng,
+    agent: (usize, usize),
+    steps: u32,
+}
+
+impl GridWorld {
+    pub fn new(seed: u64) -> Self {
+        GridWorld {
+            rng: Rng::new(seed),
+            agent: (0, 0),
+            steps: 0,
+        }
+    }
+
+    fn render(&self, obs: &mut [f32]) {
+        obs.fill(0.0);
+        set(obs, SIZE, SIZE, 0, self.agent.0, self.agent.1, 1.0);
+        set(obs, SIZE, SIZE, 1, GOAL.0, GOAL.1, 1.0);
+        for y in 0..SIZE {
+            for x in 0..SIZE {
+                if is_wall(y, x) {
+                    set(obs, SIZE, SIZE, 2, y, x, 1.0);
+                }
+            }
+        }
+    }
+}
+
+impl Environment for GridWorld {
+    fn spec(&self) -> &EnvSpec {
+        &SPEC
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        loop {
+            let y = self.rng.below(SIZE);
+            let x = self.rng.below(SIZE / 2); // left half
+            if !is_wall(y, x) && (y, x) != GOAL {
+                self.agent = (y, x);
+                break;
+            }
+        }
+        self.steps = 0;
+        self.render(obs);
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        let (y, x) = self.agent;
+        let (ny, nx) = match action {
+            0 => (y.saturating_sub(1), x),
+            1 => ((y + 1).min(SIZE - 1), x),
+            2 => (y, x.saturating_sub(1)),
+            _ => (y, (x + 1).min(SIZE - 1)),
+        };
+        if !is_wall(ny, nx) {
+            self.agent = (ny, nx);
+        }
+        self.steps += 1;
+        self.render(obs);
+        if self.agent == GOAL {
+            Step::terminal(1.0)
+        } else if self.steps >= MAX_STEPS {
+            Step::terminal(STEP_PENALTY)
+        } else {
+            Step::cont(STEP_PENALTY)
+        }
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walls_block_movement() {
+        let mut env = GridWorld::new(0);
+        let mut obs = vec![0.0; SPEC.obs_len()];
+        env.reset(&mut obs);
+        // place agent left of a wall cell and push right
+        env.agent = (1, 3); // (y=1, x=3); wall at (1, 4)
+        assert!(is_wall(1, 4));
+        env.step(3, &mut obs); // right
+        assert_eq!(env.agent, (1, 3), "wall should block");
+    }
+
+    #[test]
+    fn gap_allows_passage() {
+        assert!(!is_wall(3, 4), "gap must exist at y=3");
+        let mut env = GridWorld::new(0);
+        let mut obs = vec![0.0; SPEC.obs_len()];
+        env.reset(&mut obs);
+        env.agent = (3, 3);
+        env.step(3, &mut obs);
+        assert_eq!(env.agent, (3, 4));
+    }
+
+    #[test]
+    fn reaching_goal_terminates_with_reward() {
+        let mut env = GridWorld::new(0);
+        let mut obs = vec![0.0; SPEC.obs_len()];
+        env.reset(&mut obs);
+        env.agent = (GOAL.0, GOAL.1 - 1);
+        let st = env.step(3, &mut obs); // right onto goal
+        assert!(st.done);
+        assert_eq!(st.reward, 1.0);
+    }
+
+    #[test]
+    fn time_limit_enforced() {
+        let mut env = GridWorld::new(0);
+        let mut obs = vec![0.0; SPEC.obs_len()];
+        env.reset(&mut obs);
+        env.agent = (0, 0);
+        let mut n = 0;
+        loop {
+            n += 1;
+            // bounce up against the top wall forever
+            let st = env.step(0, &mut obs);
+            if st.done {
+                break;
+            }
+            assert!(n < MAX_STEPS + 1);
+        }
+        assert_eq!(n, MAX_STEPS);
+    }
+
+    #[test]
+    fn start_in_left_half_and_free() {
+        let mut env = GridWorld::new(11);
+        let mut obs = vec![0.0; SPEC.obs_len()];
+        for _ in 0..100 {
+            env.reset(&mut obs);
+            assert!(env.agent.1 < SIZE / 2);
+            assert!(!is_wall(env.agent.0, env.agent.1));
+        }
+    }
+
+    #[test]
+    fn goal_is_reachable() {
+        // BFS from every free start cell to the goal through the wall map.
+        let mut reachable = vec![vec![false; SIZE]; SIZE];
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(GOAL);
+        reachable[GOAL.0][GOAL.1] = true;
+        while let Some((y, x)) = queue.pop_front() {
+            let push = |ny: usize, nx: usize, r: &mut Vec<Vec<bool>>, q: &mut std::collections::VecDeque<(usize, usize)>| {
+                if !is_wall(ny, nx) && !r[ny][nx] {
+                    r[ny][nx] = true;
+                    q.push_back((ny, nx));
+                }
+            };
+            if y > 0 {
+                push(y - 1, x, &mut reachable, &mut queue);
+            }
+            if y < SIZE - 1 {
+                push(y + 1, x, &mut reachable, &mut queue);
+            }
+            if x > 0 {
+                push(y, x - 1, &mut reachable, &mut queue);
+            }
+            if x < SIZE - 1 {
+                push(y, x + 1, &mut reachable, &mut queue);
+            }
+        }
+        for y in 0..SIZE {
+            for x in 0..SIZE / 2 {
+                if !is_wall(y, x) {
+                    assert!(reachable[y][x], "start ({y},{x}) cannot reach goal");
+                }
+            }
+        }
+    }
+}

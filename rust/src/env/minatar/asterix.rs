@@ -1,0 +1,322 @@
+//! MinAtar Asterix.
+//!
+//! The player moves in four directions on the 10x10 grid while
+//! entities stream across rows 1..9: *gold* (+1 on pickup) and
+//! *enemies* (terminal on contact).  Spawn rate and entity speed ramp
+//! up over time, exactly like MinAtar's difficulty ramping.
+//!
+//! Channels: 0 = player, 1 = enemy, 2 = trail (entity's motion
+//! direction marker: the cell it just left), 3 = gold.
+//! Actions: LEFT/UP/RIGHT/DOWN move; NOOP/FIRE do nothing.
+
+use super::super::{set, EnvSpec, Environment, Step};
+use super::{actions, GRID};
+use crate::util::rng::Rng;
+
+pub const SPEC: EnvSpec = EnvSpec {
+    name: "minatar/asterix",
+    channels: 4,
+    height: GRID,
+    width: GRID,
+    num_actions: 6,
+};
+
+const INIT_SPAWN_SPEED: i32 = 10;
+const INIT_MOVE_INTERVAL: i32 = 5;
+const RAMP_INTERVAL: i32 = 100;
+
+#[derive(Debug, Clone, Copy)]
+struct Entity {
+    x: i32,
+    y: i32,
+    dir: i32, // +1 right, -1 left
+    is_gold: bool,
+    moved_from: i32, // previous x, for the trail channel
+}
+
+pub struct Asterix {
+    rng: Rng,
+    player: (i32, i32), // (y, x)
+    entities: Vec<Entity>,
+    spawn_timer: i32,
+    spawn_speed: i32,
+    move_timer: i32,
+    move_interval: i32,
+    ramp_timer: i32,
+    terminated: bool,
+}
+
+impl Asterix {
+    pub fn new(seed: u64) -> Self {
+        let mut a = Asterix {
+            rng: Rng::new(seed),
+            player: (5, 5),
+            entities: Vec::new(),
+            spawn_timer: INIT_SPAWN_SPEED,
+            spawn_speed: INIT_SPAWN_SPEED,
+            move_timer: INIT_MOVE_INTERVAL,
+            move_interval: INIT_MOVE_INTERVAL,
+            ramp_timer: RAMP_INTERVAL,
+            terminated: true,
+        };
+        a.new_episode();
+        a
+    }
+
+    fn new_episode(&mut self) {
+        self.player = (5, 5);
+        self.entities.clear();
+        self.spawn_speed = INIT_SPAWN_SPEED;
+        self.spawn_timer = self.spawn_speed;
+        self.move_interval = INIT_MOVE_INTERVAL;
+        self.move_timer = self.move_interval;
+        self.ramp_timer = RAMP_INTERVAL;
+        self.terminated = false;
+    }
+
+    fn spawn(&mut self) {
+        // pick a free row in 1..9
+        let candidates: Vec<i32> = (1..GRID as i32 - 1)
+            .filter(|&y| !self.entities.iter().any(|e| e.y == y))
+            .collect();
+        if candidates.is_empty() {
+            return;
+        }
+        let y = candidates[self.rng.below(candidates.len())];
+        let from_left = self.rng.chance(0.5);
+        let is_gold = self.rng.chance(1.0 / 3.0);
+        let x = if from_left { 0 } else { GRID as i32 - 1 };
+        self.entities.push(Entity {
+            x,
+            y,
+            dir: if from_left { 1 } else { -1 },
+            is_gold,
+            moved_from: x,
+        });
+    }
+
+    /// Contact resolution: gold -> reward, enemy -> death.
+    fn check_contact(&mut self, reward: &mut f32, done: &mut bool) {
+        let (py, px) = self.player;
+        self.entities.retain(|e| {
+            if e.y == py && e.x == px {
+                if e.is_gold {
+                    *reward += 1.0;
+                } else {
+                    *done = true;
+                }
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    fn render(&self, obs: &mut [f32]) {
+        obs.fill(0.0);
+        set(obs, GRID, GRID, 0, self.player.0 as usize, self.player.1 as usize, 1.0);
+        for e in &self.entities {
+            let c = if e.is_gold { 3 } else { 1 };
+            set(obs, GRID, GRID, c, e.y as usize, e.x as usize, 1.0);
+            if e.moved_from != e.x && (0..GRID as i32).contains(&e.moved_from) {
+                set(obs, GRID, GRID, 2, e.y as usize, e.moved_from as usize, 1.0);
+            }
+        }
+    }
+}
+
+impl Environment for Asterix {
+    fn spec(&self) -> &EnvSpec {
+        &SPEC
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.new_episode();
+        self.render(obs);
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        debug_assert!(!self.terminated, "step after done without reset");
+        let mut reward = 0.0;
+        let mut done = false;
+
+        let (y, x) = self.player;
+        self.player = match action {
+            actions::LEFT => (y, (x - 1).max(0)),
+            actions::RIGHT => (y, (x + 1).min(GRID as i32 - 1)),
+            actions::UP => ((y - 1).max(1), x), // row 0 is out of play
+            actions::DOWN => ((y + 1).min(GRID as i32 - 2), x),
+            _ => (y, x),
+        };
+        self.check_contact(&mut reward, &mut done);
+
+        // Entity movement on a timer.
+        self.move_timer -= 1;
+        if self.move_timer <= 0 {
+            self.move_timer = self.move_interval;
+            for e in &mut self.entities {
+                e.moved_from = e.x;
+                e.x += e.dir;
+            }
+            self.entities
+                .retain(|e| (0..GRID as i32).contains(&e.x));
+            self.check_contact(&mut reward, &mut done);
+        }
+
+        // Spawning on a timer.
+        self.spawn_timer -= 1;
+        if self.spawn_timer <= 0 {
+            self.spawn();
+            self.spawn_timer = self.spawn_speed;
+        }
+
+        // Difficulty ramp.
+        self.ramp_timer -= 1;
+        if self.ramp_timer <= 0 {
+            self.ramp_timer = RAMP_INTERVAL;
+            if self.spawn_speed > 3 {
+                self.spawn_speed -= 1;
+            }
+            if self.move_interval > 1 && self.spawn_speed % 2 == 0 {
+                self.move_interval -= 1;
+            }
+        }
+
+        self.terminated = done;
+        self.render(obs);
+        Step { reward, done }
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh(seed: u64) -> (Asterix, Vec<f32>) {
+        let mut env = Asterix::new(seed);
+        let mut obs = vec![0.0; SPEC.obs_len()];
+        env.reset(&mut obs);
+        (env, obs)
+    }
+
+    #[test]
+    fn player_movement_bounds() {
+        let (mut env, mut obs) = fresh(0);
+        for _ in 0..20 {
+            env.step(actions::UP, &mut obs);
+        }
+        assert_eq!(env.player.0, 1, "row 0 out of play");
+        for _ in 0..20 {
+            env.step(actions::DOWN, &mut obs);
+        }
+        assert_eq!(env.player.0, GRID as i32 - 2);
+        for _ in 0..20 {
+            env.step(actions::LEFT, &mut obs);
+        }
+        assert_eq!(env.player.1, 0);
+    }
+
+    #[test]
+    fn entities_spawn_over_time() {
+        let (mut env, mut obs) = fresh(1);
+        for _ in 0..INIT_SPAWN_SPEED as usize + 2 {
+            let st = env.step(actions::NOOP, &mut obs);
+            if st.done {
+                env.reset(&mut obs);
+            }
+        }
+        assert!(!env.entities.is_empty());
+    }
+
+    #[test]
+    fn gold_contact_rewards_and_removes() {
+        let (mut env, mut obs) = fresh(2);
+        env.entities.push(Entity {
+            x: env.player.1,
+            y: env.player.0 - 1,
+            dir: 1,
+            is_gold: true,
+            moved_from: env.player.1,
+        });
+        let st = env.step(actions::UP, &mut obs);
+        assert_eq!(st.reward, 1.0);
+        assert!(!st.done);
+    }
+
+    #[test]
+    fn enemy_contact_kills() {
+        let (mut env, mut obs) = fresh(3);
+        env.entities.push(Entity {
+            x: env.player.1,
+            y: env.player.0 - 1,
+            dir: 1,
+            is_gold: false,
+            moved_from: env.player.1,
+        });
+        let st = env.step(actions::UP, &mut obs);
+        assert!(st.done);
+    }
+
+    #[test]
+    fn enemies_exit_grid() {
+        let (mut env, mut obs) = fresh(4);
+        env.entities.push(Entity {
+            x: GRID as i32 - 1,
+            y: 1,
+            dir: 1,
+            is_gold: false,
+            moved_from: GRID as i32 - 2,
+        });
+        for _ in 0..INIT_MOVE_INTERVAL as usize + 1 {
+            env.step(actions::NOOP, &mut obs);
+        }
+        assert!(
+            !env.entities.iter().any(|e| e.y == 1 && !e.is_gold),
+            "entity should have exited"
+        );
+    }
+
+    #[test]
+    fn difficulty_ramps() {
+        let (mut env, mut obs) = fresh(5);
+        let initial = env.spawn_speed;
+        for _ in 0..RAMP_INTERVAL as usize * 3 {
+            let st = env.step(actions::NOOP, &mut obs);
+            if st.done {
+                env.reset_keep_ramp(&mut obs);
+            }
+        }
+        assert!(env.spawn_speed < initial || env.move_interval < INIT_MOVE_INTERVAL);
+    }
+
+    impl Asterix {
+        /// test helper: reset positions but keep ramp state
+        fn reset_keep_ramp(&mut self, obs: &mut [f32]) {
+            let (ss, mi, rt) = (self.spawn_speed, self.move_interval, self.ramp_timer);
+            self.new_episode();
+            self.spawn_speed = ss;
+            self.move_interval = mi;
+            self.ramp_timer = rt;
+            self.render(obs);
+        }
+    }
+
+    #[test]
+    fn one_entity_per_row() {
+        let (mut env, mut obs) = fresh(6);
+        for _ in 0..500 {
+            let st = env.step(actions::NOOP, &mut obs);
+            let mut rows = std::collections::HashSet::new();
+            for e in &env.entities {
+                assert!(rows.insert(e.y), "two entities in row {}", e.y);
+            }
+            if st.done {
+                env.reset(&mut obs);
+            }
+        }
+    }
+}

@@ -1,0 +1,298 @@
+//! MinAtar Breakout.
+//!
+//! 10x10 grid.  A paddle on the bottom row deflects a diagonally
+//! moving ball into three rows of bricks.  Clearing all bricks spawns
+//! a fresh wave.  The episode ends when the ball passes the paddle.
+//!
+//! Channels: 0 = paddle, 1 = ball, 2 = trail (ball's previous cell —
+//! encodes direction without frame stacking), 3 = bricks.
+//! Actions (shared 6-action set): only LEFT and RIGHT move the paddle.
+
+use super::super::{set, EnvSpec, Environment, Step};
+use super::{actions, GRID};
+use crate::util::rng::Rng;
+
+pub const SPEC: EnvSpec = EnvSpec {
+    name: "minatar/breakout",
+    channels: 4,
+    height: GRID,
+    width: GRID,
+    num_actions: 6,
+};
+
+pub struct Breakout {
+    rng: Rng,
+    ball_x: i32,
+    ball_y: i32,
+    ball_dx: i32,
+    ball_dy: i32,
+    last_x: i32,
+    last_y: i32,
+    paddle_x: i32,
+    brick_map: [[bool; GRID]; GRID],
+    terminated: bool,
+}
+
+impl Breakout {
+    pub fn new(seed: u64) -> Self {
+        let mut b = Breakout {
+            rng: Rng::new(seed),
+            ball_x: 0,
+            ball_y: 3,
+            ball_dx: 1,
+            ball_dy: 1,
+            last_x: 0,
+            last_y: 3,
+            paddle_x: GRID as i32 / 2,
+            brick_map: [[false; GRID]; GRID],
+            terminated: true,
+        };
+        b.new_episode();
+        b
+    }
+
+    fn new_episode(&mut self) {
+        // Ball spawns at the top-left or top-right, moving inward/down
+        // (MinAtar: ball_start in {(0,2,down-right), (9,2,down-left)}).
+        let left = self.rng.chance(0.5);
+        self.ball_x = if left { 0 } else { (GRID - 1) as i32 };
+        self.ball_dx = if left { 1 } else { -1 };
+        self.ball_y = 3;
+        self.ball_dy = 1;
+        self.last_x = self.ball_x;
+        self.last_y = self.ball_y;
+        self.paddle_x = GRID as i32 / 2;
+        self.fill_bricks();
+        self.terminated = false;
+    }
+
+    fn fill_bricks(&mut self) {
+        self.brick_map = [[false; GRID]; GRID];
+        for y in 1..4 {
+            for x in 0..GRID {
+                self.brick_map[y][x] = true;
+            }
+        }
+    }
+
+    fn bricks_remaining(&self) -> usize {
+        self.brick_map
+            .iter()
+            .map(|row| row.iter().filter(|&&b| b).count())
+            .sum()
+    }
+
+    fn render(&self, obs: &mut [f32]) {
+        obs.fill(0.0);
+        set(obs, GRID, GRID, 0, GRID - 1, self.paddle_x as usize, 1.0);
+        set(obs, GRID, GRID, 1, self.ball_y as usize, self.ball_x as usize, 1.0);
+        set(obs, GRID, GRID, 2, self.last_y as usize, self.last_x as usize, 1.0);
+        for y in 0..GRID {
+            for x in 0..GRID {
+                if self.brick_map[y][x] {
+                    set(obs, GRID, GRID, 3, y, x, 1.0);
+                }
+            }
+        }
+    }
+}
+
+impl Environment for Breakout {
+    fn spec(&self) -> &EnvSpec {
+        &SPEC
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.new_episode();
+        self.render(obs);
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        debug_assert!(!self.terminated, "step after done without reset");
+        let mut reward = 0.0;
+
+        match action {
+            actions::LEFT => self.paddle_x = (self.paddle_x - 1).max(0),
+            actions::RIGHT => self.paddle_x = (self.paddle_x + 1).min(GRID as i32 - 1),
+            _ => {}
+        }
+
+        self.last_x = self.ball_x;
+        self.last_y = self.ball_y;
+        let mut nx = self.ball_x + self.ball_dx;
+        let mut ny = self.ball_y + self.ball_dy;
+
+        // Side walls
+        if nx < 0 || nx >= GRID as i32 {
+            self.ball_dx = -self.ball_dx;
+            nx = self.ball_x + self.ball_dx;
+        }
+        // Ceiling
+        if ny < 0 {
+            self.ball_dy = 1;
+            ny = self.ball_y + self.ball_dy;
+        }
+
+        let mut done = false;
+        if self.brick_map[ny as usize][nx as usize] {
+            // Brick hit: remove, bounce back vertically.
+            self.brick_map[ny as usize][nx as usize] = false;
+            reward += 1.0;
+            self.ball_dy = -self.ball_dy;
+            ny = self.ball_y; // ball stays this tick (MinAtar strike behavior)
+        } else if ny == GRID as i32 - 1 {
+            if nx == self.paddle_x {
+                // Paddle bounce.
+                self.ball_dy = -1;
+                ny = self.ball_y;
+            } else {
+                done = true;
+            }
+        }
+
+        self.ball_x = nx;
+        self.ball_y = ny.clamp(0, GRID as i32 - 1);
+
+        if self.bricks_remaining() == 0 {
+            self.fill_bricks(); // new wave
+        }
+
+        self.terminated = done;
+        self.render(obs);
+        Step { reward, done }
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh(seed: u64) -> (Breakout, Vec<f32>) {
+        let mut env = Breakout::new(seed);
+        let mut obs = vec![0.0; SPEC.obs_len()];
+        env.reset(&mut obs);
+        (env, obs)
+    }
+
+    #[test]
+    fn initial_bricks_three_rows() {
+        let (env, obs) = fresh(0);
+        assert_eq!(env.bricks_remaining(), 3 * GRID);
+        let brick_plane = &obs[3 * GRID * GRID..4 * GRID * GRID];
+        assert_eq!(brick_plane.iter().filter(|&&v| v == 1.0).count(), 30);
+    }
+
+    #[test]
+    fn ball_and_trail_distinct_after_step() {
+        let (mut env, mut obs) = fresh(1);
+        env.step(actions::NOOP, &mut obs);
+        let ball: Vec<usize> = (0..GRID * GRID)
+            .filter(|i| obs[GRID * GRID + i] == 1.0)
+            .collect();
+        let trail: Vec<usize> = (0..GRID * GRID)
+            .filter(|i| obs[2 * GRID * GRID + i] == 1.0)
+            .collect();
+        assert_eq!(ball.len(), 1);
+        assert_eq!(trail.len(), 1);
+        assert_ne!(ball[0], trail[0]);
+    }
+
+    #[test]
+    fn hitting_bricks_rewards() {
+        // A predictive tracker (follow ball_x + dx) keeps the ball in
+        // play long enough to bounce it into the brick rows.
+        let (mut env, mut obs) = fresh(2);
+        let mut got_reward = false;
+        for _ in 0..300 {
+            let target = (env.ball_x + env.ball_dx).clamp(0, GRID as i32 - 1);
+            let a = if env.paddle_x < target {
+                actions::RIGHT
+            } else if env.paddle_x > target {
+                actions::LEFT
+            } else {
+                actions::NOOP
+            };
+            let st = env.step(a, &mut obs);
+            if st.reward > 0.0 {
+                got_reward = true;
+                assert!(env.bricks_remaining() < 3 * GRID);
+                break;
+            }
+            if st.done {
+                env.reset(&mut obs);
+            }
+        }
+        assert!(got_reward);
+    }
+
+    #[test]
+    fn missing_ball_terminates() {
+        // Park the paddle far from the ball's landing column by always
+        // moving left; episode must terminate eventually.
+        let (mut env, mut obs) = fresh(3);
+        let mut terminated = false;
+        for _ in 0..500 {
+            if env.step(actions::LEFT, &mut obs).done {
+                terminated = true;
+                break;
+            }
+        }
+        assert!(terminated);
+    }
+
+    #[test]
+    fn paddle_bounce_reflects_ball() {
+        // Construct the exact pre-bounce state: ball one row above the
+        // paddle, moving down onto it.
+        let (mut env, mut obs) = fresh(4);
+        env.ball_x = 4;
+        env.ball_y = GRID as i32 - 2; // row 8
+        env.ball_dx = 1;
+        env.ball_dy = 1;
+        env.paddle_x = 5; // landing cell
+        let st = env.step(actions::NOOP, &mut obs);
+        assert!(!st.done, "paddle catch must not terminate");
+        assert_eq!(env.ball_dy, -1, "ball reflected upward");
+    }
+
+    #[test]
+    fn wave_refills_after_clear() {
+        let (mut env, mut obs) = fresh(5);
+        // cheat: clear all but one brick, placed exactly where the
+        // upward-moving ball will arrive next step
+        for y in 1..4 {
+            for x in 0..GRID {
+                env.brick_map[y][x] = false;
+            }
+        }
+        env.ball_x = 4;
+        env.ball_dx = 1;
+        env.ball_y = 4;
+        env.ball_dy = -1;
+        env.brick_map[3][5] = true; // (y=3, x = ball_x + dx)
+        let st = env.step(actions::NOOP, &mut obs);
+        assert_eq!(st.reward, 1.0, "last brick hit");
+        assert_eq!(
+            env.bricks_remaining(),
+            3 * GRID,
+            "bricks should refill after clearing"
+        );
+    }
+
+    #[test]
+    fn ball_stays_in_bounds_forever() {
+        let (mut env, mut obs) = fresh(6);
+        for i in 0..2000 {
+            let st = env.step(i % 6, &mut obs);
+            assert!((0..GRID as i32).contains(&env.ball_x));
+            assert!((0..GRID as i32).contains(&env.ball_y));
+            if st.done {
+                env.reset(&mut obs);
+            }
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! MinAtar Freeway.
+//!
+//! A chicken crosses eight lanes of traffic from bottom to top.
+//! Reaching the top scores +1 and teleports the chicken back to the
+//! start; collision with a car knocks it back to the start (no
+//! reward, no terminal).  The episode is a fixed 2500-frame time
+//! budget, after which it terminates — matching MinAtar, where Freeway
+//! is the one time-limited, non-ramping game.
+//!
+//! Cars have speeds in {-5..-1, 1..5} encoded as "move every k-th
+//! frame" (|speed| = interval; sign = direction); lane speeds
+//! re-randomize each crossing, like MinAtar's randomized cars.
+//!
+//! Channels: 0 = chicken, 1 = car, 2..6 = car-speed one-hot
+//! (|interval| 1..5 marked at the car's cell).
+//! Actions (minimal set): 0 = noop, 1 = up, 2 = down.
+
+use super::super::{set, EnvSpec, Environment, Step};
+use super::GRID;
+use crate::util::rng::Rng;
+
+pub const SPEC: EnvSpec = EnvSpec {
+    name: "minatar/freeway",
+    channels: 7,
+    height: GRID,
+    width: GRID,
+    num_actions: 3,
+};
+
+const TIME_LIMIT: u32 = 2500;
+const PLAYER_COL: i32 = 4;
+/// Chicken can only move every MOVE_COOLDOWN frames (MinAtar: 3).
+const MOVE_COOLDOWN: i32 = 3;
+
+#[derive(Debug, Clone, Copy)]
+struct Car {
+    x: i32,
+    y: i32,
+    interval: i32, // move every `interval` frames
+    dir: i32,      // +1 right, -1 left
+    timer: i32,
+}
+
+pub struct Freeway {
+    rng: Rng,
+    chicken_y: i32,
+    cars: Vec<Car>,
+    move_timer: i32,
+    frames: u32,
+    terminated: bool,
+}
+
+impl Freeway {
+    pub fn new(seed: u64) -> Self {
+        let mut f = Freeway {
+            rng: Rng::new(seed),
+            chicken_y: GRID as i32 - 1,
+            cars: Vec::new(),
+            move_timer: 0,
+            frames: 0,
+            terminated: true,
+        };
+        f.new_episode();
+        f
+    }
+
+    fn new_episode(&mut self) {
+        self.chicken_y = GRID as i32 - 1;
+        self.randomize_cars();
+        self.move_timer = 0;
+        self.frames = 0;
+        self.terminated = false;
+    }
+
+    fn randomize_cars(&mut self) {
+        self.cars.clear();
+        for lane in 1..(GRID - 1) as i32 {
+            let interval = 1 + self.rng.below(5) as i32;
+            let dir = self.rng.sign();
+            let x = self.rng.below(GRID) as i32;
+            self.cars.push(Car {
+                x,
+                y: lane,
+                interval,
+                dir,
+                timer: interval,
+            });
+        }
+    }
+
+    fn render(&self, obs: &mut [f32]) {
+        obs.fill(0.0);
+        set(obs, GRID, GRID, 0, self.chicken_y as usize, PLAYER_COL as usize, 1.0);
+        for c in &self.cars {
+            set(obs, GRID, GRID, 1, c.y as usize, c.x as usize, 1.0);
+            let speed_c = 2 + (c.interval - 1) as usize; // channels 2..6
+            set(obs, GRID, GRID, speed_c, c.y as usize, c.x as usize, 1.0);
+        }
+    }
+}
+
+impl Environment for Freeway {
+    fn spec(&self) -> &EnvSpec {
+        &SPEC
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.new_episode();
+        self.render(obs);
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        debug_assert!(!self.terminated, "step after done without reset");
+        let mut reward = 0.0;
+        self.frames += 1;
+
+        // Chicken movement (with cooldown).
+        if self.move_timer > 0 {
+            self.move_timer -= 1;
+        } else {
+            match action {
+                1 => {
+                    self.chicken_y -= 1;
+                    self.move_timer = MOVE_COOLDOWN;
+                }
+                2 => {
+                    self.chicken_y = (self.chicken_y + 1).min(GRID as i32 - 1);
+                    self.move_timer = MOVE_COOLDOWN;
+                }
+                _ => {}
+            }
+        }
+
+        // Crossing complete.
+        if self.chicken_y < 0 {
+            reward += 1.0;
+            self.chicken_y = GRID as i32 - 1;
+            self.randomize_cars();
+        }
+
+        // Cars move on their interval timers.
+        for c in &mut self.cars {
+            c.timer -= 1;
+            if c.timer <= 0 {
+                c.timer = c.interval;
+                c.x += c.dir;
+                if c.x < 0 {
+                    c.x = GRID as i32 - 1;
+                }
+                if c.x >= GRID as i32 {
+                    c.x = 0;
+                }
+            }
+        }
+
+        // Collision: knock back to start.
+        if self
+            .cars
+            .iter()
+            .any(|c| c.y == self.chicken_y && c.x == PLAYER_COL)
+        {
+            self.chicken_y = GRID as i32 - 1;
+        }
+
+        let done = self.frames >= TIME_LIMIT;
+        self.terminated = done;
+        self.render(obs);
+        Step { reward, done }
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh(seed: u64) -> (Freeway, Vec<f32>) {
+        let mut env = Freeway::new(seed);
+        let mut obs = vec![0.0; SPEC.obs_len()];
+        env.reset(&mut obs);
+        (env, obs)
+    }
+
+    #[test]
+    fn eight_lanes_of_cars() {
+        let (env, _) = fresh(0);
+        assert_eq!(env.cars.len(), 8);
+        let lanes: std::collections::HashSet<i32> = env.cars.iter().map(|c| c.y).collect();
+        assert_eq!(lanes.len(), 8);
+    }
+
+    #[test]
+    fn time_limit_terminates() {
+        let (mut env, mut obs) = fresh(1);
+        let mut steps = 0u32;
+        loop {
+            steps += 1;
+            if env.step(0, &mut obs).done {
+                break;
+            }
+            assert!(steps <= TIME_LIMIT);
+        }
+        assert_eq!(steps, TIME_LIMIT);
+    }
+
+    #[test]
+    fn crossing_scores_and_resets_position() {
+        let (mut env, mut obs) = fresh(2);
+        // Clear all cars so nothing can knock the chicken back.
+        env.cars.clear();
+        let mut total = 0.0;
+        for _ in 0..((MOVE_COOLDOWN as usize + 1) * (GRID + 2)) {
+            let st = env.step(1, &mut obs);
+            total += st.reward;
+            if total > 0.0 {
+                break;
+            }
+        }
+        assert_eq!(total, 1.0);
+        assert_eq!(env.chicken_y, GRID as i32 - 1, "teleported back");
+    }
+
+    #[test]
+    fn collision_knocks_back() {
+        let (mut env, mut obs) = fresh(3);
+        env.chicken_y = 5;
+        // Park a stationary-ish car on the chicken's next cell.
+        env.cars.clear();
+        env.cars.push(Car {
+            x: PLAYER_COL,
+            y: 5,
+            interval: 5,
+            dir: 1,
+            timer: 5,
+        });
+        env.step(0, &mut obs);
+        assert_eq!(env.chicken_y, GRID as i32 - 1);
+    }
+
+    #[test]
+    fn move_cooldown_limits_speed() {
+        let (mut env, mut obs) = fresh(4);
+        env.cars.clear();
+        let y0 = env.chicken_y;
+        env.step(1, &mut obs); // moves
+        env.step(1, &mut obs); // cooldown: ignored
+        assert_eq!(env.chicken_y, y0 - 1);
+    }
+
+    #[test]
+    fn speed_channels_one_hot() {
+        let (mut env, mut obs) = fresh(5);
+        env.step(0, &mut obs);
+        let plane = |c: usize| &obs[c * GRID * GRID..(c + 1) * GRID * GRID];
+        let cars: f32 = plane(1).iter().sum();
+        let speeds: f32 = (2..7).map(|c| plane(c).iter().sum::<f32>()).sum();
+        assert_eq!(cars, speeds, "each car has exactly one speed marker");
+    }
+}

@@ -1,0 +1,35 @@
+//! MinAtar-style game suite (Young & Tian, 2019) implemented in Rust.
+//!
+//! The paper demonstrates TorchBeast's adaptability by swapping Atari
+//! for MinAtar (Figures 1-2); since the ALE itself is unavailable
+//! offline (proprietary ROMs + C++ emulator), this suite is the repo's
+//! Atari substitute (DESIGN.md §Substitutions #1).  The five games
+//! follow the published MinAtar dynamics: 10x10 grids, one binary
+//! channel per object class, "trail" channels encoding motion (so no
+//! frame stack is required), ramping difficulty where the original has
+//! it, and the minimal action set for Freeway.
+//!
+//! Faithfulness notes (deviations from the reference implementation
+//! are deliberate simplifications and are called out per game):
+//! * all games are deterministic given the seed;
+//! * reward scales match (1 point per brick/alien/gold/crossing/fish);
+//! * Seaquest's oxygen/diver mechanics are simplified (see module doc).
+
+pub mod asterix;
+pub mod breakout;
+pub mod freeway;
+pub mod seaquest;
+pub mod space_invaders;
+
+pub const GRID: usize = 10;
+
+/// Standard MinAtar action indices (all games share the 6-action set
+/// except Freeway, which uses the minimal 3-action set).
+pub mod actions {
+    pub const NOOP: usize = 0;
+    pub const LEFT: usize = 1;
+    pub const UP: usize = 2;
+    pub const RIGHT: usize = 3;
+    pub const DOWN: usize = 4;
+    pub const FIRE: usize = 5;
+}

@@ -1,0 +1,417 @@
+//! MinAtar Seaquest (simplified but complete).
+//!
+//! A submarine patrols rows 1..8, shooting enemy fish/subs (+1 each)
+//! and rescuing divers.  Oxygen drains every frame; surfacing (row 0)
+//! refills it but costs a rescued diver — surfacing with none is
+//! fatal, as is running out of oxygen, enemy contact, or an enemy
+//! bullet.  This mirrors MinAtar's core loop; the deviations from the
+//! reference implementation (documented per DESIGN.md §Substitutions):
+//! no multi-diver cashout bonus, enemy subs don't aim, and spawn
+//! difficulty ramps linearly.
+//!
+//! Channels: 0 = sub (facing cell), 1 = sub body/trail, 2 = friendly
+//! bullet, 3 = enemy trail, 4 = enemy sub, 5 = enemy fish, 6 = enemy
+//! bullet, 7 = oxygen gauge (bottom row fill), 8 = diver gauge
+//! (bottom row fill), 9 = diver.
+//! Actions: NOOP/LEFT/UP/RIGHT/DOWN move+face, FIRE shoots.
+
+use super::super::{set, EnvSpec, Environment, Step};
+use super::{actions, GRID};
+use crate::util::rng::Rng;
+
+pub const SPEC: EnvSpec = EnvSpec {
+    name: "minatar/seaquest",
+    channels: 10,
+    height: GRID,
+    width: GRID,
+    num_actions: 6,
+};
+
+const MAX_OXYGEN: i32 = 200;
+const MAX_DIVERS: i32 = 6;
+const ENEMY_MOVE_INTERVAL: i32 = 5;
+const SPAWN_INTERVAL: i32 = 20;
+const SHOT_COOL_DOWN: i32 = 5;
+const ENEMY_SHOT_INTERVAL: i32 = 12;
+
+#[derive(Debug, Clone, Copy)]
+struct Mover {
+    x: i32,
+    y: i32,
+    dir: i32,
+    is_sub: bool, // enemy submarine (shoots) vs fish
+    shot_timer: i32,
+}
+
+pub struct Seaquest {
+    rng: Rng,
+    sub_x: i32,
+    sub_y: i32,
+    sub_dir: i32,
+    f_bullets: Vec<(i32, i32, i32)>, // (y, x, dir)
+    e_bullets: Vec<(i32, i32, i32)>,
+    enemies: Vec<Mover>,
+    divers: Vec<(i32, i32, i32)>, // (y, x, dir)
+    oxygen: i32,
+    diver_count: i32,
+    move_timer: i32,
+    spawn_timer: i32,
+    shot_timer: i32,
+    ramp: i32,
+    terminated: bool,
+}
+
+impl Seaquest {
+    pub fn new(seed: u64) -> Self {
+        let mut s = Seaquest {
+            rng: Rng::new(seed),
+            sub_x: 5,
+            sub_y: 0,
+            sub_dir: 1,
+            f_bullets: Vec::new(),
+            e_bullets: Vec::new(),
+            enemies: Vec::new(),
+            divers: Vec::new(),
+            oxygen: MAX_OXYGEN,
+            diver_count: 0,
+            move_timer: ENEMY_MOVE_INTERVAL,
+            spawn_timer: SPAWN_INTERVAL,
+            shot_timer: 0,
+            ramp: 0,
+            terminated: true,
+        };
+        s.new_episode();
+        s
+    }
+
+    fn new_episode(&mut self) {
+        self.sub_x = 5;
+        self.sub_y = 1;
+        self.sub_dir = 1;
+        self.f_bullets.clear();
+        self.e_bullets.clear();
+        self.enemies.clear();
+        self.divers.clear();
+        self.oxygen = MAX_OXYGEN;
+        self.diver_count = 0;
+        self.move_timer = ENEMY_MOVE_INTERVAL;
+        self.spawn_timer = SPAWN_INTERVAL;
+        self.shot_timer = 0;
+        self.ramp = 0;
+        self.terminated = false;
+    }
+
+    fn spawn_something(&mut self) {
+        let y = 2 + self.rng.below(GRID - 3) as i32; // rows 2..8
+        let from_left = self.rng.chance(0.5);
+        let x = if from_left { 0 } else { GRID as i32 - 1 };
+        let dir = if from_left { 1 } else { -1 };
+        if self.rng.chance(0.25) && self.divers.len() < 3 {
+            self.divers.push((y, x, dir));
+        } else {
+            let is_sub = self.rng.chance(0.35);
+            self.enemies.push(Mover {
+                x,
+                y,
+                dir,
+                is_sub,
+                shot_timer: ENEMY_SHOT_INTERVAL,
+            });
+        }
+    }
+
+    fn gauge_cells(v: i32, max: i32) -> usize {
+        ((v.max(0) as f32 / max as f32) * GRID as f32).round() as usize
+    }
+
+    fn render(&self, obs: &mut [f32]) {
+        obs.fill(0.0);
+        // sub facing cell + body
+        let face_x = (self.sub_x + self.sub_dir).clamp(0, GRID as i32 - 1);
+        set(obs, GRID, GRID, 0, self.sub_y as usize, face_x as usize, 1.0);
+        set(obs, GRID, GRID, 1, self.sub_y as usize, self.sub_x as usize, 1.0);
+        for &(y, x, _) in &self.f_bullets {
+            set(obs, GRID, GRID, 2, y as usize, x as usize, 1.0);
+        }
+        for e in &self.enemies {
+            let trail_x = (e.x - e.dir).clamp(0, GRID as i32 - 1);
+            set(obs, GRID, GRID, 3, e.y as usize, trail_x as usize, 1.0);
+            let c = if e.is_sub { 4 } else { 5 };
+            set(obs, GRID, GRID, c, e.y as usize, e.x as usize, 1.0);
+        }
+        for &(y, x, _) in &self.e_bullets {
+            set(obs, GRID, GRID, 6, y as usize, x as usize, 1.0);
+        }
+        // gauges on the bottom row
+        for x in 0..Self::gauge_cells(self.oxygen, MAX_OXYGEN).min(GRID) {
+            set(obs, GRID, GRID, 7, GRID - 1, x, 1.0);
+        }
+        for x in 0..Self::gauge_cells(self.diver_count, MAX_DIVERS).min(GRID) {
+            set(obs, GRID, GRID, 8, GRID - 1, x, 1.0);
+        }
+        for &(y, x, _) in &self.divers {
+            set(obs, GRID, GRID, 9, y as usize, x as usize, 1.0);
+        }
+    }
+}
+
+impl Environment for Seaquest {
+    fn spec(&self) -> &EnvSpec {
+        &SPEC
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.new_episode();
+        self.render(obs);
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        debug_assert!(!self.terminated, "step after done without reset");
+        let mut reward = 0.0;
+        let mut done = false;
+
+        // Player movement / firing.
+        match action {
+            actions::LEFT => {
+                self.sub_x = (self.sub_x - 1).max(0);
+                self.sub_dir = -1;
+            }
+            actions::RIGHT => {
+                self.sub_x = (self.sub_x + 1).min(GRID as i32 - 1);
+                self.sub_dir = 1;
+            }
+            actions::UP => self.sub_y = (self.sub_y - 1).max(0),
+            actions::DOWN => self.sub_y = (self.sub_y + 1).min(GRID as i32 - 2),
+            actions::FIRE => {
+                if self.shot_timer == 0 {
+                    self.f_bullets.push((self.sub_y, self.sub_x, self.sub_dir));
+                    self.shot_timer = SHOT_COOL_DOWN;
+                }
+            }
+            _ => {}
+        }
+        if self.shot_timer > 0 {
+            self.shot_timer -= 1;
+        }
+
+        // Surfacing.
+        if self.sub_y == 0 {
+            if self.diver_count > 0 {
+                self.diver_count -= 1;
+                self.oxygen = MAX_OXYGEN;
+                self.sub_y = 1;
+            } else if self.oxygen < MAX_OXYGEN {
+                // surfacing without a diver is fatal (simplified MinAtar rule)
+                done = true;
+            }
+        }
+
+        // Oxygen drain.
+        self.oxygen -= 1;
+        if self.oxygen <= 0 {
+            done = true;
+        }
+
+        // Friendly bullets.
+        let mut survivors = Vec::with_capacity(self.f_bullets.len());
+        'bullet: for &(y, x, d) in &self.f_bullets {
+            let nx = x + d;
+            if !(0..GRID as i32).contains(&nx) {
+                continue;
+            }
+            for (i, e) in self.enemies.iter().enumerate() {
+                if e.y == y && (e.x == nx || e.x == x + 2 * d) {
+                    self.enemies.remove(i);
+                    reward += 1.0;
+                    continue 'bullet;
+                }
+            }
+            survivors.push((y, nx, d));
+        }
+        self.f_bullets = survivors;
+
+        // Enemy bullets.
+        let mut survivors = Vec::with_capacity(self.e_bullets.len());
+        for &(y, x, d) in &self.e_bullets {
+            let nx = x + d;
+            if !(0..GRID as i32).contains(&nx) {
+                continue;
+            }
+            if y == self.sub_y && nx == self.sub_x {
+                done = true;
+            }
+            survivors.push((y, nx, d));
+        }
+        self.e_bullets = survivors;
+
+        // Enemy / diver movement.
+        self.move_timer -= 1;
+        if self.move_timer <= 0 {
+            self.move_timer = (ENEMY_MOVE_INTERVAL - self.ramp / 4).max(2);
+            for e in &mut self.enemies {
+                e.x += e.dir;
+            }
+            self.enemies.retain(|e| (0..GRID as i32).contains(&e.x));
+            for d in &mut self.divers {
+                d.1 += d.2;
+            }
+            self.divers.retain(|d| (0..GRID as i32).contains(&d.1));
+        }
+
+        // Enemy sub shooting.
+        for e in &mut self.enemies {
+            if e.is_sub {
+                e.shot_timer -= 1;
+                if e.shot_timer <= 0 {
+                    e.shot_timer = ENEMY_SHOT_INTERVAL;
+                    self.e_bullets.push((e.y, e.x, e.dir));
+                }
+            }
+        }
+
+        // Contact with enemies.
+        if self
+            .enemies
+            .iter()
+            .any(|e| e.y == self.sub_y && e.x == self.sub_x)
+        {
+            done = true;
+        }
+
+        // Diver pickup.
+        let (sy, sx) = (self.sub_y, self.sub_x);
+        let dc = &mut self.diver_count;
+        self.divers.retain(|&(y, x, _)| {
+            if y == sy && x == sx && *dc < MAX_DIVERS {
+                *dc += 1;
+                false
+            } else {
+                true
+            }
+        });
+
+        // Spawning + ramp.
+        self.spawn_timer -= 1;
+        if self.spawn_timer <= 0 {
+            self.spawn_something();
+            self.ramp += 1;
+            self.spawn_timer = (SPAWN_INTERVAL - self.ramp / 2).max(6);
+        }
+
+        self.terminated = done;
+        self.render(obs);
+        Step { reward, done }
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh(seed: u64) -> (Seaquest, Vec<f32>) {
+        let mut env = Seaquest::new(seed);
+        let mut obs = vec![0.0; SPEC.obs_len()];
+        env.reset(&mut obs);
+        (env, obs)
+    }
+
+    #[test]
+    fn oxygen_runs_out() {
+        let (mut env, mut obs) = fresh(0);
+        let mut steps = 0;
+        loop {
+            steps += 1;
+            // stay down-left, away from most action
+            if env.step(actions::DOWN, &mut obs).done {
+                break;
+            }
+            assert!(steps <= MAX_OXYGEN + 5);
+        }
+        assert!(steps >= MAX_OXYGEN / 2, "died far too early: {steps}");
+    }
+
+    #[test]
+    fn shooting_enemies_rewards() {
+        let (mut env, mut obs) = fresh(1);
+        env.enemies.push(Mover {
+            x: env.sub_x + 2,
+            y: env.sub_y,
+            dir: -1,
+            is_sub: false,
+            shot_timer: ENEMY_SHOT_INTERVAL,
+        });
+        env.sub_dir = 1;
+        let st = env.step(actions::FIRE, &mut obs);
+        assert_eq!(st.reward, 1.0);
+        assert!(env.enemies.is_empty());
+    }
+
+    #[test]
+    fn diver_pickup_and_surface_refills_oxygen() {
+        let (mut env, mut obs) = fresh(2);
+        env.oxygen = 50;
+        env.divers.push((env.sub_y + 1, env.sub_x, 1));
+        env.step(actions::DOWN, &mut obs);
+        assert_eq!(env.diver_count, 1);
+        // go surface
+        while env.sub_y > 1 {
+            env.step(actions::UP, &mut obs);
+        }
+        let st = env.step(actions::UP, &mut obs); // row 0 -> surfacing
+        assert!(!st.done);
+        assert_eq!(env.diver_count, 0);
+        assert!(env.oxygen > 100, "oxygen refilled");
+    }
+
+    #[test]
+    fn surfacing_without_diver_fatal() {
+        let (mut env, mut obs) = fresh(3);
+        env.oxygen = 50; // below max -> surfacing triggers the rule
+        env.sub_y = 1;
+        let st = env.step(actions::UP, &mut obs);
+        assert!(st.done);
+    }
+
+    #[test]
+    fn enemy_contact_fatal() {
+        let (mut env, mut obs) = fresh(4);
+        env.enemies.push(Mover {
+            x: env.sub_x,
+            y: env.sub_y + 1,
+            dir: 1,
+            is_sub: false,
+            shot_timer: 99,
+        });
+        let st = env.step(actions::DOWN, &mut obs);
+        assert!(st.done);
+    }
+
+    #[test]
+    fn gauges_render_on_bottom_row() {
+        let (mut env, mut obs) = fresh(5);
+        env.step(actions::NOOP, &mut obs);
+        let oxy_plane = &obs[7 * GRID * GRID..8 * GRID * GRID];
+        let filled = oxy_plane.iter().filter(|&&v| v == 1.0).count();
+        assert!(filled >= GRID - 1, "full-ish oxygen at start: {filled}");
+        // all gauge pixels on the bottom row
+        for (i, &v) in oxy_plane.iter().enumerate() {
+            if v == 1.0 {
+                assert_eq!(i / GRID, GRID - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn diver_cap_respected() {
+        let (mut env, mut obs) = fresh(6);
+        env.diver_count = MAX_DIVERS;
+        env.divers.push((env.sub_y + 1, env.sub_x, 1));
+        env.step(actions::DOWN, &mut obs);
+        assert_eq!(env.diver_count, MAX_DIVERS);
+        assert_eq!(env.divers.len(), 1, "diver not consumed at cap");
+    }
+}

@@ -1,0 +1,283 @@
+//! Environment substrate: the Atari/Gym replacement (DESIGN.md
+//! §Substitutions #1).
+//!
+//! A Gym-like trait over fully-deterministic, seedable grid games:
+//! a MinAtar-style suite (Young & Tian 2019 — the adaptation target the
+//! paper itself demonstrates in Figures 1-2) plus Catch and GridWorld
+//! as fast test envs.  Observations are channels-first `[C, H, W]`
+//! f32 in {0, 1}, written into caller-provided buffers so the actor
+//! hot loop never allocates (the paper's §5.1 buffer-reuse discipline).
+//!
+//! The spec table here mirrors `python/compile/envspec.py`; the
+//! manifest check in `runtime::manifest` plus `python/tests/test_envspec.py`
+//! keep the two sides from drifting.
+
+pub mod catch;
+pub mod gridworld;
+pub mod minatar;
+pub mod wrappers;
+
+use crate::util::rng::Rng;
+
+/// Static description of an environment's interface.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EnvSpec {
+    pub name: &'static str,
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    pub num_actions: usize,
+}
+
+impl EnvSpec {
+    pub const fn obs_len(&self) -> usize {
+        self.channels * self.height * self.width
+    }
+
+    pub fn obs_shape(&self) -> [usize; 3] {
+        [self.channels, self.height, self.width]
+    }
+}
+
+/// Result of one environment transition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Step {
+    pub reward: f32,
+    /// Episode ended with this transition (next `reset` starts fresh).
+    pub done: bool,
+}
+
+impl Step {
+    pub const fn cont(reward: f32) -> Step {
+        Step { reward, done: false }
+    }
+
+    pub const fn terminal(reward: f32) -> Step {
+        Step { reward, done: true }
+    }
+}
+
+/// The Gym-interface analog (paper §1: "environments provided using
+/// the OpenAI Gym interface").
+pub trait Environment: Send {
+    fn spec(&self) -> &EnvSpec;
+
+    /// Start a new episode; write the initial observation into `obs`
+    /// (`obs.len() == spec().obs_len()`).
+    fn reset(&mut self, obs: &mut [f32]);
+
+    /// Apply `action`, write the next observation, return reward/done.
+    /// After `done == true` the caller must `reset` before stepping.
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step;
+
+    /// Remaining lives, for the EpisodicLife wrapper (paper §4's
+    /// end-of-life episode discussion). None = no life system.
+    fn lives(&self) -> Option<u32> {
+        None
+    }
+
+    /// Replace the RNG stream (fresh seed for reproducible rollouts).
+    fn reseed(&mut self, seed: u64);
+}
+
+/// Write helper: `grid[c][y][x] = v` on a flat [C, H, W] buffer.
+#[inline]
+pub(crate) fn set(obs: &mut [f32], w: usize, h: usize, c: usize, y: usize, x: usize, v: f32) {
+    debug_assert!(y < h && x < w);
+    obs[c * h * w + y * w + x] = v;
+}
+
+/// All registered env names, in spec-table order.
+pub const ENV_NAMES: &[&str] = &[
+    "catch",
+    "gridworld",
+    "minatar/breakout",
+    "minatar/space_invaders",
+    "minatar/asterix",
+    "minatar/freeway",
+    "minatar/seaquest",
+];
+
+/// Look up the spec for an env name without constructing it.
+pub fn spec_of(name: &str) -> anyhow::Result<EnvSpec> {
+    Ok(match name {
+        "catch" => catch::SPEC,
+        "gridworld" => gridworld::SPEC,
+        "minatar/breakout" => minatar::breakout::SPEC,
+        "minatar/space_invaders" => minatar::space_invaders::SPEC,
+        "minatar/asterix" => minatar::asterix::SPEC,
+        "minatar/freeway" => minatar::freeway::SPEC,
+        "minatar/seaquest" => minatar::seaquest::SPEC,
+        other => anyhow::bail!("unknown env {other:?}; have {ENV_NAMES:?}"),
+    })
+}
+
+/// Construct a bare (unwrapped) environment.
+pub fn make_env(name: &str, seed: u64) -> anyhow::Result<Box<dyn Environment>> {
+    Ok(match name {
+        "catch" => Box::new(catch::Catch::new(seed)),
+        "gridworld" => Box::new(gridworld::GridWorld::new(seed)),
+        "minatar/breakout" => Box::new(minatar::breakout::Breakout::new(seed)),
+        "minatar/space_invaders" => Box::new(minatar::space_invaders::SpaceInvaders::new(seed)),
+        "minatar/asterix" => Box::new(minatar::asterix::Asterix::new(seed)),
+        "minatar/freeway" => Box::new(minatar::freeway::Freeway::new(seed)),
+        "minatar/seaquest" => Box::new(minatar::seaquest::Seaquest::new(seed)),
+        other => anyhow::bail!("unknown env {other:?}; have {ENV_NAMES:?}"),
+    })
+}
+
+/// Construct an env with the standard wrapper stack from a config.
+pub fn make_wrapped(
+    name: &str,
+    seed: u64,
+    w: &wrappers::WrapperCfg,
+) -> anyhow::Result<Box<dyn Environment>> {
+    let env = make_env(name, seed)?;
+    Ok(wrappers::apply(env, seed, w))
+}
+
+/// Deterministic per-actor seed derivation: one root seed fans out to
+/// independent env streams (root is documented in EXPERIMENTS.md runs).
+pub fn actor_seed(root: u64, actor_id: usize) -> u64 {
+    let mut r = Rng::new(root ^ 0xD1F3_5A7E_9B24_C680);
+    for _ in 0..(actor_id % 7) {
+        r.next_u64();
+    }
+    r.next_u64() ^ ((actor_id as u64) << 32 | actor_id as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rollout_sig(name: &str, seed: u64, steps: usize) -> (Vec<u64>, f32) {
+        let mut env = make_env(name, seed).unwrap();
+        let spec = env.spec().clone();
+        let mut obs = vec![0.0f32; spec.obs_len()];
+        env.reset(&mut obs);
+        let mut rng = Rng::new(seed ^ 1);
+        let mut sig = Vec::new();
+        let mut total = 0.0f32;
+        for _ in 0..steps {
+            let a = rng.below(spec.num_actions);
+            let st = env.step(a, &mut obs);
+            total += st.reward;
+            let h = obs
+                .iter()
+                .enumerate()
+                .fold(0u64, |acc, (i, &v)| acc ^ ((v.to_bits() as u64) << (i % 32)));
+            sig.push(h);
+            if st.done {
+                env.reset(&mut obs);
+            }
+        }
+        (sig, total)
+    }
+
+    #[test]
+    fn all_envs_construct_and_step() {
+        for name in ENV_NAMES {
+            let mut env = make_env(name, 0).unwrap();
+            let spec = env.spec().clone();
+            assert_eq!(spec.name, *name);
+            let mut obs = vec![0.0f32; spec.obs_len()];
+            env.reset(&mut obs);
+            for a in 0..spec.num_actions {
+                let st = env.step(a % spec.num_actions, &mut obs);
+                assert!(st.reward.is_finite());
+                if st.done {
+                    env.reset(&mut obs);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn observations_are_binaryish() {
+        // All grid envs emit values in [0, 1].
+        for name in ENV_NAMES {
+            let mut env = make_env(name, 3).unwrap();
+            let spec = env.spec().clone();
+            let mut obs = vec![0.0f32; spec.obs_len()];
+            env.reset(&mut obs);
+            for i in 0..200 {
+                let st = env.step(i % spec.num_actions, &mut obs);
+                assert!(
+                    obs.iter().all(|&v| (0.0..=1.0).contains(&v)),
+                    "{name} emitted out-of-range obs"
+                );
+                if st.done {
+                    env.reset(&mut obs);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        for name in ENV_NAMES {
+            let (a, ra) = rollout_sig(name, 42, 300);
+            let (b, rb) = rollout_sig(name, 42, 300);
+            assert_eq!(a, b, "{name} not deterministic");
+            assert_eq!(ra, rb);
+        }
+    }
+
+    #[test]
+    fn seed_changes_trajectories() {
+        // At least the stochastic envs must differ across seeds.
+        let mut differing = 0;
+        for name in ENV_NAMES {
+            let (a, _) = rollout_sig(name, 1, 300);
+            let (b, _) = rollout_sig(name, 2, 300);
+            if a != b {
+                differing += 1;
+            }
+        }
+        assert!(differing >= 5, "only {differing} envs varied with seed");
+    }
+
+    #[test]
+    fn spec_table_matches_instances() {
+        for name in ENV_NAMES {
+            let spec = spec_of(name).unwrap();
+            let env = make_env(name, 0).unwrap();
+            assert_eq!(env.spec(), &spec);
+        }
+    }
+
+    #[test]
+    fn episodes_terminate() {
+        // Every env must end an episode within a generous budget under
+        // random play (all have internal time limits or death states).
+        for name in ENV_NAMES {
+            let mut env = make_env(name, 7).unwrap();
+            let spec = env.spec().clone();
+            let mut obs = vec![0.0f32; spec.obs_len()];
+            env.reset(&mut obs);
+            let mut rng = Rng::new(99);
+            let mut done = false;
+            for _ in 0..6000 {
+                if env.step(rng.below(spec.num_actions), &mut obs).done {
+                    done = true;
+                    break;
+                }
+            }
+            assert!(done, "{name} episode did not terminate in 6000 steps");
+        }
+    }
+
+    #[test]
+    fn actor_seed_fanout_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for id in 0..256 {
+            assert!(seen.insert(actor_seed(123, id)));
+        }
+    }
+
+    #[test]
+    fn unknown_env_errors() {
+        assert!(make_env("atari/pong", 0).is_err());
+        assert!(spec_of("nope").is_err());
+    }
+}

@@ -1,0 +1,695 @@
+//! Environment wrappers: the `atari_wrappers.py` analog (paper §4).
+//!
+//! The paper trains through OpenAI Baselines' preprocessing stack —
+//! action repetition, frame stacking, reward clipping, random no-ops,
+//! end-of-episode-on-life-loss, time limits.  This module provides the
+//! same wrappers as composable `Environment` adapters, plus two that
+//! exist for the reproduction itself:
+//!
+//! * `StickyActions` — MinAtar's stochasticity knob (repeat the
+//!   previous action with probability p), used instead of Atari's
+//!   sticky actions;
+//! * `EnvCost` — busy-spins a configurable number of microseconds per
+//!   step to simulate computationally expensive environments (the
+//!   paper's StarCraft-II discussion; used by the E2 throughput
+//!   sweeps).
+
+use super::{EnvSpec, Environment, Step};
+use crate::util::rng::Rng;
+
+/// Wrapper configuration (mirrored in run configs and the RPC Hello).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WrapperCfg {
+    /// Repeat each agent action k times, summing rewards (Atari: 4).
+    pub action_repeat: usize,
+    /// Stack the last k observations along the channel axis.
+    pub frame_stack: usize,
+    /// Clamp rewards to [-c, c]; 0 disables.
+    pub reward_clip: f32,
+    /// With probability p, ignore the new action and repeat the last.
+    pub sticky_action_p: f32,
+    /// Hard cap on episode length; 0 disables.
+    pub time_limit: u32,
+    /// Up to n random no-op steps after each true reset.
+    pub noop_max: u32,
+    /// End episodes on life loss (envs exposing `lives()`).
+    pub episodic_life: bool,
+    /// Busy-wait microseconds per step (simulated env cost).
+    pub env_cost_us: u64,
+}
+
+impl Default for WrapperCfg {
+    fn default() -> Self {
+        WrapperCfg {
+            action_repeat: 1,
+            frame_stack: 1,
+            reward_clip: 0.0,
+            sticky_action_p: 0.0,
+            time_limit: 0,
+            noop_max: 0,
+            episodic_life: false,
+            env_cost_us: 0,
+        }
+    }
+}
+
+/// Apply the configured wrapper stack (inner-to-outer order matches
+/// baselines' wrap_deepmind: repeat, sticky, life, clip, stack, limit,
+/// noop, cost).
+pub fn apply(env: Box<dyn Environment>, seed: u64, cfg: &WrapperCfg) -> Box<dyn Environment> {
+    let mut env = env;
+    if cfg.action_repeat > 1 {
+        env = Box::new(ActionRepeat::new(env, cfg.action_repeat));
+    }
+    if cfg.sticky_action_p > 0.0 {
+        env = Box::new(StickyActions::new(env, cfg.sticky_action_p, seed ^ 0x5713));
+    }
+    if cfg.episodic_life {
+        env = Box::new(EpisodicLife::new(env));
+    }
+    if cfg.reward_clip > 0.0 {
+        env = Box::new(RewardClip::new(env, cfg.reward_clip));
+    }
+    if cfg.frame_stack > 1 {
+        env = Box::new(FrameStack::new(env, cfg.frame_stack));
+    }
+    if cfg.time_limit > 0 {
+        env = Box::new(TimeLimit::new(env, cfg.time_limit));
+    }
+    if cfg.noop_max > 0 {
+        env = Box::new(NoopStart::new(env, cfg.noop_max, seed ^ 0xAA55));
+    }
+    if cfg.env_cost_us > 0 {
+        env = Box::new(EnvCost::new(env, cfg.env_cost_us));
+    }
+    env
+}
+
+/// The effective spec after wrapping (frame stack multiplies channels).
+pub fn wrapped_spec(base: &EnvSpec, cfg: &WrapperCfg) -> EnvSpec {
+    let mut s = base.clone();
+    s.channels *= cfg.frame_stack.max(1);
+    s
+}
+
+// ---------------------------------------------------------------------------
+
+/// Repeat the agent's action k times; sum rewards; stop early on done.
+pub struct ActionRepeat {
+    inner: Box<dyn Environment>,
+    k: usize,
+}
+
+impl ActionRepeat {
+    pub fn new(inner: Box<dyn Environment>, k: usize) -> Self {
+        assert!(k >= 1);
+        ActionRepeat { inner, k }
+    }
+}
+
+impl Environment for ActionRepeat {
+    fn spec(&self) -> &EnvSpec {
+        self.inner.spec()
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.inner.reset(obs)
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        let mut total = 0.0;
+        for _ in 0..self.k {
+            let st = self.inner.step(action, obs);
+            total += st.reward;
+            if st.done {
+                return Step::terminal(total);
+            }
+        }
+        Step::cont(total)
+    }
+
+    fn lives(&self) -> Option<u32> {
+        self.inner.lives()
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.inner.reseed(seed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// With probability p, repeat the previous action instead of the new one.
+pub struct StickyActions {
+    inner: Box<dyn Environment>,
+    p: f32,
+    rng: Rng,
+    last: usize,
+}
+
+impl StickyActions {
+    pub fn new(inner: Box<dyn Environment>, p: f32, seed: u64) -> Self {
+        StickyActions {
+            inner,
+            p,
+            rng: Rng::new(seed),
+            last: 0,
+        }
+    }
+}
+
+impl Environment for StickyActions {
+    fn spec(&self) -> &EnvSpec {
+        self.inner.spec()
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.last = 0;
+        self.inner.reset(obs)
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        let a = if self.rng.chance(self.p) { self.last } else { action };
+        self.last = a;
+        self.inner.step(a, obs)
+    }
+
+    fn lives(&self) -> Option<u32> {
+        self.inner.lives()
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+        self.inner.reseed(seed ^ 1);
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Clamp rewards to [-c, c].
+pub struct RewardClip {
+    inner: Box<dyn Environment>,
+    c: f32,
+}
+
+impl RewardClip {
+    pub fn new(inner: Box<dyn Environment>, c: f32) -> Self {
+        RewardClip { inner, c }
+    }
+}
+
+impl Environment for RewardClip {
+    fn spec(&self) -> &EnvSpec {
+        self.inner.spec()
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.inner.reset(obs)
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        let mut st = self.inner.step(action, obs);
+        st.reward = st.reward.clamp(-self.c, self.c);
+        st
+    }
+
+    fn lives(&self) -> Option<u32> {
+        self.inner.lives()
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.inner.reseed(seed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Stack the last k frames along the channel axis (oldest first).
+pub struct FrameStack {
+    inner: Box<dyn Environment>,
+    k: usize,
+    spec: EnvSpec,
+    frames: Vec<f32>, // ring of k frames, flattened
+    frame_len: usize,
+    head: usize, // index of the oldest frame
+}
+
+impl FrameStack {
+    pub fn new(inner: Box<dyn Environment>, k: usize) -> Self {
+        assert!(k >= 1);
+        let base = inner.spec().clone();
+        let frame_len = base.obs_len();
+        let spec = EnvSpec {
+            name: base.name,
+            channels: base.channels * k,
+            height: base.height,
+            width: base.width,
+            num_actions: base.num_actions,
+        };
+        FrameStack {
+            inner,
+            k,
+            spec,
+            frames: vec![0.0; frame_len * k],
+            frame_len,
+            head: 0,
+        }
+    }
+
+    fn write_stacked(&self, obs: &mut [f32]) {
+        // oldest frame first -> channel order [f_{t-k+1}, ..., f_t]
+        for i in 0..self.k {
+            let src = (self.head + i) % self.k;
+            obs[i * self.frame_len..(i + 1) * self.frame_len]
+                .copy_from_slice(&self.frames[src * self.frame_len..(src + 1) * self.frame_len]);
+        }
+    }
+
+    fn push(&mut self, frame: &[f32]) {
+        let slot = self.head;
+        self.frames[slot * self.frame_len..(slot + 1) * self.frame_len].copy_from_slice(frame);
+        self.head = (self.head + 1) % self.k;
+    }
+}
+
+impl Environment for FrameStack {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        let mut frame = vec![0.0; self.frame_len];
+        self.inner.reset(&mut frame);
+        // fill the ring with the initial frame (baselines' behavior)
+        for _ in 0..self.k {
+            self.push(&frame);
+        }
+        self.write_stacked(obs);
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        let mut frame = vec![0.0; self.frame_len];
+        let st = self.inner.step(action, &mut frame);
+        self.push(&frame);
+        self.write_stacked(obs);
+        st
+    }
+
+    fn lives(&self) -> Option<u32> {
+        self.inner.lives()
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.inner.reseed(seed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Terminate episodes after n steps (reward passthrough).
+pub struct TimeLimit {
+    inner: Box<dyn Environment>,
+    max: u32,
+    steps: u32,
+}
+
+impl TimeLimit {
+    pub fn new(inner: Box<dyn Environment>, max: u32) -> Self {
+        TimeLimit {
+            inner,
+            max,
+            steps: 0,
+        }
+    }
+}
+
+impl Environment for TimeLimit {
+    fn spec(&self) -> &EnvSpec {
+        self.inner.spec()
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.steps = 0;
+        self.inner.reset(obs)
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        let mut st = self.inner.step(action, obs);
+        self.steps += 1;
+        if self.steps >= self.max {
+            st.done = true;
+        }
+        st
+    }
+
+    fn lives(&self) -> Option<u32> {
+        self.inner.lives()
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.inner.reseed(seed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Random number of no-op actions after each reset (baselines' NoopReset).
+pub struct NoopStart {
+    inner: Box<dyn Environment>,
+    max: u32,
+    rng: Rng,
+}
+
+impl NoopStart {
+    pub fn new(inner: Box<dyn Environment>, max: u32, seed: u64) -> Self {
+        NoopStart {
+            inner,
+            max,
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl Environment for NoopStart {
+    fn spec(&self) -> &EnvSpec {
+        self.inner.spec()
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.inner.reset(obs);
+        let n = self.rng.below(self.max as usize + 1);
+        for _ in 0..n {
+            let st = self.inner.step(0, obs);
+            if st.done {
+                self.inner.reset(obs);
+            }
+        }
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        self.inner.step(action, obs)
+    }
+
+    fn lives(&self) -> Option<u32> {
+        self.inner.lives()
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+        self.inner.reseed(seed ^ 2);
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// End the RL episode on life loss; only a real game-over triggers a
+/// full reset underneath (paper §4's episode-definition discussion).
+pub struct EpisodicLife {
+    inner: Box<dyn Environment>,
+    lives: u32,
+    real_done: bool,
+}
+
+impl EpisodicLife {
+    pub fn new(inner: Box<dyn Environment>) -> Self {
+        EpisodicLife {
+            inner,
+            lives: 0,
+            real_done: true,
+        }
+    }
+}
+
+impl Environment for EpisodicLife {
+    fn spec(&self) -> &EnvSpec {
+        self.inner.spec()
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        if self.real_done {
+            self.inner.reset(obs);
+        } else {
+            // life-loss boundary: continue the underlying episode with a
+            // no-op so the next life starts from the current state
+            let st = self.inner.step(0, obs);
+            if st.done {
+                self.inner.reset(obs);
+            }
+        }
+        self.lives = self.inner.lives().unwrap_or(0);
+        self.real_done = false;
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        let mut st = self.inner.step(action, obs);
+        self.real_done = st.done;
+        let lives = self.inner.lives().unwrap_or(0);
+        if lives < self.lives && lives > 0 {
+            st.done = true;
+        }
+        self.lives = lives;
+        st
+    }
+
+    fn lives(&self) -> Option<u32> {
+        self.inner.lives()
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.inner.reseed(seed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Busy-wait per step: simulates expensive envs for throughput studies.
+pub struct EnvCost {
+    inner: Box<dyn Environment>,
+    cost: std::time::Duration,
+}
+
+impl EnvCost {
+    pub fn new(inner: Box<dyn Environment>, micros: u64) -> Self {
+        EnvCost {
+            inner,
+            cost: std::time::Duration::from_micros(micros),
+        }
+    }
+
+    fn burn(&self) {
+        let t0 = std::time::Instant::now();
+        while t0.elapsed() < self.cost {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+impl Environment for EnvCost {
+    fn spec(&self) -> &EnvSpec {
+        self.inner.spec()
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.burn();
+        self.inner.reset(obs)
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        self.burn();
+        self.inner.step(action, obs)
+    }
+
+    fn lives(&self) -> Option<u32> {
+        self.inner.lives()
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.inner.reseed(seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::{catch, make_env};
+
+    fn catch_env() -> Box<dyn Environment> {
+        make_env("catch", 0).unwrap()
+    }
+
+    #[test]
+    fn action_repeat_sums_rewards_and_shortens_episodes() {
+        let mut env = ActionRepeat::new(catch_env(), 3);
+        let mut obs = vec![0.0; env.spec().obs_len()];
+        env.reset(&mut obs);
+        let mut steps = 0;
+        loop {
+            steps += 1;
+            if env.step(1, &mut obs).done {
+                break;
+            }
+        }
+        // catch episode is 9 inner steps -> ceil(9/3) = 3 outer
+        assert_eq!(steps, 3);
+    }
+
+    #[test]
+    fn frame_stack_spec_and_content() {
+        let mut env = FrameStack::new(catch_env(), 4);
+        assert_eq!(env.spec().channels, 4);
+        let len = env.spec().obs_len();
+        let mut obs = vec![0.0; len];
+        env.reset(&mut obs);
+        // after reset all 4 frames identical
+        let f = len / 4;
+        for i in 1..4 {
+            assert_eq!(obs[..f], obs[i * f..(i + 1) * f]);
+        }
+        env.step(1, &mut obs);
+        // newest (last) differs from oldest (first): ball moved
+        assert_ne!(obs[..f], obs[3 * f..4 * f]);
+    }
+
+    #[test]
+    fn frame_stack_order_oldest_first() {
+        let mut env = FrameStack::new(catch_env(), 2);
+        let len = env.spec().obs_len();
+        let f = len / 2;
+        let mut obs = vec![0.0; len];
+        env.reset(&mut obs);
+        let first = obs[f..2 * f].to_vec(); // newest after reset
+        env.step(1, &mut obs);
+        // previous newest is now the oldest slot
+        assert_eq!(obs[..f], first[..]);
+    }
+
+    #[test]
+    fn reward_clip_clamps() {
+        struct Fixed;
+        impl Environment for Fixed {
+            fn spec(&self) -> &EnvSpec {
+                &catch::SPEC
+            }
+            fn reset(&mut self, obs: &mut [f32]) {
+                obs.fill(0.0);
+            }
+            fn step(&mut self, _a: usize, obs: &mut [f32]) -> Step {
+                obs.fill(0.0);
+                Step::cont(5.0)
+            }
+            fn reseed(&mut self, _s: u64) {}
+        }
+        let mut env = RewardClip::new(Box::new(Fixed), 1.0);
+        let mut obs = vec![0.0; env.spec().obs_len()];
+        env.reset(&mut obs);
+        assert_eq!(env.step(0, &mut obs).reward, 1.0);
+    }
+
+    #[test]
+    fn time_limit_truncates() {
+        let mut env = TimeLimit::new(catch_env(), 3);
+        let mut obs = vec![0.0; env.spec().obs_len()];
+        env.reset(&mut obs);
+        assert!(!env.step(1, &mut obs).done);
+        assert!(!env.step(1, &mut obs).done);
+        assert!(env.step(1, &mut obs).done);
+        // resets the counter
+        env.reset(&mut obs);
+        assert!(!env.step(1, &mut obs).done);
+    }
+
+    #[test]
+    fn sticky_actions_repeat_sometimes() {
+        // p = 1: after the first action, everything repeats it
+        let mut env = StickyActions::new(catch_env(), 1.0, 9);
+        let mut obs = vec![0.0; env.spec().obs_len()];
+        env.reset(&mut obs);
+        env.step(2, &mut obs); // recorded as last=0 (sticky from init)
+        // deterministic check: with p=1 the action stream is all `last`
+        // from reset (0 = left). Paddle must end hard-left.
+        let mut env2 = StickyActions::new(catch_env(), 1.0, 9);
+        env2.reset(&mut obs);
+        for _ in 0..5 {
+            env2.step(2, &mut obs);
+        }
+        // paddle pixel in the bottom row must be at x=0 (all-left)
+        let w = catch::WIDTH;
+        let bottom = &obs[(catch::HEIGHT - 1) * w..catch::HEIGHT * w];
+        assert_eq!(bottom[0], 1.0);
+    }
+
+    #[test]
+    fn noop_start_varies_initial_state() {
+        let mut env = NoopStart::new(make_env("minatar/breakout", 0).unwrap(), 8, 1);
+        let len = env.spec().obs_len();
+        let mut a = vec![0.0; len];
+        let mut b = vec![0.0; len];
+        env.reset(&mut a);
+        env.reset(&mut b);
+        assert_ne!(a, b, "random no-ops should vary the start state");
+    }
+
+    #[test]
+    fn env_cost_burns_time() {
+        let mut env = EnvCost::new(catch_env(), 200);
+        let mut obs = vec![0.0; env.spec().obs_len()];
+        env.reset(&mut obs);
+        let t0 = std::time::Instant::now();
+        for _ in 0..5 {
+            env.step(1, &mut obs);
+        }
+        assert!(t0.elapsed() >= std::time::Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn apply_stack_composes() {
+        let cfg = WrapperCfg {
+            action_repeat: 2,
+            frame_stack: 3,
+            reward_clip: 1.0,
+            sticky_action_p: 0.1,
+            time_limit: 50,
+            noop_max: 2,
+            episodic_life: false,
+            env_cost_us: 0,
+        };
+        let env = make_env("catch", 0).unwrap();
+        let base_spec = env.spec().clone();
+        let mut wrapped = apply(env, 0, &cfg);
+        let spec = wrapped.spec().clone();
+        assert_eq!(spec.channels, base_spec.channels * 3);
+        assert_eq!(spec, wrapped_spec(&base_spec, &cfg));
+        let mut obs = vec![0.0; spec.obs_len()];
+        wrapped.reset(&mut obs);
+        for i in 0..60 {
+            let st = wrapped.step(i % spec.num_actions, &mut obs);
+            assert!(st.reward.abs() <= 1.0);
+            if st.done {
+                wrapped.reset(&mut obs);
+            }
+        }
+    }
+
+    #[test]
+    fn default_cfg_is_identity() {
+        let cfg = WrapperCfg::default();
+        let env = make_env("catch", 3).unwrap();
+        let mut wrapped = apply(env, 3, &cfg);
+        let mut bare = make_env("catch", 3).unwrap();
+        let len = bare.spec().obs_len();
+        let (mut a, mut b) = (vec![0.0; len], vec![0.0; len]);
+        wrapped.reset(&mut a);
+        bare.reset(&mut b);
+        assert_eq!(a, b);
+        for i in 0..20 {
+            let sa = wrapped.step(i % 3, &mut a);
+            let sb = bare.step(i % 3, &mut b);
+            assert_eq!(a, b);
+            assert_eq!(sa, sb);
+            if sa.done {
+                wrapped.reset(&mut a);
+                bare.reset(&mut b);
+            }
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! # torchbeast-rs
+//!
+//! Reproduction of **TorchBeast: A PyTorch Platform for Distributed RL**
+//! (Küttler et al., 2019) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination system the paper
+//!   contributes: an IMPALA actor-learner platform with a dynamic
+//!   inference batcher, a batching learner queue, an actor pool, and
+//!   TCP environment servers (PolyBeast's C++/gRPC core, in Rust), plus
+//!   a single-process "mono" mode (MonoBeast's shared-memory design,
+//!   with threads + channels).
+//! * **L2 (python/compile)** — the agent network, V-trace loss and
+//!   RMSProp update in JAX, AOT-lowered to HLO text artifacts executed
+//!   here via PJRT (`runtime`); Python never runs at training time.
+//! * **L1 (python/compile/kernels)** — the V-trace correction as a
+//!   Pallas kernel, fused into the learner artifact.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-reproduction results.
+
+pub mod agent;
+pub mod config;
+pub mod coordinator;
+pub mod env;
+pub mod metrics;
+pub mod rpc;
+pub mod runtime;
+pub mod util;
+pub mod vtrace;

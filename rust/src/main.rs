@@ -1,0 +1,135 @@
+//! torchbeast CLI: train | env-server | eval | inspect.
+//!
+//! ```text
+//! torchbeast train --artifact_dir artifacts/catch --mode mono --num_actors 8 \
+//!                  --total_steps 2000 --log_path runs/catch.csv
+//! torchbeast env-server --listen 0.0.0.0:7001
+//! torchbeast inspect --artifact_dir artifacts/catch
+//! ```
+//!
+//! `train` runs the full actor-learner system against an AOT artifact
+//! bundle (build with `make artifacts`).  `env-server` runs a
+//! standalone environment server process for distributed (poly) runs —
+//! point `--server_addresses '["host:port", ...]'` at them.
+
+use torchbeast::config::TrainConfig;
+use torchbeast::coordinator;
+use torchbeast::rpc::EnvServer;
+use torchbeast::runtime::Manifest;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: torchbeast <command> [--key value ...]\n\
+         commands:\n\
+         \x20 train       run the actor-learner system (see config.rs for flags)\n\
+         \x20 env-server  serve environments over TCP (--listen addr:port)\n\
+         \x20 eval        evaluate a config's artifact with fresh params (--artifact_dir)\n\
+         \x20 inspect     print an artifact bundle's manifest (--artifact_dir)"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let rest = &args[1..];
+
+    match cmd.as_str() {
+        "train" => {
+            let mut cfg = TrainConfig::default();
+            cfg.apply_args(rest)?;
+            let report = coordinator::train(&cfg)?;
+            println!(
+                "done: {} learner steps, {} frames ({:.0} fps), {} episodes, \
+                 mean batch {:.2}, learner step {:?}",
+                report.steps,
+                report.frames,
+                report.fps,
+                report.episodes,
+                report.batcher.mean_batch_size(),
+                report.learner_step_time,
+            );
+            if let Some(row) = report.history.last() {
+                println!(
+                    "final: loss {:.4} mean_return {:.4}",
+                    row.stats.total_loss(),
+                    row.mean_return
+                );
+            }
+            Ok(())
+        }
+        "env-server" => {
+            let mut listen = "0.0.0.0:7001".to_string();
+            let mut i = 0;
+            while i < rest.len() {
+                match rest[i].as_str() {
+                    "--listen" => {
+                        i += 1;
+                        listen = rest
+                            .get(i)
+                            .ok_or_else(|| anyhow::anyhow!("--listen needs a value"))?
+                            .clone();
+                    }
+                    other => anyhow::bail!("unknown env-server flag {other:?}"),
+                }
+                i += 1;
+            }
+            let server = EnvServer::start(&listen)?;
+            println!("env-server listening on {}", server.addr);
+            // Serve until killed.
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(5));
+                eprintln!(
+                    "[env-server] streams={} steps_served={}",
+                    server.connections.load(std::sync::atomic::Ordering::Relaxed),
+                    server
+                        .steps_served
+                        .load(std::sync::atomic::Ordering::Relaxed)
+                );
+            }
+        }
+        "eval" => {
+            let mut cfg = TrainConfig::default();
+            cfg.apply_args(rest)?;
+            // Evaluate a checkpoint's greedy policy (or, without
+            // --init_checkpoint, fresh seeded params as an artifact
+            // smoke check).
+            let mut learner = torchbeast::runtime::LearnerEngine::load(&cfg.artifact_dir)?;
+            let (params, what) = match &cfg.init_checkpoint {
+                Some(path) => (
+                    torchbeast::runtime::checkpoint::load(path, &learner.manifest)?,
+                    format!("checkpoint {}", path.display()),
+                ),
+                None => (
+                    learner.init_params(cfg.seed as i32)?,
+                    format!("random init (seed {})", cfg.seed),
+                ),
+            };
+            let mean = coordinator::evaluate(&cfg.artifact_dir, &params, 20, cfg.seed)?;
+            println!("greedy policy of {what}: mean return over 20 episodes = {mean:.3}");
+            Ok(())
+        }
+        "inspect" => {
+            let mut cfg = TrainConfig::default();
+            cfg.apply_args(rest)?;
+            let m = Manifest::load(&cfg.artifact_dir)?;
+            println!("artifact bundle: {}", cfg.artifact_dir.display());
+            println!(
+                "  env: {} obs {:?} actions {}",
+                m.env, m.obs_shape, m.num_actions
+            );
+            println!("  model: {} ({} params)", m.model, m.param_count);
+            println!(
+                "  T={} B={} inference_batch={}",
+                m.unroll_length, m.batch_size, m.inference_batch
+            );
+            println!("  hlo sha256: {}", m.hlo_sha256);
+            println!("  param leaves:");
+            for l in &m.params {
+                println!("    {:<24} {:?}", l.name, l.shape);
+            }
+            Ok(())
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,231 @@
+//! Training metrics hub: thread-safe counters, episode-return
+//! tracking, and a CSV curve logger (the learning curves in Figures
+//! 3-4 are regenerated from these logs).
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::stats::Ema;
+
+/// Shared across actors, inference thread and learner.
+pub struct Metrics {
+    /// Environment frames consumed (actor steps).
+    pub frames: AtomicU64,
+    /// Episodes finished.
+    pub episodes: AtomicU64,
+    /// Learner gradient steps.
+    pub learner_steps: AtomicU64,
+    /// Rollouts delivered to the learner.
+    pub rollouts: AtomicU64,
+    inner: Mutex<Inner>,
+    start: Instant,
+}
+
+struct Inner {
+    return_ema: Ema,
+    step_ema: Ema,
+    last_returns: Vec<f32>, // ring of recent episode returns
+    loss_ema: Ema,
+}
+
+const RETURN_WINDOW: usize = 100;
+
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub frames: u64,
+    pub episodes: u64,
+    pub learner_steps: u64,
+    pub rollouts: u64,
+    pub fps: f64,
+    pub mean_return: f64,
+    pub return_ema: f64,
+    pub loss_ema: f64,
+    pub elapsed_s: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            frames: AtomicU64::new(0),
+            episodes: AtomicU64::new(0),
+            learner_steps: AtomicU64::new(0),
+            rollouts: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                return_ema: Ema::new(0.05),
+                step_ema: Ema::new(0.05),
+                last_returns: Vec::new(),
+                loss_ema: Ema::new(0.1),
+            }),
+            start: Instant::now(),
+        }
+    }
+
+    pub fn shared() -> Arc<Metrics> {
+        Arc::new(Metrics::new())
+    }
+
+    pub fn add_frames(&self, n: u64) {
+        self.frames.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn record_episode(&self, ep_return: f32, ep_steps: u32) {
+        self.episodes.fetch_add(1, Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        inner.return_ema.add(ep_return as f64);
+        inner.step_ema.add(ep_steps as f64);
+        if inner.last_returns.len() >= RETURN_WINDOW {
+            inner.last_returns.remove(0);
+        }
+        inner.last_returns.push(ep_return);
+    }
+
+    pub fn record_learner_step(&self, total_loss: f32) {
+        self.learner_steps.fetch_add(1, Ordering::Relaxed);
+        self.inner.lock().unwrap().loss_ema.add(total_loss as f64);
+    }
+
+    pub fn record_rollout(&self) {
+        self.rollouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let inner = self.inner.lock().unwrap();
+        let frames = self.frames.load(Ordering::Relaxed);
+        let elapsed = self.start.elapsed().as_secs_f64();
+        let mean_return = if inner.last_returns.is_empty() {
+            f64::NAN
+        } else {
+            inner.last_returns.iter().map(|&x| x as f64).sum::<f64>()
+                / inner.last_returns.len() as f64
+        };
+        Snapshot {
+            frames,
+            episodes: self.episodes.load(Ordering::Relaxed),
+            learner_steps: self.learner_steps.load(Ordering::Relaxed),
+            rollouts: self.rollouts.load(Ordering::Relaxed),
+            fps: if elapsed > 0.0 { frames as f64 / elapsed } else { 0.0 },
+            mean_return,
+            return_ema: inner.return_ema.get().unwrap_or(f64::NAN),
+            loss_ema: inner.loss_ema.get().unwrap_or(f64::NAN),
+            elapsed_s: elapsed,
+        }
+    }
+}
+
+/// CSV logger: one row per learner step (or per logging interval).
+pub struct CurveLogger {
+    file: std::fs::File,
+}
+
+pub const CURVE_HEADER: &str =
+    "step,frames,elapsed_s,fps,total_loss,pg_loss,baseline_loss,entropy_loss,mean_rho,grad_norm,mean_return,return_ema,episodes";
+
+impl CurveLogger {
+    pub fn create(path: &Path) -> anyhow::Result<CurveLogger> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{CURVE_HEADER}")?;
+        Ok(CurveLogger { file })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn log(
+        &mut self,
+        step: u64,
+        snap: &Snapshot,
+        stats: &crate::runtime::LearnerStats,
+    ) -> anyhow::Result<()> {
+        writeln!(
+            self.file,
+            "{},{},{:.2},{:.1},{},{},{},{},{},{},{},{},{}",
+            step,
+            snap.frames,
+            snap.elapsed_s,
+            snap.fps,
+            stats.total_loss(),
+            stats.pg_loss(),
+            stats.baseline_loss(),
+            stats.entropy_loss(),
+            stats.mean_rho(),
+            stats.grad_norm(),
+            snap.mean_return,
+            snap.return_ema,
+            snap.episodes,
+        )?;
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.add_frames(100);
+        m.add_frames(50);
+        m.record_episode(2.0, 10);
+        m.record_episode(4.0, 20);
+        m.record_learner_step(1.5);
+        let s = m.snapshot();
+        assert_eq!(s.frames, 150);
+        assert_eq!(s.episodes, 2);
+        assert_eq!(s.learner_steps, 1);
+        assert!((s.mean_return - 3.0).abs() < 1e-9);
+        assert!(s.fps > 0.0);
+    }
+
+    #[test]
+    fn return_window_bounded() {
+        let m = Metrics::new();
+        for i in 0..300 {
+            m.record_episode(i as f32, 1);
+        }
+        let s = m.snapshot();
+        // mean over the last 100 episodes: 200..299 -> 249.5
+        assert!((s.mean_return - 249.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_snapshot_is_nan_return() {
+        let s = Metrics::new().snapshot();
+        assert!(s.mean_return.is_nan());
+        assert!(s.return_ema.is_nan());
+    }
+
+    #[test]
+    fn curve_logger_writes_csv() {
+        let dir = std::env::temp_dir().join("tb_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("curve.csv");
+        let mut log = CurveLogger::create(&path).unwrap();
+        let m = Metrics::new();
+        m.add_frames(10);
+        let stats = crate::runtime::LearnerStats {
+            values: vec![1.0, 2.0, 3.0, 4.0, 0.9, 5.0],
+        };
+        log.log(1, &m.snapshot(), &stats).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("step,frames"));
+        assert!(lines[1].starts_with("1,10,"));
+        assert_eq!(
+            lines[1].split(',').count(),
+            CURVE_HEADER.split(',').count()
+        );
+    }
+}

@@ -1,0 +1,289 @@
+//! Actor-side remote environment client.
+//!
+//! `RemoteEnv` speaks the stream protocol and implements the same
+//! `Environment` trait as local envs, so the actor pool is oblivious
+//! to whether its environments are in-process (mono mode) or served
+//! over TCP by env-server processes (poly mode) — the paper's
+//! "transparently runs using either a single-machine or a distributed
+//! setup".
+//!
+//! Protocol note: the server auto-resets, so `reset()` after `done`
+//! costs no round-trip — the post-reset observation arrived with the
+//! `done` frame and is replayed from the local cache.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::env::wrappers::WrapperCfg;
+use crate::env::{EnvSpec, Environment, Step};
+use crate::rpc::codec::{read_msg, write_msg, Msg};
+
+pub struct RemoteEnv {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    spec: EnvSpec,
+    /// Last observation received (the server's auto-reset frame).
+    last_obs: Vec<f32>,
+    /// Stats of the last finished episode (for metrics).
+    pub last_episode_return: f32,
+    pub last_episode_step: u32,
+}
+
+/// Leaked &'static names for dynamically received specs. Bounded by the
+/// number of distinct (env, wrapper) spec shapes per process — tiny.
+fn leak_name(name: String) -> &'static str {
+    Box::leak(name.into_boxed_str())
+}
+
+impl RemoteEnv {
+    /// Connect to an env server and begin a serving stream.
+    pub fn connect(
+        addr: &str,
+        env_name: &str,
+        seed: u64,
+        wrappers: &WrapperCfg,
+    ) -> anyhow::Result<RemoteEnv> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+
+        write_msg(
+            &mut writer,
+            &Msg::Hello {
+                env: env_name.to_string(),
+                seed,
+                wrappers: wrappers.clone(),
+            },
+        )?;
+        let spec = match read_msg(&mut reader)? {
+            Msg::Spec {
+                channels,
+                height,
+                width,
+                num_actions,
+            } => EnvSpec {
+                name: leak_name(format!("remote/{env_name}")),
+                channels: channels as usize,
+                height: height as usize,
+                width: width as usize,
+                num_actions: num_actions as usize,
+            },
+            Msg::Error { message } => anyhow::bail!("server error: {message}"),
+            other => anyhow::bail!("expected Spec, got {other:?}"),
+        };
+        // initial observation
+        let last_obs = match read_msg(&mut reader)? {
+            Msg::Observation { obs, .. } => obs,
+            other => anyhow::bail!("expected initial Observation, got {other:?}"),
+        };
+        anyhow::ensure!(
+            last_obs.len() == spec.obs_len(),
+            "obs size {} != spec {}",
+            last_obs.len(),
+            spec.obs_len()
+        );
+        Ok(RemoteEnv {
+            writer,
+            reader,
+            spec,
+            last_obs,
+            last_episode_return: 0.0,
+            last_episode_step: 0,
+        })
+    }
+
+    /// Orderly stream shutdown.
+    pub fn close(&mut self) {
+        let _ = write_msg(&mut self.writer, &Msg::Bye);
+    }
+}
+
+impl Drop for RemoteEnv {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+impl Environment for RemoteEnv {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        // The server already reset; replay the cached frame.
+        obs.copy_from_slice(&self.last_obs);
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        // Any transport error surfaces as a terminal transition with
+        // zero reward; the actor will reset (replaying the cache) and
+        // keep going — matching the paper's fault-tolerant actor pool.
+        if write_msg(&mut self.writer, &Msg::Action { action: action as u32 }).is_err() {
+            obs.copy_from_slice(&self.last_obs);
+            return Step::terminal(0.0);
+        }
+        match read_msg(&mut self.reader) {
+            Ok(Msg::Observation {
+                reward,
+                done,
+                episode_step,
+                episode_return,
+                obs: new_obs,
+            }) => {
+                self.last_obs.copy_from_slice(&new_obs);
+                obs.copy_from_slice(&new_obs);
+                if done {
+                    self.last_episode_return = episode_return;
+                    self.last_episode_step = episode_step;
+                }
+                Step { reward, done }
+            }
+            _ => {
+                obs.copy_from_slice(&self.last_obs);
+                Step::terminal(0.0)
+            }
+        }
+    }
+
+    fn reseed(&mut self, _seed: u64) {
+        // Seeding is fixed at Hello time for remote streams.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::server::EnvServer;
+
+    #[test]
+    fn connect_step_episode_cycle() {
+        let server = EnvServer::start("127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let mut env =
+            RemoteEnv::connect(&addr, "catch", 5, &WrapperCfg::default()).unwrap();
+        assert_eq!(env.spec().channels, 1);
+        assert_eq!(env.spec().num_actions, 3);
+
+        let mut obs = vec![0.0; env.spec().obs_len()];
+        env.reset(&mut obs);
+        assert_eq!(obs.iter().filter(|&&v| v == 1.0).count(), 2);
+
+        // play a full episode
+        let mut steps = 0;
+        loop {
+            steps += 1;
+            let st = env.step(1, &mut obs);
+            if st.done {
+                assert!(st.reward == 1.0 || st.reward == -1.0);
+                assert_eq!(env.last_episode_step, 9);
+                break;
+            }
+            assert!(steps < 20);
+        }
+        // post-done reset is local (cached frame), and play continues
+        env.reset(&mut obs);
+        let st = env.step(1, &mut obs);
+        assert!(!st.done);
+    }
+
+    #[test]
+    fn remote_matches_local_trajectory() {
+        // Same env, same seed, same action sequence -> identical
+        // observations/rewards through the wire.
+        let server = EnvServer::start("127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let cfg = WrapperCfg::default();
+        let mut remote = RemoteEnv::connect(&addr, "minatar/breakout", 11, &cfg).unwrap();
+        let mut local = crate::env::make_wrapped("minatar/breakout", 11, &cfg).unwrap();
+
+        let len = local.spec().obs_len();
+        let (mut ro, mut lo) = (vec![0.0; len], vec![0.0; len]);
+        remote.reset(&mut ro);
+        local.reset(&mut lo);
+        assert_eq!(ro, lo);
+        for i in 0..200 {
+            let a = i % 6;
+            let rs = remote.step(a, &mut ro);
+            let ls = local.step(a, &mut lo);
+            assert_eq!(rs.reward, ls.reward, "step {i}");
+            assert_eq!(rs.done, ls.done, "step {i}");
+            if ls.done {
+                remote.reset(&mut ro);
+                local.reset(&mut lo);
+            }
+            assert_eq!(ro, lo, "step {i}");
+        }
+    }
+
+    #[test]
+    fn wrappers_applied_server_side() {
+        let server = EnvServer::start("127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let cfg = WrapperCfg {
+            frame_stack: 4,
+            ..WrapperCfg::default()
+        };
+        let env = RemoteEnv::connect(&addr, "catch", 0, &cfg).unwrap();
+        assert_eq!(env.spec().channels, 4, "frame stack on the server");
+    }
+
+    #[test]
+    fn unknown_env_reports_error() {
+        let server = EnvServer::start("127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let err = match RemoteEnv::connect(&addr, "atari/pong", 0, &WrapperCfg::default()) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("connect should fail for unknown env"),
+        };
+        assert!(err.contains("unknown env"), "{err}");
+    }
+
+    #[test]
+    fn many_parallel_streams() {
+        let server = EnvServer::start("127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut env =
+                        RemoteEnv::connect(&addr, "catch", i, &WrapperCfg::default()).unwrap();
+                    let mut obs = vec![0.0; env.spec().obs_len()];
+                    env.reset(&mut obs);
+                    let mut n = 0;
+                    for k in 0..100 {
+                        let st = env.step(k % 3, &mut obs);
+                        n += 1;
+                        if st.done {
+                            env.reset(&mut obs);
+                        }
+                    }
+                    n
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 800);
+        assert_eq!(
+            server
+                .steps_served
+                .load(std::sync::atomic::Ordering::Relaxed),
+            800
+        );
+        assert_eq!(
+            server.connections.load(std::sync::atomic::Ordering::Relaxed),
+            8
+        );
+    }
+
+    #[test]
+    fn server_shutdown_is_clean() {
+        let mut server = EnvServer::start("127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let _env = RemoteEnv::connect(&addr, "catch", 0, &WrapperCfg::default()).unwrap();
+        server.shutdown(); // must not hang with a live stream
+    }
+}

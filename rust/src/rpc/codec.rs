@@ -1,0 +1,381 @@
+//! Wire codec for the environment-serving protocol (gRPC substitute,
+//! DESIGN.md §Substitutions #2).
+//!
+//! Length-prefixed binary frames over any `Read`/`Write` pair:
+//!
+//! ```text
+//! frame := u32le payload_len ++ payload
+//! payload := tag u8 ++ body
+//! ```
+//!
+//! Messages mirror the paper's bidirectional stream: the client opens
+//! with `Hello` (which env to serve, seed, wrapper config), the server
+//! answers `Spec`, then alternates `Observation` ← / `Action` → until
+//! either side sends `Bye`.  All integers little-endian; observations
+//! are raw f32 planes.
+
+use std::io::{Read, Write};
+
+use crate::env::wrappers::WrapperCfg;
+
+pub const MAX_FRAME: usize = 16 << 20; // 16 MiB safety cap
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Client → server: start serving an environment on this stream.
+    Hello {
+        env: String,
+        seed: u64,
+        wrappers: WrapperCfg,
+    },
+    /// Server → client: the (wrapped) environment's interface.
+    Spec {
+        channels: u32,
+        height: u32,
+        width: u32,
+        num_actions: u32,
+    },
+    /// Server → client: one environment frame.  When `done` is true the
+    /// observation already belongs to the *next* episode (the server
+    /// auto-resets), and `episode_return`/`episode_step` describe the
+    /// episode that just finished — the IMPALA boundary convention.
+    Observation {
+        reward: f32,
+        done: bool,
+        episode_step: u32,
+        episode_return: f32,
+        obs: Vec<f32>,
+    },
+    /// Client → server: the action for the last observation.
+    Action { action: u32 },
+    /// Either direction: orderly stream shutdown.
+    Bye,
+    /// Server → client: fatal serving error (unknown env etc).
+    Error { message: String },
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_SPEC: u8 = 2;
+const TAG_OBS: u8 = 3;
+const TAG_ACTION: u8 = 4;
+const TAG_BYE: u8 = 5;
+const TAG_ERROR: u8 = 6;
+
+// -- primitive writers -------------------------------------------------------
+
+struct Buf(Vec<u8>);
+
+impl Buf {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.0.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn need(&self, n: usize) -> anyhow::Result<()> {
+        if self.i + n > self.b.len() {
+            anyhow::bail!("truncated frame at byte {}", self.i);
+        }
+        Ok(())
+    }
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        self.need(1)?;
+        let v = self.b[self.i];
+        self.i += 1;
+        Ok(v)
+    }
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        self.need(4)?;
+        let v = u32::from_le_bytes(self.b[self.i..self.i + 4].try_into().unwrap());
+        self.i += 4;
+        Ok(v)
+    }
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        self.need(8)?;
+        let v = u64::from_le_bytes(self.b[self.i..self.i + 8].try_into().unwrap());
+        self.i += 8;
+        Ok(v)
+    }
+    fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn str(&mut self) -> anyhow::Result<String> {
+        let n = self.u32()? as usize;
+        self.need(n)?;
+        let s = std::str::from_utf8(&self.b[self.i..self.i + n])?.to_string();
+        self.i += n;
+        Ok(s)
+    }
+    fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        self.need(n * 4)?;
+        let mut v = Vec::with_capacity(n);
+        for k in 0..n {
+            let off = self.i + 4 * k;
+            v.push(f32::from_le_bytes(self.b[off..off + 4].try_into().unwrap()));
+        }
+        self.i += 4 * n;
+        Ok(v)
+    }
+}
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Buf(Vec::with_capacity(64));
+        match self {
+            Msg::Hello { env, seed, wrappers } => {
+                b.u8(TAG_HELLO);
+                b.str(env);
+                b.u64(*seed);
+                b.u32(wrappers.action_repeat as u32);
+                b.u32(wrappers.frame_stack as u32);
+                b.f32(wrappers.reward_clip);
+                b.f32(wrappers.sticky_action_p);
+                b.u32(wrappers.time_limit);
+                b.u32(wrappers.noop_max);
+                b.u8(wrappers.episodic_life as u8);
+                b.u64(wrappers.env_cost_us);
+            }
+            Msg::Spec {
+                channels,
+                height,
+                width,
+                num_actions,
+            } => {
+                b.u8(TAG_SPEC);
+                b.u32(*channels);
+                b.u32(*height);
+                b.u32(*width);
+                b.u32(*num_actions);
+            }
+            Msg::Observation {
+                reward,
+                done,
+                episode_step,
+                episode_return,
+                obs,
+            } => {
+                b.u8(TAG_OBS);
+                b.f32(*reward);
+                b.u8(*done as u8);
+                b.u32(*episode_step);
+                b.f32(*episode_return);
+                b.f32s(obs);
+            }
+            Msg::Action { action } => {
+                b.u8(TAG_ACTION);
+                b.u32(*action);
+            }
+            Msg::Bye => b.u8(TAG_BYE),
+            Msg::Error { message } => {
+                b.u8(TAG_ERROR);
+                b.str(message);
+            }
+        }
+        b.0
+    }
+
+    pub fn decode(payload: &[u8]) -> anyhow::Result<Msg> {
+        let mut c = Cursor { b: payload, i: 0 };
+        let msg = match c.u8()? {
+            TAG_HELLO => {
+                let env = c.str()?;
+                let seed = c.u64()?;
+                let wrappers = WrapperCfg {
+                    action_repeat: c.u32()? as usize,
+                    frame_stack: c.u32()? as usize,
+                    reward_clip: c.f32()?,
+                    sticky_action_p: c.f32()?,
+                    time_limit: c.u32()?,
+                    noop_max: c.u32()?,
+                    episodic_life: c.u8()? != 0,
+                    env_cost_us: c.u64()?,
+                };
+                Msg::Hello { env, seed, wrappers }
+            }
+            TAG_SPEC => Msg::Spec {
+                channels: c.u32()?,
+                height: c.u32()?,
+                width: c.u32()?,
+                num_actions: c.u32()?,
+            },
+            TAG_OBS => Msg::Observation {
+                reward: c.f32()?,
+                done: c.u8()? != 0,
+                episode_step: c.u32()?,
+                episode_return: c.f32()?,
+                obs: c.f32s()?,
+            },
+            TAG_ACTION => Msg::Action { action: c.u32()? },
+            TAG_BYE => Msg::Bye,
+            TAG_ERROR => Msg::Error { message: c.str()? },
+            t => anyhow::bail!("unknown message tag {t}"),
+        };
+        if c.i != payload.len() {
+            anyhow::bail!("{} trailing bytes in frame", payload.len() - c.i);
+        }
+        Ok(msg)
+    }
+}
+
+/// Write one framed message.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> anyhow::Result<()> {
+    let payload = msg.encode();
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one framed message.
+pub fn read_msg<R: Read>(r: &mut R) -> anyhow::Result<Msg> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        anyhow::bail!("frame of {len} bytes exceeds cap");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Msg::decode(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(m: &Msg) {
+        let enc = m.encode();
+        let dec = Msg::decode(&enc).unwrap();
+        assert_eq!(&dec, m);
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        roundtrip(&Msg::Hello {
+            env: "minatar/breakout".into(),
+            seed: 0xDEADBEEF,
+            wrappers: WrapperCfg {
+                action_repeat: 4,
+                frame_stack: 2,
+                reward_clip: 1.0,
+                sticky_action_p: 0.25,
+                time_limit: 1000,
+                noop_max: 30,
+                episodic_life: true,
+                env_cost_us: 500,
+            },
+        });
+        roundtrip(&Msg::Spec {
+            channels: 4,
+            height: 10,
+            width: 10,
+            num_actions: 6,
+        });
+        roundtrip(&Msg::Observation {
+            reward: -1.5,
+            done: true,
+            episode_step: 77,
+            episode_return: 13.0,
+            obs: vec![0.0, 1.0, 0.5, -2.25],
+        });
+        roundtrip(&Msg::Action { action: 3 });
+        roundtrip(&Msg::Bye);
+        roundtrip(&Msg::Error {
+            message: "unknown env".into(),
+        });
+    }
+
+    #[test]
+    fn framed_io_roundtrip() {
+        let msgs = vec![
+            Msg::Action { action: 1 },
+            Msg::Bye,
+            Msg::Observation {
+                reward: 1.0,
+                done: false,
+                episode_step: 3,
+                episode_return: 2.0,
+                obs: vec![0.5; 100],
+            },
+        ];
+        let mut buf = Vec::new();
+        for m in &msgs {
+            write_msg(&mut buf, m).unwrap();
+        }
+        let mut r = &buf[..];
+        for m in &msgs {
+            assert_eq!(&read_msg(&mut r).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_trailing() {
+        let enc = Msg::Action { action: 9 }.encode();
+        assert!(Msg::decode(&enc[..enc.len() - 1]).is_err());
+        let mut extra = enc.clone();
+        extra.push(0);
+        assert!(Msg::decode(&extra).is_err());
+        assert!(Msg::decode(&[99]).is_err());
+    }
+
+    #[test]
+    fn read_rejects_oversized_frame() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_msg(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn fuzz_decode_never_panics() {
+        // property: arbitrary bytes either decode or error, never panic
+        let mut rng = Rng::new(42);
+        for _ in 0..2000 {
+            let n = rng.below(200);
+            let bytes: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+            let _ = Msg::decode(&bytes);
+        }
+    }
+
+    #[test]
+    fn fuzz_roundtrip_observations() {
+        // property: random observation payloads round-trip exactly
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let n = rng.below(512);
+            let obs: Vec<f32> = (0..n).map(|_| rng.next_f32() * 10.0 - 5.0).collect();
+            roundtrip(&Msg::Observation {
+                reward: rng.next_f32(),
+                done: rng.chance(0.5),
+                episode_step: rng.next_u64() as u32,
+                episode_return: rng.next_f32() * 100.0,
+                obs,
+            });
+        }
+    }
+}

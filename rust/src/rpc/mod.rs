@@ -1,0 +1,13 @@
+//! RPC layer: environment serving over TCP (the gRPC substitute).
+//!
+//! * [`codec`] — length-prefixed binary frames and message types;
+//! * [`server`] — the environment-server process core (paper §5.2);
+//! * [`client`] — `RemoteEnv`, an `Environment` backed by a stream.
+
+pub mod client;
+pub mod codec;
+pub mod server;
+
+pub use client::RemoteEnv;
+pub use codec::Msg;
+pub use server::EnvServer;

@@ -1,0 +1,225 @@
+//! Environment server (paper §5.2).
+//!
+//! "Environment servers, once running, wait for incoming [..]
+//! connections and when a client learner process connects, create a
+//! new copy of the environment to serve to the client while the
+//! bidirectional streaming connection lasts."
+//!
+//! One OS thread per stream (the Rust analog of the paper's advice to
+//! limit GIL-contended connections per Python server — here a thread
+//! per env is cheap and scales to hundreds).  The server auto-resets
+//! finished episodes and reports episode stats at the boundary, so the
+//! client never issues an explicit reset round-trip.
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::env;
+use crate::rpc::codec::{read_msg, write_msg, Msg};
+
+/// Handle to a running environment server.
+pub struct EnvServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    /// Total env steps served (all streams).
+    pub steps_served: Arc<AtomicU64>,
+    /// Streams accepted.
+    pub connections: Arc<AtomicU64>,
+}
+
+impl EnvServer {
+    /// Bind and start serving on `addr` (use port 0 for an ephemeral
+    /// port; the bound address is in `self.addr`).
+    pub fn start(addr: &str) -> anyhow::Result<EnvServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let steps = Arc::new(AtomicU64::new(0));
+        let conns = Arc::new(AtomicU64::new(0));
+
+        let stop2 = stop.clone();
+        let steps2 = steps.clone();
+        let conns2 = conns.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("env-server-accept".into())
+            .spawn(move || {
+                let mut workers: Vec<JoinHandle<()>> = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            conns2.fetch_add(1, Ordering::Relaxed);
+                            let stop3 = stop2.clone();
+                            let steps3 = steps2.clone();
+                            workers.push(
+                                std::thread::Builder::new()
+                                    .name("env-server-stream".into())
+                                    .spawn(move || {
+                                        let _ = serve_stream(stream, &stop3, &steps3);
+                                    })
+                                    .expect("spawn stream thread"),
+                            );
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                    // reap finished workers occasionally
+                    workers.retain(|h| !h.is_finished());
+                }
+                for h in workers {
+                    let _ = h.join();
+                }
+            })?;
+
+        Ok(EnvServer {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+            steps_served: steps,
+            connections: conns,
+        })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EnvServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Serve one bidirectional stream: Hello → Spec → (Obs ← / Action →)*.
+fn serve_stream(
+    stream: TcpStream,
+    stop: &AtomicBool,
+    steps: &AtomicU64,
+) -> anyhow::Result<()> {
+    stream.set_nodelay(true)?;
+    // Read timeout so server threads notice shutdown.
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+
+    // Handshake.
+    let hello = loop {
+        match read_msg(&mut reader) {
+            Ok(m) => break m,
+            Err(e) if is_timeout(&e) => {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    };
+    let (env_name, seed, wrappers) = match hello {
+        Msg::Hello { env, seed, wrappers } => (env, seed, wrappers),
+        other => {
+            let _ = write_msg(&mut writer, &Msg::Error { message: format!("expected Hello, got {other:?}") });
+            anyhow::bail!("bad handshake");
+        }
+    };
+
+    let mut env = match env::make_wrapped(&env_name, seed, &wrappers) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = write_msg(&mut writer, &Msg::Error { message: e.to_string() });
+            return Err(e);
+        }
+    };
+    let spec = env.spec().clone();
+    write_msg(
+        &mut writer,
+        &Msg::Spec {
+            channels: spec.channels as u32,
+            height: spec.height as u32,
+            width: spec.width as u32,
+            num_actions: spec.num_actions as u32,
+        },
+    )?;
+
+    // Serve loop with auto-reset.
+    let mut obs = vec![0.0f32; spec.obs_len()];
+    env.reset(&mut obs);
+    let mut episode_step: u32 = 0;
+    let mut episode_return: f32 = 0.0;
+    write_msg(
+        &mut writer,
+        &Msg::Observation {
+            reward: 0.0,
+            done: false,
+            episode_step,
+            episode_return,
+            obs: obs.clone(),
+        },
+    )?;
+
+    loop {
+        let msg = loop {
+            match read_msg(&mut reader) {
+                Ok(m) => break m,
+                Err(e) if is_timeout(&e) => {
+                    if stop.load(Ordering::Relaxed) {
+                        let _ = write_msg(&mut writer, &Msg::Bye);
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        let action = match msg {
+            Msg::Action { action } => action as usize,
+            Msg::Bye => return Ok(()),
+            other => anyhow::bail!("expected Action, got {other:?}"),
+        };
+        if action >= spec.num_actions {
+            let _ = write_msg(&mut writer, &Msg::Error { message: format!("action {action} out of range (< {})", spec.num_actions) });
+            anyhow::bail!("bad action");
+        }
+
+        let st = env.step(action, &mut obs);
+        steps.fetch_add(1, Ordering::Relaxed);
+        episode_step += 1;
+        episode_return += st.reward;
+        let (fin_step, fin_return) = (episode_step, episode_return);
+        if st.done {
+            env.reset(&mut obs); // obs now belongs to the next episode
+            episode_step = 0;
+            episode_return = 0.0;
+        }
+        write_msg(
+            &mut writer,
+            &Msg::Observation {
+                reward: st.reward,
+                done: st.done,
+                episode_step: fin_step,
+                episode_return: fin_return,
+                obs: obs.clone(),
+            },
+        )?;
+    }
+}
+
+fn is_timeout(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<std::io::Error>()
+        .map(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            )
+        })
+        .unwrap_or(false)
+}

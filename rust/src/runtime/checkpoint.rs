@@ -1,0 +1,214 @@
+//! Checkpointing: parameter snapshots to/from disk.
+//!
+//! TorchBeast checkpoints `model.state_dict()` via torch.save; the
+//! analog here is the manifest-ordered leaf list in a simple binary
+//! format (no serde offline, and the format doubles as the
+//! cross-language contract — it is trivially readable from Python):
+//!
+//! ```text
+//! magic  "TBCK1\n"
+//! u32le  leaf count
+//! per leaf:
+//!   u32le name_len ++ name utf8
+//!   u32le rank ++ rank * u64le dims
+//!   u32le elem_count ++ elem_count * f32le data
+//! ```
+//!
+//! `save`/`load` validate against the manifest (names, shapes, order),
+//! so loading a checkpoint into a mismatched artifact fails loudly.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+use super::ParamVecs;
+
+const MAGIC: &[u8; 6] = b"TBCK1\n";
+
+/// Write a parameter snapshot (manifest leaf order).
+pub fn save(path: &Path, manifest: &Manifest, params: &ParamVecs) -> Result<()> {
+    anyhow::ensure!(
+        params.len() == manifest.params.len(),
+        "snapshot has {} leaves, manifest {}",
+        params.len(),
+        manifest.params.len()
+    );
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(params.len() as u32).to_le_bytes())?;
+    for (leaf, data) in manifest.params.iter().zip(params) {
+        anyhow::ensure!(
+            data.len() == leaf.elems(),
+            "leaf {} has {} elems, expected {}",
+            leaf.name,
+            data.len(),
+            leaf.elems()
+        );
+        w.write_all(&(leaf.name.len() as u32).to_le_bytes())?;
+        w.write_all(leaf.name.as_bytes())?;
+        w.write_all(&(leaf.shape.len() as u32).to_le_bytes())?;
+        for &d in &leaf.shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        w.write_all(&(data.len() as u32).to_le_bytes())?;
+        for &x in data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Load a snapshot and validate it against the manifest.
+pub fn load(path: &Path, manifest: &Manifest) -> Result<ParamVecs> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 6];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a TBCK1 checkpoint: {}", path.display());
+    let count = read_u32(&mut r)? as usize;
+    anyhow::ensure!(
+        count == manifest.params.len(),
+        "checkpoint has {count} leaves, manifest {}",
+        manifest.params.len()
+    );
+    let mut out = Vec::with_capacity(count);
+    for leaf in &manifest.params {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        anyhow::ensure!(
+            name == leaf.name,
+            "leaf order mismatch: checkpoint {name:?}, manifest {:?}",
+            leaf.name
+        );
+        let rank = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u64(&mut r)? as usize);
+        }
+        anyhow::ensure!(
+            shape == leaf.shape,
+            "leaf {name}: checkpoint shape {shape:?}, manifest {:?}",
+            leaf.shape
+        );
+        let n = read_u32(&mut r)? as usize;
+        anyhow::ensure!(n == leaf.elems(), "leaf {name}: bad element count");
+        let mut data = vec![0.0f32; n];
+        let mut buf = vec![0u8; n * 4];
+        r.read_exact(&mut buf)?;
+        for (i, chunk) in buf.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        out.push(data);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{DType, LeafSpec};
+    use crate::util::json::Json;
+    use std::path::PathBuf;
+
+    fn tiny_manifest() -> Manifest {
+        Manifest {
+            dir: PathBuf::new(),
+            env: "catch".into(),
+            model: "minatar".into(),
+            obs_shape: [1, 10, 5],
+            num_actions: 3,
+            unroll_length: 4,
+            batch_size: 2,
+            inference_batch: 4,
+            inference_sizes: vec![4],
+            param_count: 7,
+            params: vec![
+                LeafSpec {
+                    name: "conv/b".into(),
+                    shape: vec![3],
+                    dtype: DType::F32,
+                },
+                LeafSpec {
+                    name: "conv/w".into(),
+                    shape: vec![2, 2],
+                    dtype: DType::F32,
+                },
+            ],
+            opt_state: vec![],
+            stats_names: vec![],
+            hyperparams: Json::Obj(vec![]),
+            hlo_sha256: String::new(),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = tiny_manifest();
+        let params = vec![vec![1.0, -2.0, 3.5], vec![0.0, 0.25, -0.5, 9.0]];
+        let dir = std::env::temp_dir().join("tb_ckpt_test");
+        let path = dir.join("a.ckpt");
+        save(&path, &m, &params).unwrap();
+        let loaded = load(&path, &m).unwrap();
+        assert_eq!(loaded, params);
+    }
+
+    #[test]
+    fn rejects_wrong_manifest() {
+        let m = tiny_manifest();
+        let params = vec![vec![0.0; 3], vec![0.0; 4]];
+        let dir = std::env::temp_dir().join("tb_ckpt_test2");
+        let path = dir.join("b.ckpt");
+        save(&path, &m, &params).unwrap();
+
+        let mut other = tiny_manifest();
+        other.params[1].shape = vec![4]; // same elems, different shape
+        assert!(load(&path, &other).is_err());
+
+        let mut renamed = tiny_manifest();
+        renamed.params[0].name = "conv/bias".into();
+        assert!(load(&path, &renamed).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("tb_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.ckpt");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(load(&path, &tiny_manifest()).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_leaf_sizes_on_save() {
+        let m = tiny_manifest();
+        let bad = vec![vec![0.0; 3], vec![0.0; 5]];
+        let dir = std::env::temp_dir().join("tb_ckpt_test4");
+        assert!(save(&dir.join("c.ckpt"), &m, &bad).is_err());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load(Path::new("/nonexistent/x.ckpt"), &tiny_manifest()).is_err());
+    }
+}

@@ -1,0 +1,89 @@
+//! HLO-text module loading and execution on the PJRT CPU client.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! (text, not serialized proto — jax >= 0.5 emits 64-bit instruction ids
+//! the crate's XLA rejects; the text parser reassigns them) →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! All exported modules return a root tuple (`return_tuple=True` at
+//! lowering), which PJRT hands back as a single tuple literal;
+//! [`Module::run`] decomposes it into per-output literals.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+/// One compiled HLO module.
+pub struct Module {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative execution statistics (perf pass bookkeeping).
+    pub calls: std::cell::Cell<u64>,
+    pub total_time: std::cell::Cell<Duration>,
+}
+
+impl Module {
+    /// Load an HLO text file and compile it on `client`.
+    pub fn load(client: &xla::PjRtClient, name: &str, path: &Path) -> Result<Module> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        eprintln!(
+            "[runtime] compiled {name} from {} in {:?}",
+            path.display(),
+            t0.elapsed()
+        );
+        Ok(Module {
+            name: name.to_string(),
+            exe,
+            calls: std::cell::Cell::new(0),
+            total_time: std::cell::Cell::new(Duration::ZERO),
+        })
+    }
+
+    /// Execute with device-buffer inputs; returns the decomposed tuple.
+    ///
+    /// IMPORTANT: this is `execute_b`, NOT the crate's Literal-based
+    /// `execute` — that path creates an input device buffer per
+    /// argument and `release()`s it without ever freeing (xla_rs.cc),
+    /// leaking ~every input on every call (measured ~210 KB/inference,
+    /// OOM after minutes of training; EXPERIMENTS.md §Perf #5).
+    /// `execute_b` borrows caller-owned buffers, which Drop correctly.
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow::anyhow!("{}: empty execution result", self.name))?;
+        let lit = first.to_literal_sync()?;
+        self.calls.set(self.calls.get() + 1);
+        self.total_time.set(self.total_time.get() + t0.elapsed());
+        // Root tuple -> per-output literals. decompose_tuple returns an
+        // empty vec for non-tuple literals; pass those through whole.
+        let mut lit = lit;
+        let parts = lit.decompose_tuple()?;
+        if parts.is_empty() {
+            Ok(vec![lit])
+        } else {
+            Ok(parts)
+        }
+    }
+
+    /// Mean wall time per call (perf reporting).
+    pub fn mean_call_time(&self) -> Duration {
+        let calls = self.calls.get().max(1);
+        self.total_time.get() / calls as u32
+    }
+}

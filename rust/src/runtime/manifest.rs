@@ -1,0 +1,296 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! The manifest records the *ordered* parameter and optimizer-state
+//! leaves (order = PJRT argument order — load-bearing), the baked
+//! shapes (T, B, inference batch, obs shape, action count), the
+//! hyperparameters compiled into the learner, and a digest of the HLO
+//! files.  `Manifest::validate_env` cross-checks the manifest against
+//! the Rust env registry so Python/Rust spec drift fails fast at load.
+
+use std::path::{Path, PathBuf};
+
+use crate::env;
+use crate::util::json::{parse_file, Json};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> anyhow::Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => anyhow::bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// One pytree leaf: name ("conv/w"), shape, dtype.
+#[derive(Debug, Clone)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl LeafSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<LeafSpec> {
+        Ok(LeafSpec {
+            name: j
+                .expect("name")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("leaf name not a string"))?
+                .to_string(),
+            shape: j
+                .expect("shape")?
+                .usize_list()
+                .ok_or_else(|| anyhow::anyhow!("leaf shape not a list"))?,
+            dtype: DType::parse(
+                j.expect("dtype")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("leaf dtype not a string"))?,
+            )?,
+        })
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub env: String,
+    pub model: String,
+    pub obs_shape: [usize; 3],
+    pub num_actions: usize,
+    pub unroll_length: usize,
+    pub batch_size: usize,
+    pub inference_batch: usize,
+    /// Compiled inference batch buckets (ascending; last == inference_batch).
+    /// Older manifests without the field fall back to `[inference_batch]`.
+    pub inference_sizes: Vec<usize>,
+    pub param_count: usize,
+    pub params: Vec<LeafSpec>,
+    pub opt_state: Vec<LeafSpec>,
+    pub stats_names: Vec<String>,
+    pub hyperparams: Json,
+    pub hlo_sha256: String,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = parse_file(&dir.join("manifest.json"))?;
+        let leaf_list = |key: &str| -> anyhow::Result<Vec<LeafSpec>> {
+            j.expect(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{key} not a list"))?
+                .iter()
+                .map(LeafSpec::from_json)
+                .collect()
+        };
+        let obs: Vec<usize> = j
+            .expect("obs_shape")?
+            .usize_list()
+            .ok_or_else(|| anyhow::anyhow!("obs_shape not a list"))?;
+        anyhow::ensure!(obs.len() == 3, "obs_shape must be rank 3");
+        let str_field = |key: &str| -> anyhow::Result<String> {
+            Ok(j.expect(key)?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("{key} not a string"))?
+                .to_string())
+        };
+        let num_field = |key: &str| -> anyhow::Result<usize> {
+            j.expect(key)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("{key} not a number"))
+        };
+        let inference_batch = num_field("inference_batch")?;
+        let inference_sizes = j
+            .get("inference_sizes")
+            .and_then(|v| v.usize_list())
+            .unwrap_or_else(|| vec![inference_batch]);
+        anyhow::ensure!(
+            inference_sizes.last() == Some(&inference_batch),
+            "inference_sizes must end at inference_batch"
+        );
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            env: str_field("env")?,
+            model: str_field("model")?,
+            obs_shape: [obs[0], obs[1], obs[2]],
+            num_actions: num_field("num_actions")?,
+            unroll_length: num_field("unroll_length")?,
+            batch_size: num_field("batch_size")?,
+            inference_batch,
+            inference_sizes,
+            param_count: num_field("param_count")?,
+            params: leaf_list("params")?,
+            opt_state: leaf_list("opt_state")?,
+            stats_names: j
+                .expect("stats_names")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("stats_names not a list"))?
+                .iter()
+                .map(|s| s.as_str().unwrap_or("?").to_string())
+                .collect(),
+            hyperparams: j.expect("hyperparams")?.clone(),
+            hlo_sha256: str_field("hlo_sha256")?,
+        };
+        // consistency: param_count equals the sum of leaf sizes
+        let total: usize = m.params.iter().map(|l| l.elems()).sum();
+        anyhow::ensure!(
+            total == m.param_count,
+            "param_count {} != sum of leaves {}",
+            m.param_count,
+            total
+        );
+        Ok(m)
+    }
+
+    pub fn obs_len(&self) -> usize {
+        self.obs_shape.iter().product()
+    }
+
+    /// HLO file path for a module name ("init", "inference", ...).
+    pub fn hlo_path(&self, module: &str) -> PathBuf {
+        self.dir.join(format!("{module}.hlo.txt"))
+    }
+
+    /// Hyperparameter lookup with default.
+    pub fn hp_f64(&self, key: &str, default: f64) -> f64 {
+        self.hyperparams
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .unwrap_or(default)
+    }
+
+    /// Cross-check against the Rust env registry (spec drift guard).
+    pub fn validate_env(&self) -> anyhow::Result<()> {
+        let spec = env::spec_of(&self.env)?;
+        anyhow::ensure!(
+            [spec.channels, spec.height, spec.width] == self.obs_shape,
+            "manifest obs_shape {:?} != rust env {:?} for {}",
+            self.obs_shape,
+            [spec.channels, spec.height, spec.width],
+            self.env,
+        );
+        anyhow::ensure!(
+            spec.num_actions == self.num_actions,
+            "manifest num_actions {} != rust env {} for {}",
+            self.num_actions,
+            spec.num_actions,
+            self.env,
+        );
+        Ok(())
+    }
+
+    /// Total f32 elements across `leaves`.
+    pub fn leaf_elems(leaves: &[LeafSpec]) -> usize {
+        leaves.iter().map(|l| l.elems()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn sample(dir: &Path) -> Manifest {
+        write_manifest(
+            dir,
+            r#"{
+              "env": "catch", "model": "minatar",
+              "obs_shape": [1, 10, 5], "num_actions": 3,
+              "unroll_length": 4, "batch_size": 2, "inference_batch": 4,
+              "param_count": 8,
+              "params": [
+                {"name": "conv/b", "shape": [2], "dtype": "float32"},
+                {"name": "conv/w", "shape": [2, 3], "dtype": "float32"}
+              ],
+              "opt_state": [
+                {"name": "step", "shape": [], "dtype": "float32"}
+              ],
+              "stats_names": ["total_loss"],
+              "hyperparams": {"learning_rate": 6e-4},
+              "hlo_sha256": "ab"
+            }"#,
+        );
+        Manifest::load(dir).unwrap()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let dir = std::env::temp_dir().join("tb_manifest_test1");
+        let m = sample(&dir);
+        assert_eq!(m.env, "catch");
+        assert_eq!(m.obs_shape, [1, 10, 5]);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[1].elems(), 6);
+        assert_eq!(m.obs_len(), 50);
+        assert!((m.hp_f64("learning_rate", 0.0) - 6e-4).abs() < 1e-12);
+        assert_eq!(m.hp_f64("missing", 7.0), 7.0);
+        m.validate_env().unwrap();
+        assert!(m.hlo_path("learner").ends_with("learner.hlo.txt"));
+        // scalar leaves have one element
+        assert_eq!(m.opt_state[0].elems(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_param_count() {
+        let dir = std::env::temp_dir().join("tb_manifest_test2");
+        write_manifest(
+            &dir,
+            r#"{"env":"catch","model":"m","obs_shape":[1,10,5],"num_actions":3,
+              "unroll_length":4,"batch_size":2,"inference_batch":4,
+              "param_count": 99,
+              "params": [{"name":"w","shape":[2],"dtype":"float32"}],
+              "opt_state": [], "stats_names": [], "hyperparams": {},
+              "hlo_sha256": "x"}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn env_mismatch_detected() {
+        let dir = std::env::temp_dir().join("tb_manifest_test3");
+        write_manifest(
+            &dir,
+            r#"{"env":"catch","model":"m","obs_shape":[4,10,10],"num_actions":3,
+              "unroll_length":4,"batch_size":2,"inference_batch":4,
+              "param_count": 2,
+              "params": [{"name":"w","shape":[2],"dtype":"float32"}],
+              "opt_state": [], "stats_names": [], "hyperparams": {},
+              "hlo_sha256": "x"}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.validate_env().is_err(), "obs_shape drift must fail");
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent/dir")).is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("float64").is_err());
+    }
+}

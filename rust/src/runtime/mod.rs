@@ -1,0 +1,349 @@
+//! Runtime: load + execute the AOT artifacts from the Rust hot path.
+//!
+//! Two engines wrap the compiled modules with typed call signatures:
+//!
+//! * [`InferenceEngine`] — `init.hlo` + bucketed `inference_*.hlo`;
+//!   owned by the inference thread.  Parameters live on the device and
+//!   are re-uploaded only when the learner publishes a new version.
+//! * [`LearnerEngine`] — `init.hlo` + `learner.hlo`; owned by the
+//!   learner thread.  Params and optimizer state live on the device
+//!   between steps.
+//!
+//! All execution goes through [`Module::run_buffers`] (`execute_b`
+//! with caller-owned `PjRtBuffer`s) — the crate's Literal-based
+//! `execute` leaks its input buffers (see executable.rs and
+//! EXPERIMENTS.md §Perf #5).
+//!
+//! `xla` types are not `Send`, so each engine owns its *own*
+//! `PjRtClient`; parameters cross threads as plain `Vec<Vec<f32>>`
+//! snapshots (tiny: the paper-scale nets are < 1 MB).
+
+pub mod checkpoint;
+pub mod executable;
+pub mod manifest;
+pub mod tensor;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+pub use executable::Module;
+pub use manifest::{LeafSpec, Manifest};
+
+use tensor::{literal_to_f32s, upload_f32, upload_i32, upload_scalar_i32};
+
+/// Host-side parameter snapshot (one Vec per leaf, manifest order).
+pub type ParamVecs = Vec<Vec<f32>>;
+
+/// Loss statistics emitted by the learner artifact (manifest
+/// `stats_names` order: total, pg, baseline, entropy, mean_rho, gnorm).
+#[derive(Debug, Clone)]
+pub struct LearnerStats {
+    pub values: Vec<f32>,
+}
+
+impl LearnerStats {
+    pub fn total_loss(&self) -> f32 {
+        self.values[0]
+    }
+    pub fn pg_loss(&self) -> f32 {
+        self.values[1]
+    }
+    pub fn baseline_loss(&self) -> f32 {
+        self.values[2]
+    }
+    pub fn entropy_loss(&self) -> f32 {
+        self.values[3]
+    }
+    pub fn mean_rho(&self) -> f32 {
+        self.values[4]
+    }
+    pub fn grad_norm(&self) -> f32 {
+        self.values[5]
+    }
+}
+
+fn buffers_from_vecs(
+    client: &xla::PjRtClient,
+    vecs: &[Vec<f32>],
+    leaves: &[LeafSpec],
+) -> Result<Vec<xla::PjRtBuffer>> {
+    anyhow::ensure!(vecs.len() == leaves.len(), "leaf count mismatch");
+    vecs.iter()
+        .zip(leaves)
+        .map(|(v, l)| upload_f32(client, v, &l.shape))
+        .collect()
+}
+
+fn vecs_from_literals(lits: &[xla::Literal]) -> Result<ParamVecs> {
+    lits.iter().map(literal_to_f32s).collect()
+}
+
+// ---------------------------------------------------------------------------
+
+/// Inference-side runtime: batched policy evaluation.
+///
+/// Holds one compiled module per batch bucket (manifest
+/// `inference_sizes`); `infer(n)` runs the smallest bucket >= n,
+/// padding only up to that bucket (§Perf: at 8 actors against a
+/// Bi=16 artifact this halves the inference FLOPs).
+pub struct InferenceEngine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    init: Module,
+    /// (bucket_size, module), ascending.
+    inference: Vec<(usize, Module)>,
+    /// Cached parameters, device-resident (uploaded once per version).
+    params: Vec<xla::PjRtBuffer>,
+    pub param_version: u64,
+}
+
+impl InferenceEngine {
+    pub fn load(artifact_dir: &Path) -> Result<InferenceEngine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        manifest.validate_env()?;
+        let client = xla::PjRtClient::cpu()?;
+        let init = Module::load(&client, "init", &manifest.hlo_path("init"))?;
+        let mut inference = Vec::new();
+        for &n in &manifest.inference_sizes {
+            let name = format!("inference_{n}");
+            let path = manifest.hlo_path(&name);
+            // bucketless (old) bundles only ship inference.hlo.txt
+            let path = if path.exists() {
+                path
+            } else {
+                manifest.hlo_path("inference")
+            };
+            inference.push((n, Module::load(&client, &name, &path)?));
+        }
+        anyhow::ensure!(!inference.is_empty(), "no inference modules");
+        Ok(InferenceEngine {
+            manifest,
+            client,
+            init,
+            inference,
+            params: Vec::new(),
+            param_version: 0,
+        })
+    }
+
+    /// Initialize parameters from a seed (runs init.hlo).
+    pub fn init_params(&mut self, seed: i32) -> Result<ParamVecs> {
+        let seed_buf = upload_scalar_i32(&self.client, seed)?;
+        let outs = self.init.run_buffers(&[&seed_buf])?;
+        anyhow::ensure!(
+            outs.len() == self.manifest.params.len(),
+            "init returned {} leaves, manifest has {}",
+            outs.len(),
+            self.manifest.params.len()
+        );
+        let vecs = vecs_from_literals(&outs)?;
+        self.params = buffers_from_vecs(&self.client, &vecs, &self.manifest.params)?;
+        self.param_version = 1;
+        Ok(vecs)
+    }
+
+    /// Install a parameter snapshot published by the learner.
+    pub fn set_params(&mut self, vecs: &ParamVecs, version: u64) -> Result<()> {
+        self.params = buffers_from_vecs(&self.client, vecs, &self.manifest.params)?;
+        self.param_version = version;
+        Ok(())
+    }
+
+    /// Batched forward pass.  `obs` is `[n, C, H, W]` flattened with
+    /// `n <= inference_batch`; runs the smallest compiled bucket >= n,
+    /// zero-padding to that bucket and slicing the outputs back.
+    /// Returns (logits `[n * A]`, baselines `[n]`).
+    pub fn infer(&self, obs: &[f32], n: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let m = &self.manifest;
+        let bi = m.inference_batch;
+        let obs_len = m.obs_len();
+        anyhow::ensure!(n > 0 && n <= bi, "batch {n} out of range 1..={bi}");
+        anyhow::ensure!(obs.len() == n * obs_len, "obs buffer size mismatch");
+        anyhow::ensure!(!self.params.is_empty(), "params not initialized");
+
+        let (bucket, module) = self
+            .inference
+            .iter()
+            .map(|(s, m)| (*s, m))
+            .find(|(s, _)| *s >= n)
+            .unwrap_or_else(|| {
+                let (s, m) = self.inference.last().unwrap();
+                (*s, m)
+            });
+
+        let [c, h, w] = m.obs_shape;
+        let obs_buf = if n == bucket {
+            upload_f32(&self.client, obs, &[bucket, c, h, w])?
+        } else {
+            let mut padded = vec![0.0f32; bucket * obs_len];
+            padded[..n * obs_len].copy_from_slice(obs);
+            upload_f32(&self.client, &padded, &[bucket, c, h, w])?
+        };
+
+        // Device-resident params are reused call-to-call; only the
+        // observation batch is uploaded per call.
+        let mut refs: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        refs.push(&obs_buf);
+        let result = module.run_buffers(&refs)?;
+
+        let logits = literal_to_f32s(&result[0])?;
+        let baseline = literal_to_f32s(&result[1])?;
+        let a = m.num_actions;
+        Ok((logits[..n * a].to_vec(), baseline[..n].to_vec()))
+    }
+
+    /// Per-bucket (size, calls, mean wall time) — perf reporting.
+    pub fn bucket_stats(&self) -> Vec<(usize, u64, std::time::Duration)> {
+        self.inference
+            .iter()
+            .map(|(s, m)| (*s, m.calls.get(), m.mean_call_time()))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// A rollout batch in learner layout (time-major, matching the paper's
+/// learner-input dict).  Flat buffers, index `[t][b] = t * B + b`.
+#[derive(Debug, Clone)]
+pub struct LearnerBatch {
+    /// `[T+1, B, C, H, W]`
+    pub observations: Vec<f32>,
+    /// `[T, B]`
+    pub actions: Vec<i32>,
+    /// `[T, B]`
+    pub rewards: Vec<f32>,
+    /// `[T, B]` (1.0 = episode ended at this step)
+    pub dones: Vec<f32>,
+    /// `[T, B, A]`
+    pub behavior_logits: Vec<f32>,
+}
+
+impl LearnerBatch {
+    pub fn zeros(m: &Manifest) -> LearnerBatch {
+        let (t, b, a) = (m.unroll_length, m.batch_size, m.num_actions);
+        LearnerBatch {
+            observations: vec![0.0; (t + 1) * b * m.obs_len()],
+            actions: vec![0; t * b],
+            rewards: vec![0.0; t * b],
+            dones: vec![0.0; t * b],
+            behavior_logits: vec![0.0; t * b * a],
+        }
+    }
+}
+
+/// Learner-side runtime: the fused fwd+V-trace+bwd+RMSProp step.
+pub struct LearnerEngine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    init: Module,
+    learner: Module,
+    params: Vec<xla::PjRtBuffer>,
+    opt_state: Vec<xla::PjRtBuffer>,
+    pub steps: u64,
+}
+
+impl LearnerEngine {
+    pub fn load(artifact_dir: &Path) -> Result<LearnerEngine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        manifest.validate_env()?;
+        let client = xla::PjRtClient::cpu()?;
+        let init = Module::load(&client, "init", &manifest.hlo_path("init"))?;
+        let learner = Module::load(&client, "learner", &manifest.hlo_path("learner"))?;
+        Ok(LearnerEngine {
+            manifest,
+            client,
+            init,
+            learner,
+            params: Vec::new(),
+            opt_state: Vec::new(),
+            steps: 0,
+        })
+    }
+
+    fn zero_opt_state(&self) -> Result<Vec<xla::PjRtBuffer>> {
+        self.manifest
+            .opt_state
+            .iter()
+            .map(|l| upload_f32(&self.client, &vec![0.0f32; l.elems()], &l.shape))
+            .collect()
+    }
+
+    /// Initialize params (init.hlo) and zero optimizer state.
+    /// Returns the host snapshot for the inference side.
+    pub fn init_params(&mut self, seed: i32) -> Result<ParamVecs> {
+        let seed_buf = upload_scalar_i32(&self.client, seed)?;
+        let outs = self.init.run_buffers(&[&seed_buf])?;
+        anyhow::ensure!(outs.len() == self.manifest.params.len());
+        let vecs = vecs_from_literals(&outs)?;
+        self.params = buffers_from_vecs(&self.client, &vecs, &self.manifest.params)?;
+        self.opt_state = self.zero_opt_state()?;
+        self.steps = 0;
+        Ok(vecs)
+    }
+
+    /// Install a parameter snapshot (checkpoint resume). Optimizer
+    /// state restarts at zero — matching torch.optim semantics when
+    /// only the model state_dict is restored.
+    pub fn set_params(&mut self, vecs: &ParamVecs) -> Result<()> {
+        self.params = buffers_from_vecs(&self.client, vecs, &self.manifest.params)?;
+        self.opt_state = self.zero_opt_state()?;
+        self.steps = 0;
+        Ok(())
+    }
+
+    /// One learner step. Consumes a rollout batch, updates params and
+    /// optimizer state in place, returns (stats, new param snapshot).
+    pub fn step(&mut self, batch: &LearnerBatch) -> Result<(LearnerStats, ParamVecs)> {
+        let m = &self.manifest;
+        let (t, b, a) = (m.unroll_length, m.batch_size, m.num_actions);
+        let [c, h, w] = m.obs_shape;
+        anyhow::ensure!(!self.params.is_empty(), "params not initialized");
+        anyhow::ensure!(batch.observations.len() == (t + 1) * b * m.obs_len());
+        anyhow::ensure!(batch.actions.len() == t * b);
+
+        let obs_buf = upload_f32(&self.client, &batch.observations, &[t + 1, b, c, h, w])?;
+        let act_buf = upload_i32(&self.client, &batch.actions, &[t, b])?;
+        let rew_buf = upload_f32(&self.client, &batch.rewards, &[t, b])?;
+        let done_buf = upload_f32(&self.client, &batch.dones, &[t, b])?;
+        let bl_buf = upload_f32(&self.client, &batch.behavior_logits, &[t, b, a])?;
+
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(
+            self.params.len() + self.opt_state.len() + 5,
+        );
+        refs.extend(self.params.iter());
+        refs.extend(self.opt_state.iter());
+        refs.extend([&obs_buf, &act_buf, &rew_buf, &done_buf, &bl_buf]);
+
+        let mut outs = self.learner.run_buffers(&refs)?;
+
+        let n_p = m.params.len();
+        let n_o = m.opt_state.len();
+        anyhow::ensure!(
+            outs.len() == n_p + n_o + 1,
+            "learner returned {} outputs, expected {}",
+            outs.len(),
+            n_p + n_o + 1
+        );
+        let stats_lit = outs.pop().unwrap();
+        let stats = LearnerStats {
+            values: literal_to_f32s(&stats_lit)?,
+        };
+        // Outputs arrive as one decomposed tuple of literals (PJRT does
+        // not untuple to separate buffers through this API), so the new
+        // params/opt state round-trip through the host and re-upload —
+        // ~0.6 MB/step at paper scale, immaterial vs the 3-5 ms step.
+        let opt_lits: Vec<xla::Literal> = outs.split_off(n_p);
+        let snapshot = vecs_from_literals(&outs)?;
+        let opt_vecs = vecs_from_literals(&opt_lits)?;
+        self.params = buffers_from_vecs(&self.client, &snapshot, &self.manifest.params)?;
+        self.opt_state = buffers_from_vecs(&self.client, &opt_vecs, &self.manifest.opt_state)?;
+        self.steps += 1;
+        Ok((stats, snapshot))
+    }
+
+    pub fn mean_step_time(&self) -> std::time::Duration {
+        self.learner.mean_call_time()
+    }
+}

@@ -1,0 +1,145 @@
+//! Host tensors and Literal conversion helpers.
+//!
+//! The coordinator keeps all hot data as flat `Vec<f32>`/`Vec<i32>`
+//! host tensors (reused rollout buffers, paper §5.1); this module is
+//! the single place they become `xla::Literal`s for PJRT execution and
+//! come back.
+
+use anyhow::Result;
+
+/// Flat host tensor (f32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostF32 { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostF32 {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostF32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        f32s_to_literal(&self.data, &self.shape)
+    }
+}
+
+/// f32 slice -> Literal of the given shape.
+pub fn f32s_to_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 && shape[0] == data.len() {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// i32 slice -> Literal of the given shape.
+pub fn i32s_to_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 && shape[0] == data.len() {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Scalar i32 Literal.
+pub fn i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Literal -> flat f32 vector.
+pub fn literal_to_f32s(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+// -- host -> device uploads (the leak-free execute_b path) ------------------
+
+/// Upload an f32 tensor to the device (scalars: shape = &[]).
+pub fn upload_f32(
+    client: &xla::PjRtClient,
+    data: &[f32],
+    shape: &[usize],
+) -> Result<xla::PjRtBuffer> {
+    Ok(client.buffer_from_host_buffer(data, shape, None)?)
+}
+
+/// Upload an i32 tensor to the device.
+pub fn upload_i32(
+    client: &xla::PjRtClient,
+    data: &[i32],
+    shape: &[usize],
+) -> Result<xla::PjRtBuffer> {
+    Ok(client.buffer_from_host_buffer(data, shape, None)?)
+}
+
+/// Upload an i32 scalar.
+pub fn upload_scalar_i32(client: &xla::PjRtClient, v: i32) -> Result<xla::PjRtBuffer> {
+    upload_i32(client, &[v], &[])
+}
+
+/// Literal shape as usize dims.
+pub fn literal_dims(lit: &xla::Literal) -> Result<Vec<usize>> {
+    let shape = lit.array_shape()?;
+    Ok(shape.dims().iter().map(|&d| d as usize).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_with_shape() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        let lit = f32s_to_literal(&data, &[3, 4]).unwrap();
+        assert_eq!(literal_dims(&lit).unwrap(), vec![3, 4]);
+        assert_eq!(literal_to_f32s(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn f32_rank1_fast_path() {
+        let data = vec![1.0f32, 2.0, 3.0];
+        let lit = f32s_to_literal(&data, &[3]).unwrap();
+        assert_eq!(literal_to_f32s(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![1i32, -2, 3, 4];
+        let lit = i32s_to_literal(&data, &[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        let lit = i32_scalar(42);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![42]);
+        let s = HostF32::scalar(2.5).to_literal().unwrap();
+        assert_eq!(literal_to_f32s(&s).unwrap(), vec![2.5]);
+    }
+
+    #[test]
+    fn host_tensor_helpers() {
+        let z = HostF32::zeros(vec![2, 3]);
+        assert_eq!(z.data.len(), 6);
+        let lit = z.to_literal().unwrap();
+        assert_eq!(literal_dims(&lit).unwrap(), vec![2, 3]);
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree substrates: JSON, deterministic PRNG, stats/bench harness.
+//!
+//! The offline build has no serde / rand / criterion, so the repo
+//! implements the slices it needs from scratch (DESIGN.md
+//! §Substitutions).
+
+pub mod json;
+pub mod rng;
+pub mod stats;

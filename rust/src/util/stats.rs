@@ -1,0 +1,317 @@
+//! Timing/statistics substrate shared by the metrics module and the
+//! bench harness (criterion is unavailable offline; `bench::Bench`
+//! below is the in-tree replacement the `rust/benches/*` binaries use).
+
+use std::time::{Duration, Instant};
+
+/// Streaming summary of a series of f64 samples.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { samples: Vec::new() }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile via nearest-rank on a sorted copy (exact enough for
+    /// bench reporting; q in [0, 100]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((q / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[rank.min(v.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Exponential moving average (for returns / loss curves).
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { alpha, value: None }
+    }
+
+    pub fn add(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Windowed rate counter (frames/sec etc.).
+#[derive(Debug)]
+pub struct RateCounter {
+    start: Instant,
+    last: Instant,
+    last_count: u64,
+    pub total: u64,
+}
+
+impl Default for RateCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RateCounter {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        RateCounter {
+            start: now,
+            last: now,
+            last_count: 0,
+            total: 0,
+        }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.total += n;
+    }
+
+    /// Rate since the previous call to `window_rate` (and reset window).
+    pub fn window_rate(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        let dn = self.total - self.last_count;
+        self.last = now;
+        self.last_count = self.total;
+        if dt > 0.0 {
+            dn as f64 / dt
+        } else {
+            0.0
+        }
+    }
+
+    pub fn overall_rate(&self) -> f64 {
+        let dt = self.start.elapsed().as_secs_f64();
+        if dt > 0.0 {
+            self.total as f64 / dt
+        } else {
+            0.0
+        }
+    }
+}
+
+/// In-tree micro-benchmark harness (criterion replacement).
+///
+/// Usage in a `harness = false` bench binary:
+/// ```ignore
+/// let mut b = Bench::new("vtrace");
+/// b.run("rust T=20 B=8", || vtrace(...));
+/// b.report();
+/// ```
+pub struct Bench {
+    pub name: String,
+    pub rows: Vec<BenchRow>,
+    pub min_iters: usize,
+    pub target_time: Duration,
+}
+
+pub struct BenchRow {
+    pub label: String,
+    pub iters: usize,
+    pub per_iter: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            rows: Vec::new(),
+            min_iters: 10,
+            target_time: Duration::from_millis(500),
+        }
+    }
+
+    /// Time `f` until `target_time` is spent (>= min_iters iterations).
+    pub fn run<F: FnMut()>(&mut self, label: &str, mut f: F) {
+        // warmup
+        for _ in 0..3 {
+            f();
+        }
+        let mut samples = Summary::new();
+        let start = Instant::now();
+        let mut iters = 0usize;
+        while iters < self.min_iters || start.elapsed() < self.target_time {
+            let t0 = Instant::now();
+            f();
+            samples.add(t0.elapsed().as_secs_f64());
+            iters += 1;
+            if iters > 1_000_000 {
+                break;
+            }
+        }
+        self.rows.push(BenchRow {
+            label: label.to_string(),
+            iters,
+            per_iter: Duration::from_secs_f64(samples.mean()),
+            p50: Duration::from_secs_f64(samples.p50()),
+            p99: Duration::from_secs_f64(samples.p99()),
+        });
+    }
+
+    /// Record an externally measured quantity (for throughput rows).
+    pub fn record(&mut self, label: &str, iters: usize, total: Duration) {
+        let per = total / iters.max(1) as u32;
+        self.rows.push(BenchRow {
+            label: label.to_string(),
+            iters,
+            per_iter: per,
+            p50: per,
+            p99: per,
+        });
+    }
+
+    pub fn report(&self) {
+        println!("\n== bench: {} ==", self.name);
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            "case", "iters", "mean", "p50", "p99"
+        );
+        for r in &self.rows {
+            println!(
+                "{:<44} {:>10} {:>12} {:>12} {:>12}",
+                r.label,
+                r.iters,
+                fmt_dur(r.per_iter),
+                fmt_dur(r.p50),
+                fmt_dur(r.p99)
+            );
+        }
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(x);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.p50(), 3.0);
+        assert!((s.std() - 1.5811).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let mut s = Summary::new();
+        for i in 0..100 {
+            s.add(i as f64);
+        }
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(100.0), 99.0);
+        assert!((s.percentile(50.0) - 49.5).abs() <= 0.5);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        for _ in 0..64 {
+            e.add(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_first_value_passthrough() {
+        let mut e = Ema::new(0.01);
+        assert_eq!(e.add(5.0), 5.0);
+    }
+
+    #[test]
+    fn rate_counter_counts() {
+        let mut r = RateCounter::new();
+        r.add(10);
+        r.add(5);
+        assert_eq!(r.total, 15);
+        assert!(r.overall_rate() > 0.0);
+    }
+
+    #[test]
+    fn empty_summary_nan() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.p50().is_nan());
+    }
+}

@@ -1,0 +1,298 @@
+//! Pure-Rust V-trace (Espeholt et al. 2018, §4.1).
+//!
+//! Mirror of `python/compile/kernels/ref.py`: the same reverse
+//! recursion over time-major `[T, B]` data.  Three roles in the repo:
+//!
+//! 1. test oracle — golden vectors generated from ref.py
+//!    (`rust/tests/data/vtrace_golden.json`) pin this implementation to
+//!    the Python one, and property tests pin invariants;
+//! 2. CPU baseline in `benches/vtrace.rs` against the Pallas-kernel
+//!    HLO artifact (experiment E8);
+//! 3. runtime cross-check: the learner can audit artifact outputs in
+//!    debug builds.
+
+/// Outputs of the V-trace correction, time-major `[T][B]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VTraceOutput {
+    pub vs: Vec<Vec<f32>>,
+    pub pg_advantages: Vec<Vec<f32>>,
+}
+
+/// V-trace from per-step importance weights.
+///
+/// * `log_rhos[t][b]` — log(pi/mu) of the taken action
+/// * `discounts[t][b]` — gamma * (1 - done)
+/// * `values[t][b]` — V(x_t) under the current parameters
+/// * `bootstrap_value[b]` — V(x_T)
+pub fn from_importance_weights(
+    log_rhos: &[Vec<f32>],
+    discounts: &[Vec<f32>],
+    rewards: &[Vec<f32>],
+    values: &[Vec<f32>],
+    bootstrap_value: &[f32],
+    clip_rho_threshold: f32,
+    clip_c_threshold: f32,
+) -> VTraceOutput {
+    let t_len = log_rhos.len();
+    assert!(t_len > 0, "empty rollout");
+    let b_len = log_rhos[0].len();
+    for (name, arr) in [
+        ("discounts", discounts),
+        ("rewards", rewards),
+        ("values", values),
+    ] {
+        assert_eq!(arr.len(), t_len, "{name} T mismatch");
+        assert!(arr.iter().all(|r| r.len() == b_len), "{name} B mismatch");
+    }
+    assert_eq!(bootstrap_value.len(), b_len);
+
+    let mut vs = vec![vec![0.0f32; b_len]; t_len];
+    let mut pg = vec![vec![0.0f32; b_len]; t_len];
+
+    // Reverse recursion: acc_t = delta_t + disc_t * c_t * acc_{t+1}
+    let mut acc = vec![0.0f32; b_len];
+    for t in (0..t_len).rev() {
+        let v_tp1: &[f32] = if t + 1 < t_len {
+            &values[t + 1]
+        } else {
+            bootstrap_value
+        };
+        for b in 0..b_len {
+            let rho = log_rhos[t][b].exp();
+            let clipped_rho = rho.min(clip_rho_threshold);
+            let c = rho.min(clip_c_threshold);
+            let delta = clipped_rho * (rewards[t][b] + discounts[t][b] * v_tp1[b] - values[t][b]);
+            acc[b] = delta + discounts[t][b] * c * acc[b];
+            vs[t][b] = acc[b] + values[t][b];
+        }
+    }
+
+    // pg_adv_t = rho_t (r_t + gamma_t vs_{t+1} - V(x_t))
+    for t in 0..t_len {
+        for b in 0..b_len {
+            let vs_tp1 = if t + 1 < t_len {
+                vs[t + 1][b]
+            } else {
+                bootstrap_value[b]
+            };
+            let clipped_rho = log_rhos[t][b].exp().min(clip_rho_threshold);
+            pg[t][b] = clipped_rho * (rewards[t][b] + discounts[t][b] * vs_tp1 - values[t][b]);
+        }
+    }
+
+    VTraceOutput {
+        vs,
+        pg_advantages: pg,
+    }
+}
+
+/// Numerically-stable log-softmax over the last axis.
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let log_sum: f32 = logits.iter().map(|&x| (x - max).exp()).sum::<f32>().ln();
+    logits.iter().map(|&x| x - max - log_sum).collect()
+}
+
+/// Softmax over the last axis.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let ls = log_softmax(logits);
+    ls.iter().map(|&x| x.exp()).collect()
+}
+
+/// V-trace from behaviour/target logits `[T][B][A]` and actions `[T][B]`.
+#[allow(clippy::too_many_arguments)]
+pub fn from_logits(
+    behavior_logits: &[Vec<Vec<f32>>],
+    target_logits: &[Vec<Vec<f32>>],
+    actions: &[Vec<usize>],
+    discounts: &[Vec<f32>],
+    rewards: &[Vec<f32>],
+    values: &[Vec<f32>],
+    bootstrap_value: &[f32],
+    clip_rho_threshold: f32,
+    clip_c_threshold: f32,
+) -> VTraceOutput {
+    let t_len = behavior_logits.len();
+    let b_len = if t_len > 0 { behavior_logits[0].len() } else { 0 };
+    let mut log_rhos = vec![vec![0.0f32; b_len]; t_len];
+    for t in 0..t_len {
+        for b in 0..b_len {
+            let a = actions[t][b];
+            let lt = log_softmax(&target_logits[t][b]);
+            let lb = log_softmax(&behavior_logits[t][b]);
+            log_rhos[t][b] = lt[a] - lb[a];
+        }
+    }
+    from_importance_weights(
+        &log_rhos,
+        discounts,
+        rewards,
+        values,
+        bootstrap_value,
+        clip_rho_threshold,
+        clip_c_threshold,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, t: usize, b: usize, scale: f32) -> Vec<Vec<f32>> {
+        (0..t)
+            .map(|_| (0..b).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect())
+            .collect()
+    }
+
+    #[test]
+    fn on_policy_is_n_step_return() {
+        let (t, b) = (5, 3);
+        let mut rng = Rng::new(0);
+        let log_rhos = vec![vec![0.0; b]; t];
+        let gamma = 0.9f32;
+        let discounts = vec![vec![gamma; b]; t];
+        let rewards = rand_mat(&mut rng, t, b, 1.0);
+        let values = rand_mat(&mut rng, t, b, 1.0);
+        let boot: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+        let out = from_importance_weights(&log_rhos, &discounts, &rewards, &values, &boot, 1.0, 1.0);
+        // expected: vs_t = sum_k gamma^k r_{t+k} + gamma^{T-t} boot
+        for bi in 0..b {
+            let mut acc = boot[bi];
+            for t in (0..t).rev() {
+                acc = rewards[t][bi] + gamma * acc;
+                assert!((out.vs[t][bi] - acc).abs() < 1e-4, "t={t} b={bi}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_discount_one_step() {
+        let (t, b) = (4, 2);
+        let mut rng = Rng::new(1);
+        let log_rhos = rand_mat(&mut rng, t, b, 0.5);
+        let discounts = vec![vec![0.0; b]; t];
+        let rewards = rand_mat(&mut rng, t, b, 1.0);
+        let values = rand_mat(&mut rng, t, b, 1.0);
+        let boot = vec![0.0; b];
+        let out = from_importance_weights(&log_rhos, &discounts, &rewards, &values, &boot, 1.0, 1.0);
+        for ti in 0..t {
+            for bi in 0..b {
+                let rho = log_rhos[ti][bi].exp().min(1.0);
+                let expect = values[ti][bi] + rho * (rewards[ti][bi] - values[ti][bi]);
+                assert!((out.vs[ti][bi] - expect).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn rho_clipping_caps_updates() {
+        // with huge positive log_rhos, result equals the rho=1 on-policy case
+        let (t, b) = (6, 2);
+        let mut rng = Rng::new(2);
+        let discounts = vec![vec![0.95; b]; t];
+        let rewards = rand_mat(&mut rng, t, b, 1.0);
+        let values = rand_mat(&mut rng, t, b, 1.0);
+        let boot = vec![0.5; b];
+        let big = vec![vec![25.0; b]; t];
+        let zero = vec![vec![0.0; b]; t];
+        let a = from_importance_weights(&big, &discounts, &rewards, &values, &boot, 1.0, 1.0);
+        let o = from_importance_weights(&zero, &discounts, &rewards, &values, &boot, 1.0, 1.0);
+        for ti in 0..t {
+            for bi in 0..b {
+                assert!((a.vs[ti][bi] - o.vs[ti][bi]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_columns_independent() {
+        let (t, b) = (8, 4);
+        let mut rng = Rng::new(3);
+        let log_rhos = rand_mat(&mut rng, t, b, 0.5);
+        let discounts = rand_mat(&mut rng, t, b, 0.0)
+            .iter()
+            .map(|row| row.iter().map(|_| 0.99).collect())
+            .collect::<Vec<Vec<f32>>>();
+        let rewards = rand_mat(&mut rng, t, b, 1.0);
+        let values = rand_mat(&mut rng, t, b, 1.0);
+        let boot: Vec<f32> = (0..b).map(|_| rng.next_f32()).collect();
+        let full = from_importance_weights(&log_rhos, &discounts, &rewards, &values, &boot, 1.0, 1.0);
+        // column 2 alone must equal column 2 of the full batch
+        let col = |m: &[Vec<f32>], c: usize| -> Vec<Vec<f32>> {
+            m.iter().map(|r| vec![r[c]]).collect()
+        };
+        let single = from_importance_weights(
+            &col(&log_rhos, 2),
+            &col(&discounts, 2),
+            &col(&rewards, 2),
+            &col(&values, 2),
+            &[boot[2]],
+            1.0,
+            1.0,
+        );
+        for ti in 0..t {
+            assert!((full.vs[ti][2] - single.vs[ti][0]).abs() < 1e-6);
+            assert!((full.pg_advantages[ti][2] - single.pg_advantages[ti][0]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let l = log_softmax(&[1.0, 2.0, 3.0]);
+        let sum: f32 = l.iter().map(|&x| x.exp()).sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        // shift invariance
+        let l2 = log_softmax(&[101.0, 102.0, 103.0]);
+        for (a, b) in l.iter().zip(&l2) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn log_softmax_extreme_stable() {
+        let l = log_softmax(&[1000.0, -1000.0]);
+        assert!(l.iter().all(|x| x.is_finite()));
+        assert!((l[0] - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn from_logits_on_policy_rhos_are_one() {
+        let (t, b, a) = (3, 2, 4);
+        let mut rng = Rng::new(4);
+        let logits: Vec<Vec<Vec<f32>>> = (0..t)
+            .map(|_| {
+                (0..b)
+                    .map(|_| (0..a).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+                    .collect()
+            })
+            .collect();
+        let actions = vec![vec![1usize; b]; t];
+        let discounts = vec![vec![0.9; b]; t];
+        let rewards = vec![vec![1.0; b]; t];
+        let values = vec![vec![0.0; b]; t];
+        let boot = vec![0.0; b];
+        // identical behaviour/target logits -> rho = 1 -> on-policy n-step
+        let out = from_logits(
+            &logits, &logits, &actions, &discounts, &rewards, &values, &boot, 1.0, 1.0,
+        );
+        let zero_rhos = vec![vec![0.0; b]; t];
+        let expect =
+            from_importance_weights(&zero_rhos, &discounts, &rewards, &values, &boot, 1.0, 1.0);
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    #[should_panic(expected = "T mismatch")]
+    fn shape_mismatch_panics() {
+        let _ = from_importance_weights(
+            &[vec![0.0]],
+            &[],
+            &[vec![0.0]],
+            &[vec![0.0]],
+            &[0.0],
+            1.0,
+            1.0,
+        );
+    }
+}

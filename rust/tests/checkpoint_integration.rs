@@ -1,0 +1,139 @@
+//! Checkpoint + driver integration: save → resume → continue learning,
+//! plus RPC robustness under rude disconnects.
+
+use std::path::{Path, PathBuf};
+
+use torchbeast::config::TrainConfig;
+use torchbeast::coordinator;
+use torchbeast::env::wrappers::WrapperCfg;
+use torchbeast::env::Environment;
+use torchbeast::rpc::{EnvServer, RemoteEnv};
+use torchbeast::runtime::{checkpoint, LearnerEngine};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/catch");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/catch missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn checkpoint_resume_continues_from_saved_params() {
+    let Some(dir) = artifact_dir() else { return };
+    let tmp = std::env::temp_dir().join("tb_ckpt_integration");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt = tmp.join("phase1.ckpt");
+
+    // phase 1: short training run, save checkpoint
+    let cfg1 = TrainConfig {
+        artifact_dir: dir.clone(),
+        num_actors: 4,
+        total_steps: 8,
+        seed: 21,
+        log_interval: 0,
+        checkpoint_path: Some(ckpt.clone()),
+        ..TrainConfig::default()
+    };
+    let r1 = coordinator::train(&cfg1).unwrap();
+    assert!(ckpt.exists());
+
+    // the checkpoint must round-trip exactly
+    let learner = LearnerEngine::load(&dir).unwrap();
+    let loaded = checkpoint::load(&ckpt, &learner.manifest).unwrap();
+    assert_eq!(loaded, r1.final_params);
+
+    // phase 2: resume; initial params are the checkpoint, not seed init
+    let cfg2 = TrainConfig {
+        artifact_dir: dir.clone(),
+        num_actors: 4,
+        total_steps: 4,
+        seed: 21,
+        log_interval: 0,
+        init_checkpoint: Some(ckpt.clone()),
+        ..TrainConfig::default()
+    };
+    let r2 = coordinator::train(&cfg2).unwrap();
+    // resumed run must have moved away from the checkpoint
+    assert_ne!(r2.final_params, r1.final_params);
+    assert_eq!(r2.steps, 4);
+}
+
+#[test]
+fn evaluate_checkpoint_consistency() {
+    let Some(dir) = artifact_dir() else { return };
+    let tmp = std::env::temp_dir().join("tb_ckpt_integration2");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let ckpt = tmp.join("eval.ckpt");
+    let mut learner = LearnerEngine::load(&dir).unwrap();
+    let params = learner.init_params(33).unwrap();
+    checkpoint::save(&ckpt, &learner.manifest, &params).unwrap();
+    let loaded = checkpoint::load(&ckpt, &learner.manifest).unwrap();
+    // greedy eval of identical params must be identical (deterministic env seed)
+    let a = coordinator::evaluate(&dir, &params, 5, 9).unwrap();
+    let b = coordinator::evaluate(&dir, &loaded, 5, 9).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn env_server_survives_rude_disconnects() {
+    let server = EnvServer::start("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    // several clients connect and vanish without Bye
+    for i in 0..5 {
+        let env = RemoteEnv::connect(&addr, "catch", i, &WrapperCfg::default()).unwrap();
+        std::mem::drop(env); // sends Bye on drop…
+        // …and one that is truly rude: raw TCP connect + slam shut
+        let s = std::net::TcpStream::connect(&addr).unwrap();
+        drop(s);
+    }
+    // server still serves a fresh stream correctly
+    let mut env = RemoteEnv::connect(&addr, "catch", 99, &WrapperCfg::default()).unwrap();
+    let mut obs = vec![0.0; env.spec().obs_len()];
+    env.reset(&mut obs);
+    let mut done_seen = false;
+    for i in 0..30 {
+        if env.step(i % 3, &mut obs).done {
+            done_seen = true;
+            break;
+        }
+    }
+    assert!(done_seen);
+}
+
+#[test]
+fn train_with_env_cost_still_learns_shape() {
+    // env_cost wrapper on the training path (E2's expensive-env knob)
+    let Some(dir) = artifact_dir() else { return };
+    let mut cfg = TrainConfig {
+        artifact_dir: dir,
+        num_actors: 4,
+        total_steps: 5,
+        seed: 2,
+        log_interval: 0,
+        ..TrainConfig::default()
+    };
+    cfg.wrappers.env_cost_us = 200;
+    let report = coordinator::train(&cfg).unwrap();
+    assert_eq!(report.steps, 5);
+    assert!(report.history.iter().all(|r| r.stats.total_loss().is_finite()));
+}
+
+#[test]
+fn runtime_frame_stack_rejected() {
+    // frame_stack must be baked into artifacts, not wrapped at runtime
+    let Some(dir) = artifact_dir() else { return };
+    let mut cfg = TrainConfig {
+        artifact_dir: dir,
+        total_steps: 1,
+        ..TrainConfig::default()
+    };
+    cfg.wrappers.frame_stack = 4;
+    let err = match coordinator::train(&cfg) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("runtime frame_stack should be rejected"),
+    };
+    assert!(err.contains("frame_stack"), "{err}");
+}

@@ -1,0 +1,70 @@
+"""Generate golden V-trace vectors from the Python reference (ref.py).
+
+Writes rust/tests/data/vtrace_golden.json: a list of cases with inputs
+and expected vs/pg_advantages.  The Rust integration test
+(rust/tests/vtrace_golden.rs) replays them through the pure-Rust
+implementation — pinning the two oracles to each other (experiment E8).
+
+Run from python/:  python ../scripts/gen_vtrace_golden.py
+Committed output is deterministic (fixed seeds).
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "python"))
+import jax.numpy as jnp  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+
+def make_case(seed, T, B, A, clip_rho, clip_c):
+    rng = np.random.default_rng(seed)
+    behavior = rng.normal(0, 1, (T, B, A)).astype(np.float32)
+    target = rng.normal(0, 1, (T, B, A)).astype(np.float32)
+    actions = rng.integers(0, A, (T, B)).astype(np.int32)
+    discounts = ((rng.random((T, B)) > 0.15) * 0.99).astype(np.float32)
+    rewards = rng.normal(0, 1, (T, B)).astype(np.float32)
+    values = rng.normal(0, 1, (T, B)).astype(np.float32)
+    bootstrap = rng.normal(0, 1, (B,)).astype(np.float32)
+    out = ref.vtrace_from_logits(
+        jnp.asarray(behavior), jnp.asarray(target), jnp.asarray(actions),
+        jnp.asarray(discounts), jnp.asarray(rewards), jnp.asarray(values),
+        jnp.asarray(bootstrap), clip_rho, clip_c,
+    )
+    return {
+        "T": T, "B": B, "A": A,
+        "clip_rho": clip_rho, "clip_c": clip_c,
+        "behavior_logits": behavior.flatten().tolist(),
+        "target_logits": target.flatten().tolist(),
+        "actions": actions.flatten().tolist(),
+        "discounts": discounts.flatten().tolist(),
+        "rewards": rewards.flatten().tolist(),
+        "values": values.flatten().tolist(),
+        "bootstrap": bootstrap.tolist(),
+        "vs": np.asarray(out.vs).flatten().tolist(),
+        "pg_advantages": np.asarray(out.pg_advantages).flatten().tolist(),
+    }
+
+
+def main():
+    cases = [
+        make_case(0, 20, 8, 6, 1.0, 1.0),
+        make_case(1, 5, 3, 4, 1.0, 1.0),
+        make_case(2, 12, 2, 3, 2.0, 0.5),
+        make_case(3, 1, 1, 2, 1.0, 1.0),
+        make_case(4, 30, 4, 5, 0.7, 1.3),
+    ]
+    out_path = os.path.join(
+        os.path.dirname(__file__), "..", "rust", "tests", "data", "vtrace_golden.json"
+    )
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(cases, f)
+    print(f"wrote {len(cases)} cases to {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Plot learning curves from runs/*.csv (Figures 3-4 analog, E1).
+
+Usage:
+    python scripts/plot_curves.py runs/e1_catch_mono_s1.csv runs/e1_catch_poly_s1.csv
+    python scripts/plot_curves.py --all          # every runs/e1_*.csv, grouped by env
+
+Produces runs/curves_<env>.png when matplotlib is available; otherwise
+prints an ASCII sparkline table (the CI-friendly fallback).
+"""
+
+from __future__ import annotations
+
+import csv
+import glob
+import os
+import sys
+from collections import defaultdict
+
+SPARK = " .:-=+*#%@"
+
+
+def load(path):
+    rows = []
+    with open(path) as f:
+        for row in csv.DictReader(f):
+            try:
+                rows.append(
+                    (int(row["frames"]), float(row["mean_return"]), float(row["total_loss"]))
+                )
+            except (ValueError, KeyError):
+                continue
+    return rows
+
+
+def sparkline(values, width=60):
+    if not values:
+        return "(no data)"
+    # resample to width
+    pts = [values[int(i * (len(values) - 1) / max(1, width - 1))] for i in range(width)]
+    finite = [p for p in pts if p == p]
+    if not finite:
+        return "(all NaN)"
+    lo, hi = min(finite), max(finite)
+    span = (hi - lo) or 1.0
+    return "".join(
+        SPARK[int((p - lo) / span * (len(SPARK) - 1))] if p == p else " " for p in pts
+    )
+
+
+def ascii_report(groups):
+    for env, series in sorted(groups.items()):
+        print(f"\n== {env} ==")
+        for label, rows in sorted(series.items()):
+            returns = [r[1] for r in rows]
+            final = next((r for r in reversed(returns) if r == r), float("nan"))
+            print(f"  {label:<28} final={final:8.3f}  |{sparkline(returns)}|")
+
+
+def main():
+    args = sys.argv[1:]
+    if "--all" in args:
+        paths = sorted(glob.glob("runs/e1_*.csv")) or sorted(glob.glob("runs/*.csv"))
+    else:
+        paths = [a for a in args if not a.startswith("--")]
+    if not paths:
+        print(__doc__)
+        return
+
+    groups: dict = defaultdict(dict)
+    for p in paths:
+        name = os.path.splitext(os.path.basename(p))[0]
+        parts = name.split("_")
+        # e1_<env-with-underscores>_<mode>_s<seed>: parse from the right
+        if len(parts) >= 4 and parts[0] == "e1":
+            env = "_".join(parts[1:-2])
+        else:
+            env = name
+        groups[env][name] = load(p)
+
+    try:
+        import matplotlib
+
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+
+        for env, series in groups.items():
+            fig, (ax1, ax2) = plt.subplots(1, 2, figsize=(11, 4))
+            for label, rows in sorted(series.items()):
+                frames = [r[0] for r in rows]
+                ax1.plot(frames, [r[1] for r in rows], label=label)
+                ax2.plot(frames, [r[2] for r in rows], label=label)
+            ax1.set_xlabel("frames")
+            ax1.set_ylabel("mean episode return")
+            ax1.set_title(f"{env}: return")
+            ax1.legend(fontsize=7)
+            ax2.set_xlabel("frames")
+            ax2.set_ylabel("total loss")
+            ax2.set_title(f"{env}: loss")
+            out = f"runs/curves_{env}.png"
+            fig.tight_layout()
+            fig.savefig(out, dpi=120)
+            print(f"wrote {out}")
+    except ImportError:
+        print("(matplotlib unavailable — ASCII fallback)")
+        ascii_report(groups)
+
+
+if __name__ == "__main__":
+    main()
