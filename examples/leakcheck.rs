@@ -3,7 +3,7 @@
 //! The published `xla` crate's Literal-based `execute` leaks every
 //! input device buffer per call (xla_rs.cc: `buffer.release()` with no
 //! owner) — it OOM-killed hour-long training runs before the runtime
-//! switched to caller-owned buffers + `execute_b` (EXPERIMENTS.md
+//! switched to caller-owned buffers + `execute_b` (DESIGN.md
 //! §Perf #5).  This binary watches RSS across tight loops of each hot
 //! path so the regression stays visible:
 //!

@@ -1,4 +1,4 @@
-//! Headline end-to-end driver (EXPERIMENTS.md E1/E7): train the
+//! Headline end-to-end driver (experiments E1/E7): train the
 //! paper's Figure-2 MinAtar agent on MinAtar Breakout for a few
 //! hundred learner steps, logging the full loss/return curve.
 //!

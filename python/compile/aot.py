@@ -190,7 +190,7 @@ class Exporter:
     def inference_sizes(self) -> list:
         """Power-of-2 batch buckets up to Bi (perf: a partial batch of n
         runs in the smallest compiled size >= n instead of padding all
-        the way to Bi — see EXPERIMENTS.md §Perf)."""
+        the way to Bi — see DESIGN.md §Perf)."""
         sizes, s = [], 1
         while s < self.Bi:
             sizes.append(s)

@@ -1,24 +1,41 @@
 //! Bench E5: environment serving over TCP (the gRPC-substitute layer,
 //! paper §5.2): round-trip latency per step and aggregate steps/s as
 //! connections per server grow.
+//!
+//! With the pooled codec buffers (reusable frame read/write scratch on
+//! both ends, observation decode straight into the caller's buffer)
+//! the steady-state step exchange should allocate nothing; a counting
+//! global allocator audits that alongside the latency numbers.
 
 use std::time::Instant;
 
 use torchbeast::env::wrappers::WrapperCfg;
 use torchbeast::env::Environment;
 use torchbeast::rpc::{EnvServer, RemoteEnv};
+use torchbeast::util::counting_alloc::{allocations, CountingAllocator};
 use torchbeast::util::stats::Summary;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
 
 fn main() -> anyhow::Result<()> {
     let server = EnvServer::start("127.0.0.1:0")?;
     let addr = server.addr.to_string();
 
-    // single-stream round-trip latency
+    // single-stream round-trip latency + steady-state allocation audit
     let mut env = RemoteEnv::connect(&addr, "catch", 0, &WrapperCfg::default())?;
     let mut obs = vec![0.0; env.spec().obs_len()];
     env.reset(&mut obs);
+    // warm-up: fill both ends' frame buffers before counting
+    for i in 0..500 {
+        if env.step(i % 3, &mut obs).done {
+            env.reset(&mut obs);
+        }
+    }
     let mut lat = Summary::new();
-    for i in 0..2000 {
+    let a0 = allocations();
+    let steps = 2000;
+    for i in 0..steps {
         let t0 = Instant::now();
         let st = env.step(i % 3, &mut obs);
         lat.add(t0.elapsed().as_micros() as f64);
@@ -26,12 +43,24 @@ fn main() -> anyhow::Result<()> {
             env.reset(&mut obs);
         }
     }
+    let allocs = allocations() - a0;
     println!("== bench rpc (E5) ==");
     println!(
         "single stream step round-trip: p50 {:.0} µs  p99 {:.0} µs  mean {:.0} µs",
         lat.p50(),
         lat.p99(),
         lat.mean()
+    );
+    // `lat` itself pushes one f64 per step (amortized growth); allow
+    // those reallocations and nothing more.
+    println!(
+        "steady state: {allocs} heap allocations over {steps} steps \
+         ({:.4} per step incl. the bench's own stats vector)",
+        allocs as f64 / steps as f64
+    );
+    assert!(
+        (allocs as f64) < 0.05 * steps as f64,
+        "rpc step path is allocating per frame again: {allocs} allocs / {steps} steps"
     );
 
     // aggregate throughput vs parallel streams

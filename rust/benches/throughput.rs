@@ -1,6 +1,8 @@
 //! Bench E2: end-to-end training throughput (FPS), mono vs poly, vs
 //! actor count — regenerates the paper's §4 "on par in throughput"
-//! comparison on this testbed.
+//! comparison on this testbed.  Also reports the batcher's mean
+//! request wait per run (the pooled hot path's latency contribution —
+//! the before/after handle for the buffer-pool work).
 //!
 //! `cargo bench --bench throughput` (uses artifacts/catch).
 
@@ -10,7 +12,7 @@ use torchbeast::config::{Mode, TrainConfig};
 use torchbeast::coordinator;
 use torchbeast::util::stats::Bench;
 
-fn fps(mode: Mode, actors: usize, steps: u64) -> anyhow::Result<(f64, f64)> {
+fn fps(mode: Mode, actors: usize, steps: u64) -> anyhow::Result<(f64, f64, f64)> {
     let cfg = TrainConfig {
         artifact_dir: "artifacts/catch".into(),
         mode,
@@ -23,7 +25,11 @@ fn fps(mode: Mode, actors: usize, steps: u64) -> anyhow::Result<(f64, f64)> {
     let t0 = Instant::now();
     let report = coordinator::train(&cfg)?;
     let wall = t0.elapsed().as_secs_f64();
-    Ok((report.frames as f64 / wall, report.batcher.mean_batch_size()))
+    Ok((
+        report.frames as f64 / wall,
+        report.batcher.mean_batch_size(),
+        report.batcher.mean_wait_us(),
+    ))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -32,11 +38,22 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     let mut b = Bench::new("throughput (E2): end-to-end FPS, catch, 30 learner steps");
-    println!("{:>8} {:>12} {:>12} {:>10}", "actors", "mono_fps", "poly_fps", "ratio");
+    println!(
+        "{:>8} {:>12} {:>12} {:>10} {:>14} {:>14}",
+        "actors", "mono_fps", "poly_fps", "ratio", "mono_wait_us", "poly_wait_us"
+    );
     for &n in &[1usize, 2, 4, 8, 16] {
-        let (mono, _) = fps(Mode::Mono, n, 30)?;
-        let (poly, _) = fps(Mode::Poly, n, 30)?;
-        println!("{:>8} {:>12.0} {:>12.0} {:>10.2}", n, mono, poly, poly / mono);
+        let (mono, _, mono_wait) = fps(Mode::Mono, n, 30)?;
+        let (poly, _, poly_wait) = fps(Mode::Poly, n, 30)?;
+        println!(
+            "{:>8} {:>12.0} {:>12.0} {:>10.2} {:>14.0} {:>14.0}",
+            n,
+            mono,
+            poly,
+            poly / mono,
+            mono_wait,
+            poly_wait
+        );
         b.record(
             &format!("mono actors={n}"),
             1,

@@ -107,6 +107,10 @@ fn actor_loop(
     let mut rng = Rng::new(seed);
     let mut rollout = Rollout::new(unroll_length, obs_len, num_actions);
     let mut obs = vec![0.0f32; obs_len];
+    // Reused result buffer: the whole act-step loop is allocation-free
+    // (obs goes straight into a pooled batcher slot, logits come back
+    // into this preallocated buffer).
+    let mut logits = vec![0.0f32; num_actions];
     env.reset(&mut obs);
     rollout.set_obs(0, &obs);
     let mut ep_return = 0.0f32;
@@ -115,8 +119,13 @@ fn actor_loop(
     loop {
         for i in 0..unroll_length {
             // Batched policy evaluation (blocks on the batcher).
-            let Some((logits, _baseline)) = client.infer(obs.clone()) else {
-                return report; // batcher closed: orderly shutdown
+            let Some(_baseline) = client.infer(&obs, &mut logits) else {
+                // Batcher closed (orderly shutdown) or failed (the
+                // inference thread died): either way no rollout will
+                // ever complete again — close the learner queue so
+                // the learner unblocks instead of waiting forever.
+                queue.close();
+                return report;
             };
             let action = sample_action(&logits, &mut rng);
             let step = env.step(action, &mut obs);
@@ -149,7 +158,7 @@ fn actor_loop(
 mod tests {
     use super::*;
     use crate::coordinator::batching_queue::batching_queue;
-    use crate::coordinator::dynamic_batcher::dynamic_batcher;
+    use crate::coordinator::dynamic_batcher::{dynamic_batcher, BatcherConfig};
     use crate::env::make_env;
     use std::time::Duration;
 
@@ -159,7 +168,12 @@ mod tests {
     fn actors_produce_valid_rollouts() {
         let t = 5;
         let spec = crate::env::spec_of("catch").unwrap();
-        let (client, stream) = dynamic_batcher(4, Duration::from_micros(500));
+        let (client, stream) = dynamic_batcher(BatcherConfig::new(
+            4,
+            Duration::from_micros(500),
+            spec.obs_len(),
+            spec.num_actions,
+        ));
         let (tx, rx) = batching_queue::<Rollout>(8);
         let metrics = Metrics::shared();
 
@@ -167,7 +181,7 @@ mod tests {
         let infer_thread = std::thread::spawn(move || {
             while let Some(batch) = stream.next_batch() {
                 let n = batch.len();
-                batch.respond(&vec![0.0; n * 3], &vec![0.0; n], 3);
+                batch.respond(&vec![0.0; n * 3], &vec![0.0; n], 3).unwrap();
             }
         });
 
@@ -234,13 +248,18 @@ mod tests {
         // single actor: obs 0 of rollout k+1 == obs T of rollout k
         let t = 4;
         let spec = crate::env::spec_of("gridworld").unwrap();
-        let (client, stream) = dynamic_batcher(1, Duration::from_micros(100));
+        let (client, stream) = dynamic_batcher(BatcherConfig::new(
+            1,
+            Duration::from_micros(100),
+            spec.obs_len(),
+            spec.num_actions,
+        ));
         let (tx, rx) = batching_queue::<Rollout>(4);
         let metrics = Metrics::shared();
         let infer_thread = std::thread::spawn(move || {
             while let Some(batch) = stream.next_batch() {
                 let n = batch.len();
-                batch.respond(&vec![0.0; n * 4], &vec![0.0; n], 4);
+                batch.respond(&vec![0.0; n * 4], &vec![0.0; n], 4).unwrap();
             }
         });
         let pool = ActorPool::spawn(

@@ -17,7 +17,7 @@ use anyhow::{Context, Result};
 use crate::config::{Mode, TrainConfig};
 use crate::coordinator::actor_pool::{ActorConfig, ActorPool};
 use crate::coordinator::batching_queue::batching_queue;
-use crate::coordinator::dynamic_batcher::{dynamic_batcher, BatcherStats};
+use crate::coordinator::dynamic_batcher::{dynamic_batcher, BatcherConfig, BatcherStats};
 use crate::coordinator::rollout::{stack_rollouts, Rollout};
 use crate::coordinator::weights::WeightsStore;
 use crate::env::{self, Environment};
@@ -84,11 +84,19 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     // Close inference batches at min(compiled batch, actor count): with
     // fewer actors than the compiled batch size a batch can never fill,
     // and every request would wait out the full timeout (measured: p50
-    // wait ≈ timeout before this cap; see EXPERIMENTS.md §Perf).
+    // wait ≈ timeout before this cap; see DESIGN.md §Perf).
     let target_batch = manifest.inference_batch.min(cfg.num_actors.max(1));
+    let num_actions = manifest.num_actions;
+    // One pooled slot per actor: checkout never blocks, and every
+    // observation is written in place (zero allocation per request).
     let (infer_client, infer_stream) = dynamic_batcher(
-        target_batch,
-        Duration::from_micros(cfg.inference_timeout_us),
+        BatcherConfig::new(
+            target_batch,
+            Duration::from_micros(cfg.inference_timeout_us),
+            manifest.obs_len(),
+            num_actions,
+        )
+        .with_slots(cfg.num_actors.max(target_batch)),
     );
     // recv_batch(B) needs B rollouts resident at once: a capacity below
     // the batch size would deadlock the learner against backpressure.
@@ -106,27 +114,23 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let envs = build_envs(cfg, &manifest.env, &mut local_servers)?;
 
     // -- inference thread (constructs its own engine: xla is !Send)
-    let num_actions = manifest.num_actions;
     let weights_for_inference = weights.clone();
     let artifact_dir = cfg.artifact_dir.clone();
     let inference_thread = std::thread::Builder::new()
         .name("inference".into())
         .spawn(move || -> Result<()> {
             let mut engine = InferenceEngine::load(&artifact_dir)?;
-            let obs_len = engine.manifest.obs_len();
             while let Some(batch) = infer_stream.next_batch() {
                 // adopt the newest weights before evaluating
                 let (v, params) = weights_for_inference.latest();
                 if v > engine.param_version {
                     engine.set_params(&params, v)?;
                 }
+                // The batch is already one contiguous [n * obs_len]
+                // buffer — handed to the runtime without a gather copy.
                 let n = batch.len();
-                let mut obs = Vec::with_capacity(n * obs_len);
-                for r in &batch.requests {
-                    obs.extend_from_slice(&r.obs);
-                }
-                let (logits, baselines) = engine.infer(&obs, n)?;
-                batch.respond(&logits, &baselines, num_actions);
+                let (logits, baselines) = engine.infer(batch.obs_flat(), n)?;
+                batch.respond(&logits, &baselines, num_actions)?;
             }
             Ok(())
         })?;
@@ -190,7 +194,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
 
     // -- orderly shutdown: stop actors first, then inference
     rollout_rx.close();
-    infer_client.shutdown_for_tests();
+    infer_client.close();
     weights.close();
     pool.join();
     inference_thread

@@ -1,71 +1,240 @@
 //! Dynamic inference batcher — the reproduction of TorchBeast's
-//! `batcher.cc` / DeepMind's dynamic batching module (paper §5.2).
+//! `batcher.cc` / DeepMind's dynamic batching module (paper §5.2),
+//! rebuilt around pooled, preallocated flat buffers.
 //!
-//! Actor threads submit single observations and block on their result;
-//! the inference thread pulls *batches*: a batch closes as soon as
+//! Actor threads check out a *slot* in a fixed pool and write their
+//! observation directly into the slot's preallocated buffer; the
+//! inference thread pulls *batches*: a batch closes as soon as
 //! `max_batch` requests are waiting, or when `timeout` has elapsed
 //! since the first request of the batch arrived (latency bound under
 //! low load, full batches under high load — the same policy as the
-//! C++ batcher).
+//! C++ batcher).  Results scatter back through the slot table: the
+//! inference thread writes logits/baseline into each slot's
+//! preallocated result buffer and wakes that slot's condvar — no
+//! per-request channel, no per-request `Vec`.
+//!
+//! Allocation discipline (rlpyt-style preallocated shared buffers):
+//! after warm-up, a request costs **zero heap allocations** end to
+//! end — slot checkout, in-place obs write, contiguous gather into a
+//! recycled [`Batch`] buffer, in-place result scatter, bounded stats.
+//! `benches/batcher.rs` measures this with a counting allocator.
 //!
 //! The batcher is pure queueing — no XLA in sight — so its invariants
 //! (never exceeds max_batch, never drops/duplicates/reorders a
 //! request, routes each result to its requester) are tested
 //! exhaustively with in-tree property tests.
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::util::stats::Summary;
 
-/// One inference request: an observation, answered with (logits, baseline).
-pub struct Request {
-    pub obs: Vec<f32>,
-    resp: mpsc::SyncSender<(Vec<f32>, f32)>,
-    submitted: Instant,
+/// Batcher sizing: slot/result buffers are preallocated from these.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// A batch closes as soon as this many requests are pending.
+    pub max_batch: usize,
+    /// ... or when the oldest pending request has waited this long.
+    pub timeout: Duration,
+    /// Flat observation length (every request writes exactly this many
+    /// f32s into its slot).
+    pub obs_len: usize,
+    /// Logits per request (slot result buffers are this long).
+    pub num_actions: usize,
+    /// Slot-pool size.  Size it to the number of concurrent actors so
+    /// checkout never blocks; smaller pools still work (actors wait).
+    pub slots: usize,
 }
 
-/// A closed batch, handed to the inference thread.
-pub struct Batch {
-    pub requests: Vec<Request>,
+impl BatcherConfig {
+    pub fn new(
+        max_batch: usize,
+        timeout: Duration,
+        obs_len: usize,
+        num_actions: usize,
+    ) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            timeout,
+            obs_len,
+            num_actions,
+            slots: 2 * max_batch,
+        }
+    }
+
+    pub fn with_slots(mut self, slots: usize) -> BatcherConfig {
+        self.slots = slots;
+        self
+    }
 }
 
-impl Batch {
-    pub fn len(&self) -> usize {
-        self.requests.len()
-    }
+/// Scatter-side error: `respond` refuses short result slices instead
+/// of panicking on slice indexing (or silently misrouting) in release
+/// builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RespondError {
+    /// `num_actions` passed to respond differs from the configured one.
+    NumActionsMismatch { got: usize, configured: usize },
+    /// `logits.len() < n * num_actions`.
+    ShortLogits { need: usize, got: usize },
+    /// `baselines.len() < n`.
+    ShortBaselines { need: usize, got: usize },
+}
 
-    pub fn is_empty(&self) -> bool {
-        self.requests.is_empty()
-    }
-
-    /// Scatter results back to the blocked actors.
-    /// `logits` is `[n * num_actions]`, `baselines` is `[n]`.
-    pub fn respond(self, logits: &[f32], baselines: &[f32], num_actions: usize) {
-        let n = self.requests.len();
-        debug_assert!(logits.len() >= n * num_actions);
-        debug_assert!(baselines.len() >= n);
-        for (i, req) in self.requests.into_iter().enumerate() {
-            let l = logits[i * num_actions..(i + 1) * num_actions].to_vec();
-            // A dropped receiver (actor shut down) is fine: ignore.
-            let _ = req.resp.send((l, baselines[i]));
+impl fmt::Display for RespondError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RespondError::NumActionsMismatch { got, configured } => write!(
+                f,
+                "respond called with num_actions {got}, batcher configured for {configured}"
+            ),
+            RespondError::ShortLogits { need, got } => {
+                write!(f, "logits slice too short: need {need}, got {got}")
+            }
+            RespondError::ShortBaselines { need, got } => {
+                write!(f, "baselines slice too short: need {need}, got {got}")
+            }
         }
     }
 }
 
-/// Batching statistics (experiment E3).
-#[derive(Debug, Default, Clone)]
+impl std::error::Error for RespondError {}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotState {
+    /// In the free list.
+    Free,
+    /// Obs written; waiting in the batching queue.
+    Queued,
+    /// Part of a checked-out [`Batch`]; result pending.
+    InFlight,
+    /// Result written; owner actor not yet woken/collected.
+    Done,
+    /// Batch dropped without responding (shutdown / respond error).
+    Failed,
+}
+
+struct Slot {
+    /// Preallocated `[obs_len]` observation buffer, written in place.
+    obs: Vec<f32>,
+    /// Preallocated `[num_actions]` result buffer.
+    logits: Vec<f32>,
+    baseline: f32,
+    state: SlotState,
+    submitted: Instant,
+}
+
+struct Inner {
+    slots: Vec<Slot>,
+    /// Free slot ids (LIFO keeps recently-touched buffers warm).
+    free: Vec<usize>,
+    /// FIFO of queued slot ids — the single source of request order.
+    queue: VecDeque<usize>,
+    closed: bool,
+}
+
+/// Recycled per-batch storage: slot ids + the contiguous gathered obs.
+struct BatchStorage {
+    slot_ids: Vec<usize>,
+    obs: Vec<f32>,
+}
+
+struct Shared {
+    obs_len: usize,
+    num_actions: usize,
+    max_batch: usize,
+    timeout: Duration,
+    inner: Mutex<Inner>,
+    /// Wakes actors waiting for a free slot.
+    slot_free: Condvar,
+    /// Per-slot result rendezvous (all associated with `inner`'s mutex).
+    wake: Vec<Condvar>,
+    /// Recycled batch storages (one in steady state).
+    buffers: Mutex<Vec<BatchStorage>>,
+    stats: Mutex<BatcherStats>,
+}
+
+impl Shared {
+    fn take_storage(&self) -> BatchStorage {
+        let mut pool = self.buffers.lock().unwrap();
+        pool.pop().unwrap_or_else(|| BatchStorage {
+            slot_ids: Vec::with_capacity(self.max_batch),
+            obs: Vec::with_capacity(self.max_batch * self.obs_len),
+        })
+    }
+
+    fn return_storage(&self, mut storage: BatchStorage) {
+        storage.slot_ids.clear();
+        storage.obs.clear();
+        self.buffers.lock().unwrap().push(storage);
+    }
+
+    /// Close the queue and fail everything still queued (stream gone).
+    fn close_and_fail_queued(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        while let Some(id) = inner.queue.pop_front() {
+            inner.slots[id].state = SlotState::Failed;
+            self.wake[id].notify_all();
+        }
+        drop(inner);
+        self.slot_free.notify_all();
+    }
+
+    /// Close the queue; queued requests stay to be drained by the stream.
+    fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        drop(inner);
+        self.slot_free.notify_all();
+    }
+}
+
+/// Batching statistics (experiment E3).  All accumulators are bounded
+/// and preallocated so recording never allocates on the hot path; wait
+/// percentiles come from a fixed-size ring of recent samples.
+#[derive(Debug, Clone, Default)]
 pub struct BatcherStats {
     pub batches: u64,
     pub requests: u64,
     pub full_batches: u64,
     pub timeout_batches: u64,
-    pub batch_sizes: Vec<usize>,
-    pub wait_us: Vec<f64>,
+    /// `size_hist[k]` = number of batches of size `k` (len max_batch+1).
+    pub size_hist: Vec<u64>,
+    pub wait_us_sum: f64,
+    pub wait_us_max: f64,
+    /// Ring of recent per-request waits (µs), capacity [`WAIT_RING`].
+    wait_ring: Vec<f64>,
+    wait_cursor: usize,
 }
 
+/// Bounded sample window for wait-time percentiles.
+const WAIT_RING: usize = 4096;
+
 impl BatcherStats {
+    fn with_max_batch(max_batch: usize) -> BatcherStats {
+        BatcherStats {
+            size_hist: vec![0; max_batch + 1],
+            wait_ring: Vec::with_capacity(WAIT_RING),
+            ..BatcherStats::default()
+        }
+    }
+
+    fn push_wait(&mut self, wait_us: f64) {
+        self.wait_us_sum += wait_us;
+        if wait_us > self.wait_us_max {
+            self.wait_us_max = wait_us;
+        }
+        if self.wait_ring.len() < WAIT_RING {
+            self.wait_ring.push(wait_us); // within preallocated capacity
+        } else {
+            self.wait_ring[self.wait_cursor] = wait_us;
+            self.wait_cursor = (self.wait_cursor + 1) % WAIT_RING;
+        }
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             return f64::NAN;
@@ -73,23 +242,21 @@ impl BatcherStats {
         self.requests as f64 / self.batches as f64
     }
 
+    pub fn mean_wait_us(&self) -> f64 {
+        if self.requests == 0 {
+            return f64::NAN;
+        }
+        self.wait_us_sum / self.requests as f64
+    }
+
+    /// Summary over the recent-wait ring (allocates; reporting only).
     pub fn wait_summary(&self) -> Summary {
         let mut s = Summary::new();
-        for &w in &self.wait_us {
+        for &w in &self.wait_ring {
             s.add(w);
         }
         s
     }
-}
-
-struct Shared {
-    queue: Mutex<QueueState>,
-    stats: Mutex<BatcherStats>,
-}
-
-struct QueueState {
-    pending: Vec<Request>,
-    closed: bool,
 }
 
 /// Actor-side handle (clone per actor thread).
@@ -100,27 +267,76 @@ pub struct InferenceClient {
 
 impl InferenceClient {
     /// Submit an observation and block until the inference thread
-    /// answers. Returns None if the batcher shut down.
-    pub fn infer(&self, obs: Vec<f32>) -> Option<(Vec<f32>, f32)> {
-        let (tx, rx) = mpsc::sync_channel(1);
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            if q.closed {
+    /// answers.  `obs` is copied into a pooled slot buffer (no
+    /// allocation); the result logits are written into `logits_out`
+    /// (reused across calls — allocates only until its capacity covers
+    /// `num_actions`).  Returns the baseline, or None if the batcher
+    /// shut down (or the batch failed) before this request was served.
+    pub fn infer(&self, obs: &[f32], logits_out: &mut Vec<f32>) -> Option<f32> {
+        let s = &*self.shared;
+        assert_eq!(
+            obs.len(),
+            s.obs_len,
+            "obs length {} != batcher obs_len {}",
+            obs.len(),
+            s.obs_len
+        );
+
+        // Check out a slot and write the observation in place, then
+        // wait for the result — one critical section end to end (the
+        // condvar waits release the lock while blocked).
+        let mut inner = s.inner.lock().unwrap();
+        let slot_id = loop {
+            if inner.closed {
                 return None;
             }
-            q.pending.push(Request {
-                obs,
-                resp: tx,
-                submitted: Instant::now(),
-            });
+            if let Some(id) = inner.free.pop() {
+                break id;
+            }
+            inner = s.slot_free.wait(inner).unwrap();
+        };
+        inner.slots[slot_id].obs.copy_from_slice(obs);
+        inner.slots[slot_id].state = SlotState::Queued;
+        inner.slots[slot_id].submitted = Instant::now();
+        inner.queue.push_back(slot_id);
+
+        // Slot-table rendezvous: wait for Done/Failed on our condvar.
+        loop {
+            match inner.slots[slot_id].state {
+                SlotState::Done => {
+                    logits_out.clear();
+                    logits_out.extend_from_slice(&inner.slots[slot_id].logits);
+                    let baseline = inner.slots[slot_id].baseline;
+                    inner.slots[slot_id].state = SlotState::Free;
+                    inner.free.push(slot_id);
+                    drop(inner);
+                    s.slot_free.notify_one();
+                    return Some(baseline);
+                }
+                SlotState::Failed => {
+                    inner.slots[slot_id].state = SlotState::Free;
+                    inner.free.push(slot_id);
+                    drop(inner);
+                    s.slot_free.notify_one();
+                    return None;
+                }
+                // Queued (awaiting drain — served even after close) or
+                // InFlight: keep waiting.
+                _ => {}
+            }
+            inner = s.wake[slot_id].wait(inner).unwrap();
         }
-        rx.recv().ok()
     }
 
-    /// Close the batcher from the client side (tests + orderly driver
-    /// shutdown): the stream drains pending requests then returns None.
+    /// Close the batcher: no new submissions; pending requests are
+    /// still drained by the stream, which then returns None.
+    pub fn close(&self) {
+        self.shared.close();
+    }
+
+    /// Historical name for [`close`] (tests + orderly driver shutdown).
     pub fn shutdown_for_tests(&self) {
-        self.shared.queue.lock().unwrap().closed = true;
+        self.close();
     }
 
     /// Batching statistics (same data as `BatchStream::stats`; exposed
@@ -131,11 +347,112 @@ impl InferenceClient {
     }
 }
 
+/// A closed batch: contiguous `[n * obs_len]` observations gathered
+/// from the slot pool, handed to the inference thread.  Respond (or
+/// drop) returns its storage to the pool.
+pub struct Batch {
+    shared: Arc<Shared>,
+    storage: Option<BatchStorage>,
+}
+
+impl Batch {
+    fn storage(&self) -> &BatchStorage {
+        self.storage.as_ref().expect("batch storage taken")
+    }
+
+    pub fn len(&self) -> usize {
+        self.storage().slot_ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The whole batch as one contiguous `[n * obs_len]` buffer —
+    /// handed directly to the runtime, no per-request copies.
+    pub fn obs_flat(&self) -> &[f32] {
+        &self.storage().obs
+    }
+
+    /// Observation of request `i` (submission order).
+    pub fn obs(&self, i: usize) -> &[f32] {
+        let l = self.shared.obs_len;
+        &self.storage().obs[i * l..(i + 1) * l]
+    }
+
+    /// Scatter results back to the blocked actors by slot index.
+    /// `logits` is `[n * num_actions]`, `baselines` is `[n]`.
+    ///
+    /// Short slices (or a `num_actions` mismatch) return an error
+    /// *before* any result is written; the dropped batch then fails
+    /// its requests, whose actors see None — never a panic or a
+    /// misrouted result, even in release builds.
+    pub fn respond(
+        mut self,
+        logits: &[f32],
+        baselines: &[f32],
+        num_actions: usize,
+    ) -> Result<(), RespondError> {
+        let n = self.len();
+        if num_actions != self.shared.num_actions {
+            return Err(RespondError::NumActionsMismatch {
+                got: num_actions,
+                configured: self.shared.num_actions,
+            });
+        }
+        if logits.len() < n * num_actions {
+            return Err(RespondError::ShortLogits {
+                need: n * num_actions,
+                got: logits.len(),
+            });
+        }
+        if baselines.len() < n {
+            return Err(RespondError::ShortBaselines {
+                need: n,
+                got: baselines.len(),
+            });
+        }
+        let storage = self.storage.take().expect("batch storage taken");
+        {
+            let mut inner = self.shared.inner.lock().unwrap();
+            for (i, &id) in storage.slot_ids.iter().enumerate() {
+                let slot = &mut inner.slots[id];
+                slot.logits
+                    .copy_from_slice(&logits[i * num_actions..(i + 1) * num_actions]);
+                slot.baseline = baselines[i];
+                slot.state = SlotState::Done;
+            }
+        }
+        for &id in &storage.slot_ids {
+            self.shared.wake[id].notify_all();
+        }
+        self.shared.return_storage(storage);
+        Ok(())
+    }
+}
+
+impl Drop for Batch {
+    /// A batch dropped without responding (shutdown, or a respond
+    /// error) fails its requests so no actor blocks forever.
+    fn drop(&mut self) {
+        if let Some(storage) = self.storage.take() {
+            {
+                let mut inner = self.shared.inner.lock().unwrap();
+                for &id in &storage.slot_ids {
+                    inner.slots[id].state = SlotState::Failed;
+                }
+            }
+            for &id in &storage.slot_ids {
+                self.shared.wake[id].notify_all();
+            }
+            self.shared.return_storage(storage);
+        }
+    }
+}
+
 /// Inference-thread-side handle.
 pub struct BatchStream {
     shared: Arc<Shared>,
-    max_batch: usize,
-    timeout: Duration,
 }
 
 impl BatchStream {
@@ -143,53 +460,70 @@ impl BatchStream {
     /// drained, returning None).
     ///
     /// Closing policy: the batch closes when `max_batch` requests are
-    /// pending, or `timeout` after the first pending request arrived.
+    /// pending, `timeout` after the first pending request arrived, or
+    /// immediately once the batcher is closed (drain).
     pub fn next_batch(&self) -> Option<Batch> {
+        let s = &*self.shared;
         let poll = Duration::from_micros(50);
         loop {
             let mut first_seen: Option<Instant> = None;
             {
-                let mut q = self.shared.queue.lock().unwrap();
-                let n = q.pending.len();
-                let full = n >= self.max_batch;
-                let timed_out = n > 0 && q.pending[0].submitted.elapsed() >= self.timeout;
-                if full || timed_out {
-                    let take = n.min(self.max_batch);
-                    let requests: Vec<Request> = q.pending.drain(..take).collect();
-                    drop(q);
-                    self.record(&requests, full);
-                    return Some(Batch { requests });
+                let mut inner = s.inner.lock().unwrap();
+                let n = inner.queue.len();
+                let full = n >= s.max_batch;
+                let timed_out =
+                    n > 0 && inner.slots[inner.queue[0]].submitted.elapsed() >= s.timeout;
+                let draining = n > 0 && inner.closed;
+                if full || timed_out || draining {
+                    let take = n.min(s.max_batch);
+                    let mut storage = s.take_storage();
+                    for _ in 0..take {
+                        let id = inner.queue.pop_front().unwrap();
+                        inner.slots[id].state = SlotState::InFlight;
+                        storage.slot_ids.push(id);
+                        // Gather into the contiguous batch buffer
+                        // (within preallocated capacity).
+                        let obs = &inner.slots[id].obs;
+                        storage.obs.extend_from_slice(obs);
+                    }
+                    // Record stats while the slot table is still
+                    // consistent (bounded accumulators: no allocation).
+                    let now = Instant::now();
+                    let mut stats = s.stats.lock().unwrap();
+                    stats.batches += 1;
+                    stats.requests += take as u64;
+                    if full {
+                        stats.full_batches += 1;
+                    } else {
+                        stats.timeout_batches += 1;
+                    }
+                    stats.size_hist[take] += 1;
+                    for &id in &storage.slot_ids {
+                        let w = now.duration_since(inner.slots[id].submitted);
+                        stats.push_wait(w.as_micros() as f64);
+                    }
+                    drop(stats);
+                    drop(inner);
+                    return Some(Batch {
+                        shared: self.shared.clone(),
+                        storage: Some(storage),
+                    });
                 }
-                if n == 0 && q.closed {
+                if n == 0 && inner.closed {
                     return None;
                 }
                 if n > 0 {
-                    first_seen = Some(q.pending[0].submitted);
+                    first_seen = Some(inner.slots[inner.queue[0]].submitted);
                 }
             }
             // Sleep toward the deadline without holding the lock.
             match first_seen {
                 Some(t0) => {
-                    let remaining = self.timeout.saturating_sub(t0.elapsed());
+                    let remaining = s.timeout.saturating_sub(t0.elapsed());
                     std::thread::sleep(remaining.min(poll));
                 }
                 None => std::thread::sleep(poll),
             }
-        }
-    }
-
-    fn record(&self, batch: &[Request], full: bool) {
-        let mut stats = self.shared.stats.lock().unwrap();
-        stats.batches += 1;
-        stats.requests += batch.len() as u64;
-        if full {
-            stats.full_batches += 1;
-        } else {
-            stats.timeout_batches += 1;
-        }
-        stats.batch_sizes.push(batch.len());
-        for r in batch {
-            stats.wait_us.push(r.submitted.elapsed().as_micros() as f64);
         }
     }
 
@@ -199,29 +533,57 @@ impl BatchStream {
 
     /// Stop accepting requests; pending ones are still served.
     pub fn close(&self) {
-        self.shared.queue.lock().unwrap().closed = true;
+        self.shared.close();
     }
 }
 
-/// Create a dynamic batcher.
-pub fn dynamic_batcher(max_batch: usize, timeout: Duration) -> (InferenceClient, BatchStream) {
-    assert!(max_batch > 0);
+impl Drop for BatchStream {
+    /// The stream going away means nothing will ever drain the queue:
+    /// close and fail queued requests so actors never hang.
+    fn drop(&mut self) {
+        self.shared.close_and_fail_queued();
+    }
+}
+
+/// Create a dynamic batcher with pooled, preallocated buffers.
+pub fn dynamic_batcher(cfg: BatcherConfig) -> (InferenceClient, BatchStream) {
+    assert!(cfg.max_batch > 0);
+    assert!(cfg.obs_len > 0);
+    assert!(cfg.num_actions > 0);
+    // The configured pool size is honored exactly: with fewer slots
+    // than max_batch, batches simply close by timeout below capacity.
+    let n_slots = cfg.slots.max(1);
+    let now = Instant::now();
+    let slots: Vec<Slot> = (0..n_slots)
+        .map(|_| Slot {
+            obs: vec![0.0; cfg.obs_len],
+            logits: vec![0.0; cfg.num_actions],
+            baseline: 0.0,
+            state: SlotState::Free,
+            submitted: now,
+        })
+        .collect();
     let shared = Arc::new(Shared {
-        queue: Mutex::new(QueueState {
-            pending: Vec::new(),
+        obs_len: cfg.obs_len,
+        num_actions: cfg.num_actions,
+        max_batch: cfg.max_batch,
+        timeout: cfg.timeout,
+        inner: Mutex::new(Inner {
+            slots,
+            free: (0..n_slots).rev().collect(),
+            queue: VecDeque::with_capacity(n_slots),
             closed: false,
         }),
-        stats: Mutex::new(BatcherStats::default()),
+        slot_free: Condvar::new(),
+        wake: (0..n_slots).map(|_| Condvar::new()).collect(),
+        buffers: Mutex::new(Vec::new()),
+        stats: Mutex::new(BatcherStats::with_max_batch(cfg.max_batch)),
     });
     (
         InferenceClient {
             shared: shared.clone(),
         },
-        BatchStream {
-            shared,
-            max_batch,
-            timeout,
-        },
+        BatchStream { shared },
     )
 }
 
@@ -230,20 +592,31 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    fn run_echo_inference(stream: BatchStream, num_actions: usize) -> std::thread::JoinHandle<BatcherStats> {
-        // Inference stub: logits[i] = obs[0] of request i repeated.
+    fn cfg(max_batch: usize, timeout: Duration, obs_len: usize, a: usize) -> BatcherConfig {
+        BatcherConfig::new(max_batch, timeout, obs_len, a)
+    }
+
+    /// Inference stub: logits[i] = obs[0] of request i repeated;
+    /// baseline = -obs[0].
+    fn run_echo_inference(
+        stream: BatchStream,
+        num_actions: usize,
+    ) -> std::thread::JoinHandle<BatcherStats> {
         std::thread::spawn(move || {
+            let mut logits = Vec::new();
+            let mut baselines = Vec::new();
             while let Some(batch) = stream.next_batch() {
                 let n = batch.len();
-                let mut logits = vec![0.0f32; n * num_actions];
-                let mut baselines = vec![0.0f32; n];
-                for (i, r) in batch.requests.iter().enumerate() {
-                    for a in 0..num_actions {
-                        logits[i * num_actions + a] = r.obs[0];
+                logits.clear();
+                baselines.clear();
+                for i in 0..n {
+                    let tag = batch.obs(i)[0];
+                    for _ in 0..num_actions {
+                        logits.push(tag);
                     }
-                    baselines[i] = -r.obs[0];
+                    baselines.push(-tag);
                 }
-                batch.respond(&logits, &baselines, num_actions);
+                batch.respond(&logits, &baselines, num_actions).unwrap();
             }
             stream.stats()
         })
@@ -251,15 +624,16 @@ mod tests {
 
     #[test]
     fn routes_results_to_requesters() {
-        let (client, stream) = dynamic_batcher(4, Duration::from_millis(1));
+        let (client, stream) = dynamic_batcher(cfg(4, Duration::from_millis(1), 2, 3));
         let h = run_echo_inference(stream, 3);
         let actors: Vec<_> = (0..8)
             .map(|i| {
                 let c = client.clone();
                 std::thread::spawn(move || {
+                    let mut logits = Vec::new();
                     for k in 0..50 {
                         let tag = (i * 1000 + k) as f32;
-                        let (logits, baseline) = c.infer(vec![tag, 0.0]).unwrap();
+                        let baseline = c.infer(&[tag, 0.0], &mut logits).unwrap();
                         assert_eq!(logits, vec![tag; 3], "wrong routing");
                         assert_eq!(baseline, -tag);
                     }
@@ -269,7 +643,7 @@ mod tests {
         for a in actors {
             a.join().unwrap();
         }
-        client.shutdown_for_tests();
+        client.close();
         let stats = h.join().unwrap();
         assert_eq!(stats.requests, 8 * 50);
     }
@@ -282,16 +656,19 @@ mod tests {
             let max_batch = 1 + rng.below(7);
             let n_actors = 1 + rng.below(6);
             let per_actor = 10 + rng.below(30);
-            let (client, stream) = dynamic_batcher(max_batch, Duration::from_micros(300));
+            let (client, stream) =
+                dynamic_batcher(cfg(max_batch, Duration::from_micros(300), 1, 2));
 
             let checker = std::thread::spawn(move || {
                 let mut served = 0usize;
                 let mut max_seen = 0usize;
+                let logits = vec![0.0f32; max_batch * 2];
+                let baselines = vec![0.0f32; max_batch];
                 while let Some(batch) = stream.next_batch() {
                     max_seen = max_seen.max(batch.len());
                     served += batch.len();
                     let n = batch.len();
-                    batch.respond(&vec![0.0; n * 2], &vec![0.0; n], 2);
+                    batch.respond(&logits[..n * 2], &baselines[..n], 2).unwrap();
                 }
                 (served, max_seen, stream.stats())
             });
@@ -300,8 +677,9 @@ mod tests {
                 .map(|_| {
                     let c = client.clone();
                     std::thread::spawn(move || {
+                        let mut logits = Vec::new();
                         for _ in 0..per_actor {
-                            c.infer(vec![1.0]).unwrap();
+                            c.infer(&[1.0], &mut logits).unwrap();
                         }
                     })
                 })
@@ -309,11 +687,7 @@ mod tests {
             for a in actors {
                 a.join().unwrap();
             }
-            // close the stream: need a stream handle — we moved it. Use the
-            // client's shared state through a second channel: close via
-            // dropping all clients is not implemented, so instead send a
-            // sentinel shutdown through the queue being empty + closed flag.
-            client.shutdown_for_tests();
+            client.close();
             let (served, max_seen, stats) = checker.join().unwrap();
             assert_eq!(served, n_actors * per_actor, "dropped or duplicated");
             assert!(max_seen <= max_batch, "batch overflow: {max_seen} > {max_batch}");
@@ -323,34 +697,43 @@ mod tests {
 
     #[test]
     fn timeout_flushes_partial_batches() {
-        let (client, stream) = dynamic_batcher(64, Duration::from_millis(2));
+        let (client, stream) = dynamic_batcher(cfg(64, Duration::from_millis(2), 1, 2));
         let t0 = Instant::now();
         let actor = {
             let c = client.clone();
-            std::thread::spawn(move || c.infer(vec![7.0]).unwrap())
+            std::thread::spawn(move || {
+                let mut logits = Vec::new();
+                let b = c.infer(&[7.0], &mut logits).unwrap();
+                (logits, b)
+            })
         };
         let batch = stream.next_batch().unwrap();
         assert_eq!(batch.len(), 1, "partial batch flushed by timeout");
         assert!(t0.elapsed() >= Duration::from_millis(2));
         let n = batch.len();
-        batch.respond(&vec![1.0; n * 2], &vec![0.5; n], 2);
+        batch
+            .respond(&vec![1.0; n * 2], &vec![0.5; n], 2)
+            .unwrap();
         let (logits, baseline) = actor.join().unwrap();
         assert_eq!(logits.len(), 2);
         assert_eq!(baseline, 0.5);
         let stats = stream.stats();
         assert_eq!(stats.timeout_batches, 1);
         assert_eq!(stats.full_batches, 0);
-        client.shutdown_for_tests();
+        client.close();
         assert!(stream.next_batch().is_none());
     }
 
     #[test]
     fn full_batch_closes_before_timeout() {
-        let (client, stream) = dynamic_batcher(4, Duration::from_secs(10));
+        let (client, stream) = dynamic_batcher(cfg(4, Duration::from_secs(10), 1, 2));
         let actors: Vec<_> = (0..4)
             .map(|i| {
                 let c = client.clone();
-                std::thread::spawn(move || c.infer(vec![i as f32]).unwrap())
+                std::thread::spawn(move || {
+                    let mut logits = Vec::new();
+                    c.infer(&[i as f32], &mut logits).unwrap()
+                })
             })
             .collect();
         let t0 = Instant::now();
@@ -358,63 +741,196 @@ mod tests {
         assert_eq!(batch.len(), 4);
         assert!(t0.elapsed() < Duration::from_secs(5), "must not wait for timeout");
         let n = batch.len();
-        batch.respond(&vec![0.0; n * 2], &vec![0.0; n], 2);
+        batch
+            .respond(&vec![0.0; n * 2], &vec![0.0; n], 2)
+            .unwrap();
         for a in actors {
             a.join().unwrap();
         }
         assert_eq!(stream.stats().full_batches, 1);
-        client.shutdown_for_tests();
+        client.close();
     }
 
     #[test]
     fn fifo_order_within_stream() {
-        let (client, stream) = dynamic_batcher(16, Duration::from_millis(1));
+        let (client, stream) = dynamic_batcher(cfg(16, Duration::from_millis(1), 1, 2));
         // single actor submits sequentially; batches must preserve order
         let actor = std::thread::spawn(move || {
+            let mut logits = Vec::new();
             for k in 0..40 {
-                let (l, _) = client.infer(vec![k as f32]).unwrap();
-                assert_eq!(l[0], k as f32);
+                client.infer(&[k as f32], &mut logits).unwrap();
+                assert_eq!(logits[0], k as f32);
             }
-            client.shutdown_for_tests();
+            client.close();
         });
+        let mut logits = Vec::new();
         while let Some(batch) = stream.next_batch() {
             let n = batch.len();
             let mut last = -1.0f32;
-            for r in &batch.requests {
-                assert!(r.obs[0] > last, "reordered within batch");
-                last = r.obs[0];
+            logits.clear();
+            for i in 0..n {
+                let v = batch.obs(i)[0];
+                assert!(v > last, "reordered within batch");
+                last = v;
+                logits.push(v);
+                logits.push(v);
             }
-            let logits: Vec<f32> = batch
-                .requests
-                .iter()
-                .flat_map(|r| vec![r.obs[0]; 2])
-                .collect();
-            batch.respond(&logits, &vec![0.0; n], 2);
+            batch.respond(&logits, &vec![0.0; n], 2).unwrap();
         }
         actor.join().unwrap();
     }
 
     #[test]
     fn stats_accumulate() {
-        let (client, stream) = dynamic_batcher(2, Duration::from_millis(1));
+        let (client, stream) = dynamic_batcher(cfg(2, Duration::from_millis(1), 1, 1));
         let actor = std::thread::spawn(move || {
+            let mut logits = Vec::new();
             for _ in 0..10 {
-                client.infer(vec![0.0]).unwrap();
+                client.infer(&[0.0], &mut logits).unwrap();
             }
-            client.shutdown_for_tests();
+            client.close();
         });
         let mut total = 0;
         while let Some(batch) = stream.next_batch() {
             total += batch.len();
             let n = batch.len();
-            batch.respond(&vec![0.0; n], &vec![0.0; n], 1);
+            batch.respond(&vec![0.0; n], &vec![0.0; n], 1).unwrap();
         }
         actor.join().unwrap();
         let stats = stream.stats();
         assert_eq!(total, 10);
         assert_eq!(stats.requests, 10);
         assert!(stats.mean_batch_size() >= 1.0);
-        assert_eq!(stats.batch_sizes.iter().sum::<usize>(), 10);
-        assert_eq!(stats.wait_us.len(), 10);
+        // histogram: sum of k * size_hist[k] over k recovers requests
+        let hist_requests: u64 = stats
+            .size_hist
+            .iter()
+            .enumerate()
+            .map(|(k, &c)| k as u64 * c)
+            .sum();
+        assert_eq!(hist_requests, 10);
+        assert_eq!(stats.wait_summary().len(), 10);
+        assert!(stats.mean_wait_us() >= 0.0);
+    }
+
+    #[test]
+    fn respond_rejects_short_slices() {
+        // regression: release builds used to panic (or misroute) on a
+        // short logits/baselines slice — now a typed error, and the
+        // affected requests fail cleanly instead of hanging.
+        // generous timeout: the batch must close full (n = 2), not by
+        // a flush racing a slow thread spawn (it closes early when
+        // full, so the test stays fast)
+        let (client, stream) = dynamic_batcher(cfg(2, Duration::from_secs(10), 1, 3));
+        let actors: Vec<_> = (0..2)
+            .map(|i| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    let mut logits = Vec::new();
+                    c.infer(&[i as f32], &mut logits)
+                })
+            })
+            .collect();
+        let batch = stream.next_batch().unwrap();
+        let n = batch.len();
+        assert_eq!(n, 2);
+        let err = batch
+            .respond(&vec![0.0; n * 3 - 1], &vec![0.0; n], 3)
+            .unwrap_err();
+        assert_eq!(err, RespondError::ShortLogits { need: 6, got: 5 });
+        // the failed batch unblocks its actors with None
+        for a in actors {
+            assert!(a.join().unwrap().is_none());
+        }
+        client.close();
+    }
+
+    #[test]
+    fn respond_rejects_num_actions_mismatch() {
+        let (client, stream) = dynamic_batcher(cfg(1, Duration::from_millis(1), 1, 3));
+        let actor = {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                let mut logits = Vec::new();
+                c.infer(&[0.0], &mut logits)
+            })
+        };
+        let batch = stream.next_batch().unwrap();
+        let err = batch.respond(&[0.0; 4], &[0.0; 1], 4).unwrap_err();
+        assert_eq!(
+            err,
+            RespondError::NumActionsMismatch {
+                got: 4,
+                configured: 3
+            }
+        );
+        assert!(actor.join().unwrap().is_none());
+        client.close();
+    }
+
+    #[test]
+    fn dropped_batch_fails_its_requests() {
+        let (client, stream) = dynamic_batcher(cfg(1, Duration::from_millis(1), 1, 2));
+        let actor = {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                let mut logits = Vec::new();
+                c.infer(&[0.0], &mut logits)
+            })
+        };
+        let batch = stream.next_batch().unwrap();
+        drop(batch); // no respond: the actor must not hang
+        assert!(actor.join().unwrap().is_none());
+        client.close();
+    }
+
+    #[test]
+    fn stream_drop_unblocks_queued_actors() {
+        let (client, stream) = dynamic_batcher(cfg(64, Duration::from_secs(10), 1, 2));
+        let actor = {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                let mut logits = Vec::new();
+                c.infer(&[0.0], &mut logits)
+            })
+        };
+        // give the actor time to enqueue, then drop the stream without
+        // ever serving
+        std::thread::sleep(Duration::from_millis(20));
+        drop(stream);
+        assert!(actor.join().unwrap().is_none());
+        // and subsequent submissions fail fast
+        let mut logits = Vec::new();
+        assert!(client.infer(&[0.0], &mut logits).is_none());
+    }
+
+    #[test]
+    fn slot_pool_blocks_then_recycles() {
+        // pool of 1 slot, 4 actors x many requests: everything is
+        // still served exactly once through the single recycled slot
+        let (client, stream) =
+            dynamic_batcher(cfg(1, Duration::from_micros(100), 1, 1).with_slots(1));
+        let h = run_echo_inference(stream, 1);
+        let actors: Vec<_> = (0..4)
+            .map(|i| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    let mut logits = Vec::new();
+                    for k in 0..25 {
+                        let tag = (i * 100 + k) as f32;
+                        let b = c.infer(&[tag], &mut logits).unwrap();
+                        assert_eq!(logits[0], tag);
+                        assert_eq!(b, -tag);
+                    }
+                })
+            })
+            .collect();
+        for a in actors {
+            a.join().unwrap();
+        }
+        client.close();
+        let stats = h.join().unwrap();
+        assert_eq!(stats.requests, 4 * 25);
+        assert!(stats.mean_batch_size() <= 1.0 + 1e-9);
     }
 }

@@ -137,7 +137,7 @@ pub fn make_wrapped(
 }
 
 /// Deterministic per-actor seed derivation: one root seed fans out to
-/// independent env streams (root is documented in EXPERIMENTS.md runs).
+/// independent env streams (root is documented in run logs).
 pub fn actor_seed(root: u64, actor_id: usize) -> u64 {
     let mut r = Rng::new(root ^ 0xD1F3_5A7E_9B24_C680);
     for _ in 0..(actor_id % 7) {

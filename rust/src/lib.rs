@@ -15,8 +15,10 @@
 //! * **L1 (python/compile/kernels)** — the V-trace correction as a
 //!   Pallas kernel, fused into the learner artifact.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-reproduction results.
+//! See `rust/DESIGN.md` for the system inventory, the buffer-pool
+//! architecture of the inference hot path, and the substitution table
+//! (what stands in for gRPC, Atari, serde, …) that code comments
+//! reference as "DESIGN.md §…".
 
 pub mod agent;
 pub mod config;

@@ -17,7 +17,7 @@ use std::time::Duration;
 
 use crate::env::wrappers::WrapperCfg;
 use crate::env::{EnvSpec, Environment, Step};
-use crate::rpc::codec::{read_msg, write_msg, Msg};
+use crate::rpc::codec::{self, read_msg, write_msg, Msg, TAG_OBS};
 
 pub struct RemoteEnv {
     writer: TcpStream,
@@ -25,6 +25,11 @@ pub struct RemoteEnv {
     spec: EnvSpec,
     /// Last observation received (the server's auto-reset frame).
     last_obs: Vec<f32>,
+    /// Reusable read-frame buffer: with the pooled codec the per-step
+    /// round-trip allocates nothing after the first frame.
+    frame_buf: Vec<u8>,
+    /// Reusable write scratch for Action frames.
+    write_buf: Vec<u8>,
     /// Stats of the last finished episode (for metrics).
     pub last_episode_return: f32,
     pub last_episode_step: u32,
@@ -90,6 +95,8 @@ impl RemoteEnv {
             reader,
             spec,
             last_obs,
+            frame_buf: Vec::new(),
+            write_buf: Vec::new(),
             last_episode_return: 0.0,
             last_episode_step: 0,
         })
@@ -121,27 +128,37 @@ impl Environment for RemoteEnv {
         // Any transport error surfaces as a terminal transition with
         // zero reward; the actor will reset (replaying the cache) and
         // keep going — matching the paper's fault-tolerant actor pool.
-        if write_msg(&mut self.writer, &Msg::Action { action: action as u32 }).is_err() {
+        //
+        // Pooled-buffer fast path: the Action frame is encoded into a
+        // reusable scratch buffer, the Observation frame is read into
+        // a reusable frame buffer and decoded straight into the
+        // caller's obs buffer — zero heap allocation per step.
+        if codec::write_action(&mut self.writer, &mut self.write_buf, action as u32).is_err() {
             obs.copy_from_slice(&self.last_obs);
             return Step::terminal(0.0);
         }
-        match read_msg(&mut self.reader) {
-            Ok(Msg::Observation {
-                reward,
-                done,
-                episode_step,
-                episode_return,
-                obs: new_obs,
-            }) => {
-                self.last_obs.copy_from_slice(&new_obs);
-                obs.copy_from_slice(&new_obs);
-                if done {
-                    self.last_episode_return = episode_return;
-                    self.last_episode_step = episode_step;
+        if codec::read_frame(&mut self.reader, &mut self.frame_buf).is_err() {
+            obs.copy_from_slice(&self.last_obs);
+            return Step::terminal(0.0);
+        }
+        let payload: &[u8] = &self.frame_buf;
+        if codec::frame_tag(payload) != Some(TAG_OBS) {
+            obs.copy_from_slice(&self.last_obs);
+            return Step::terminal(0.0);
+        }
+        match codec::decode_observation_into(payload, obs) {
+            Ok(h) => {
+                self.last_obs.copy_from_slice(obs);
+                if h.done {
+                    self.last_episode_return = h.episode_return;
+                    self.last_episode_step = h.episode_step;
                 }
-                Step { reward, done }
+                Step {
+                    reward: h.reward,
+                    done: h.done,
+                }
             }
-            _ => {
+            Err(_) => {
                 obs.copy_from_slice(&self.last_obs);
                 Step::terminal(0.0)
             }

@@ -13,6 +13,19 @@
 //! answers `Spec`, then alternates `Observation` ← / `Action` → until
 //! either side sends `Bye`.  All integers little-endian; observations
 //! are raw f32 planes.
+//!
+//! Two API tiers share the same wire format:
+//!
+//! * **Owned values** — [`Msg`] + [`write_msg`]/[`read_msg`]:
+//!   ergonomic, allocates per frame.  Used for the once-per-stream
+//!   handshake and in tests.
+//! * **Pooled buffers** — [`Msg::encode_into`]/[`write_msg_into`],
+//!   [`read_frame`], [`decode_observation_into`]/[`decode_action`],
+//!   [`write_observation`]/[`write_action`]: the caller supplies
+//!   reusable scratch buffers, so the steady-state serving loop
+//!   (`Observation` ← / `Action` →) performs **zero heap allocation
+//!   per frame** on both ends (same discipline as the batcher's slot
+//!   pool; `benches/rpc.rs` measures it).
 
 use std::io::{Read, Write};
 
@@ -54,18 +67,23 @@ pub enum Msg {
     Error { message: String },
 }
 
-const TAG_HELLO: u8 = 1;
-const TAG_SPEC: u8 = 2;
-const TAG_OBS: u8 = 3;
-const TAG_ACTION: u8 = 4;
-const TAG_BYE: u8 = 5;
-const TAG_ERROR: u8 = 6;
+pub const TAG_HELLO: u8 = 1;
+pub const TAG_SPEC: u8 = 2;
+pub const TAG_OBS: u8 = 3;
+pub const TAG_ACTION: u8 = 4;
+pub const TAG_BYE: u8 = 5;
+pub const TAG_ERROR: u8 = 6;
+
+/// Tag byte of an encoded payload (None for an empty frame).
+pub fn frame_tag(payload: &[u8]) -> Option<u8> {
+    payload.first().copied()
+}
 
 // -- primitive writers -------------------------------------------------------
 
-struct Buf(Vec<u8>);
+struct Buf<'a>(&'a mut Vec<u8>);
 
-impl Buf {
+impl Buf<'_> {
     fn u8(&mut self, v: u8) {
         self.0.push(v);
     }
@@ -88,6 +106,25 @@ impl Buf {
             self.0.extend_from_slice(&x.to_le_bytes());
         }
     }
+}
+
+// Single definition of the two steady-state payloads: both the owned
+// `Msg::encode_into` arms and the pooled `write_observation` /
+// `write_action` writers go through these, so the wire layout cannot
+// fork between the handshake path and the per-step path.
+
+fn encode_observation_payload(b: &mut Buf<'_>, header: ObsHeader, obs: &[f32]) {
+    b.u8(TAG_OBS);
+    b.f32(header.reward);
+    b.u8(header.done as u8);
+    b.u32(header.episode_step);
+    b.f32(header.episode_return);
+    b.f32s(obs);
+}
+
+fn encode_action_payload(b: &mut Buf<'_>, action: u32) {
+    b.u8(TAG_ACTION);
+    b.u32(action);
 }
 
 struct Cursor<'a> {
@@ -144,8 +181,20 @@ impl<'a> Cursor<'a> {
 }
 
 impl Msg {
+    /// Encode into a fresh buffer (allocates; see [`Msg::encode_into`]
+    /// for the pooled-buffer path).
     pub fn encode(&self) -> Vec<u8> {
-        let mut b = Buf(Vec::with_capacity(64));
+        let mut out = Vec::with_capacity(64);
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Encode into a reusable buffer (cleared first).  Steady-state
+    /// callers reuse `out` across frames, so encoding allocates
+    /// nothing once the buffer's capacity has warmed up.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        let mut b = Buf(out);
         match self {
             Msg::Hello { env, seed, wrappers } => {
                 b.u8(TAG_HELLO);
@@ -178,25 +227,23 @@ impl Msg {
                 episode_step,
                 episode_return,
                 obs,
-            } => {
-                b.u8(TAG_OBS);
-                b.f32(*reward);
-                b.u8(*done as u8);
-                b.u32(*episode_step);
-                b.f32(*episode_return);
-                b.f32s(obs);
-            }
-            Msg::Action { action } => {
-                b.u8(TAG_ACTION);
-                b.u32(*action);
-            }
+            } => encode_observation_payload(
+                &mut b,
+                ObsHeader {
+                    reward: *reward,
+                    done: *done,
+                    episode_step: *episode_step,
+                    episode_return: *episode_return,
+                },
+                obs,
+            ),
+            Msg::Action { action } => encode_action_payload(&mut b, *action),
             Msg::Bye => b.u8(TAG_BYE),
             Msg::Error { message } => {
                 b.u8(TAG_ERROR);
                 b.str(message);
             }
         }
-        b.0
     }
 
     pub fn decode(payload: &[u8]) -> anyhow::Result<Msg> {
@@ -242,26 +289,196 @@ impl Msg {
     }
 }
 
-/// Write one framed message.
-pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> anyhow::Result<()> {
-    let payload = msg.encode();
+/// Frame and write a fully-encoded payload.  The `MAX_FRAME` cap is
+/// enforced on the write side too: an oversized payload errors before
+/// a single byte hits the wire (the peer would reject it anyway).
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        payload.len() <= MAX_FRAME,
+        "frame of {} bytes exceeds cap",
+        payload.len()
+    );
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
-    w.write_all(&payload)?;
+    w.write_all(payload)?;
     w.flush()?;
     Ok(())
 }
 
-/// Read one framed message.
-pub fn read_msg<R: Read>(r: &mut R) -> anyhow::Result<Msg> {
+/// Write one framed message (allocates a payload buffer).
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> anyhow::Result<()> {
+    let payload = msg.encode();
+    write_frame(w, &payload)
+}
+
+/// Write one framed message through a reusable scratch buffer
+/// (zero allocation once `scratch` has warmed up).
+pub fn write_msg_into<W: Write>(w: &mut W, scratch: &mut Vec<u8>, msg: &Msg) -> anyhow::Result<()> {
+    msg.encode_into(scratch);
+    write_frame(w, scratch)
+}
+
+/// `read_exact` that never loses partial progress to a read timeout.
+///
+/// * `idle_timeout_errors == true` (length prefix): a timeout with
+///   **zero** bytes consumed surfaces as an error so the caller can
+///   poll a stop flag and safely retry `read_frame` — nothing of the
+///   frame has been consumed yet.
+/// * Once any byte of the current unit has been consumed (or for the
+///   payload, where the prefix is already gone), timeouts keep
+///   reading: surfacing them would desynchronize the stream, because
+///   a retried `read_frame` would misparse mid-frame bytes as a new
+///   length prefix.
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8], idle_timeout_errors: bool) -> anyhow::Result<()> {
+    // A peer stalled mid-frame holds bytes we cannot replay; tolerate
+    // its read timeouts for a bounded wall-clock window (independent
+    // of the socket's configured read timeout), then drop the stream
+    // with a non-timeout error — a timeout error would invite a
+    // retried read_frame, which would misparse mid-frame bytes as a
+    // length prefix.
+    const MAX_MID_FRAME_STALL: std::time::Duration = std::time::Duration::from_secs(10);
+    let mut stalled_since: Option<std::time::Instant> = None;
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-frame",
+                )
+                .into())
+            }
+            Ok(n) => {
+                filled += n;
+                stalled_since = None;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if idle_timeout_errors && filled == 0 {
+                    return Err(e.into());
+                }
+                // mid-frame stall: retrying the read is the only safe
+                // option (bytes already consumed cannot be replayed)
+                let since = *stalled_since.get_or_insert_with(std::time::Instant::now);
+                if since.elapsed() >= MAX_MID_FRAME_STALL {
+                    anyhow::bail!("peer stalled mid-frame for {MAX_MID_FRAME_STALL:?}; giving up on the stream");
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame's payload into `scratch` (reused across calls; at a
+/// steady frame size this allocates nothing) and return it as a slice.
+///
+/// A read timeout before any byte of the frame arrives surfaces as an
+/// io error (callers poll shutdown flags on it and retry — safe, the
+/// stream position is untouched); a timeout *mid-frame* does not kill
+/// the stream position: the read resumes until the frame completes.
+pub fn read_frame<'a, R: Read>(r: &mut R, scratch: &'a mut Vec<u8>) -> anyhow::Result<&'a [u8]> {
     let mut len_buf = [0u8; 4];
-    r.read_exact(&mut len_buf)?;
+    read_full(r, &mut len_buf, true)?;
     let len = u32::from_le_bytes(len_buf) as usize;
     if len > MAX_FRAME {
         anyhow::bail!("frame of {len} bytes exceeds cap");
     }
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload)?;
-    Msg::decode(&payload)
+    scratch.resize(len, 0);
+    read_full(r, scratch, false)?;
+    Ok(&scratch[..])
+}
+
+/// Read one framed message (allocates; see [`read_frame`] +
+/// `decode_*` for the pooled-buffer path).
+pub fn read_msg<R: Read>(r: &mut R) -> anyhow::Result<Msg> {
+    let mut scratch = Vec::new();
+    let payload = read_frame(r, &mut scratch)?;
+    Msg::decode(payload)
+}
+
+// -- zero-allocation steady-state codecs -------------------------------------
+
+/// Header of an `Observation` frame, decoded without allocating.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ObsHeader {
+    pub reward: f32,
+    pub done: bool,
+    pub episode_step: u32,
+    pub episode_return: f32,
+}
+
+/// Encode and write one `Observation` frame from borrowed parts —
+/// the server's per-step path, with the obs plane taken by slice so
+/// no owning [`Msg`] is ever built.
+pub fn write_observation<W: Write>(
+    w: &mut W,
+    scratch: &mut Vec<u8>,
+    header: ObsHeader,
+    obs: &[f32],
+) -> anyhow::Result<()> {
+    scratch.clear();
+    let mut b = Buf(scratch);
+    encode_observation_payload(&mut b, header, obs);
+    write_frame(w, scratch)
+}
+
+/// Encode and write one `Action` frame (client per-step path).
+pub fn write_action<W: Write>(w: &mut W, scratch: &mut Vec<u8>, action: u32) -> anyhow::Result<()> {
+    scratch.clear();
+    let mut b = Buf(scratch);
+    encode_action_payload(&mut b, action);
+    write_frame(w, scratch)
+}
+
+/// Decode an `Observation` payload directly into `obs_out` (whose
+/// length must equal the frame's obs length).  Zero allocation.
+pub fn decode_observation_into(payload: &[u8], obs_out: &mut [f32]) -> anyhow::Result<ObsHeader> {
+    let mut c = Cursor { b: payload, i: 0 };
+    let tag = c.u8()?;
+    anyhow::ensure!(tag == TAG_OBS, "expected Observation frame, got tag {tag}");
+    let header = ObsHeader {
+        reward: c.f32()?,
+        done: c.u8()? != 0,
+        episode_step: c.u32()?,
+        episode_return: c.f32()?,
+    };
+    let n = c.u32()? as usize;
+    anyhow::ensure!(
+        n == obs_out.len(),
+        "obs length {n} != destination buffer {}",
+        obs_out.len()
+    );
+    c.need(n * 4)?;
+    for (k, dst) in obs_out.iter_mut().enumerate() {
+        let off = c.i + 4 * k;
+        *dst = f32::from_le_bytes(c.b[off..off + 4].try_into().unwrap());
+    }
+    c.i += 4 * n;
+    anyhow::ensure!(
+        c.i == payload.len(),
+        "{} trailing bytes in frame",
+        payload.len() - c.i
+    );
+    Ok(header)
+}
+
+/// Decode an `Action` payload.  Zero allocation.
+pub fn decode_action(payload: &[u8]) -> anyhow::Result<u32> {
+    let mut c = Cursor { b: payload, i: 0 };
+    let tag = c.u8()?;
+    anyhow::ensure!(tag == TAG_ACTION, "expected Action frame, got tag {tag}");
+    let action = c.u32()?;
+    anyhow::ensure!(
+        c.i == payload.len(),
+        "{} trailing bytes in frame",
+        payload.len() - c.i
+    );
+    Ok(action)
 }
 
 #[cfg(test)]
@@ -349,6 +566,244 @@ mod tests {
         let mut buf = Vec::new();
         buf.extend_from_slice(&(u32::MAX).to_le_bytes());
         assert!(read_msg(&mut &buf[..]).is_err());
+        // the pooled-buffer reader enforces the same cap
+        let mut scratch = Vec::new();
+        assert!(read_frame(&mut &buf[..], &mut scratch).is_err());
+    }
+
+    #[test]
+    fn write_rejects_oversized_frame() {
+        // MAX_FRAME is enforced before any byte is written
+        let payload = vec![0u8; MAX_FRAME + 1];
+        let mut out = Vec::new();
+        assert!(write_frame(&mut out, &payload).is_err());
+        assert!(out.is_empty(), "nothing may hit the wire");
+        // and through the message path: an obs just over the cap
+        let obs = vec![0.0f32; MAX_FRAME / 4];
+        let msg = Msg::Observation {
+            reward: 0.0,
+            done: false,
+            episode_step: 0,
+            episode_return: 0.0,
+            obs,
+        };
+        let mut scratch = Vec::new();
+        assert!(write_msg_into(&mut out, &mut scratch, &msg).is_err());
+        assert!(out.is_empty());
+        // at exactly the cap, frames still pass
+        let payload = vec![0u8; MAX_FRAME];
+        assert!(write_frame(&mut out, &payload).is_ok());
+    }
+
+    fn pooled_roundtrip(m: &Msg, scratch: &mut Vec<u8>, frame: &mut Vec<u8>) -> Msg {
+        let mut wire = Vec::new();
+        write_msg_into(&mut wire, scratch, m).unwrap();
+        let mut r = &wire[..];
+        let payload = read_frame(&mut r, frame).unwrap();
+        Msg::decode(payload).unwrap()
+    }
+
+    #[test]
+    fn pooled_buffers_roundtrip_every_variant() {
+        // property: every variant survives encode_into → frame →
+        // read_frame → decode with the same pair of reused buffers
+        let mut scratch = Vec::new();
+        let mut frame = Vec::new();
+        let variants = vec![
+            Msg::Hello {
+                env: "minatar/seaquest".into(),
+                seed: 42,
+                wrappers: WrapperCfg {
+                    action_repeat: 2,
+                    frame_stack: 1,
+                    reward_clip: 0.5,
+                    sticky_action_p: 0.1,
+                    time_limit: 500,
+                    noop_max: 4,
+                    episodic_life: false,
+                    env_cost_us: 0,
+                },
+            },
+            Msg::Spec {
+                channels: 10,
+                height: 10,
+                width: 10,
+                num_actions: 6,
+            },
+            Msg::Observation {
+                reward: 2.5,
+                done: false,
+                episode_step: 9,
+                episode_return: -3.0,
+                obs: vec![0.25; 33],
+            },
+            Msg::Action { action: 5 },
+            Msg::Bye,
+            Msg::Error {
+                message: "boom".into(),
+            },
+        ];
+        for m in &variants {
+            assert_eq!(&pooled_roundtrip(m, &mut scratch, &mut frame), m);
+        }
+        // pooled encode must byte-match the owned encode
+        for m in &variants {
+            m.encode_into(&mut scratch);
+            assert_eq!(&scratch[..], &m.encode()[..]);
+        }
+    }
+
+    #[test]
+    fn fuzz_pooled_observation_fast_path() {
+        // property: random observations through write_observation /
+        // decode_observation_into match the owned-Msg wire bytes and
+        // decode identically
+        let mut rng = Rng::new(99);
+        let mut scratch = Vec::new();
+        let mut frame = Vec::new();
+        for _ in 0..200 {
+            let n = 1 + rng.below(256);
+            let obs: Vec<f32> = (0..n).map(|_| rng.next_f32() * 8.0 - 4.0).collect();
+            let header = ObsHeader {
+                reward: rng.next_f32() - 0.5,
+                done: rng.chance(0.3),
+                episode_step: (rng.next_u64() & 0xFFFF) as u32,
+                episode_return: rng.next_f32() * 50.0,
+            };
+            let mut wire = Vec::new();
+            write_observation(&mut wire, &mut scratch, header, &obs).unwrap();
+            // byte-identical to the owned path
+            let owned = Msg::Observation {
+                reward: header.reward,
+                done: header.done,
+                episode_step: header.episode_step,
+                episode_return: header.episode_return,
+                obs: obs.clone(),
+            };
+            let mut owned_wire = Vec::new();
+            write_msg(&mut owned_wire, &owned).unwrap();
+            assert_eq!(wire, owned_wire);
+            // and decodes in place
+            let mut r = &wire[..];
+            let payload = read_frame(&mut r, &mut frame).unwrap();
+            let mut obs_out = vec![0.0f32; n];
+            let got = decode_observation_into(payload, &mut obs_out).unwrap();
+            assert_eq!(got, header);
+            assert_eq!(obs_out, obs);
+        }
+    }
+
+    #[test]
+    fn pooled_action_roundtrip_and_rejections() {
+        let mut scratch = Vec::new();
+        let mut frame = Vec::new();
+        let mut wire = Vec::new();
+        write_action(&mut wire, &mut scratch, 7).unwrap();
+        assert_eq!(wire, {
+            let mut v = Vec::new();
+            write_msg(&mut v, &Msg::Action { action: 7 }).unwrap();
+            v
+        });
+        let mut r = &wire[..];
+        let payload = read_frame(&mut r, &mut frame).unwrap();
+        assert_eq!(frame_tag(payload), Some(TAG_ACTION));
+        assert_eq!(decode_action(payload).unwrap(), 7);
+        // wrong tag rejected by both fast-path decoders
+        let bye = Msg::Bye.encode();
+        assert!(decode_action(&bye).is_err());
+        assert!(decode_observation_into(&bye, &mut []).is_err());
+        // obs length mismatch rejected before writing anything
+        let obs_msg = Msg::Observation {
+            reward: 0.0,
+            done: false,
+            episode_step: 0,
+            episode_return: 0.0,
+            obs: vec![1.0, 2.0],
+        }
+        .encode();
+        let mut short = vec![0.0f32; 3];
+        assert!(decode_observation_into(&obs_msg, &mut short).is_err());
+        // trailing bytes rejected
+        let mut extra = obs_msg.clone();
+        extra.push(0);
+        let mut two = vec![0.0f32; 2];
+        assert!(decode_observation_into(&extra, &mut two).is_err());
+        let mut act_extra = Msg::Action { action: 1 }.encode();
+        act_extra.push(9);
+        assert!(decode_action(&act_extra).is_err());
+    }
+
+    /// A reader that yields its bytes in dribs with a WouldBlock
+    /// "timeout" injected between every chunk — the shape of a TCP
+    /// stream whose peer stalls mid-frame.
+    struct StallingReader {
+        data: Vec<u8>,
+        pos: usize,
+        chunk: usize,
+        stall_next: bool,
+    }
+
+    impl std::io::Read for StallingReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.stall_next {
+                self.stall_next = false;
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WouldBlock,
+                    "injected timeout",
+                ));
+            }
+            self.stall_next = true;
+            let n = self.chunk.min(self.data.len() - self.pos).min(buf.len());
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn read_frame_survives_mid_frame_timeouts() {
+        // regression: a read timeout between the length prefix and the
+        // payload (or inside either) used to desynchronize the stream —
+        // the retried read misparsed payload bytes as a length prefix.
+        let msg = Msg::Observation {
+            reward: 1.0,
+            done: true,
+            episode_step: 4,
+            episode_return: 2.0,
+            obs: vec![0.5; 37],
+        };
+        let mut wire = Vec::new();
+        write_msg(&mut wire, &msg).unwrap();
+        for chunk in [1usize, 2, 3, 5, 7] {
+            let mut r = StallingReader {
+                data: wire.clone(),
+                pos: 0,
+                chunk,
+                // stall immediately: before any byte, the idle timeout
+                // must surface (nothing consumed — retry is safe)...
+                stall_next: true,
+            };
+            let mut scratch = Vec::new();
+            let first = read_frame(&mut r, &mut scratch);
+            let io = first.unwrap_err();
+            let io = io.downcast_ref::<std::io::Error>().unwrap();
+            assert_eq!(io.kind(), std::io::ErrorKind::WouldBlock);
+            // ...and the retry, despite a stall between every single
+            // chunk afterwards, must deliver the frame intact.
+            let payload = read_frame(&mut r, &mut scratch).unwrap();
+            assert_eq!(Msg::decode(payload).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn read_frame_errors_on_mid_frame_eof() {
+        let mut wire = Vec::new();
+        write_msg(&mut wire, &Msg::Action { action: 3 }).unwrap();
+        wire.truncate(wire.len() - 2); // peer dies mid-payload
+        let mut scratch = Vec::new();
+        let err = read_frame(&mut &wire[..], &mut scratch).unwrap_err();
+        let io = err.downcast_ref::<std::io::Error>().unwrap();
+        assert_eq!(io.kind(), std::io::ErrorKind::UnexpectedEof);
     }
 
     #[test]

@@ -19,7 +19,9 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::env;
-use crate::rpc::codec::{read_msg, write_msg, Msg};
+use crate::rpc::codec::{
+    self, read_msg, write_msg, write_observation, Msg, ObsHeader, TAG_ACTION, TAG_BYE,
+};
 
 /// Handle to a running environment server.
 pub struct EnvServer {
@@ -151,26 +153,35 @@ fn serve_stream(
         },
     )?;
 
-    // Serve loop with auto-reset.
+    // Serve loop with auto-reset.  All buffers below are allocated
+    // once per stream and reused every step: with the pooled codec
+    // APIs the steady-state Observation ← / Action → exchange performs
+    // zero heap allocation per frame (DESIGN.md §Buffer-Pool).
     let mut obs = vec![0.0f32; spec.obs_len()];
+    let mut frame_buf: Vec<u8> = Vec::new(); // reusable read-frame buffer
+    let mut write_buf: Vec<u8> = Vec::new(); // reusable write scratch
     env.reset(&mut obs);
     let mut episode_step: u32 = 0;
     let mut episode_return: f32 = 0.0;
-    write_msg(
+    write_observation(
         &mut writer,
-        &Msg::Observation {
+        &mut write_buf,
+        ObsHeader {
             reward: 0.0,
             done: false,
             episode_step,
             episode_return,
-            obs: obs.clone(),
         },
+        &obs,
     )?;
 
     loop {
-        let msg = loop {
-            match read_msg(&mut reader) {
-                Ok(m) => break m,
+        // Fill frame_buf with the next frame (poll the stop flag on
+        // read timeouts).  The Ok borrow is dropped here; the payload
+        // is re-sliced below so no borrow crosses the loop.
+        loop {
+            match codec::read_frame(&mut reader, &mut frame_buf) {
+                Ok(_) => break,
                 Err(e) if is_timeout(&e) => {
                     if stop.load(Ordering::Relaxed) {
                         let _ = write_msg(&mut writer, &Msg::Bye);
@@ -179,11 +190,18 @@ fn serve_stream(
                 }
                 Err(e) => return Err(e),
             }
-        };
-        let action = match msg {
-            Msg::Action { action } => action as usize,
-            Msg::Bye => return Ok(()),
-            other => anyhow::bail!("expected Action, got {other:?}"),
+        }
+        let payload: &[u8] = &frame_buf;
+        let action = match codec::frame_tag(payload) {
+            Some(TAG_ACTION) => codec::decode_action(payload)? as usize,
+            Some(TAG_BYE) => return Ok(()),
+            _ => {
+                let got = match Msg::decode(payload) {
+                    Ok(m) => format!("{m:?}"),
+                    Err(_) => format!("undecodable frame (tag {:?})", codec::frame_tag(payload)),
+                };
+                anyhow::bail!("expected Action, got {got}");
+            }
         };
         if action >= spec.num_actions {
             let _ = write_msg(&mut writer, &Msg::Error { message: format!("action {action} out of range (< {})", spec.num_actions) });
@@ -200,15 +218,16 @@ fn serve_stream(
             episode_step = 0;
             episode_return = 0.0;
         }
-        write_msg(
+        write_observation(
             &mut writer,
-            &Msg::Observation {
+            &mut write_buf,
+            ObsHeader {
                 reward: st.reward,
                 done: st.done,
                 episode_step: fin_step,
                 episode_return: fin_return,
-                obs: obs.clone(),
             },
+            &obs,
         )?;
     }
 }

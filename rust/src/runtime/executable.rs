@@ -55,7 +55,7 @@ impl Module {
     /// `execute` — that path creates an input device buffer per
     /// argument and `release()`s it without ever freeing (xla_rs.cc),
     /// leaking ~every input on every call (measured ~210 KB/inference,
-    /// OOM after minutes of training; EXPERIMENTS.md §Perf #5).
+    /// OOM after minutes of training; DESIGN.md §Perf).
     /// `execute_b` borrows caller-owned buffers, which Drop correctly.
     pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
         let t0 = Instant::now();

@@ -12,7 +12,7 @@
 //! All execution goes through [`Module::run_buffers`] (`execute_b`
 //! with caller-owned `PjRtBuffer`s) — the crate's Literal-based
 //! `execute` leaks its input buffers (see executable.rs and
-//! EXPERIMENTS.md §Perf #5).
+//! DESIGN.md §Perf).
 //!
 //! `xla` types are not `Send`, so each engine owns its *own*
 //! `PjRtClient`; parameters cross threads as plain `Vec<Vec<f32>>`

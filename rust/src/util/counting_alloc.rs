@@ -1,0 +1,51 @@
+//! Allocation-counting global allocator (bench instrumentation).
+//!
+//! The buffer-pool work (batcher slots, codec frame buffers) claims
+//! *zero steady-state heap allocations per request/frame*; the claim
+//! is only worth anything if it is measured.  Bench binaries install
+//! this allocator and difference [`allocations`] around their
+//! steady-state window:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: torchbeast::util::counting_alloc::CountingAllocator =
+//!     torchbeast::util::counting_alloc::CountingAllocator;
+//! ```
+//!
+//! The counter is process-global and covers every thread, which is the
+//! point: a per-request allocation anywhere in the hot path shows up.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Total number of `alloc`/`realloc` calls since process start.
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// `System` allocator wrapper that counts allocation events
+/// (deallocations are free and not counted).
+pub struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}

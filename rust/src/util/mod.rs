@@ -4,6 +4,7 @@
 //! implements the slices it needs from scratch (DESIGN.md
 //! §Substitutions).
 
+pub mod counting_alloc;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -41,8 +41,16 @@ fn floats(j: &Json, key: &str) -> Vec<f64> {
 
 #[test]
 fn rust_vtrace_matches_python_reference() {
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/data/vtrace_golden.json");
-    let text = std::fs::read_to_string(path).expect("golden file (scripts/gen_vtrace_golden.py)");
+    // (the manifest dir IS rust/ — the old "rust/tests/..." join looked
+    // for rust/rust/tests and could never find the fixture)
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/vtrace_golden.json");
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        panic!(
+            "golden fixture missing at {path} ({e}) — regenerate it with \
+             `python scripts/gen_vtrace_golden.py` from the repo root and \
+             commit the JSON"
+        )
+    });
     let cases = Json::parse(&text).unwrap();
     let cases = cases.as_arr().unwrap();
     assert!(cases.len() >= 5);

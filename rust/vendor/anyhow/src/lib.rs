@@ -1,0 +1,246 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access to crates.io, so this
+//! vendored crate implements the slice of anyhow's API the repo uses:
+//! [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`]
+//! macros, the [`Context`] extension trait, and source-preserving
+//! `downcast_ref`.  Swap the `anyhow` path dependency in
+//! `rust/Cargo.toml` for the registry crate if a registry becomes
+//! available — call sites need no changes.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `anyhow::Result<T>`: a Result defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: a chain of context messages plus an optional
+/// underlying source error (preserved for `downcast_ref`).
+pub struct Error {
+    /// Context messages, outermost first.  For errors created from a
+    /// message (`anyhow!`), the last entry is that message.
+    chain: Vec<String>,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+            source: None,
+        }
+    }
+
+    /// Wrap a concrete error, preserving it for `downcast_ref`.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error {
+            chain: Vec::new(),
+            source: Some(Box::new(error)),
+        }
+    }
+
+    /// Prepend a context message (outermost position).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Downcast to the original concrete error type, if this error was
+    /// created from one (possibly wrapped in context since).
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.source.as_deref().and_then(|s| s.downcast_ref::<E>())
+    }
+
+    /// The innermost error message (source if present, else the last
+    /// context message).
+    pub fn root_cause(&self) -> String {
+        match &self.source {
+            Some(s) => s.to_string(),
+            None => self.chain.last().cloned().unwrap_or_default(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for c in &self.chain {
+            if !first {
+                write!(f, ": ")?;
+            }
+            write!(f, "{c}")?;
+            first = false;
+        }
+        if let Some(s) = &self.source {
+            if !first {
+                write!(f, ": ")?;
+            }
+            write!(f, "{s}")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+// `?` conversion from any std error.  (Error itself does not implement
+// std::error::Error, so this blanket impl is coherent — same shape as
+// the real anyhow crate.)
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for std::result::Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::TimedOut, "took too long")
+    }
+
+    #[test]
+    fn message_errors_display() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let e = anyhow!("bad value {}", 4);
+        assert_eq!(e.to_string(), "bad value 4");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(n: usize) -> Result<usize> {
+            ensure!(n < 10, "n {} too big", n);
+            ensure!(n != 5);
+            if n == 3 {
+                bail!("three is right out");
+            }
+            Ok(n)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(12).unwrap_err().to_string().contains("too big"));
+        assert!(f(5).unwrap_err().to_string().contains("n != 5"));
+        assert!(f(3).unwrap_err().to_string().contains("right out"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::str::from_utf8(&[0xFF])?;
+            Ok(s.to_string())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn downcast_survives_context() {
+        let e: Error = Error::new(io_err()).context("outer");
+        let io = e.downcast_ref::<std::io::Error>().unwrap();
+        assert_eq!(io.kind(), std::io::ErrorKind::TimedOut);
+        assert!(e.to_string().starts_with("outer: "));
+        assert!(e.to_string().contains("took too long"));
+    }
+
+    #[test]
+    fn context_trait_on_results_and_options() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 7)).unwrap_err();
+        assert!(e.to_string().contains("step 7"));
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+
+        let o: Option<u32> = None;
+        let e = o.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn chained_context_order() {
+        let e = Error::msg("root").context("mid").context("outer");
+        assert_eq!(e.to_string(), "outer: mid: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+}

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 gate, one-liner for every PR:  scripts/ci.sh
+# Builds the crate, runs the full test suite, and (when rustfmt is
+# installed) checks formatting.  Run from anywhere; cds to rust/.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo build --release --benches (bench targets compile) =="
+cargo build --release --benches
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "== cargo fmt --check skipped (rustfmt not installed) =="
+fi
+
+echo "CI OK"
