@@ -54,7 +54,8 @@ fn main() -> anyhow::Result<()> {
     println!("\ntrained: {} frames at {:.0} fps", report.frames, report.fps);
     println!("mean training return (last 100 episodes): {final_return:.3}");
 
-    let eval = coordinator::evaluate(&cfg.artifact_dir, &report.final_params, 50, 123)?;
+    let eval =
+        coordinator::evaluate(&cfg.artifact_dir, &report.final_params, 50, 123, &cfg.wrappers)?;
     println!("greedy-policy eval over 50 episodes:      {eval:.3}  (optimal = 1.0)");
 
     if eval > 0.8 {

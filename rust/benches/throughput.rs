@@ -2,7 +2,12 @@
 //! actor count — regenerates the paper's §4 "on par in throughput"
 //! comparison on this testbed.  Also reports the batcher's mean
 //! request wait per run (the pooled hot path's latency contribution —
-//! the before/after handle for the buffer-pool work).
+//! the before/after handle for the buffer-pool work) and the
+//! stack/compute overlap of the double-buffered driver: `stack_ms` is
+//! wall time the prefetch thread spent assembling batches, `wait_ms`
+//! the time the learner actually stalled waiting for one.  Overlap is
+//! working when wait ≪ stack (stacking hides behind learner compute
+//! instead of adding to it).
 //!
 //! `cargo bench --bench throughput` (uses artifacts/catch).
 
@@ -12,7 +17,15 @@ use torchbeast::config::{Mode, TrainConfig};
 use torchbeast::coordinator;
 use torchbeast::util::stats::Bench;
 
-fn fps(mode: Mode, actors: usize, steps: u64) -> anyhow::Result<(f64, f64, f64)> {
+struct Run {
+    fps: f64,
+    wait_us: f64,
+    stack_ms: f64,
+    learner_wait_ms: f64,
+    learner_step_ms: f64,
+}
+
+fn run(mode: Mode, actors: usize, steps: u64) -> anyhow::Result<Run> {
     let cfg = TrainConfig {
         artifact_dir: "artifacts/catch".into(),
         mode,
@@ -25,11 +38,13 @@ fn fps(mode: Mode, actors: usize, steps: u64) -> anyhow::Result<(f64, f64, f64)>
     let t0 = Instant::now();
     let report = coordinator::train(&cfg)?;
     let wall = t0.elapsed().as_secs_f64();
-    Ok((
-        report.frames as f64 / wall,
-        report.batcher.mean_batch_size(),
-        report.batcher.mean_wait_us(),
-    ))
+    Ok(Run {
+        fps: report.frames as f64 / wall,
+        wait_us: report.batcher.mean_wait_us(),
+        stack_ms: report.stack_time.as_secs_f64() * 1e3,
+        learner_wait_ms: report.learner_wait.as_secs_f64() * 1e3,
+        learner_step_ms: report.learner_step_time.as_secs_f64() * 1e3 * report.steps as f64,
+    })
 }
 
 fn main() -> anyhow::Result<()> {
@@ -42,27 +57,46 @@ fn main() -> anyhow::Result<()> {
         "{:>8} {:>12} {:>12} {:>10} {:>14} {:>14}",
         "actors", "mono_fps", "poly_fps", "ratio", "mono_wait_us", "poly_wait_us"
     );
+    let mut overlap_rows = Vec::new();
     for &n in &[1usize, 2, 4, 8, 16] {
-        let (mono, _, mono_wait) = fps(Mode::Mono, n, 30)?;
-        let (poly, _, poly_wait) = fps(Mode::Poly, n, 30)?;
+        let mono = run(Mode::Mono, n, 30)?;
+        let poly = run(Mode::Poly, n, 30)?;
         println!(
             "{:>8} {:>12.0} {:>12.0} {:>10.2} {:>14.0} {:>14.0}",
             n,
-            mono,
-            poly,
-            poly / mono,
-            mono_wait,
-            poly_wait
-        );
-        b.record(
-            &format!("mono actors={n}"),
-            1,
-            std::time::Duration::from_secs_f64(1.0 / mono.max(1e-9)),
+            mono.fps,
+            poly.fps,
+            poly.fps / mono.fps,
+            mono.wait_us,
+            poly.wait_us
         );
         b.record(
             &format!("poly actors={n}"),
             1,
-            std::time::Duration::from_secs_f64(1.0 / poly.max(1e-9)),
+            std::time::Duration::from_secs_f64(1.0 / poly.fps.max(1e-9)),
+        );
+        overlap_rows.push((n, mono));
+    }
+    println!(
+        "\n== stack/compute overlap (mono): prefetch thread vs learner stall ==\n\
+         {:>8} {:>12} {:>12} {:>14} {:>14}",
+        "actors", "stack_ms", "wait_ms", "learner_ms", "hidden_frac"
+    );
+    for (n, m) in &overlap_rows {
+        // fraction of stacking wall time hidden behind learner compute
+        let hidden = if m.stack_ms > 0.0 {
+            1.0 - (m.learner_wait_ms / m.stack_ms).min(1.0)
+        } else {
+            1.0
+        };
+        println!(
+            "{:>8} {:>12.2} {:>12.2} {:>14.2} {:>14.2}",
+            n, m.stack_ms, m.learner_wait_ms, m.learner_step_ms, hidden
+        );
+        b.record(
+            &format!("mono actors={n}"),
+            1,
+            std::time::Duration::from_secs_f64(1.0 / m.fps.max(1e-9)),
         );
     }
     b.report();

@@ -6,13 +6,28 @@
 //! independent, reproducible stream).
 
 use crate::util::rng::Rng;
-use crate::vtrace::softmax;
+use crate::vtrace::{softmax, softmax_into};
 
 /// Sample an action from categorical logits by inverse-CDF on the
 /// softmax (f64 accumulation: the tail action must remain reachable).
+///
+/// Allocates a probability buffer per call; the actor hot loop uses
+/// [`sample_action_scratch`] with a preallocated buffer instead.
 pub fn sample_action(logits: &[f32], rng: &mut Rng) -> usize {
-    debug_assert!(!logits.is_empty());
     let probs = softmax(logits);
+    sample_from_probs(&probs, rng)
+}
+
+/// Allocation-free variant of [`sample_action`]: the softmax is
+/// computed into `scratch` (`scratch.len() == logits.len()`), which
+/// the caller reuses across steps.
+pub fn sample_action_scratch(logits: &[f32], scratch: &mut [f32], rng: &mut Rng) -> usize {
+    softmax_into(logits, scratch);
+    sample_from_probs(scratch, rng)
+}
+
+fn sample_from_probs(probs: &[f32], rng: &mut Rng) -> usize {
+    debug_assert!(!probs.is_empty());
     let u = rng.next_f64();
     let mut acc = 0.0f64;
     for (i, &p) in probs.iter().enumerate() {
@@ -98,6 +113,20 @@ mod tests {
             .count();
         let f = hot as f64 / n as f64;
         assert!((f - 0.25).abs() < 0.03, "{f}");
+    }
+
+    #[test]
+    fn scratch_variant_matches_allocating_one() {
+        let logits = [0.7f32, -0.2, 1.3, 0.0];
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        let mut scratch = [0.0f32; 4];
+        for _ in 0..500 {
+            assert_eq!(
+                sample_action(&logits, &mut a),
+                sample_action_scratch(&logits, &mut scratch, &mut b)
+            );
+        }
     }
 
     #[test]

@@ -129,8 +129,14 @@ impl TrainConfig {
                     .as_arr()
                     .ok_or_else(|| anyhow::anyhow!("server_addresses expects a list"))?
                     .iter()
-                    .map(|s| s.as_str().unwrap_or_default().to_string())
-                    .collect()
+                    .map(|s| {
+                        s.as_str().map(str::to_string).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "server_addresses entries must be strings, got {s:?}"
+                            )
+                        })
+                    })
+                    .collect::<anyhow::Result<Vec<String>>>()?
             }
             "log_path" => self.log_path = Some(PathBuf::from(st(v)?)),
             "checkpoint_path" => self.checkpoint_path = Some(PathBuf::from(st(v)?)),
@@ -250,6 +256,20 @@ mod tests {
         assert_eq!(c.num_actors, 8);
         assert_eq!(c.seed, 99);
         assert_eq!(c.artifact_dir, PathBuf::from("artifacts/breakout"));
+    }
+
+    #[test]
+    fn non_string_server_addresses_rejected() {
+        // these used to be silently mapped to "" (a connect error far
+        // from the config mistake); now the config is rejected up front
+        let mut c = TrainConfig::default();
+        let j = Json::parse(r#"{"server_addresses": ["127.0.0.1:7001", 7002]}"#).unwrap();
+        let err = c.apply_json(&j).unwrap_err().to_string();
+        assert!(err.contains("server_addresses"), "{err}");
+        // valid lists still parse
+        let ok = Json::parse(r#"{"server_addresses": ["a:1", "b:2"]}"#).unwrap();
+        c.apply_json(&ok).unwrap();
+        assert_eq!(c.server_addresses, vec!["a:1".to_string(), "b:2".to_string()]);
     }
 
     #[test]

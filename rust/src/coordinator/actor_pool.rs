@@ -8,18 +8,21 @@
 //!      blocks until the batched policy evaluation returns;
 //!   2. samples an action from the returned logits (own RNG stream);
 //!   3. steps its environment (local or remote — same trait);
-//!   4. appends the transition to its rollout; after `unroll_length`
-//!      steps, ships the rollout to the learner queue and rolls the
-//!      buffer over (the T+1-th obs becomes obs 0, contiguous
-//!      experience exactly like TorchBeast).
+//!   4. appends the transition to its rollout buffer (rented from the
+//!      shared [`RolloutPool`]); after `unroll_length` steps, ships
+//!      the buffer itself to the learner queue (no clone), rents a
+//!      fresh one, and copies the T+1-th obs into its slot 0
+//!      (contiguous experience exactly like TorchBeast).  The learner
+//!      side recycles buffers after stacking, closing the §5.1
+//!      buffer-reuse loop.
 
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::agent::sample_action;
+use crate::agent::sample_action_scratch;
 use crate::coordinator::batching_queue::QueueSender;
 use crate::coordinator::dynamic_batcher::InferenceClient;
-use crate::coordinator::rollout::Rollout;
+use crate::coordinator::rollout::{Rollout, RolloutPool};
 use crate::env::Environment;
 use crate::metrics::Metrics;
 use crate::util::rng::Rng;
@@ -45,11 +48,14 @@ pub struct ActorConfig {
 }
 
 impl ActorPool {
-    /// Spawn one actor thread per environment in `envs`.
+    /// Spawn one actor thread per environment in `envs`.  Rollout
+    /// buffers are rented from `pool` and shipped — filled, by value —
+    /// through `learner_queue`; the learner side recycles them.
     pub fn spawn(
         envs: Vec<Box<dyn Environment>>,
         client: InferenceClient,
         learner_queue: QueueSender<Rollout>,
+        pool: RolloutPool,
         metrics: Arc<Metrics>,
         cfg: ActorConfig,
     ) -> ActorPool {
@@ -59,12 +65,15 @@ impl ActorPool {
             .map(|(id, env)| {
                 let client = client.clone();
                 let queue = learner_queue.clone();
+                let pool = pool.clone();
                 let metrics = metrics.clone();
                 let seed = cfg.seed ^ (id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
                 let (t, a, obs_len) = (cfg.unroll_length, cfg.num_actions, cfg.obs_len);
                 std::thread::Builder::new()
                     .name(format!("actor-{id}"))
-                    .spawn(move || actor_loop(id, env, client, queue, metrics, seed, t, a, obs_len))
+                    .spawn(move || {
+                        actor_loop(id, env, client, queue, pool, metrics, seed, t, a, obs_len)
+                    })
                     .expect("spawn actor")
             })
             .collect();
@@ -94,6 +103,7 @@ fn actor_loop(
     mut env: Box<dyn Environment>,
     client: InferenceClient,
     queue: QueueSender<Rollout>,
+    pool: RolloutPool,
     metrics: Arc<Metrics>,
     seed: u64,
     unroll_length: usize,
@@ -105,12 +115,23 @@ fn actor_loop(
         ..Default::default()
     };
     let mut rng = Rng::new(seed);
-    let mut rollout = Rollout::new(unroll_length, obs_len, num_actions);
     let mut obs = vec![0.0f32; obs_len];
-    // Reused result buffer: the whole act-step loop is allocation-free
-    // (obs goes straight into a pooled batcher slot, logits come back
-    // into this preallocated buffer).
+    // Preallocated result + softmax scratch buffers: the whole
+    // act-step loop is allocation-free (obs goes straight into a
+    // pooled batcher slot, logits come back into `logits`, sampling
+    // runs through `probs`) — measured by tests/alloc_regression.rs.
     let mut logits = vec![0.0f32; num_actions];
+    let mut probs = vec![0.0f32; num_actions];
+    let Some(mut rollout) = pool.rent() else {
+        // Pool closed before we produced anything: shutdown race.
+        queue.close();
+        return report;
+    };
+    debug_assert_eq!(
+        (rollout.t, rollout.obs_len, rollout.num_actions),
+        (unroll_length, obs_len, num_actions),
+        "pool buffer shape mismatch"
+    );
     env.reset(&mut obs);
     rollout.set_obs(0, &obs);
     let mut ep_return = 0.0f32;
@@ -124,10 +145,11 @@ fn actor_loop(
                 // inference thread died): either way no rollout will
                 // ever complete again — close the learner queue so
                 // the learner unblocks instead of waiting forever.
+                pool.recycle(rollout);
                 queue.close();
                 return report;
             };
-            let action = sample_action(&logits, &mut rng);
+            let action = sample_action_scratch(&logits, &mut probs, &mut rng);
             let step = env.step(action, &mut obs);
             report.frames += 1;
             metrics.add_frames(1);
@@ -143,14 +165,21 @@ fn actor_loop(
             }
             rollout.set_obs(i + 1, &obs);
         }
-        // Ship the completed rollout (clone: the learner owns its copy,
-        // the actor's buffer rolls over in place).
-        if queue.send(rollout.clone()).is_err() {
+        // Ship the filled buffer itself — no clone; the learner side
+        // recycles it into the pool after stacking.
+        if queue.send(rollout).is_err() {
             return report; // learner queue closed
         }
         metrics.record_rollout();
         report.rollouts += 1;
-        rollout.roll_over();
+        // Rent the next buffer and carry the bootstrap observation
+        // over: obs still holds frame T, which becomes obs 0 of the
+        // next rollout (contiguous experience exactly like TorchBeast).
+        let Some(next) = pool.rent() else {
+            return report; // pool closed: shutdown
+        };
+        rollout = next;
+        rollout.set_obs(0, &obs);
     }
 }
 
@@ -161,6 +190,10 @@ mod tests {
     use crate::coordinator::dynamic_batcher::{dynamic_batcher, BatcherConfig};
     use crate::env::make_env;
     use std::time::Duration;
+
+    fn test_pool(n: usize, t: usize, obs_len: usize, a: usize) -> RolloutPool {
+        RolloutPool::new(n, t, obs_len, a)
+    }
 
     /// Drive a tiny mono setup with a stub inference thread; checks the
     /// full actor data path without XLA.
@@ -188,10 +221,12 @@ mod tests {
         let envs: Vec<Box<dyn Environment>> = (0..3)
             .map(|i| make_env("catch", i as u64).unwrap())
             .collect();
+        let buffers = test_pool(8, t, spec.obs_len(), spec.num_actions);
         let pool = ActorPool::spawn(
             envs,
             client.clone(),
             tx.clone(),
+            buffers.clone(),
             metrics.clone(),
             ActorConfig {
                 unroll_length: t,
@@ -201,7 +236,7 @@ mod tests {
             },
         );
 
-        // collect a few batches
+        // collect a few batches, recycling like the learner side does
         let mut seen = 0;
         while seen < 4 {
             let rollouts = rx.recv_batch(2).unwrap();
@@ -227,12 +262,16 @@ mod tests {
                     );
                 }
             }
+            for r in rollouts {
+                buffers.recycle(r);
+            }
             seen += 1;
         }
 
-        // shutdown: close queue + batcher, join
+        // shutdown: close queue + batcher + pool, join
         rx.close();
         client.shutdown_for_tests();
+        buffers.close();
         let reports = pool.join();
         infer_thread.join().unwrap();
         assert_eq!(reports.len(), 3);
@@ -262,10 +301,12 @@ mod tests {
                 batch.respond(&vec![0.0; n * 4], &vec![0.0; n], 4).unwrap();
             }
         });
+        let buffers = test_pool(4, t, spec.obs_len(), spec.num_actions);
         let pool = ActorPool::spawn(
             vec![make_env("gridworld", 3).unwrap()],
             client.clone(),
             tx,
+            buffers.clone(),
             metrics,
             ActorConfig {
                 unroll_length: t,
@@ -280,11 +321,63 @@ mod tests {
         assert_eq!(
             r1.observations[t * obs_len..(t + 1) * obs_len],
             r2.observations[..obs_len],
-            "bootstrap obs must roll over"
+            "bootstrap obs must carry over into the next rented buffer"
         );
         rx.close();
         client.shutdown_for_tests();
+        buffers.close();
         pool.join();
+        infer_thread.join().unwrap();
+    }
+
+    /// Shutdown with the pool fully drained: the actor blocks in
+    /// `rent` (nobody recycles), then everything closes — the join
+    /// must not deadlock and the shipped rollout must be intact.
+    #[test]
+    fn shutdown_with_exhausted_pool_does_not_deadlock() {
+        let t = 3;
+        let spec = crate::env::spec_of("catch").unwrap();
+        let (client, stream) = dynamic_batcher(BatcherConfig::new(
+            1,
+            Duration::from_micros(100),
+            spec.obs_len(),
+            spec.num_actions,
+        ));
+        let (tx, rx) = batching_queue::<Rollout>(4);
+        let metrics = Metrics::shared();
+        let infer_thread = std::thread::spawn(move || {
+            while let Some(batch) = stream.next_batch() {
+                let n = batch.len();
+                batch.respond(&vec![0.0; n * 3], &vec![0.0; n], 3).unwrap();
+            }
+        });
+        // a single buffer: after shipping rollout #1 the actor blocks
+        // on rent until close
+        let buffers = test_pool(1, t, spec.obs_len(), spec.num_actions);
+        let pool = ActorPool::spawn(
+            vec![make_env("catch", 0).unwrap()],
+            client.clone(),
+            tx,
+            buffers.clone(),
+            metrics,
+            ActorConfig {
+                unroll_length: t,
+                num_actions: spec.num_actions,
+                obs_len: spec.obs_len(),
+                seed: 2,
+            },
+        );
+        let r = rx.recv_batch(1).unwrap().remove(0);
+        assert!(r.is_complete());
+        assert_eq!(buffers.available(), 0, "the only buffer is in flight");
+        // close everything while the actor is starved
+        std::thread::sleep(Duration::from_millis(10));
+        rx.close();
+        buffers.close();
+        client.shutdown_for_tests();
+        let reports = pool.join();
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].rollouts, 1);
         infer_thread.join().unwrap();
     }
 }

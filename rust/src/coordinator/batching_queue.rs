@@ -83,13 +83,42 @@ impl<T> QueueReceiver<T> {
     /// Block until `n` items are available; returns them FIFO.
     /// Returns None when closed and fewer than `n` remain.
     pub fn recv_batch(&self, n: usize) -> Option<Vec<T>> {
+        let mut batch = Vec::with_capacity(n);
+        if self.recv_batch_into(n, &mut batch) {
+            Some(batch)
+        } else {
+            None
+        }
+    }
+
+    /// Allocation-free [`recv_batch`](Self::recv_batch): drains `n`
+    /// items into `out` (cleared first; reused across calls, so steady
+    /// state moves items without growing the buffer).  Returns false
+    /// when the queue is closed with fewer than `n` items remaining.
+    pub fn recv_batch_into(&self, n: usize, out: &mut Vec<T>) -> bool {
+        out.clear();
         let mut st = self.shared.state.lock().unwrap();
         loop {
             if st.queue.len() >= n {
-                let batch: Vec<T> = st.queue.drain(..n).collect();
+                out.extend(st.queue.drain(..n));
                 // wake all blocked producers — n slots opened
                 self.shared.not_full.notify_all();
-                return Some(batch);
+                return true;
+            }
+            if st.closed {
+                return false;
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking single dequeue; None once closed and empty.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.queue.pop_front() {
+                self.shared.not_full.notify_one();
+                return Some(item);
             }
             if st.closed {
                 return None;
@@ -218,6 +247,36 @@ mod tests {
         // but try_recv can drain it
         assert_eq!(rx.try_recv(), Some(4));
         assert_eq!(rx.try_recv(), None);
+    }
+
+    #[test]
+    fn recv_batch_into_reuses_buffer() {
+        let (tx, rx) = batching_queue(8);
+        for i in 0..6 {
+            tx.send(i).unwrap();
+        }
+        let mut buf = Vec::with_capacity(3);
+        assert!(rx.recv_batch_into(3, &mut buf));
+        assert_eq!(buf, vec![0, 1, 2]);
+        let ptr = buf.as_ptr();
+        assert!(rx.recv_batch_into(3, &mut buf));
+        assert_eq!(buf, vec![3, 4, 5]);
+        assert_eq!(ptr, buf.as_ptr(), "buffer must be reused, not regrown");
+        tx.close();
+        assert!(!rx.recv_batch_into(1, &mut buf));
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn recv_single_and_close() {
+        let (tx, rx) = batching_queue(4);
+        tx.send(7).unwrap();
+        assert_eq!(rx.recv(), Some(7));
+        let consumer = std::thread::spawn(move || rx.recv());
+        std::thread::sleep(Duration::from_millis(5));
+        tx.send(8).unwrap();
+        tx.close();
+        assert_eq!(consumer.join().unwrap(), Some(8));
     }
 
     #[test]

@@ -18,8 +18,9 @@ use crate::config::{Mode, TrainConfig};
 use crate::coordinator::actor_pool::{ActorConfig, ActorPool};
 use crate::coordinator::batching_queue::batching_queue;
 use crate::coordinator::dynamic_batcher::{dynamic_batcher, BatcherConfig, BatcherStats};
-use crate::coordinator::rollout::{stack_rollouts, Rollout};
+use crate::coordinator::rollout::{stack_rollouts, Rollout, RolloutPool};
 use crate::coordinator::weights::WeightsStore;
+use crate::env::wrappers::WrapperCfg;
 use crate::env::{self, Environment};
 use crate::metrics::{CurveLogger, Metrics, Snapshot};
 use crate::rpc::{EnvServer, RemoteEnv};
@@ -48,6 +49,37 @@ pub struct TrainReport {
     pub batcher: BatcherStats,
     pub final_snapshot: Snapshot,
     pub learner_step_time: Duration,
+    /// Total wall time the stacker thread spent assembling batches
+    /// (runs concurrently with learner steps — overlapped, not added).
+    pub stack_time: Duration,
+    /// Total wall time the learner spent waiting for a prefetched
+    /// batch (small when stacking hides behind learner compute).
+    pub learner_wait: Duration,
+}
+
+/// Fold a u64 run seed into the i32 the init artifact accepts.
+///
+/// A plain `as i32` truncation silently aliases every seed that
+/// agrees in the low 32 bits (and goes negative half the time) —
+/// distinct runs would collide on identical initializations.  Seeds
+/// within i32 range pass through unchanged (reproducibility of
+/// existing runs); larger ones are hash-folded over all 64 bits
+/// (splitmix64 finalizer) with a loud notice, so distinct runs no
+/// longer silently collide.
+pub fn fold_seed(seed: u64) -> i32 {
+    if seed <= i32::MAX as u64 {
+        return seed as i32;
+    }
+    let mut z = seed;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    let folded = (z >> 33) as i32; // top 31 bits: always non-negative
+    eprintln!(
+        "[train] seed {seed} exceeds i32::MAX; hash-folded to {folded} for artifact \
+         init (record the folded value to reproduce this run)"
+    );
+    folded
 }
 
 /// Run a full training job per `cfg`. Blocks until `total_steps`
@@ -75,7 +107,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             eprintln!("[train] resumed params from {}", path.display());
             params
         }
-        None => learner.init_params(cfg.seed as i32)?,
+        None => learner.init_params(fold_seed(cfg.seed))?,
     };
     let weights = WeightsStore::new();
     weights.publish(initial.clone());
@@ -107,6 +139,15 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         manifest.batch_size
     );
     let (rollout_tx, rollout_rx) = batching_queue::<Rollout>(cfg.queue_capacity);
+    // Rollout buffer pool: one in hand per actor, the queue's worth in
+    // flight, and one batch being stacked — every buffer preallocated,
+    // recycled by the stacker thread after stacking (§5.1 closed loop).
+    let buffer_pool = RolloutPool::new(
+        cfg.num_actors + cfg.queue_capacity + manifest.batch_size,
+        manifest.unroll_length,
+        manifest.obs_len(),
+        num_actions,
+    );
     let metrics = Metrics::shared();
 
     // -- environments (mono: local; poly: remote streams)
@@ -140,6 +181,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         envs,
         infer_client.clone(),
         rollout_tx.clone(),
+        buffer_pool.clone(),
         metrics.clone(),
         ActorConfig {
             unroll_length: manifest.unroll_length,
@@ -149,20 +191,65 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         },
     );
 
+    // -- stacker thread: double-buffered batch prefetch.  Two
+    // LearnerBatch buffers circulate between this thread and the
+    // learner loop: while the learner runs step N, the stacker drains
+    // B rollouts and stacks batch N+1 into the other buffer, then
+    // recycles the rollouts into the pool.  Stacking cost is thereby
+    // overlapped with — not added to — learner compute.
+    let (batch_tx, batch_rx) = batching_queue::<LearnerBatch>(2);
+    let (return_tx, return_rx) = batching_queue::<LearnerBatch>(2);
+    for _ in 0..2 {
+        return_tx
+            .send(LearnerBatch::zeros(&manifest))
+            .expect("fresh return queue");
+    }
+    let stacker_manifest = manifest.clone();
+    let stacker_pool = buffer_pool.clone();
+    let stacker_thread = std::thread::Builder::new()
+        .name("stacker".into())
+        .spawn(move || -> Duration {
+            let b = stacker_manifest.batch_size;
+            let mut rollouts: Vec<Rollout> = Vec::with_capacity(b);
+            let mut stacking = Duration::ZERO;
+            loop {
+                // wait for a free batch buffer, then for B rollouts
+                let Some(mut batch) = return_rx.recv() else { break };
+                if !rollout_rx.recv_batch_into(b, &mut rollouts) {
+                    break;
+                }
+                let t0 = Instant::now();
+                stack_rollouts(&rollouts, &stacker_manifest, &mut batch);
+                for r in rollouts.drain(..) {
+                    stacker_pool.recycle(r);
+                }
+                stacking += t0.elapsed();
+                if batch_tx.send(batch).is_err() {
+                    break;
+                }
+            }
+            // unblock the learner whichever way this loop ended
+            batch_tx.close();
+            stacking
+        })?;
+
     // -- learner loop (inline on this thread)
     let mut logger = match &cfg.log_path {
         Some(p) => Some(CurveLogger::create(p)?),
         None => None,
     };
     let mut history = Vec::new();
-    let mut batch = LearnerBatch::zeros(&manifest);
     let mut final_params = initial;
+    let mut learner_wait = Duration::ZERO;
     for step in 1..=cfg.total_steps {
-        let Some(rollouts) = rollout_rx.recv_batch(manifest.batch_size) else {
+        let t_wait = Instant::now();
+        let Some(batch) = batch_rx.recv() else {
             break;
         };
-        stack_rollouts(&rollouts, &manifest, &mut batch);
+        learner_wait += t_wait.elapsed();
         let (stats, snapshot) = learner.step(&batch)?;
+        // hand the buffer back so the stacker can prefetch step N+2
+        let _ = return_tx.send(batch);
         weights.publish(snapshot.clone());
         final_params = snapshot;
         metrics.record_learner_step(stats.total_loss());
@@ -192,11 +279,17 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         }
     }
 
-    // -- orderly shutdown: stop actors first, then inference
-    rollout_rx.close();
+    // -- orderly shutdown: stop actors + stacker first, then inference
+    rollout_tx.close(); // actors' sends fail; stacker's rollout recv unblocks
+    return_tx.close(); // stacker's buffer wait unblocks
+    batch_rx.close();
+    buffer_pool.close(); // actors blocked on rent unblock
     infer_client.close();
     weights.close();
     pool.join();
+    let stack_time = stacker_thread
+        .join()
+        .map_err(|_| anyhow::anyhow!("stacker thread panicked"))?;
     inference_thread
         .join()
         .map_err(|_| anyhow::anyhow!("inference thread panicked"))??;
@@ -222,6 +315,8 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         batcher: batcher_stats,
         final_snapshot: snap,
         learner_step_time: learner.mean_step_time(),
+        stack_time,
+        learner_wait,
     })
 }
 
@@ -267,18 +362,37 @@ fn build_envs(
     }
 }
 
+/// Build the evaluation environment **exactly** as training builds its
+/// actor environments (same wrapper stack): evaluation must run the
+/// same MDP the policy was trained on, or returns are incomparable —
+/// `action_repeat`/`sticky_action_p`/`time_limit` all change the
+/// reward process.  (Training goes through [`env::make_wrapped`] in
+/// [`build_envs`]; evaluating on the bare env was a silent MDP swap.)
+fn eval_env(name: &str, seed: u64, wrappers: &WrapperCfg) -> Result<Box<dyn Environment>> {
+    env::make_wrapped(name, seed, wrappers)
+}
+
 /// Greedy-policy evaluation of a parameter snapshot: fresh inference
-/// engine, argmax actions, `episodes` episodes. Returns mean return.
+/// engine, argmax actions, `episodes` episodes under the *training*
+/// wrapper stack. Returns mean return.
 pub fn evaluate(
     artifact_dir: &std::path::Path,
     params: &ParamVecs,
     episodes: usize,
     seed: u64,
+    wrappers: &WrapperCfg,
 ) -> Result<f64> {
     let mut engine = InferenceEngine::load(artifact_dir)?;
     engine.set_params(params, 1)?;
     let manifest = engine.manifest.clone();
-    let mut env = env::make_env(&manifest.env, seed)?;
+    let mut env = eval_env(&manifest.env, seed, wrappers)?;
+    anyhow::ensure!(
+        env.spec().obs_len() == manifest.obs_len(),
+        "wrapped obs length {} != artifact obs length {} (frame_stack must be \
+         baked into the artifact, not applied at eval time)",
+        env.spec().obs_len(),
+        manifest.obs_len()
+    );
     let mut obs = vec![0.0f32; manifest.obs_len()];
     let mut total = 0.0f64;
     for _ in 0..episodes {
@@ -298,4 +412,82 @@ pub fn evaluate(
         total += ep;
     }
     Ok(total / episodes as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_seed_is_identity_in_i32_range() {
+        assert_eq!(fold_seed(0), 0);
+        assert_eq!(fold_seed(1), 1);
+        assert_eq!(fold_seed(i32::MAX as u64), i32::MAX);
+    }
+
+    #[test]
+    fn fold_seed_does_not_alias_truncation_collisions() {
+        // these alias to the same i32 under `as i32` truncation
+        let a = 5u64;
+        let b = 5u64 + (1u64 << 32);
+        let c = 5u64 + (2u64 << 32);
+        assert_eq!(a as i32, b as i32);
+        let (fa, fb, fc) = (fold_seed(a), fold_seed(b), fold_seed(c));
+        assert_ne!(fa, fb, "truncation alias must fold apart");
+        assert_ne!(fb, fc);
+        assert!(fb >= 0 && fc >= 0, "folded seeds stay non-negative");
+        // deterministic
+        assert_eq!(fb, fold_seed(b));
+    }
+
+    /// Regression for the eval-MDP bug: `evaluate` used `make_env`
+    /// while training used `make_wrapped`, so configured wrappers were
+    /// silently dropped at eval time.  The eval env must honor the
+    /// wrapper stack exactly like `build_envs` does.
+    #[test]
+    fn eval_env_applies_training_wrapper_stack() {
+        let wrappers = WrapperCfg {
+            action_repeat: 3,
+            ..WrapperCfg::default()
+        };
+        // catch episodes are 9 bare steps; under action_repeat=3 the
+        // wrapped episode lasts 3 agent steps.  The bare env (the old
+        // evaluate path) would take 9.
+        let mut env = eval_env("catch", 0, &wrappers).unwrap();
+        let mut obs = vec![0.0f32; env.spec().obs_len()];
+        env.reset(&mut obs);
+        let mut steps = 0;
+        loop {
+            steps += 1;
+            if env.step(1, &mut obs).done {
+                break;
+            }
+        }
+        assert_eq!(steps, 3, "eval env must run the wrapped MDP");
+
+        // frame_stack changes the obs shape: evaluate's shape guard
+        // sees the mismatch instead of crashing into the engine
+        let stacked = WrapperCfg {
+            frame_stack: 2,
+            ..WrapperCfg::default()
+        };
+        let env = eval_env("catch", 0, &stacked).unwrap();
+        let bare = env::spec_of("catch").unwrap();
+        assert_eq!(env.spec().obs_len(), 2 * bare.obs_len());
+    }
+
+    /// Time limits are part of the MDP too (truncation changes mean
+    /// returns); eval must see them.
+    #[test]
+    fn eval_env_honors_time_limit() {
+        let wrappers = WrapperCfg {
+            time_limit: 2,
+            ..WrapperCfg::default()
+        };
+        let mut env = eval_env("gridworld", 1, &wrappers).unwrap();
+        let mut obs = vec![0.0f32; env.spec().obs_len()];
+        env.reset(&mut obs);
+        assert!(!env.step(0, &mut obs).done);
+        assert!(env.step(0, &mut obs).done, "truncated at the limit");
+    }
 }

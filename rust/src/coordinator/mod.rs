@@ -2,7 +2,7 @@
 //!
 //! * [`dynamic_batcher`] — batcher.cc reproduction (inference queue);
 //! * [`batching_queue`] — learner queue with backpressure;
-//! * [`rollout`] — rollout buffers + time-major batch stacking;
+//! * [`rollout`] — pooled rollout buffers + time-major batch stacking;
 //! * [`actor_pool`] — actor threads (local or remote envs);
 //! * [`weights`] — versioned learner→inference parameter store;
 //! * [`driver`] — `train()`: wires everything, runs the learner loop.
@@ -14,4 +14,5 @@ pub mod dynamic_batcher;
 pub mod rollout;
 pub mod weights;
 
-pub use driver::{evaluate, train, TrainReport};
+pub use driver::{evaluate, fold_seed, train, TrainReport};
+pub use rollout::RolloutPool;

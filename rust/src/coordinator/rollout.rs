@@ -8,6 +8,8 @@
 //! the learner artifact was compiled for (`[T, B, ...]`, index
 //! `t * B + b`).
 
+use std::sync::{Arc, Condvar, Mutex};
+
 use crate::runtime::{LearnerBatch, Manifest};
 
 /// One actor's T-step rollout (batch dimension absent).
@@ -75,17 +77,122 @@ impl Rollout {
     pub fn is_complete(&self) -> bool {
         self.filled == self.t
     }
+}
 
-    /// Reset for reuse (buffer-recycling discipline of §5.1). The
-    /// T+1-th observation of the previous rollout becomes observation
-    /// 0 of the next (contiguous experience, like TorchBeast).
-    pub fn roll_over(&mut self) {
-        let last = self.t * self.obs_len;
-        let (head, tail) = self.observations.split_at_mut(last);
-        head[..self.obs_len].copy_from_slice(&tail[..self.obs_len]);
-        self.filled = 0;
+// ---------------------------------------------------------------------------
+
+/// Bounded recycling pool of [`Rollout`] buffers — the actor→learner
+/// half of the paper's §5.1 buffer-reuse discipline (TorchBeast's C++
+/// buffer-pool rendezvous).
+///
+/// Lifecycle: an actor [`rent`](RolloutPool::rent)s an empty buffer,
+/// fills it over `unroll_length` steps, and ships the buffer itself
+/// through the learner queue (no clone).  After stacking, the learner
+/// side [`recycle`](RolloutPool::recycle)s it.  Every buffer is
+/// preallocated up front; steady state moves buffers around without a
+/// single heap allocation.
+///
+/// `rent` blocks while the pool is empty (backpressure in addition to
+/// the learner queue's); [`close`](RolloutPool::close) unblocks every
+/// waiter with `None` so shutdown never deadlocks on a drained pool.
+pub struct RolloutPool {
+    shared: Arc<PoolShared>,
+}
+
+impl Clone for RolloutPool {
+    fn clone(&self) -> Self {
+        RolloutPool {
+            shared: self.shared.clone(),
+        }
     }
 }
+
+struct PoolShared {
+    inner: Mutex<PoolInner>,
+    available: Condvar,
+    capacity: usize,
+}
+
+struct PoolInner {
+    free: Vec<Rollout>,
+    closed: bool,
+}
+
+impl RolloutPool {
+    /// Preallocate `capacity` rollout buffers of the given shape.
+    pub fn new(capacity: usize, t: usize, obs_len: usize, num_actions: usize) -> RolloutPool {
+        assert!(capacity > 0, "pool needs at least one buffer");
+        let free = (0..capacity)
+            .map(|_| Rollout::new(t, obs_len, num_actions))
+            .collect();
+        RolloutPool {
+            shared: Arc::new(PoolShared {
+                inner: Mutex::new(PoolInner {
+                    free,
+                    closed: false,
+                }),
+                available: Condvar::new(),
+                capacity,
+            }),
+        }
+    }
+
+    /// Take a buffer out of the pool, blocking while it is empty.
+    /// Returns `None` once the pool has been closed.
+    pub fn rent(&self) -> Option<Rollout> {
+        let mut inner = self.shared.inner.lock().unwrap();
+        loop {
+            if inner.closed {
+                return None;
+            }
+            if let Some(r) = inner.free.pop() {
+                return Some(r);
+            }
+            inner = self.shared.available.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking rent.
+    pub fn try_rent(&self) -> Option<Rollout> {
+        let mut inner = self.shared.inner.lock().unwrap();
+        if inner.closed {
+            return None;
+        }
+        inner.free.pop()
+    }
+
+    /// Return a buffer to the pool (reset for reuse).  Buffers handed
+    /// back after close — or beyond capacity — are simply dropped.
+    pub fn recycle(&self, mut r: Rollout) {
+        r.filled = 0;
+        let mut inner = self.shared.inner.lock().unwrap();
+        if inner.closed || inner.free.len() >= self.shared.capacity {
+            return;
+        }
+        inner.free.push(r);
+        drop(inner);
+        self.shared.available.notify_one();
+    }
+
+    /// Close the pool: every blocked and future `rent` returns `None`.
+    pub fn close(&self) {
+        let mut inner = self.shared.inner.lock().unwrap();
+        inner.closed = true;
+        drop(inner);
+        self.shared.available.notify_all();
+    }
+
+    /// Buffers currently available for rent.
+    pub fn available(&self) -> usize {
+        self.shared.inner.lock().unwrap().free.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.shared.capacity
+    }
+}
+
+// ---------------------------------------------------------------------------
 
 /// Stack B rollouts into the learner's time-major batch.
 /// `batch` buffers are reused across calls (no allocation).
@@ -169,16 +276,6 @@ mod tests {
     }
 
     #[test]
-    fn roll_over_carries_last_obs() {
-        let mut r = Rollout::new(3, 2, 2);
-        fill_rollout(&mut r, 0.0);
-        let last_obs = r.observations[3 * 2..4 * 2].to_vec();
-        r.roll_over();
-        assert_eq!(&r.observations[..2], &last_obs[..]);
-        assert_eq!(r.filled, 0);
-    }
-
-    #[test]
     fn stacking_layout_time_major() {
         let m = tiny_manifest(2, 3);
         let mut rollouts = Vec::new();
@@ -208,6 +305,74 @@ mod tests {
             let dst = (t * b + bi) * obs_len;
             assert_eq!(batch.observations[dst], tag + t as f32);
         }
+    }
+
+    #[test]
+    fn pool_rent_recycle_roundtrip() {
+        let pool = RolloutPool::new(2, 3, 4, 2);
+        assert_eq!(pool.available(), 2);
+        let mut r = pool.rent().unwrap();
+        assert_eq!((r.t, r.obs_len, r.num_actions), (3, 4, 2));
+        fill_rollout(&mut r, 1.0);
+        assert!(r.is_complete());
+        pool.recycle(r);
+        assert_eq!(pool.available(), 2);
+        // recycled buffers come back reset
+        let r2 = pool.rent().unwrap();
+        assert_eq!(r2.filled, 0);
+    }
+
+    #[test]
+    fn pool_exhaustion_blocks_until_recycle() {
+        let pool = RolloutPool::new(1, 2, 2, 2);
+        let held = pool.rent().unwrap();
+        assert!(pool.try_rent().is_none());
+        let waiter = {
+            let pool = pool.clone();
+            std::thread::spawn(move || {
+                let t0 = std::time::Instant::now();
+                let r = pool.rent();
+                (r.is_some(), t0.elapsed())
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        pool.recycle(held);
+        let (got, blocked_for) = waiter.join().unwrap();
+        assert!(got, "rent must succeed after recycle");
+        assert!(
+            blocked_for >= std::time::Duration::from_millis(10),
+            "renter should have blocked, blocked {blocked_for:?}"
+        );
+    }
+
+    #[test]
+    fn pool_close_unblocks_drained_renters() {
+        // the shutdown hazard: every buffer is out, actors block on
+        // rent, the driver closes — nobody may deadlock.
+        let pool = RolloutPool::new(1, 2, 2, 2);
+        let held = pool.rent().unwrap();
+        let waiters: Vec<_> = (0..3)
+            .map(|_| {
+                let pool = pool.clone();
+                std::thread::spawn(move || pool.rent().is_none())
+            })
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        pool.close();
+        for w in waiters {
+            assert!(w.join().unwrap(), "rent after close must be None");
+        }
+        // recycling after close is a harmless drop
+        pool.recycle(held);
+        assert!(pool.rent().is_none());
+    }
+
+    #[test]
+    fn pool_never_grows_past_capacity() {
+        let pool = RolloutPool::new(1, 2, 2, 2);
+        // a foreign buffer recycled into a full pool is dropped
+        pool.recycle(Rollout::new(2, 2, 2));
+        assert_eq!(pool.available(), pool.capacity());
     }
 
     #[test]

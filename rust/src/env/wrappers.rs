@@ -264,12 +264,6 @@ impl FrameStack {
                 .copy_from_slice(&self.frames[src * self.frame_len..(src + 1) * self.frame_len]);
         }
     }
-
-    fn push(&mut self, frame: &[f32]) {
-        let slot = self.head;
-        self.frames[slot * self.frame_len..(slot + 1) * self.frame_len].copy_from_slice(frame);
-        self.head = (self.head + 1) % self.k;
-    }
 }
 
 impl Environment for FrameStack {
@@ -278,19 +272,26 @@ impl Environment for FrameStack {
     }
 
     fn reset(&mut self, obs: &mut [f32]) {
-        let mut frame = vec![0.0; self.frame_len];
-        self.inner.reset(&mut frame);
-        // fill the ring with the initial frame (baselines' behavior)
-        for _ in 0..self.k {
-            self.push(&frame);
+        // the inner env writes the initial frame straight into slot 0
+        // of the ring; it is then replicated into the other k-1 slots
+        // (baselines' behavior) — no per-reset scratch Vec.
+        self.inner.reset(&mut self.frames[..self.frame_len]);
+        let (first, rest) = self.frames.split_at_mut(self.frame_len);
+        for slot in rest.chunks_mut(self.frame_len) {
+            slot.copy_from_slice(first);
         }
+        self.head = 0;
         self.write_stacked(obs);
     }
 
     fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
-        let mut frame = vec![0.0; self.frame_len];
-        let st = self.inner.step(action, &mut frame);
-        self.push(&frame);
+        // write the new frame directly over the oldest ring slot — the
+        // step path allocates nothing.
+        let slot = self.head;
+        let st = self
+            .inner
+            .step(action, &mut self.frames[slot * self.frame_len..(slot + 1) * self.frame_len]);
+        self.head = (self.head + 1) % self.k;
         self.write_stacked(obs);
         st
     }

@@ -101,11 +101,12 @@ fn main() -> anyhow::Result<()> {
                     format!("checkpoint {}", path.display()),
                 ),
                 None => (
-                    learner.init_params(cfg.seed as i32)?,
+                    learner.init_params(coordinator::fold_seed(cfg.seed))?,
                     format!("random init (seed {})", cfg.seed),
                 ),
             };
-            let mean = coordinator::evaluate(&cfg.artifact_dir, &params, 20, cfg.seed)?;
+            let mean =
+                coordinator::evaluate(&cfg.artifact_dir, &params, 20, cfg.seed, &cfg.wrappers)?;
             println!("greedy policy of {what}: mean return over 20 episodes = {mean:.3}");
             Ok(())
         }

@@ -2,6 +2,7 @@
 //! tracking, and a CSV curve logger (the learning curves in Figures
 //! 3-4 are regenerated from these logs).
 
+use std::collections::VecDeque;
 use std::io::Write;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -27,7 +28,11 @@ pub struct Metrics {
 struct Inner {
     return_ema: Ema,
     step_ema: Ema,
-    last_returns: Vec<f32>, // ring of recent episode returns
+    /// Ring of the last `RETURN_WINDOW` episode returns.  A `VecDeque`
+    /// so eviction is O(1): every actor thread contends on this mutex,
+    /// and the previous `Vec::remove(0)` memmoved the whole window on
+    /// every episode.
+    last_returns: VecDeque<f32>,
     loss_ema: Ema,
 }
 
@@ -62,7 +67,7 @@ impl Metrics {
             inner: Mutex::new(Inner {
                 return_ema: Ema::new(0.05),
                 step_ema: Ema::new(0.05),
-                last_returns: Vec::new(),
+                last_returns: VecDeque::with_capacity(RETURN_WINDOW),
                 loss_ema: Ema::new(0.1),
             }),
             start: Instant::now(),
@@ -83,9 +88,9 @@ impl Metrics {
         inner.return_ema.add(ep_return as f64);
         inner.step_ema.add(ep_steps as f64);
         if inner.last_returns.len() >= RETURN_WINDOW {
-            inner.last_returns.remove(0);
+            inner.last_returns.pop_front();
         }
-        inner.last_returns.push(ep_return);
+        inner.last_returns.push_back(ep_return);
     }
 
     pub fn record_learner_step(&self, total_loss: f32) {
@@ -197,6 +202,29 @@ mod tests {
         let s = m.snapshot();
         // mean over the last 100 episodes: 200..299 -> 249.5
         assert!((s.mean_return - 249.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ring_mean_matches_naive_window() {
+        // the VecDeque ring must keep exactly the same 100-window mean
+        // semantics as the old Vec::remove(0) implementation
+        let m = Metrics::new();
+        let mut naive: Vec<f32> = Vec::new();
+        let mut x = 0x2545_F491u64;
+        for _ in 0..257 {
+            // xorshift returns in [-1, 1)
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let r = ((x % 2000) as f32 / 1000.0) - 1.0;
+            m.record_episode(r, 1);
+            if naive.len() >= 100 {
+                naive.remove(0);
+            }
+            naive.push(r);
+        }
+        let want = naive.iter().map(|&v| v as f64).sum::<f64>() / naive.len() as f64;
+        assert!((m.snapshot().mean_return - want).abs() < 1e-9);
     }
 
     #[test]

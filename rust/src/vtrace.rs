@@ -86,17 +86,37 @@ pub fn from_importance_weights(
     }
 }
 
-/// Numerically-stable log-softmax over the last axis.
-pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+/// Numerically-stable log-softmax over the last axis, written into a
+/// caller-provided buffer (the actor hot path must not allocate).
+pub fn log_softmax_into(logits: &[f32], out: &mut [f32]) {
+    assert_eq!(logits.len(), out.len(), "log_softmax_into length mismatch");
     let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let log_sum: f32 = logits.iter().map(|&x| (x - max).exp()).sum::<f32>().ln();
-    logits.iter().map(|&x| x - max - log_sum).collect()
+    for (o, &x) in out.iter_mut().zip(logits) {
+        *o = x - max - log_sum;
+    }
+}
+
+/// Softmax over the last axis, written into a caller-provided buffer.
+pub fn softmax_into(logits: &[f32], out: &mut [f32]) {
+    log_softmax_into(logits, out);
+    for o in out.iter_mut() {
+        *o = o.exp();
+    }
+}
+
+/// Numerically-stable log-softmax over the last axis.
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0; logits.len()];
+    log_softmax_into(logits, &mut out);
+    out
 }
 
 /// Softmax over the last axis.
 pub fn softmax(logits: &[f32]) -> Vec<f32> {
-    let ls = log_softmax(logits);
-    ls.iter().map(|&x| x.exp()).collect()
+    let mut out = vec![0.0; logits.len()];
+    softmax_into(logits, &mut out);
+    out
 }
 
 /// V-trace from behaviour/target logits `[T][B][A]` and actions `[T][B]`.

@@ -1,0 +1,217 @@
+//! Allocation-regression gate for the full experience path.
+//!
+//! `benches/batcher.rs` audits the inference batcher in isolation;
+//! this test drives the *entire* actor loop — wrapped env step →
+//! pooled inference slot → in-place softmax sampling → pooled rollout
+//! buffer → learner queue → time-major stacking → pool recycle — under
+//! the counting global allocator and asserts the steady state performs
+//! **zero** heap allocations per env step and per rollout handoff.
+//!
+//! Run explicitly (scripts/ci.sh does):
+//!     cargo test --release --test alloc_regression
+//!
+//! The global allocator is per test binary, so this lives in its own
+//! integration-test crate.
+
+use std::time::Duration;
+
+use torchbeast::coordinator::actor_pool::{ActorConfig, ActorPool};
+use torchbeast::coordinator::batching_queue::batching_queue;
+use torchbeast::coordinator::dynamic_batcher::{dynamic_batcher, BatcherConfig};
+use torchbeast::coordinator::rollout::{stack_rollouts, Rollout, RolloutPool};
+use torchbeast::env::wrappers::{wrapped_spec, WrapperCfg};
+use torchbeast::env::{self, Environment};
+use torchbeast::metrics::Metrics;
+use torchbeast::runtime::manifest::{DType, LeafSpec};
+use torchbeast::runtime::{LearnerBatch, Manifest};
+use torchbeast::util::counting_alloc::{allocations, CountingAllocator};
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+const UNROLL: usize = 5;
+const BATCH: usize = 2;
+const ACTORS: usize = 2;
+/// Batches consumed before the measuring window opens: enough frames
+/// to fill the metrics return ring (100 catch episodes ≈ 900 frames)
+/// and warm every pool.
+const WARMUP_BATCHES: usize = 150;
+const MEASURE_BATCHES: usize = 100;
+
+fn stub_manifest(obs_shape: [usize; 3], num_actions: usize) -> Manifest {
+    Manifest {
+        dir: std::path::PathBuf::new(),
+        env: "catch".into(),
+        model: "stub".into(),
+        obs_shape,
+        num_actions,
+        unroll_length: UNROLL,
+        batch_size: BATCH,
+        inference_batch: ACTORS,
+        inference_sizes: vec![ACTORS],
+        param_count: 1,
+        params: vec![LeafSpec {
+            name: "w".into(),
+            shape: vec![1],
+            dtype: DType::F32,
+        }],
+        opt_state: vec![],
+        stats_names: vec![],
+        hyperparams: torchbeast::util::json::Json::Obj(vec![]),
+        hlo_sha256: String::new(),
+    }
+}
+
+/// The paper's §5.1 claim, measured end to end: after warm-up, the
+/// mono experience path must not touch the heap at all.
+#[test]
+fn actor_to_learner_path_is_allocation_free_at_steady_state() {
+    // frame_stack = 2 exercises the FrameStack ring's in-place writes
+    // (it used to allocate a scratch Vec per env step)
+    let wrappers = WrapperCfg {
+        frame_stack: 2,
+        ..WrapperCfg::default()
+    };
+    let base = env::spec_of("catch").unwrap();
+    let spec = wrapped_spec(&base, &wrappers);
+    let obs_len = spec.obs_len();
+    let num_actions = spec.num_actions;
+    let manifest = stub_manifest(spec.obs_shape(), num_actions);
+
+    let (client, stream) = dynamic_batcher(
+        BatcherConfig::new(ACTORS, Duration::from_micros(500), obs_len, num_actions)
+            .with_slots(ACTORS),
+    );
+    let (tx, rx) = batching_queue::<Rollout>(2 * BATCH);
+    let buffers = RolloutPool::new(ACTORS + 2 * BATCH + BATCH, UNROLL, obs_len, num_actions);
+    let metrics = Metrics::shared();
+
+    // stub inference thread: preallocated uniform logits, pooled respond
+    let infer_thread = std::thread::spawn(move || {
+        let logits = vec![0.0f32; ACTORS * num_actions];
+        let baselines = vec![0.0f32; ACTORS];
+        while let Some(batch) = stream.next_batch() {
+            let n = batch.len();
+            batch
+                .respond(&logits[..n * num_actions], &baselines[..n], num_actions)
+                .unwrap();
+        }
+    });
+
+    let envs: Vec<Box<dyn Environment>> = (0..ACTORS)
+        .map(|i| env::make_wrapped("catch", i as u64, &wrappers).unwrap())
+        .collect();
+    let pool = ActorPool::spawn(
+        envs,
+        client.clone(),
+        tx.clone(),
+        buffers.clone(),
+        metrics.clone(),
+        ActorConfig {
+            unroll_length: UNROLL,
+            num_actions,
+            obs_len,
+            seed: 5,
+        },
+    );
+
+    // learner-side stacker: preallocated batch + rollout buffer, recycle
+    let mut batch = LearnerBatch::zeros(&manifest);
+    let mut rollouts: Vec<Rollout> = Vec::with_capacity(BATCH);
+    let consume = |n: usize, rollouts: &mut Vec<Rollout>, batch: &mut LearnerBatch| {
+        for _ in 0..n {
+            assert!(rx.recv_batch_into(BATCH, rollouts), "pipeline died early");
+            stack_rollouts(rollouts, &manifest, batch);
+            for r in rollouts.drain(..) {
+                buffers.recycle(r);
+            }
+        }
+    };
+
+    consume(WARMUP_BATCHES, &mut rollouts, &mut batch);
+    let a0 = allocations();
+    consume(MEASURE_BATCHES, &mut rollouts, &mut batch);
+    let allocs = allocations() - a0;
+
+    let frames = (MEASURE_BATCHES * BATCH * UNROLL) as f64;
+    let handoffs = (MEASURE_BATCHES * BATCH) as f64;
+    let per_frame = allocs as f64 / frames;
+    let per_handoff = allocs as f64 / handoffs;
+    eprintln!(
+        "steady state: {allocs} heap allocations over {frames} env steps \
+         ({per_frame:.4}/step, {per_handoff:.4}/rollout handoff)"
+    );
+    // the budget is zero; < 0.02/step tolerates nothing but one-off
+    // noise (a single stray warm-up straggler) over 1000 steps
+    assert!(
+        per_frame < 0.02,
+        "experience hot path is allocating again: {per_frame:.4} allocs per env step"
+    );
+
+    // orderly shutdown: no deadlock with pooled buffers in flight
+    rx.close();
+    buffers.close();
+    client.shutdown_for_tests();
+    let reports = pool.join();
+    infer_thread.join().unwrap();
+    assert_eq!(reports.len(), ACTORS);
+    let produced: u64 = reports.iter().map(|r| r.rollouts).sum();
+    assert!(produced as usize >= WARMUP_BATCHES + MEASURE_BATCHES);
+}
+
+/// Rollout handoff ships the pooled buffer itself: the backing
+/// allocation the learner side receives is the very allocation the
+/// actor filled (no clone anywhere in between).
+#[test]
+fn rollout_handoff_moves_the_buffer_not_a_copy() {
+    let spec = env::spec_of("catch").unwrap();
+    let obs_len = spec.obs_len();
+    let (client, stream) = dynamic_batcher(BatcherConfig::new(
+        1,
+        Duration::from_micros(100),
+        obs_len,
+        spec.num_actions,
+    ));
+    let (tx, rx) = batching_queue::<Rollout>(4);
+    let buffers = RolloutPool::new(2, UNROLL, obs_len, spec.num_actions);
+    // observe the pooled buffers' backing pointers before the run
+    let probe_a = buffers.rent().unwrap();
+    let probe_b = buffers.rent().unwrap();
+    let pooled_ptrs = [probe_a.observations.as_ptr(), probe_b.observations.as_ptr()];
+    buffers.recycle(probe_a);
+    buffers.recycle(probe_b);
+
+    let na = spec.num_actions;
+    let infer_thread = std::thread::spawn(move || {
+        while let Some(batch) = stream.next_batch() {
+            let n = batch.len();
+            batch.respond(&vec![0.0; n * na], &vec![0.0; n], na).unwrap();
+        }
+    });
+    let pool = ActorPool::spawn(
+        vec![env::make_env("catch", 1).unwrap()],
+        client.clone(),
+        tx,
+        buffers.clone(),
+        Metrics::shared(),
+        ActorConfig {
+            unroll_length: UNROLL,
+            num_actions: spec.num_actions,
+            obs_len,
+            seed: 3,
+        },
+    );
+    for _ in 0..4 {
+        let r = rx.recv_batch(1).unwrap().remove(0);
+        assert!(
+            pooled_ptrs.contains(&r.observations.as_ptr()),
+            "received rollout must be a pooled buffer, not a clone"
+        );
+        buffers.recycle(r);
+    }
+    rx.close();
+    buffers.close();
+    client.shutdown_for_tests();
+    pool.join();
+    infer_thread.join().unwrap();
+}

@@ -72,8 +72,9 @@ fn evaluate_checkpoint_consistency() {
     checkpoint::save(&ckpt, &learner.manifest, &params).unwrap();
     let loaded = checkpoint::load(&ckpt, &learner.manifest).unwrap();
     // greedy eval of identical params must be identical (deterministic env seed)
-    let a = coordinator::evaluate(&dir, &params, 5, 9).unwrap();
-    let b = coordinator::evaluate(&dir, &loaded, 5, 9).unwrap();
+    let w = torchbeast::env::wrappers::WrapperCfg::default();
+    let a = coordinator::evaluate(&dir, &params, 5, 9, &w).unwrap();
+    let b = coordinator::evaluate(&dir, &loaded, 5, 9, &w).unwrap();
     assert_eq!(a, b);
 }
 

@@ -164,7 +164,8 @@ fn evaluate_runs_greedy_policy() {
     let Some(cfg) = base_cfg("catch") else { return };
     let mut learner = LearnerEngine::load(&cfg.artifact_dir).unwrap();
     let params = learner.init_params(5).unwrap();
-    let mean = coordinator::evaluate(&cfg.artifact_dir, &params, 5, 1).unwrap();
+    let mean =
+        coordinator::evaluate(&cfg.artifact_dir, &params, 5, 1, &cfg.wrappers).unwrap();
     // catch returns are in [-1, 1]
     assert!((-1.0..=1.0).contains(&mean));
 }

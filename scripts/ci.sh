@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 gate, one-liner for every PR:  scripts/ci.sh
-# Builds the crate, runs the full test suite, and (when rustfmt is
-# installed) checks formatting.  Run from anywhere; cds to rust/.
+# Builds the crate, runs the full test suite, re-runs the
+# allocation-regression gate in release mode, and (when the tools are
+# installed) checks formatting and lints.  Run from anywhere; cds to rust/.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -15,11 +16,24 @@ cargo build --release --benches
 echo "== cargo test -q =="
 cargo test -q
 
+# Perf discipline is gated, not advisory: the counting-allocator test
+# must prove the actor->queue->stack path allocation-free in release
+# mode (debug-mode results are identical, but release is what ships).
+echo "== cargo test --release --test alloc_regression =="
+cargo test --release --test alloc_regression -- --nocapture
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
     cargo fmt --check
 else
     echo "== cargo fmt --check skipped (rustfmt not installed) =="
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -- -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== cargo clippy skipped (clippy not installed) =="
 fi
 
 echo "CI OK"
