@@ -1,0 +1,61 @@
+//! Bench: batched greedy-evaluation throughput — the ROADMAP item
+//! "`evaluate` runs single-stream inference; batch it across
+//! episodes" made measurable.  `eval_batch=1` reproduces the old
+//! single-stream evaluate; larger batches share one bucketed
+//! inference call across all active episode streams, so fps should
+//! climb with the batch until the artifact's inference batch caps it.
+//! `mean_batch` shows the realized slot utilization.
+//!
+//! `cargo bench --bench eval` (uses artifacts/catch; SKIPs without).
+
+use torchbeast::config::TrainConfig;
+use torchbeast::coordinator;
+use torchbeast::runtime::LearnerEngine;
+use torchbeast::util::stats::Bench;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/catch/manifest.json").exists() {
+        eprintln!("SKIP bench eval: run `make artifacts` first");
+        return Ok(());
+    }
+    let cfg = TrainConfig {
+        artifact_dir: "artifacts/catch".into(),
+        ..TrainConfig::default()
+    };
+    let mut learner = LearnerEngine::load(&cfg.artifact_dir)?;
+    let params = learner.init_params(7)?;
+
+    let episodes = 64;
+    let mut b = Bench::new("eval: batched greedy evaluation, catch, 64 episodes");
+    println!(
+        "{:>10} {:>10} {:>12} {:>12} {:>12}",
+        "eval_batch", "episodes", "fps", "mean_batch", "mean_return"
+    );
+    for &batch in &[1usize, 2, 4, 8, 0] {
+        let r = coordinator::evaluate_batched(
+            &cfg.artifact_dir,
+            &params,
+            episodes,
+            1,
+            &cfg.wrappers,
+            batch,
+        )?;
+        let label = if batch == 0 {
+            "auto".to_string()
+        } else {
+            batch.to_string()
+        };
+        println!(
+            "{:>10} {:>10} {:>12.0} {:>12.2} {:>12.3}",
+            label, r.episodes, r.fps, r.mean_batch, r.mean_return
+        );
+        b.record(
+            &format!("eval_batch={label}"),
+            r.frames as usize,
+            r.elapsed,
+        );
+    }
+    b.report();
+    println!("(rows are per-frame; fps climbs with eval_batch — batching works)");
+    Ok(())
+}

@@ -9,6 +9,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::env::wrappers::WrapperCfg;
+use crate::telemetry::log::Level;
 use crate::util::json::Json;
 
 /// Data-plane mode: the paper's two implementations.
@@ -63,6 +64,11 @@ pub struct TrainConfig {
     pub init_checkpoint: Option<PathBuf>,
     /// Print a progress line every n learner steps; 0 disables.
     pub log_interval: u64,
+    /// Telemetry log level (`error|warn|info|debug`).
+    pub log_level: Level,
+    /// Episode streams batched per inference call during evaluation;
+    /// 0 = the artifact's full inference batch.
+    pub eval_batch: usize,
 }
 
 impl Default for TrainConfig {
@@ -81,6 +87,8 @@ impl Default for TrainConfig {
             checkpoint_path: None,
             init_checkpoint: None,
             log_interval: 50,
+            log_level: Level::Info,
+            eval_batch: 0,
         }
     }
 }
@@ -142,6 +150,8 @@ impl TrainConfig {
             "checkpoint_path" => self.checkpoint_path = Some(PathBuf::from(st(v)?)),
             "init_checkpoint" => self.init_checkpoint = Some(PathBuf::from(st(v)?)),
             "log_interval" => self.log_interval = num(v)? as u64,
+            "log_level" => self.log_level = Level::parse(&st(v)?)?,
+            "eval_batch" => self.eval_batch = num(v)? as usize,
             // wrapper knobs
             "action_repeat" => self.wrappers.action_repeat = num(v)? as usize,
             "frame_stack" => self.wrappers.frame_stack = num(v)? as usize,
@@ -163,6 +173,20 @@ impl TrainConfig {
     }
 
     /// Apply CLI args: `--key value`, `--key=value`, or `--config file`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use torchbeast::config::TrainConfig;
+    ///
+    /// let mut cfg = TrainConfig::default();
+    /// let args: Vec<String> = ["--num_actors=8", "--mode", "poly", "--log_level", "debug"]
+    ///     .iter()
+    ///     .map(|s| s.to_string())
+    ///     .collect();
+    /// cfg.apply_args(&args).unwrap();
+    /// assert_eq!(cfg.num_actors, 8);
+    /// ```
     pub fn apply_args(&mut self, args: &[String]) -> anyhow::Result<()> {
         let mut i = 0;
         while i < args.len() {
@@ -270,6 +294,23 @@ mod tests {
         let ok = Json::parse(r#"{"server_addresses": ["a:1", "b:2"]}"#).unwrap();
         c.apply_json(&ok).unwrap();
         assert_eq!(c.server_addresses, vec!["a:1".to_string(), "b:2".to_string()]);
+    }
+
+    #[test]
+    fn log_level_and_eval_batch_parse() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.log_level, Level::Info);
+        assert_eq!(c.eval_batch, 0);
+        let j = Json::parse(r#"{"log_level": "debug", "eval_batch": 4}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.log_level, Level::Debug);
+        assert_eq!(c.eval_batch, 4);
+        // CLI spelling too
+        c.apply_args(&["--log_level=warn".to_string()]).unwrap();
+        assert_eq!(c.log_level, Level::Warn);
+        // junk levels are rejected up front, not at first log call
+        let bad = Json::parse(r#"{"log_level": "loud"}"#).unwrap();
+        assert!(c.apply_json(&bad).is_err());
     }
 
     #[test]

@@ -11,6 +11,8 @@
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::telemetry::gauges::Gauge;
+
 struct State<T> {
     queue: VecDeque<T>,
     closed: bool,
@@ -21,6 +23,9 @@ struct Shared<T> {
     not_full: Condvar,
     not_empty: Condvar,
     capacity: usize,
+    /// Mirrors `queue.len()` for the telemetry report path (updated
+    /// under the state lock; one relaxed atomic per send/recv).
+    depth: Gauge,
 }
 
 /// Producer handle (clone per actor).
@@ -56,6 +61,7 @@ impl<T> QueueSender<T> {
             }
             if st.queue.len() < self.shared.capacity {
                 st.queue.push_back(item);
+                self.shared.depth.add(1);
                 self.shared.not_empty.notify_one();
                 return Ok(());
             }
@@ -101,6 +107,7 @@ impl<T> QueueReceiver<T> {
         loop {
             if st.queue.len() >= n {
                 out.extend(st.queue.drain(..n));
+                self.shared.depth.sub(n as u64);
                 // wake all blocked producers — n slots opened
                 self.shared.not_full.notify_all();
                 return true;
@@ -117,6 +124,7 @@ impl<T> QueueReceiver<T> {
         let mut st = self.shared.state.lock().unwrap();
         loop {
             if let Some(item) = st.queue.pop_front() {
+                self.shared.depth.sub(1);
                 self.shared.not_full.notify_one();
                 return Some(item);
             }
@@ -132,6 +140,7 @@ impl<T> QueueReceiver<T> {
         let mut st = self.shared.state.lock().unwrap();
         let item = st.queue.pop_front();
         if item.is_some() {
+            self.shared.depth.sub(1);
             self.shared.not_full.notify_one();
         }
         item
@@ -153,9 +162,21 @@ impl<T> QueueReceiver<T> {
     }
 }
 
-/// Create a bounded batching queue.
+/// Create a bounded batching queue (depth mirrored into a detached
+/// gauge; the driver uses [`batching_queue_gauged`] to observe it).
 pub fn batching_queue<T>(capacity: usize) -> (QueueSender<T>, QueueReceiver<T>) {
+    batching_queue_gauged(capacity, Gauge::default())
+}
+
+/// [`batching_queue`] with its occupancy mirrored into `depth` — how
+/// the driver surfaces learner-queue depth and prefetched-batch count
+/// in the telemetry report.
+pub fn batching_queue_gauged<T>(
+    capacity: usize,
+    depth: Gauge,
+) -> (QueueSender<T>, QueueReceiver<T>) {
     assert!(capacity > 0);
+    depth.set(0);
     let shared = Arc::new(Shared {
         state: Mutex::new(State {
             queue: VecDeque::with_capacity(capacity),
@@ -164,6 +185,7 @@ pub fn batching_queue<T>(capacity: usize) -> (QueueSender<T>, QueueReceiver<T>) 
         not_full: Condvar::new(),
         not_empty: Condvar::new(),
         capacity,
+        depth,
     });
     (
         QueueSender {
@@ -318,6 +340,27 @@ mod tests {
             }
             assert_eq!(consumer.join().unwrap(), total);
         }
+    }
+
+    #[test]
+    fn depth_gauge_mirrors_queue_length() {
+        let g = Gauge::default();
+        let (tx, rx) = batching_queue_gauged(4, g.clone());
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        tx.send(3).unwrap();
+        assert_eq!(g.get(), 3);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(g.get(), 2);
+        let mut buf = Vec::new();
+        assert!(rx.recv_batch_into(2, &mut buf));
+        assert_eq!(g.get(), 0);
+        tx.send(4).unwrap();
+        assert_eq!(g.get(), 1);
+        assert_eq!(rx.try_recv(), Some(4));
+        assert_eq!(g.get(), 0);
+        assert_eq!(rx.try_recv(), None);
+        assert_eq!(g.get(), 0, "empty try_recv must not underflow");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! if no addresses are configured — the single-machine poly setup).
 //!
 //! Layer discipline: everything here is coordination; all ML compute
-//! happens inside the AOT artifacts via [`runtime`].
+//! happens inside the AOT artifacts via [`crate::runtime`].
 
 use std::time::{Duration, Instant};
 
@@ -16,7 +16,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{Mode, TrainConfig};
 use crate::coordinator::actor_pool::{ActorConfig, ActorPool};
-use crate::coordinator::batching_queue::batching_queue;
+use crate::coordinator::batching_queue::{batching_queue, batching_queue_gauged};
 use crate::coordinator::dynamic_batcher::{dynamic_batcher, BatcherConfig, BatcherStats};
 use crate::coordinator::rollout::{stack_rollouts, Rollout, RolloutPool};
 use crate::coordinator::weights::WeightsStore;
@@ -25,6 +25,8 @@ use crate::env::{self, Environment};
 use crate::metrics::{CurveLogger, Metrics, Snapshot};
 use crate::rpc::{EnvServer, RemoteEnv};
 use crate::runtime::{InferenceEngine, LearnerBatch, LearnerEngine, LearnerStats, ParamVecs};
+use crate::telemetry::gauges::{GaugesSnapshot, PipelineGauges};
+use crate::{tb_info, tb_warn};
 
 /// One row of the training curve (CSV mirror, kept in memory too).
 #[derive(Debug, Clone)]
@@ -55,6 +57,11 @@ pub struct TrainReport {
     /// Total wall time the learner spent waiting for a prefetched
     /// batch (small when stacking hides behind learner compute).
     pub learner_wait: Duration,
+    /// Pipeline occupancy at the end of the learner loop (taken
+    /// *before* shutdown tears the pipeline down, so it reflects
+    /// steady state: every pool buffer is accounted for as free or
+    /// rented, queue depth is the real backlog).
+    pub gauges: GaugesSnapshot,
 }
 
 /// Fold a u64 run seed into the i32 the init artifact accepts.
@@ -75,8 +82,9 @@ pub fn fold_seed(seed: u64) -> i32 {
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
     z ^= z >> 31;
     let folded = (z >> 33) as i32; // top 31 bits: always non-negative
-    eprintln!(
-        "[train] seed {seed} exceeds i32::MAX; hash-folded to {folded} for artifact \
+    tb_warn!(
+        "train",
+        "seed {seed} exceeds i32::MAX; hash-folded to {folded} for artifact \
          init (record the folded value to reproduce this run)"
     );
     folded
@@ -84,8 +92,32 @@ pub fn fold_seed(seed: u64) -> i32 {
 
 /// Run a full training job per `cfg`. Blocks until `total_steps`
 /// learner steps have been taken, then shuts the pipeline down.
+///
+/// Progress and warnings go through the telemetry logger (level set
+/// from `cfg.log_level`); every `cfg.log_interval` steps the report
+/// line includes the pipeline occupancy gauges (pool/queue/prefetch/
+/// slot fill — see [`crate::telemetry::gauges`]).
+///
+/// # Examples
+///
+/// ```no_run
+/// use torchbeast::{train, TrainConfig};
+///
+/// let cfg = TrainConfig {
+///     artifact_dir: "artifacts/catch".into(),
+///     num_actors: 8,
+///     total_steps: 1000,
+///     ..TrainConfig::default()
+/// };
+/// let report = train(&cfg).unwrap();
+/// println!("{:.0} fps | {}", report.fps, report.gauges);
+/// ```
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let t_start = Instant::now();
+    crate::telemetry::log::set_max_level(cfg.log_level);
+    // One gauge registry threaded through every pipeline stage; the
+    // periodic report below prints its snapshot (DESIGN.md §Telemetry).
+    let gauges = PipelineGauges::shared();
 
     // -- engines (compile artifacts; learner + inference each own a
     // client — xla handles are not Send, so the inference engine is
@@ -104,7 +136,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         Some(path) => {
             let params = crate::runtime::checkpoint::load(path, &manifest)?;
             learner.set_params(&params)?;
-            eprintln!("[train] resumed params from {}", path.display());
+            tb_info!("train", "resumed params from {}", path.display());
             params
         }
         None => learner.init_params(fold_seed(cfg.seed))?,
@@ -128,7 +160,8 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             manifest.obs_len(),
             num_actions,
         )
-        .with_slots(cfg.num_actors.max(target_batch)),
+        .with_slots(cfg.num_actors.max(target_batch))
+        .with_gauges(&gauges),
     );
     // recv_batch(B) needs B rollouts resident at once: a capacity below
     // the batch size would deadlock the learner against backpressure.
@@ -138,15 +171,17 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         cfg.queue_capacity,
         manifest.batch_size
     );
-    let (rollout_tx, rollout_rx) = batching_queue::<Rollout>(cfg.queue_capacity);
+    let (rollout_tx, rollout_rx) =
+        batching_queue_gauged::<Rollout>(cfg.queue_capacity, gauges.queue_depth.clone());
     // Rollout buffer pool: one in hand per actor, the queue's worth in
     // flight, and one batch being stacked — every buffer preallocated,
     // recycled by the stacker thread after stacking (§5.1 closed loop).
-    let buffer_pool = RolloutPool::new(
+    let buffer_pool = RolloutPool::with_gauges(
         cfg.num_actors + cfg.queue_capacity + manifest.batch_size,
         manifest.unroll_length,
         manifest.obs_len(),
         num_actions,
+        gauges.clone(),
     );
     let metrics = Metrics::shared();
 
@@ -197,7 +232,8 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     // B rollouts and stacks batch N+1 into the other buffer, then
     // recycles the rollouts into the pool.  Stacking cost is thereby
     // overlapped with — not added to — learner compute.
-    let (batch_tx, batch_rx) = batching_queue::<LearnerBatch>(2);
+    let (batch_tx, batch_rx) =
+        batching_queue_gauged::<LearnerBatch>(2, gauges.batches_ready.clone());
     let (return_tx, return_rx) = batching_queue::<LearnerBatch>(2);
     for _ in 0..2 {
         return_tx
@@ -267,17 +303,25 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             episodes: snap.episodes,
         });
         if cfg.log_interval > 0 && step % cfg.log_interval == 0 {
-            eprintln!(
-                "[train {}] step {step}/{} frames {} fps {:.0} loss {:.3} return {:.3}",
+            // Report path: the only place gauge values are formatted
+            // (hot-path instrumentation is atomics-only).
+            tb_info!(
+                "train",
+                "[{}] step {step}/{} frames {} fps {:.0} loss {:.3} return {:.3} | {}",
                 cfg.mode.as_str(),
                 cfg.total_steps,
                 snap.frames,
                 snap.fps,
                 stats.total_loss(),
                 snap.mean_return,
+                gauges.snapshot(),
             );
         }
     }
+
+    // Steady-state occupancy, captured before shutdown drains the
+    // pipeline (afterwards the buffers actors hold are simply dropped).
+    let gauges_final = gauges.snapshot();
 
     // -- orderly shutdown: stop actors + stacker first, then inference
     rollout_tx.close(); // actors' sends fail; stacker's rollout recv unblocks
@@ -300,7 +344,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
 
     if let Some(path) = &cfg.checkpoint_path {
         crate::runtime::checkpoint::save(path, &manifest, &final_params)?;
-        eprintln!("[train] checkpoint written to {}", path.display());
+        tb_info!("train", "checkpoint written to {}", path.display());
     }
 
     let snap = metrics.snapshot();
@@ -317,6 +361,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         learner_step_time: learner.mean_step_time(),
         stack_time,
         learner_wait,
+        gauges: gauges_final,
     })
 }
 
@@ -375,6 +420,10 @@ fn eval_env(name: &str, seed: u64, wrappers: &WrapperCfg) -> Result<Box<dyn Envi
 /// Greedy-policy evaluation of a parameter snapshot: fresh inference
 /// engine, argmax actions, `episodes` episodes under the *training*
 /// wrapper stack. Returns mean return.
+///
+/// Episodes are batched across the artifact's full inference batch;
+/// use [`evaluate_batched`] for the throughput report and an explicit
+/// batch size.
 pub fn evaluate(
     artifact_dir: &std::path::Path,
     params: &ParamVecs,
@@ -382,47 +431,260 @@ pub fn evaluate(
     seed: u64,
     wrappers: &WrapperCfg,
 ) -> Result<f64> {
+    Ok(evaluate_batched(artifact_dir, params, episodes, seed, wrappers, 0)?.mean_return)
+}
+
+/// Report of a batched evaluation run — eval throughput measured in
+/// the same style as [`TrainReport`] measures training throughput.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    /// Episodes completed (== the requested count).
+    pub episodes: u64,
+    /// Env frames stepped across all episode streams.
+    pub frames: u64,
+    /// Mean undiscounted return over the episodes.
+    pub mean_return: f64,
+    pub elapsed: Duration,
+    /// Frames per second across all streams.
+    pub fps: f64,
+    /// Mean inference batch size (== the batch when all streams stay
+    /// active; drops toward 1 only as the last episodes drain).
+    pub mean_batch: f64,
+    /// Gauge snapshot at full stream width — the run's peak occupancy
+    /// (`slots_in_use` == the realized eval batch; the same registry
+    /// style as training).  Taken mid-run: after the run drains every
+    /// gauge reads zero again.
+    pub gauges: GaugesSnapshot,
+}
+
+/// Greedy-policy evaluation batched across episodes: up to
+/// `eval_batch` episode streams run in lockstep, and every step all
+/// active streams share **one** bucketed inference call (the bucketed
+/// inference modules already support n < B) instead of `n` separate
+/// batch-1 calls.  `eval_batch` 0 means the artifact's full inference
+/// batch; values are clamped to it.
+///
+/// Episode `k` always runs the env seeded by `(seed, k)`, so the mean
+/// return is independent of the batch size — pinned by the
+/// determinism test below.
+///
+/// # Examples
+///
+/// ```no_run
+/// use torchbeast::runtime::LearnerEngine;
+/// # fn main() -> anyhow::Result<()> {
+/// let dir = std::path::Path::new("artifacts/catch");
+/// let mut learner = LearnerEngine::load(dir)?;
+/// let params = learner.init_params(7)?;
+/// let wrappers = torchbeast::env::wrappers::WrapperCfg::default();
+/// let report = torchbeast::evaluate_batched(dir, &params, 32, 1, &wrappers, 0)?;
+/// println!("{} eps at {:.0} fps (batch {:.1})", report.episodes, report.fps, report.mean_batch);
+/// # Ok(())
+/// # }
+/// ```
+pub fn evaluate_batched(
+    artifact_dir: &std::path::Path,
+    params: &ParamVecs,
+    episodes: usize,
+    seed: u64,
+    wrappers: &WrapperCfg,
+    eval_batch: usize,
+) -> Result<EvalReport> {
     let mut engine = InferenceEngine::load(artifact_dir)?;
     engine.set_params(params, 1)?;
     let manifest = engine.manifest.clone();
-    let mut env = eval_env(&manifest.env, seed, wrappers)?;
-    anyhow::ensure!(
-        env.spec().obs_len() == manifest.obs_len(),
-        "wrapped obs length {} != artifact obs length {} (frame_stack must be \
-         baked into the artifact, not applied at eval time)",
-        env.spec().obs_len(),
-        manifest.obs_len()
-    );
-    let mut obs = vec![0.0f32; manifest.obs_len()];
-    let mut total = 0.0f64;
-    for _ in 0..episodes {
-        env.reset(&mut obs);
-        let mut ep = 0.0f64;
-        let mut guard = 0;
-        loop {
-            let (logits, _) = engine.infer(&obs, 1)?;
-            let action = crate::agent::argmax_action(&logits);
-            let st = env.step(action, &mut obs);
-            ep += st.reward as f64;
-            guard += 1;
-            if st.done || guard > 10_000 {
-                break;
+    let slots = if eval_batch == 0 {
+        manifest.inference_batch
+    } else {
+        eval_batch
+    }
+    .clamp(1, manifest.inference_batch);
+
+    let obs_len = manifest.obs_len();
+    let env_name = manifest.env.clone();
+    let gauges = PipelineGauges::new();
+    let t0 = Instant::now();
+    let core = run_batched_eval(
+        |ep: usize| -> Result<Box<dyn Environment>> {
+            let env = eval_env(&env_name, env::actor_seed(seed, ep), wrappers)?;
+            anyhow::ensure!(
+                env.spec().obs_len() == obs_len,
+                "wrapped obs length {} != artifact obs length {} (frame_stack must \
+                 be baked into the artifact, not applied at eval time)",
+                env.spec().obs_len(),
+                obs_len
+            );
+            Ok(env)
+        },
+        |obs, n| engine.infer(obs, n),
+        episodes,
+        slots,
+        obs_len,
+        manifest.num_actions,
+        &gauges,
+    )?;
+    let elapsed = t0.elapsed();
+    Ok(EvalReport {
+        episodes: core.episodes,
+        frames: core.frames,
+        mean_return: core.total_return / core.episodes as f64,
+        elapsed,
+        fps: core.frames as f64 / elapsed.as_secs_f64().max(1e-9),
+        mean_batch: core.requests as f64 / core.rounds.max(1) as f64,
+        gauges: core.peak_gauges,
+    })
+}
+
+/// Accumulators of [`run_batched_eval`].
+struct EvalCore {
+    total_return: f64,
+    episodes: u64,
+    frames: u64,
+    /// Total stream-steps submitted to the policy.
+    requests: u64,
+    /// Policy (inference) calls made.
+    rounds: u64,
+    /// Gauge snapshot taken on the first inference round, when every
+    /// stream is active — the run's peak occupancy (the gauges read
+    /// zero again once the run drains, which would be uninformative).
+    peak_gauges: GaugesSnapshot,
+}
+
+/// The engine-agnostic core of [`evaluate_batched`]: drive `episodes`
+/// greedy episodes through at most `slots` concurrent env streams,
+/// gathering all active streams into one `infer(obs, n)` call per
+/// step.  Streams that finish take the next pending episode in place;
+/// once none are pending the batch compacts, so `n` shrinks only at
+/// the tail.  Tests drive this with a stub policy (no artifacts).
+#[allow(clippy::too_many_arguments)]
+fn run_batched_eval(
+    mut make_env: impl FnMut(usize) -> Result<Box<dyn Environment>>,
+    mut infer: impl FnMut(&[f32], usize) -> Result<(Vec<f32>, Vec<f32>)>,
+    episodes: usize,
+    slots: usize,
+    obs_len: usize,
+    num_actions: usize,
+    gauges: &PipelineGauges,
+) -> Result<EvalCore> {
+    anyhow::ensure!(episodes > 0, "need at least one eval episode");
+    anyhow::ensure!(slots > 0, "need at least one eval stream");
+
+    struct Stream {
+        env: Box<dyn Environment>,
+        ep_return: f64,
+        steps: u32,
+    }
+    /// Runaway guard per episode (same bound the single-stream
+    /// evaluate used).
+    const STEP_GUARD: u32 = 10_000;
+
+    let mut core = EvalCore {
+        total_return: 0.0,
+        episodes: 0,
+        frames: 0,
+        requests: 0,
+        rounds: 0,
+        peak_gauges: GaugesSnapshot::default(),
+    };
+    // Stream j's observation lives at batch_obs[j * obs_len ..].
+    let width = slots.min(episodes);
+    let mut batch_obs = vec![0.0f32; width * obs_len];
+    let mut active: Vec<Stream> = Vec::with_capacity(width);
+    let mut next_episode = 0usize;
+    while active.len() < width {
+        let mut env = make_env(next_episode)?;
+        next_episode += 1;
+        let base = active.len() * obs_len;
+        env.reset(&mut batch_obs[base..base + obs_len]);
+        active.push(Stream {
+            env,
+            ep_return: 0.0,
+            steps: 0,
+        });
+    }
+
+    while !active.is_empty() {
+        let n = active.len();
+        gauges.slots_in_use.set(n as u64);
+        if core.rounds == 0 {
+            core.peak_gauges = gauges.snapshot();
+        }
+        let (logits, _baselines) = infer(&batch_obs[..n * obs_len], n)?;
+        anyhow::ensure!(
+            logits.len() >= n * num_actions,
+            "eval policy returned {} logits for {n} streams of {num_actions} actions",
+            logits.len()
+        );
+        core.rounds += 1;
+        core.requests += n as u64;
+        // Step streams back to front: a stream that retires is
+        // swap-removed (and its tail replacement was already stepped
+        // this round, so indices and logits rows stay aligned).
+        for j in (0..n).rev() {
+            let base = j * obs_len;
+            let action =
+                crate::agent::argmax_action(&logits[j * num_actions..(j + 1) * num_actions]);
+            let st = active[j].env.step(action, &mut batch_obs[base..base + obs_len]);
+            core.frames += 1;
+            active[j].ep_return += st.reward as f64;
+            active[j].steps += 1;
+            if st.done || active[j].steps >= STEP_GUARD {
+                core.total_return += active[j].ep_return;
+                core.episodes += 1;
+                if next_episode < episodes {
+                    // the stream takes the next pending episode
+                    let mut env = make_env(next_episode)?;
+                    next_episode += 1;
+                    env.reset(&mut batch_obs[base..base + obs_len]);
+                    active[j] = Stream {
+                        env,
+                        ep_return: 0.0,
+                        steps: 0,
+                    };
+                } else {
+                    // nothing pending: compact the batch
+                    let last = active.len() - 1;
+                    if j != last {
+                        batch_obs.copy_within(last * obs_len..(last + 1) * obs_len, base);
+                    }
+                    active.swap_remove(j);
+                }
             }
         }
-        total += ep;
     }
-    Ok(total / episodes as f64)
+    gauges.slots_in_use.set(0);
+    Ok(core)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::telemetry::log::{CaptureSink, Level};
 
     #[test]
     fn fold_seed_is_identity_in_i32_range() {
         assert_eq!(fold_seed(0), 0);
         assert_eq!(fold_seed(1), 1);
         assert_eq!(fold_seed(i32::MAX as u64), i32::MAX);
+    }
+
+    /// The ROADMAP item: `fold_seed` used to warn on raw stderr "once
+    /// a logging facility exists" — it exists now, and the warning
+    /// must route through its sink (capturable, level-filtered).
+    #[test]
+    fn fold_seed_warning_routes_through_telemetry_sink() {
+        let (sink, _guard) = CaptureSink::install(Level::Warn);
+        let folded = fold_seed((1u64 << 40) + 7);
+        assert!(folded >= 0);
+        assert!(
+            sink.contains("hash-folded"),
+            "fold_seed warning must go through the telemetry sink, got {:?}",
+            sink.lines()
+        );
+        // in-range seeds fold silently (other parallel tests may log
+        // their own out-of-range warnings; check this seed's absence)
+        assert_eq!(fold_seed(42), 42);
+        assert!(!sink.contains("seed 42 "), "in-range seeds must not warn");
     }
 
     #[test]
@@ -489,5 +751,112 @@ mod tests {
         env.reset(&mut obs);
         assert!(!env.step(0, &mut obs).done);
         assert!(env.step(0, &mut obs).done, "truncated at the limit");
+    }
+
+    /// Drive the batched-eval core over real catch envs with a stub
+    /// policy whose action depends on the observation — so any
+    /// obs-routing or batch-compaction bug changes trajectories and
+    /// trips the determinism assertions below.
+    fn run_eval_core(episodes: usize, slots: usize) -> (EvalCore, u64) {
+        let spec = env::spec_of("catch").unwrap();
+        let obs_len = spec.obs_len();
+        let a = spec.num_actions;
+        let gauges = PipelineGauges::new();
+        let core = run_batched_eval(
+            |ep| env::make_wrapped("catch", env::actor_seed(9, ep), &WrapperCfg::default()),
+            |obs, n| {
+                let mut logits = vec![0.0f32; n * a];
+                for j in 0..n {
+                    let row = &obs[j * obs_len..(j + 1) * obs_len];
+                    // position-weighted pixel sum: the chosen action
+                    // changes with the observation contents
+                    let hot = row
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &v)| (i + 1) * (v as usize))
+                        .sum::<usize>()
+                        % a;
+                    logits[j * a + hot] = 1.0;
+                }
+                Ok((logits, vec![0.0f32; n]))
+            },
+            episodes,
+            slots,
+            obs_len,
+            a,
+            &gauges,
+        )
+        .unwrap();
+        (core, gauges.slots_in_use.get())
+    }
+
+    /// Shape contract: n episodes complete for n > B (streams rotate
+    /// through slots) and n < B (only n streams ever activate).
+    #[test]
+    fn batched_eval_shapes_n_over_and_under_batch() {
+        // n > B: 5 episodes through 2 slots
+        let (core, slots_after) = run_eval_core(5, 2);
+        assert_eq!(core.episodes, 5);
+        // catch episodes are 9 steps
+        assert_eq!(core.frames, 5 * 9);
+        assert_eq!(slots_after, 0, "gauge must read idle after the run");
+        assert_eq!(
+            core.peak_gauges.slots_in_use, 2,
+            "the reported snapshot must capture full-width occupancy"
+        );
+        let mean_batch = core.requests as f64 / core.rounds as f64;
+        assert!(
+            mean_batch > 1.0 && mean_batch <= 2.0,
+            "batched inference must actually batch: {mean_batch}"
+        );
+
+        // n < B: 2 episodes through 4 slots — every round is exactly 2 wide
+        let (core, _) = run_eval_core(2, 4);
+        assert_eq!(core.episodes, 2);
+        assert_eq!(core.frames, 2 * 9);
+        assert_eq!(core.requests, core.rounds * 2);
+    }
+
+    /// Determinism contract: episode k always runs the (seed, k) env
+    /// under the greedy policy, so results cannot depend on the batch
+    /// size (catch returns are exact ±1, so f64 sums are exact too).
+    #[test]
+    fn batched_eval_is_batch_size_invariant() {
+        let (c1, _) = run_eval_core(6, 1);
+        let (c3, _) = run_eval_core(6, 3);
+        let (c4, _) = run_eval_core(6, 4); // 6 % 4 != 0: exercises compaction
+        assert_eq!(c1.episodes, 6);
+        assert_eq!(c3.episodes, 6);
+        assert_eq!(c4.episodes, 6);
+        assert_eq!(c1.total_return, c3.total_return);
+        assert_eq!(c1.total_return, c4.total_return);
+        assert_eq!(c1.frames, c3.frames);
+        assert_eq!(c1.frames, c4.frames);
+    }
+
+    #[test]
+    fn batched_eval_rejects_degenerate_inputs() {
+        let zero_eps = run_batched_eval(
+            |_| env::make_wrapped("catch", 0, &WrapperCfg::default()),
+            |_, n| Ok((vec![0.0; n * 3], vec![0.0; n])),
+            0,
+            2,
+            env::spec_of("catch").unwrap().obs_len(),
+            3,
+            &PipelineGauges::new(),
+        );
+        assert!(zero_eps.is_err());
+
+        // a policy returning too few logits is a loud error, not UB
+        let short = run_batched_eval(
+            |_| env::make_wrapped("catch", 0, &WrapperCfg::default()),
+            |_, n| Ok((vec![0.0; n], vec![0.0; n])), // 1 logit per stream, need 3
+            1,
+            1,
+            env::spec_of("catch").unwrap().obs_len(),
+            3,
+            &PipelineGauges::new(),
+        );
+        assert!(short.unwrap_err().to_string().contains("logits"));
     }
 }

@@ -29,6 +29,7 @@ use std::fmt;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::telemetry::gauges::{Counter, Gauge, PipelineGauges};
 use crate::util::stats::Summary;
 
 /// Batcher sizing: slot/result buffers are preallocated from these.
@@ -46,6 +47,11 @@ pub struct BatcherConfig {
     /// Slot-pool size.  Size it to the number of concurrent actors so
     /// checkout never blocks; smaller pools still work (actors wait).
     pub slots: usize,
+    /// Slot-occupancy gauge (telemetry; detached unless the driver
+    /// wires it to its shared registry via [`BatcherConfig::with_gauges`]).
+    pub slots_in_use: Gauge,
+    /// Counts requests that blocked waiting for a free slot.
+    pub slot_waits: Counter,
 }
 
 impl BatcherConfig {
@@ -61,11 +67,20 @@ impl BatcherConfig {
             obs_len,
             num_actions,
             slots: 2 * max_batch,
+            slots_in_use: Gauge::default(),
+            slot_waits: Counter::default(),
         }
     }
 
     pub fn with_slots(mut self, slots: usize) -> BatcherConfig {
         self.slots = slots;
+        self
+    }
+
+    /// Report slot occupancy/starvation into a shared gauge registry.
+    pub fn with_gauges(mut self, gauges: &PipelineGauges) -> BatcherConfig {
+        self.slots_in_use = gauges.slots_in_use.clone();
+        self.slot_waits = gauges.slot_waits.clone();
         self
     }
 }
@@ -154,6 +169,9 @@ struct Shared {
     /// Recycled batch storages (one in steady state).
     buffers: Mutex<Vec<BatchStorage>>,
     stats: Mutex<BatcherStats>,
+    /// Telemetry: slots currently checked out / requests that starved.
+    slots_in_use: Gauge,
+    slot_waits: Counter,
 }
 
 impl Shared {
@@ -286,6 +304,7 @@ impl InferenceClient {
         // wait for the result — one critical section end to end (the
         // condvar waits release the lock while blocked).
         let mut inner = s.inner.lock().unwrap();
+        let mut starved = false;
         let slot_id = loop {
             if inner.closed {
                 return None;
@@ -293,8 +312,15 @@ impl InferenceClient {
             if let Some(id) = inner.free.pop() {
                 break id;
             }
+            if !starved {
+                // once per request: how often checkout starved, not
+                // how many times the waiter re-woke
+                starved = true;
+                s.slot_waits.inc();
+            }
             inner = s.slot_free.wait(inner).unwrap();
         };
+        s.slots_in_use.add(1);
         inner.slots[slot_id].obs.copy_from_slice(obs);
         inner.slots[slot_id].state = SlotState::Queued;
         inner.slots[slot_id].submitted = Instant::now();
@@ -309,6 +335,7 @@ impl InferenceClient {
                     let baseline = inner.slots[slot_id].baseline;
                     inner.slots[slot_id].state = SlotState::Free;
                     inner.free.push(slot_id);
+                    s.slots_in_use.sub(1);
                     drop(inner);
                     s.slot_free.notify_one();
                     return Some(baseline);
@@ -316,6 +343,7 @@ impl InferenceClient {
                 SlotState::Failed => {
                     inner.slots[slot_id].state = SlotState::Free;
                     inner.free.push(slot_id);
+                    s.slots_in_use.sub(1);
                     drop(inner);
                     s.slot_free.notify_one();
                     return None;
@@ -578,6 +606,8 @@ pub fn dynamic_batcher(cfg: BatcherConfig) -> (InferenceClient, BatchStream) {
         wake: (0..n_slots).map(|_| Condvar::new()).collect(),
         buffers: Mutex::new(Vec::new()),
         stats: Mutex::new(BatcherStats::with_max_batch(cfg.max_batch)),
+        slots_in_use: cfg.slots_in_use,
+        slot_waits: cfg.slot_waits,
     });
     (
         InferenceClient {
@@ -902,6 +932,58 @@ mod tests {
         // and subsequent submissions fail fast
         let mut logits = Vec::new();
         assert!(client.infer(&[0.0], &mut logits).is_none());
+    }
+
+    /// Telemetry contract: the slot gauge tracks checkout/return and
+    /// the starvation counter fires when a request waits for a slot.
+    #[test]
+    fn slot_gauges_track_occupancy_and_starvation() {
+        let g = PipelineGauges::new();
+        let (client, stream) = dynamic_batcher(
+            cfg(1, Duration::from_millis(1), 1, 1)
+                .with_slots(1)
+                .with_gauges(&g),
+        );
+        // first request takes the only slot...
+        let a = {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                let mut logits = Vec::new();
+                c.infer(&[1.0], &mut logits)
+            })
+        };
+        for _ in 0..2000 {
+            if g.slots_in_use.get() == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(g.slots_in_use.get(), 1);
+        // ...so a second concurrent request starves on checkout
+        let b = {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                let mut logits = Vec::new();
+                c.infer(&[2.0], &mut logits)
+            })
+        };
+        for _ in 0..2000 {
+            if g.slot_waits.get() > 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(g.slot_waits.get(), 1, "blocked checkout must count as starved");
+        // serve both requests through the single recycled slot
+        for _ in 0..2 {
+            let batch = stream.next_batch().unwrap();
+            let n = batch.len();
+            batch.respond(&vec![0.0; n], &vec![0.0; n], 1).unwrap();
+        }
+        assert!(a.join().unwrap().is_some());
+        assert!(b.join().unwrap().is_some());
+        assert_eq!(g.slots_in_use.get(), 0, "all slots returned");
+        client.close();
     }
 
     #[test]

@@ -14,5 +14,5 @@ pub mod dynamic_batcher;
 pub mod rollout;
 pub mod weights;
 
-pub use driver::{evaluate, fold_seed, train, TrainReport};
+pub use driver::{evaluate, evaluate_batched, fold_seed, train, EvalReport, TrainReport};
 pub use rollout::RolloutPool;

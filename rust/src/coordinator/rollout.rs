@@ -11,6 +11,7 @@
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::runtime::{LearnerBatch, Manifest};
+use crate::telemetry::gauges::PipelineGauges;
 
 /// One actor's T-step rollout (batch dimension absent).
 #[derive(Debug, Clone)]
@@ -111,6 +112,9 @@ struct PoolShared {
     inner: Mutex<PoolInner>,
     available: Condvar,
     capacity: usize,
+    /// Occupancy gauges (relaxed atomics; see telemetry::gauges) —
+    /// the driver's shared registry, or a detached default.
+    gauges: Arc<PipelineGauges>,
 }
 
 struct PoolInner {
@@ -119,12 +123,31 @@ struct PoolInner {
 }
 
 impl RolloutPool {
-    /// Preallocate `capacity` rollout buffers of the given shape.
+    /// Preallocate `capacity` rollout buffers of the given shape
+    /// (occupancy reported into a detached gauge set; the driver uses
+    /// [`with_gauges`](RolloutPool::with_gauges) to share one).
     pub fn new(capacity: usize, t: usize, obs_len: usize, num_actions: usize) -> RolloutPool {
+        RolloutPool::with_gauges(capacity, t, obs_len, num_actions, PipelineGauges::shared())
+    }
+
+    /// [`new`](RolloutPool::new), reporting occupancy (`pool_free`,
+    /// `pool_capacity`, `pool_rent_waits`; snapshots derive rented =
+    /// capacity − free) into a shared gauge registry.
+    pub fn with_gauges(
+        capacity: usize,
+        t: usize,
+        obs_len: usize,
+        num_actions: usize,
+        gauges: Arc<PipelineGauges>,
+    ) -> RolloutPool {
         assert!(capacity > 0, "pool needs at least one buffer");
         let free = (0..capacity)
             .map(|_| Rollout::new(t, obs_len, num_actions))
             .collect();
+        // capacity is static; snapshots derive rented = capacity - free
+        // from a single dynamic atomic (tear-free pool accounting)
+        gauges.pool_capacity.set(capacity as u64);
+        gauges.pool_free.set(capacity as u64);
         RolloutPool {
             shared: Arc::new(PoolShared {
                 inner: Mutex::new(PoolInner {
@@ -133,20 +156,35 @@ impl RolloutPool {
                 }),
                 available: Condvar::new(),
                 capacity,
+                gauges,
             }),
         }
+    }
+
+    /// The gauge registry this pool reports occupancy into.
+    pub fn gauges(&self) -> &Arc<PipelineGauges> {
+        &self.shared.gauges
     }
 
     /// Take a buffer out of the pool, blocking while it is empty.
     /// Returns `None` once the pool has been closed.
     pub fn rent(&self) -> Option<Rollout> {
+        let g = &self.shared.gauges;
         let mut inner = self.shared.inner.lock().unwrap();
+        let mut starved = false;
         loop {
             if inner.closed {
                 return None;
             }
             if let Some(r) = inner.free.pop() {
+                g.pool_free.sub(1);
                 return Some(r);
+            }
+            if !starved {
+                // counted once per blocking rent: how often actors
+                // starve on the pool, not how often they re-wake
+                starved = true;
+                g.pool_rent_waits.inc();
             }
             inner = self.shared.available.wait(inner).unwrap();
         }
@@ -158,11 +196,16 @@ impl RolloutPool {
         if inner.closed {
             return None;
         }
-        inner.free.pop()
+        let r = inner.free.pop();
+        if r.is_some() {
+            self.shared.gauges.pool_free.sub(1);
+        }
+        r
     }
 
     /// Return a buffer to the pool (reset for reuse).  Buffers handed
-    /// back after close — or beyond capacity — are simply dropped.
+    /// back after close — or beyond capacity — are simply dropped (and
+    /// stay counted as rented: they really are gone from the pool).
     pub fn recycle(&self, mut r: Rollout) {
         r.filled = 0;
         let mut inner = self.shared.inner.lock().unwrap();
@@ -170,6 +213,7 @@ impl RolloutPool {
             return;
         }
         inner.free.push(r);
+        self.shared.gauges.pool_free.add(1);
         drop(inner);
         self.shared.available.notify_one();
     }
@@ -373,6 +417,59 @@ mod tests {
         // a foreign buffer recycled into a full pool is dropped
         pool.recycle(Rollout::new(2, 2, 2));
         assert_eq!(pool.available(), pool.capacity());
+        // the dropped foreign buffer never entered the accounting:
+        // free stays at capacity, so derived rented stays zero
+        let s = pool.gauges().snapshot();
+        assert_eq!((s.pool_free, s.pool_rented), (1, 0));
+    }
+
+    /// Telemetry contract: the pool's gauges track occupancy exactly,
+    /// including the starvation counter under pool exhaustion.
+    #[test]
+    fn gauges_track_occupancy_under_exhaustion() {
+        let g = PipelineGauges::shared();
+        // snapshot occupancy, cross-checked against the pool's locked
+        // ground truth — an unbalanced gauge update cannot hide behind
+        // the derived free + rented == capacity identity
+        let occ = |pool: &RolloutPool| {
+            let s = pool.gauges().snapshot();
+            assert_eq!(
+                s.pool_free,
+                pool.available() as u64,
+                "free gauge must match the pool's actual free count"
+            );
+            (s.pool_free, s.pool_rented)
+        };
+        let pool = RolloutPool::with_gauges(2, 2, 2, 2, g.clone());
+        assert_eq!(occ(&pool), (2, 0));
+
+        let a = pool.rent().unwrap();
+        let b = pool.rent().unwrap();
+        assert_eq!(occ(&pool), (0, 2));
+        assert_eq!(g.pool_rent_waits.get(), 0, "no starvation yet");
+
+        // a renter on the drained pool blocks and is counted starved
+        let waiter = {
+            let pool = pool.clone();
+            std::thread::spawn(move || pool.rent())
+        };
+        for _ in 0..2000 {
+            if g.pool_rent_waits.get() > 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(g.pool_rent_waits.get(), 1, "blocked rent must count as starved");
+
+        pool.recycle(a);
+        let r = waiter.join().unwrap().unwrap();
+        // b and r are out; the recycled-then-rented buffer nets out
+        assert_eq!(occ(&pool), (0, 2));
+
+        pool.recycle(b);
+        pool.recycle(r);
+        assert_eq!(occ(&pool), (2, 0));
+        assert_eq!(g.pool_rent_waits.get(), 1, "starvation counter is monotonic");
     }
 
     #[test]

@@ -127,6 +127,18 @@ pub fn make_env(name: &str, seed: u64) -> anyhow::Result<Box<dyn Environment>> {
 }
 
 /// Construct an env with the standard wrapper stack from a config.
+///
+/// # Examples
+///
+/// ```
+/// use torchbeast::env::{self, wrappers::WrapperCfg};
+///
+/// let mut e = env::make_wrapped("catch", 0, &WrapperCfg::default()).unwrap();
+/// let mut obs = vec![0.0f32; e.spec().obs_len()];
+/// e.reset(&mut obs);
+/// let step = e.step(1, &mut obs);
+/// assert!(step.reward.is_finite());
+/// ```
 pub fn make_wrapped(
     name: &str,
     seed: u64,

@@ -16,9 +16,26 @@
 //!   Pallas kernel, fused into the learner artifact.
 //!
 //! See `rust/DESIGN.md` for the system inventory, the buffer-pool
-//! architecture of the inference hot path, and the substitution table
-//! (what stands in for gRPC, Atari, serde, …) that code comments
-//! reference as "DESIGN.md §…".
+//! architecture of the inference hot path, the telemetry subsystem
+//! (structured logging + occupancy gauges), and the substitution
+//! table (what stands in for gRPC, Atari, serde, …) that code
+//! comments reference as "DESIGN.md §…".
+//!
+//! # Quickstart
+//!
+//! The main entry points are re-exported at the crate root:
+//!
+//! ```no_run
+//! use torchbeast::{train, TrainConfig};
+//!
+//! let cfg = TrainConfig {
+//!     artifact_dir: "artifacts/catch".into(),
+//!     total_steps: 200,
+//!     ..TrainConfig::default()
+//! };
+//! let report = train(&cfg).unwrap();
+//! println!("{} frames at {:.0} fps — {}", report.frames, report.fps, report.gauges);
+//! ```
 
 pub mod agent;
 pub mod config;
@@ -27,5 +44,10 @@ pub mod env;
 pub mod metrics;
 pub mod rpc;
 pub mod runtime;
+pub mod telemetry;
 pub mod util;
 pub mod vtrace;
+
+pub use config::{Mode, TrainConfig};
+pub use coordinator::{evaluate, evaluate_batched, train, EvalReport, TrainReport};
+pub use telemetry::{GaugesSnapshot, Level, PipelineGauges};

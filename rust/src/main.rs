@@ -16,6 +16,7 @@ use torchbeast::config::TrainConfig;
 use torchbeast::coordinator;
 use torchbeast::rpc::EnvServer;
 use torchbeast::runtime::Manifest;
+use torchbeast::tb_info;
 
 fn usage() -> ! {
     eprintln!(
@@ -76,11 +77,13 @@ fn main() -> anyhow::Result<()> {
             }
             let server = EnvServer::start(&listen)?;
             println!("env-server listening on {}", server.addr);
-            // Serve until killed.
+            // Serve until killed; the periodic status line goes
+            // through the telemetry sink like every other report.
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(5));
-                eprintln!(
-                    "[env-server] streams={} steps_served={}",
+                tb_info!(
+                    "env-server",
+                    "streams={} steps_served={}",
                     server.connections.load(std::sync::atomic::Ordering::Relaxed),
                     server
                         .steps_served
@@ -91,9 +94,11 @@ fn main() -> anyhow::Result<()> {
         "eval" => {
             let mut cfg = TrainConfig::default();
             cfg.apply_args(rest)?;
+            torchbeast::telemetry::log::set_max_level(cfg.log_level);
             // Evaluate a checkpoint's greedy policy (or, without
             // --init_checkpoint, fresh seeded params as an artifact
-            // smoke check).
+            // smoke check).  Episodes are batched across --eval_batch
+            // inference slots (0 = the artifact's full batch).
             let mut learner = torchbeast::runtime::LearnerEngine::load(&cfg.artifact_dir)?;
             let (params, what) = match &cfg.init_checkpoint {
                 Some(path) => (
@@ -105,9 +110,19 @@ fn main() -> anyhow::Result<()> {
                     format!("random init (seed {})", cfg.seed),
                 ),
             };
-            let mean =
-                coordinator::evaluate(&cfg.artifact_dir, &params, 20, cfg.seed, &cfg.wrappers)?;
-            println!("greedy policy of {what}: mean return over 20 episodes = {mean:.3}");
+            let report = coordinator::evaluate_batched(
+                &cfg.artifact_dir,
+                &params,
+                20,
+                cfg.seed,
+                &cfg.wrappers,
+                cfg.eval_batch,
+            )?;
+            println!(
+                "greedy policy of {what}: mean return over {} episodes = {:.3} \
+                 ({:.0} fps, mean inference batch {:.2})",
+                report.episodes, report.mean_return, report.fps, report.mean_batch
+            );
             Ok(())
         }
         "inspect" => {

@@ -1,6 +1,12 @@
-//! Training metrics hub: thread-safe counters, episode-return
-//! tracking, and a CSV curve logger (the learning curves in Figures
-//! 3-4 are regenerated from these logs).
+//! Training metrics hub: thread-safe *cumulative* counters,
+//! episode-return tracking, and a CSV curve logger (the learning
+//! curves in Figures 3-4 are regenerated from these logs).
+//!
+//! Division of labor with [`crate::telemetry`]: this module counts
+//! what training *produced* (frames, episodes, losses, returns);
+//! instantaneous pipeline *occupancy* (pool/queue/slot fill) lives in
+//! [`crate::telemetry::gauges`], and log lines route through
+//! [`crate::telemetry::log`].
 
 use std::collections::VecDeque;
 use std::io::Write;

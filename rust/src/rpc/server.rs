@@ -37,6 +37,14 @@ pub struct EnvServer {
 impl EnvServer {
     /// Bind and start serving on `addr` (use port 0 for an ephemeral
     /// port; the bound address is in `self.addr`).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// let mut server = torchbeast::rpc::EnvServer::start("127.0.0.1:0").unwrap();
+    /// println!("serving environments on {}", server.addr);
+    /// server.shutdown();
+    /// ```
     pub fn start(addr: &str) -> anyhow::Result<EnvServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
@@ -62,7 +70,15 @@ impl EnvServer {
                                 std::thread::Builder::new()
                                     .name("env-server-stream".into())
                                     .spawn(move || {
-                                        let _ = serve_stream(stream, &stop3, &steps3);
+                                        if let Err(e) = serve_stream(stream, &stop3, &steps3) {
+                                            // abrupt disconnects and protocol
+                                            // errors are visible at the
+                                            // default level, not silent
+                                            crate::tb_warn!(
+                                                "env-server",
+                                                "stream ended with error: {e}"
+                                            );
+                                        }
                                     })
                                     .expect("spawn stream thread"),
                             );

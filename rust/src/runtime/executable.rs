@@ -7,7 +7,7 @@
 //!
 //! All exported modules return a root tuple (`return_tuple=True` at
 //! lowering), which PJRT hands back as a single tuple literal;
-//! [`Module::run`] decomposes it into per-output literals.
+//! [`Module::run_buffers`] decomposes it into per-output literals.
 
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -36,8 +36,9 @@ impl Module {
         let exe = client
             .compile(&comp)
             .with_context(|| format!("compiling {}", path.display()))?;
-        eprintln!(
-            "[runtime] compiled {name} from {} in {:?}",
+        crate::tb_info!(
+            "runtime",
+            "compiled {name} from {} in {:?}",
             path.display(),
             t0.elapsed()
         );

@@ -1,0 +1,253 @@
+//! Pipeline occupancy gauges: cheap atomic instrumentation for the
+//! actor→batcher→learner hot path.
+//!
+//! The experience path is allocation-free by contract
+//! (`tests/alloc_regression.rs`), so its instrumentation must be too:
+//! a [`Gauge`] update is one relaxed atomic op — no locks, no
+//! formatting, no allocation.  Components update gauges inline;
+//! *reading* them (snapshots, the driver's periodic report line) is
+//! reporting-path only.
+//!
+//! [`PipelineGauges`] is the registry the driver threads through the
+//! pipeline: the rollout pool, the learner queue, the prefetch queue
+//! and the inference batcher all report into one shared instance, and
+//! `driver::train` prints its [`GaugesSnapshot`] alongside fps/loss —
+//! the Prometheus-style occupancy view the paper ships for its own
+//! actor/learner system (§5.2).  Every constructor that takes gauges
+//! also works detached (a fresh default instance) so unit tests and
+//! benches pay one atomic per event and nothing else.
+//!
+//! # Examples
+//!
+//! ```
+//! use torchbeast::telemetry::gauges::PipelineGauges;
+//!
+//! let g = PipelineGauges::new();
+//! g.queue_depth.add(3);
+//! g.queue_depth.sub(1);
+//! assert_eq!(g.queue_depth.get(), 2);
+//! assert!(g.snapshot().to_string().contains("queue 2"));
+//! ```
+
+use std::fmt;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Monotonic event counter (relaxed atomic add; hot-path safe).
+/// Clones share the same underlying counter.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl fmt::Debug for Counter {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Counter({})", self.get())
+    }
+}
+
+/// Instantaneous occupancy gauge (relaxed atomic add/sub/set;
+/// hot-path safe).  Clones share the same underlying value.
+///
+/// Stored signed so a racy or unbalanced `sub` can never wrap to a
+/// huge count; reads clamp at zero instead.
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v as i64, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n as i64, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn sub(&self, n: u64) {
+        self.0.fetch_sub(n as i64, Ordering::Relaxed);
+    }
+
+    /// Current value, clamped at zero.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed).max(0) as u64
+    }
+}
+
+impl fmt::Debug for Gauge {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Gauge({})", self.get())
+    }
+}
+
+/// The occupancy gauges of one training (or evaluation) pipeline.
+/// Handles are `Clone` (shared atomics), so the driver clones
+/// individual gauges into the components that update them.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineGauges {
+    /// `RolloutPool`: buffers free in the pool, ready to rent.
+    pub pool_free: Gauge,
+    /// `RolloutPool`: total preallocated buffers (set once at pool
+    /// construction).  Rented-out buffers are *derived* as
+    /// `capacity - free` in [`snapshot`](PipelineGauges::snapshot), so
+    /// pool accounting reads one dynamic atomic and can never tear.
+    pub pool_capacity: Gauge,
+    /// Times a renter blocked on a drained pool (actor starvation).
+    pub pool_rent_waits: Counter,
+    /// Learner queue: rollouts waiting to be stacked.
+    pub queue_depth: Gauge,
+    /// Stacked batches prefetched ahead of the learner (the stacker's
+    /// lead; 0 means the learner is about to stall on stacking).
+    pub batches_ready: Gauge,
+    /// Dynamic batcher: inference slots currently checked out.
+    pub slots_in_use: Gauge,
+    /// Times a request blocked waiting for a free inference slot.
+    pub slot_waits: Counter,
+}
+
+impl PipelineGauges {
+    pub fn new() -> PipelineGauges {
+        PipelineGauges::default()
+    }
+
+    /// A shared registry to thread through the pipeline components.
+    pub fn shared() -> Arc<PipelineGauges> {
+        Arc::new(PipelineGauges::new())
+    }
+
+    /// Point-in-time copy for reports.  Pool accounting is tear-free
+    /// (`pool_rented` derives from the static capacity and one load of
+    /// `pool_free`, so `free + rented == capacity` always holds);
+    /// gauges are otherwise independent relaxed reads.
+    pub fn snapshot(&self) -> GaugesSnapshot {
+        let pool_free = self.pool_free.get();
+        GaugesSnapshot {
+            pool_free,
+            pool_rented: self.pool_capacity.get().saturating_sub(pool_free),
+            pool_rent_waits: self.pool_rent_waits.get(),
+            queue_depth: self.queue_depth.get(),
+            batches_ready: self.batches_ready.get(),
+            slots_in_use: self.slots_in_use.get(),
+            slot_waits: self.slot_waits.get(),
+        }
+    }
+}
+
+/// Plain-number snapshot of [`PipelineGauges`], carried in
+/// `TrainReport`/`EvalReport` and rendered in the driver's periodic
+/// progress line.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GaugesSnapshot {
+    pub pool_free: u64,
+    pub pool_rented: u64,
+    pub pool_rent_waits: u64,
+    pub queue_depth: u64,
+    pub batches_ready: u64,
+    pub slots_in_use: u64,
+    pub slot_waits: u64,
+}
+
+impl fmt::Display for GaugesSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "pool {}/{} rented (starved {}x) queue {} prefetch {} slots {} (starved {}x)",
+            self.pool_rented,
+            self.pool_rented + self.pool_free,
+            self.pool_rent_waits,
+            self.queue_depth,
+            self.batches_ready,
+            self.slots_in_use,
+            self.slot_waits,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates_across_clones() {
+        let c = Counter::new();
+        let c2 = c.clone();
+        c.inc();
+        c2.add(4);
+        assert_eq!(c.get(), 5);
+        assert_eq!(format!("{c:?}"), "Counter(5)");
+    }
+
+    #[test]
+    fn gauge_tracks_and_clamps() {
+        let g = Gauge::new();
+        g.add(3);
+        g.sub(1);
+        assert_eq!(g.get(), 2);
+        g.sub(10); // unbalanced: clamps at zero instead of wrapping
+        assert_eq!(g.get(), 0);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        assert_eq!(format!("{g:?}"), "Gauge(7)");
+    }
+
+    #[test]
+    fn snapshot_is_a_consistent_copy() {
+        let p = PipelineGauges::new();
+        p.pool_capacity.set(8);
+        p.pool_free.set(3);
+        p.queue_depth.set(2);
+        p.batches_ready.set(1);
+        p.slots_in_use.set(4);
+        p.pool_rent_waits.add(6);
+        let s = p.snapshot();
+        assert_eq!(s.pool_free, 3);
+        assert_eq!(s.pool_rented, 5, "rented derives from capacity - free");
+        assert_eq!(s.pool_rented + s.pool_free, 8, "pool accounting cannot tear");
+        assert_eq!(s.pool_rent_waits, 6);
+        // the snapshot is detached from later updates
+        p.queue_depth.add(10);
+        assert_eq!(s.queue_depth, 2);
+    }
+
+    #[test]
+    fn display_reads_like_a_report_line() {
+        let s = GaugesSnapshot {
+            pool_free: 3,
+            pool_rented: 5,
+            pool_rent_waits: 1,
+            queue_depth: 4,
+            batches_ready: 2,
+            slots_in_use: 6,
+            slot_waits: 0,
+        };
+        let line = s.to_string();
+        assert!(line.contains("pool 5/8 rented"), "{line}");
+        assert!(line.contains("queue 4"), "{line}");
+        assert!(line.contains("prefetch 2"), "{line}");
+        assert!(line.contains("slots 6"), "{line}");
+    }
+}

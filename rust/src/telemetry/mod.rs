@@ -1,0 +1,18 @@
+//! Telemetry: the crate's observability subsystem — a leveled
+//! structured [`log`] with a swappable global sink, and the atomic
+//! occupancy [`gauges`] the pipeline components report into.
+//!
+//! The split mirrors the hot-path discipline (DESIGN.md §Telemetry):
+//!
+//! * **events** (warnings, progress lines, rare state changes) go
+//!   through [`log`] — formatted only when the level filter passes,
+//!   capturable by tests, off the experience path;
+//! * **occupancy** (pool/queue/slot fill) goes through [`gauges`] —
+//!   one relaxed atomic per update, readable at any time by the
+//!   report path, and safe inside the allocation-free hot loops.
+
+pub mod gauges;
+pub mod log;
+
+pub use gauges::{Counter, Gauge, GaugesSnapshot, PipelineGauges};
+pub use log::{CaptureSink, Level, LogSink, Record};

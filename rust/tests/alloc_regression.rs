@@ -22,12 +22,19 @@ use torchbeast::coordinator::rollout::{stack_rollouts, Rollout, RolloutPool};
 use torchbeast::env::wrappers::{wrapped_spec, WrapperCfg};
 use torchbeast::env::{self, Environment};
 use torchbeast::metrics::Metrics;
+use torchbeast::rpc::{EnvServer, RemoteEnv};
 use torchbeast::runtime::manifest::{DType, LeafSpec};
 use torchbeast::runtime::{LearnerBatch, Manifest};
 use torchbeast::util::counting_alloc::{allocations, CountingAllocator};
 
 #[global_allocator]
 static ALLOC: CountingAllocator = CountingAllocator;
+
+/// The allocation counter is process-global and cargo runs tests in
+/// parallel, so every test in this binary takes this lock: another
+/// test's setup/teardown allocations must not land in a measuring
+/// window.
+static MEASURE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 const UNROLL: usize = 5;
 const BATCH: usize = 2;
@@ -66,6 +73,7 @@ fn stub_manifest(obs_shape: [usize; 3], num_actions: usize) -> Manifest {
 /// mono experience path must not touch the heap at all.
 #[test]
 fn actor_to_learner_path_is_allocation_free_at_steady_state() {
+    let _serial = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     // frame_stack = 2 exercises the FrameStack ring's in-place writes
     // (it used to allocate a scratch Vec per env step)
     let wrappers = WrapperCfg {
@@ -159,11 +167,118 @@ fn actor_to_learner_path_is_allocation_free_at_steady_state() {
     assert!(produced as usize >= WARMUP_BATCHES + MEASURE_BATCHES);
 }
 
+/// The poly half of the same claim (ROADMAP): remote observations
+/// deserialize through the rpc codec straight into the actor's obs
+/// buffer, so a localhost poly pipeline must be just as
+/// allocation-free as the mono one.  The env servers run in this
+/// process and share the counting allocator, so both ends of the wire
+/// are measured: client `write_action`/`read_frame`/
+/// `decode_observation_into` and the server's reused frame buffers.
+#[test]
+fn poly_actor_path_is_allocation_free_at_steady_state() {
+    let _serial = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let wrappers = WrapperCfg::default();
+    let spec = env::spec_of("catch").unwrap();
+    let obs_len = spec.obs_len();
+    let num_actions = spec.num_actions;
+    let manifest = stub_manifest(spec.obs_shape(), num_actions);
+
+    let mut server = EnvServer::start("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+
+    let (client, stream) = dynamic_batcher(
+        BatcherConfig::new(ACTORS, Duration::from_micros(500), obs_len, num_actions)
+            .with_slots(ACTORS),
+    );
+    let (tx, rx) = batching_queue::<Rollout>(2 * BATCH);
+    let buffers = RolloutPool::new(ACTORS + 2 * BATCH + BATCH, UNROLL, obs_len, num_actions);
+    let metrics = Metrics::shared();
+
+    let infer_thread = std::thread::spawn(move || {
+        let logits = vec![0.0f32; ACTORS * num_actions];
+        let baselines = vec![0.0f32; ACTORS];
+        while let Some(batch) = stream.next_batch() {
+            let n = batch.len();
+            batch
+                .respond(&logits[..n * num_actions], &baselines[..n], num_actions)
+                .unwrap();
+        }
+    });
+
+    let envs: Vec<Box<dyn Environment>> = (0..ACTORS)
+        .map(|i| {
+            Box::new(RemoteEnv::connect(&addr, "catch", i as u64, &wrappers).unwrap())
+                as Box<dyn Environment>
+        })
+        .collect();
+    let pool = ActorPool::spawn(
+        envs,
+        client.clone(),
+        tx.clone(),
+        buffers.clone(),
+        metrics.clone(),
+        ActorConfig {
+            unroll_length: UNROLL,
+            num_actions,
+            obs_len,
+            seed: 11,
+        },
+    );
+
+    let mut batch = LearnerBatch::zeros(&manifest);
+    let mut rollouts: Vec<Rollout> = Vec::with_capacity(BATCH);
+    let consume = |n: usize, rollouts: &mut Vec<Rollout>, batch: &mut LearnerBatch| {
+        for _ in 0..n {
+            assert!(rx.recv_batch_into(BATCH, rollouts), "pipeline died early");
+            stack_rollouts(rollouts, &manifest, batch);
+            for r in rollouts.drain(..) {
+                buffers.recycle(r);
+            }
+        }
+    };
+
+    consume(WARMUP_BATCHES, &mut rollouts, &mut batch);
+    let a0 = allocations();
+    consume(MEASURE_BATCHES, &mut rollouts, &mut batch);
+    let allocs = allocations() - a0;
+
+    let frames = (MEASURE_BATCHES * BATCH * UNROLL) as f64;
+    let per_frame = allocs as f64 / frames;
+    eprintln!(
+        "poly steady state: {allocs} heap allocations over {frames} env steps \
+         ({per_frame:.4}/step through the rpc codec)"
+    );
+    // Same zero budget as the mono test.  The only legitimate stragglers
+    // are anyhow-boxed server read-timeouts, which need a 200 ms stall
+    // mid-measurement to occur at all.
+    assert!(
+        per_frame < 0.02,
+        "poly experience path is allocating again: {per_frame:.4} allocs per env step"
+    );
+
+    rx.close();
+    buffers.close();
+    client.shutdown_for_tests();
+    let reports = pool.join();
+    infer_thread.join().unwrap();
+    server.shutdown();
+    assert_eq!(reports.len(), ACTORS);
+    let produced: u64 = reports.iter().map(|r| r.rollouts).sum();
+    assert!(produced as usize >= WARMUP_BATCHES + MEASURE_BATCHES);
+    assert!(
+        server
+            .steps_served
+            .load(std::sync::atomic::Ordering::Relaxed)
+            > 0
+    );
+}
+
 /// Rollout handoff ships the pooled buffer itself: the backing
 /// allocation the learner side receives is the very allocation the
 /// actor filled (no clone anywhere in between).
 #[test]
 fn rollout_handoff_moves_the_buffer_not_a_copy() {
+    let _serial = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let spec = env::spec_of("catch").unwrap();
     let obs_len = spec.obs_len();
     let (client, stream) = dynamic_batcher(BatcherConfig::new(

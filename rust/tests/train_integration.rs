@@ -169,3 +169,56 @@ fn evaluate_runs_greedy_policy() {
     // catch returns are in [-1, 1]
     assert!((-1.0..=1.0).contains(&mean));
 }
+
+#[test]
+fn evaluate_batched_reports_throughput() {
+    let Some(cfg) = base_cfg("catch") else { return };
+    let mut learner = LearnerEngine::load(&cfg.artifact_dir).unwrap();
+    let params = learner.init_params(5).unwrap();
+    // single stream (the old evaluate) vs the artifact's full batch
+    let single = coordinator::evaluate_batched(
+        &cfg.artifact_dir, &params, 6, 1, &cfg.wrappers, 1,
+    )
+    .unwrap();
+    let batched = coordinator::evaluate_batched(
+        &cfg.artifact_dir, &params, 6, 1, &cfg.wrappers, 0,
+    )
+    .unwrap();
+    for r in [&single, &batched] {
+        assert_eq!(r.episodes, 6);
+        assert!(r.frames >= 6, "frames {}", r.frames);
+        assert!(r.mean_return.is_finite());
+        assert!(r.fps > 0.0);
+    }
+    assert!((single.mean_batch - 1.0).abs() < 1e-9, "eval_batch=1 is single-stream");
+    assert!(
+        batched.mean_batch > 1.0,
+        "batched eval must actually batch inference: {}",
+        batched.mean_batch
+    );
+}
+
+/// The telemetry acceptance gate: pool occupancy, learner-queue depth
+/// and stacker prefetch lead are all visible in the TrainReport, and
+/// the pre-shutdown snapshot accounts for every pooled buffer.
+#[test]
+fn train_report_exposes_pipeline_gauges() {
+    let Some(cfg) = base_cfg("catch") else { return };
+    let m = torchbeast::runtime::Manifest::load(&cfg.artifact_dir).unwrap();
+    let report = coordinator::train(&cfg).unwrap();
+    let g = report.gauges;
+    // Snapshots derive rented = capacity - free from one atomic load,
+    // so free + rented == max(free, capacity): this equality gates the
+    // capacity gauge AND that the free count never over-counts past
+    // it.  (Exact per-operation free-count accounting is gated by the
+    // rollout-pool unit test against the pool's locked ground truth.)
+    let pool_capacity = (cfg.num_actors + cfg.queue_capacity + m.batch_size) as u64;
+    assert_eq!(
+        g.pool_free + g.pool_rented,
+        pool_capacity,
+        "free gauge over-counted or capacity gauge wrong: {g:?}"
+    );
+    assert!(g.queue_depth <= cfg.queue_capacity as u64);
+    assert!(g.batches_ready <= 2, "double-buffered prefetch is bounded");
+    assert!(g.slots_in_use <= cfg.num_actors as u64);
+}

@@ -22,6 +22,11 @@ cargo test -q
 echo "== cargo test --release --test alloc_regression =="
 cargo test --release --test alloc_regression -- --nocapture
 
+# The documentation surface is gated too: rustdoc must build clean
+# (broken intra-doc links and bad doc syntax are warnings -> errors).
+echo "== cargo doc --no-deps (warning-free) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --package torchbeast --quiet
+
 if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
     cargo fmt --check
