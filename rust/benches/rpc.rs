@@ -10,8 +10,8 @@
 use std::time::Instant;
 
 use torchbeast::env::wrappers::WrapperCfg;
-use torchbeast::env::Environment;
-use torchbeast::rpc::{EnvServer, RemoteEnv};
+use torchbeast::env::{Environment, SlotStep, VecEnvironment};
+use torchbeast::rpc::{EnvServer, RemoteEnv, RemoteVecEnv};
 use torchbeast::util::counting_alloc::{allocations, CountingAllocator};
 use torchbeast::util::stats::Summary;
 
@@ -102,5 +102,87 @@ fn main() -> anyhow::Result<()> {
          per stream — the §5.3 GIL ceiling that motivated PolyBeast's C++\n\
          server does not exist here)."
     );
+
+    // batched streams (VecEnv protocol): the same 32-env workload as
+    // one group per stream vs one env per stream.  A group of B costs
+    // 2 wire frames and 1 server thread per step for all B envs.
+    println!(
+        "\n== batched streams (VecEnv protocol): 32 envs x {} steps each ==",
+        BATCH_STEPS
+    );
+    println!(
+        "{:>10} {:>10} {:>16} {:>16} {:>14} {:>10}",
+        "group_B", "streams", "env_steps_sec", "frames_per_step", "srv_threads", "speedup"
+    );
+    let total_envs = 32usize;
+    let mut base_sps = 0.0f64;
+    for &b in &[1usize, 8, 32] {
+        let server = EnvServer::start("127.0.0.1:0")?;
+        let addr = server.addr.to_string();
+        let n_groups = total_envs / b;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..n_groups)
+            .map(|g| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let seeds: Vec<u64> = (0..b as u64).map(|s| (g as u64) * 100 + s).collect();
+                    let mut venv =
+                        RemoteVecEnv::connect(&addr, "catch", &seeds, &WrapperCfg::default())
+                            .unwrap();
+                    let l = venv.spec().obs_len();
+                    let na = venv.spec().num_actions;
+                    let mut obs = vec![0.0f32; b * l];
+                    let mut steps = vec![SlotStep::default(); b];
+                    let mut actions = vec![0usize; b];
+                    venv.reset_all(&mut obs);
+                    for i in 0..BATCH_STEPS {
+                        for (s, a) in actions.iter_mut().enumerate() {
+                            *a = (i + s) % na;
+                        }
+                        venv.step_batch(&actions, &mut obs, &mut steps);
+                    }
+                    assert!(venv.last_error().is_none());
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let env_steps = (total_envs * BATCH_STEPS) as f64;
+        let sps = env_steps / wall;
+        if b == 1 {
+            base_sps = sps;
+        }
+        // one ActionBatch + one ObsBatch per group round-trip
+        let frames_per_env_step = 2.0 / b as f64;
+        let streams = server
+            .connections
+            .load(std::sync::atomic::Ordering::Relaxed);
+        println!(
+            "{:>10} {:>10} {:>16.0} {:>16.3} {:>14} {:>10.2}",
+            b,
+            streams,
+            sps,
+            frames_per_env_step,
+            streams, // one server thread per stream
+            sps / base_sps.max(1e-9),
+        );
+        assert_eq!(streams as usize, n_groups, "one stream per group");
+        assert_eq!(
+            server
+                .steps_served
+                .load(std::sync::atomic::Ordering::Relaxed) as usize,
+            total_envs * BATCH_STEPS
+        );
+    }
+    println!(
+        "\npaper-shaped check: B=32 should beat B=1 on env-steps/s with 32x\n\
+         fewer wire frames per env step and 32x fewer server threads (the\n\
+         rlpyt/TorchRL vectorized-sampler result, reproduced over TCP)."
+    );
     Ok(())
 }
+
+/// Steps per env in the batched-stream comparison.
+const BATCH_STEPS: usize = 1000;

@@ -45,6 +45,12 @@ pub struct TrainConfig {
     pub artifact_dir: PathBuf,
     pub mode: Mode,
     pub num_actors: usize,
+    /// Environments driven per actor thread (vectorized env groups,
+    /// DESIGN.md §VecEnv).  1 = the classic one-thread-per-env pool;
+    /// B > 1 groups the `num_actors` envs into ceil(num_actors / B)
+    /// threads, each stepping its group with one batcher rendezvous
+    /// and (in poly mode) one TCP stream for the whole group.
+    pub envs_per_actor: usize,
     /// Learner gradient steps to run.
     pub total_steps: u64,
     pub seed: u64,
@@ -69,6 +75,11 @@ pub struct TrainConfig {
     /// Episode streams batched per inference call during evaluation;
     /// 0 = the artifact's full inference batch.
     pub eval_batch: usize,
+    /// CSV time series of the pipeline occupancy gauges (the
+    /// telemetry background sampler); None disables.
+    pub gauge_log_path: Option<PathBuf>,
+    /// Sampling period of the gauge time series, in milliseconds.
+    pub gauge_sample_ms: u64,
 }
 
 impl Default for TrainConfig {
@@ -77,6 +88,7 @@ impl Default for TrainConfig {
             artifact_dir: PathBuf::from("artifacts/catch"),
             mode: Mode::Mono,
             num_actors: 4,
+            envs_per_actor: 1,
             total_steps: 200,
             seed: 1,
             inference_timeout_us: 2000,
@@ -89,6 +101,8 @@ impl Default for TrainConfig {
             log_interval: 50,
             log_level: Level::Info,
             eval_batch: 0,
+            gauge_log_path: None,
+            gauge_sample_ms: 100,
         }
     }
 }
@@ -128,6 +142,14 @@ impl TrainConfig {
             "artifact_dir" => self.artifact_dir = PathBuf::from(st(v)?),
             "mode" => self.mode = Mode::parse(&st(v)?)?,
             "num_actors" => self.num_actors = num(v)? as usize,
+            "envs_per_actor" => {
+                self.envs_per_actor = num(v)? as usize;
+                anyhow::ensure!(
+                    self.envs_per_actor >= 1,
+                    "envs_per_actor must be >= 1, got {}",
+                    self.envs_per_actor
+                );
+            }
             "total_steps" => self.total_steps = num(v)? as u64,
             "seed" => self.seed = num(v)? as u64,
             "inference_timeout_us" => self.inference_timeout_us = num(v)? as u64,
@@ -152,6 +174,8 @@ impl TrainConfig {
             "log_interval" => self.log_interval = num(v)? as u64,
             "log_level" => self.log_level = Level::parse(&st(v)?)?,
             "eval_batch" => self.eval_batch = num(v)? as usize,
+            "gauge_log_path" => self.gauge_log_path = Some(PathBuf::from(st(v)?)),
+            "gauge_sample_ms" => self.gauge_sample_ms = num(v)? as u64,
             // wrapper knobs
             "action_repeat" => self.wrappers.action_repeat = num(v)? as usize,
             "frame_stack" => self.wrappers.frame_stack = num(v)? as usize,
@@ -310,6 +334,27 @@ mod tests {
         assert_eq!(c.log_level, Level::Warn);
         // junk levels are rejected up front, not at first log call
         let bad = Json::parse(r#"{"log_level": "loud"}"#).unwrap();
+        assert!(c.apply_json(&bad).is_err());
+    }
+
+    #[test]
+    fn envs_per_actor_and_gauge_log_parse() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.envs_per_actor, 1, "default preserves the classic pool");
+        assert!(c.gauge_log_path.is_none());
+        let j = Json::parse(
+            r#"{"envs_per_actor": 8, "gauge_log_path": "runs/g.csv", "gauge_sample_ms": 25}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.envs_per_actor, 8);
+        assert_eq!(c.gauge_log_path, Some(PathBuf::from("runs/g.csv")));
+        assert_eq!(c.gauge_sample_ms, 25);
+        // CLI spelling too
+        c.apply_args(&["--envs_per_actor=4".to_string()]).unwrap();
+        assert_eq!(c.envs_per_actor, 4);
+        // zero groups are rejected up front, not at spawn time
+        let bad = Json::parse(r#"{"envs_per_actor": 0}"#).unwrap();
         assert!(c.apply_json(&bad).is_err());
     }
 

@@ -23,7 +23,7 @@ use crate::agent::sample_action_scratch;
 use crate::coordinator::batching_queue::QueueSender;
 use crate::coordinator::dynamic_batcher::InferenceClient;
 use crate::coordinator::rollout::{Rollout, RolloutPool};
-use crate::env::Environment;
+use crate::env::{Environment, SlotStep, VecEnvironment};
 use crate::metrics::Metrics;
 use crate::util::rng::Rng;
 
@@ -31,7 +31,8 @@ pub struct ActorPool {
     handles: Vec<JoinHandle<ActorReport>>,
 }
 
-/// Per-actor termination summary.
+/// Per-actor-thread termination summary (one per env in the ungrouped
+/// pool, one per *group* in the grouped pool).
 #[derive(Debug, Clone, Default)]
 pub struct ActorReport {
     pub actor_id: usize,
@@ -45,6 +46,18 @@ pub struct ActorConfig {
     pub num_actions: usize,
     pub obs_len: usize,
     pub seed: u64,
+    /// Global id of the first env driven by this pool.  Per-env RNG
+    /// streams derive from `seed` and the env's *global* id, so a
+    /// grouped pool ([`ActorPool::spawn_grouped`]) and an ungrouped
+    /// one sample identically for the same env — the per-slot seeding
+    /// contract behind the B-invariance test below.
+    pub first_id: usize,
+}
+
+/// The per-env action-sampling RNG stream (global env id, not thread
+/// id — shared by the grouped and ungrouped loops).
+fn env_rng_seed(root: u64, env_id: usize) -> u64 {
+    root ^ (env_id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 impl ActorPool {
@@ -67,7 +80,7 @@ impl ActorPool {
                 let queue = learner_queue.clone();
                 let pool = pool.clone();
                 let metrics = metrics.clone();
-                let seed = cfg.seed ^ (id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                let seed = env_rng_seed(cfg.seed, cfg.first_id + id);
                 let (t, a, obs_len) = (cfg.unroll_length, cfg.num_actions, cfg.obs_len);
                 std::thread::Builder::new()
                     .name(format!("actor-{id}"))
@@ -75,6 +88,49 @@ impl ActorPool {
                         actor_loop(id, env, client, queue, pool, metrics, seed, t, a, obs_len)
                     })
                     .expect("spawn actor")
+            })
+            .collect();
+        ActorPool { handles }
+    }
+
+    /// Spawn one actor thread per *group*: each thread drives a whole
+    /// [`VecEnvironment`] — one `submit_slice` rendezvous and one
+    /// `step_batch` call per step for all B slots, and B rollout
+    /// buffers rented/shipped per unroll.  `groups[g]`'s slot `s` is
+    /// global env id `cfg.first_id + (sum of earlier group sizes) + s`
+    /// and samples from exactly the RNG stream the ungrouped pool
+    /// would give that env, so grouping does not change trajectories
+    /// under a fixed policy (pinned by the B-invariance test).
+    pub fn spawn_grouped(
+        groups: Vec<Box<dyn VecEnvironment>>,
+        client: InferenceClient,
+        learner_queue: QueueSender<Rollout>,
+        pool: RolloutPool,
+        metrics: Arc<Metrics>,
+        cfg: ActorConfig,
+    ) -> ActorPool {
+        let mut base = cfg.first_id;
+        let handles = groups
+            .into_iter()
+            .enumerate()
+            .map(|(g, venv)| {
+                let client = client.clone();
+                let queue = learner_queue.clone();
+                let pool = pool.clone();
+                let metrics = metrics.clone();
+                let group_base = base;
+                base += venv.batch();
+                let root = cfg.seed;
+                let (t, a, obs_len) = (cfg.unroll_length, cfg.num_actions, cfg.obs_len);
+                std::thread::Builder::new()
+                    .name(format!("actor-group-{g}"))
+                    .spawn(move || {
+                        grouped_actor_loop(
+                            g, group_base, venv, client, queue, pool, metrics, root, t, a,
+                            obs_len,
+                        )
+                    })
+                    .expect("spawn actor group")
             })
             .collect();
         ActorPool { handles }
@@ -183,6 +239,148 @@ fn actor_loop(
     }
 }
 
+/// The grouped analog of [`actor_loop`]: B envs, one thread.  Every
+/// step is one `submit_slice` rendezvous + one `step_batch` call; per
+/// unroll the group ships B rollout buffers and rents B fresh ones.
+/// All buffers below are preallocated once — the steady-state loop
+/// allocates nothing, like the ungrouped one.
+#[allow(clippy::too_many_arguments)]
+fn grouped_actor_loop(
+    group_id: usize,
+    base_id: usize,
+    mut venv: Box<dyn VecEnvironment>,
+    client: InferenceClient,
+    queue: QueueSender<Rollout>,
+    pool: RolloutPool,
+    metrics: Arc<Metrics>,
+    root_seed: u64,
+    unroll_length: usize,
+    num_actions: usize,
+    obs_len: usize,
+) -> ActorReport {
+    let b = venv.batch();
+    let mut report = ActorReport {
+        actor_id: group_id,
+        ..Default::default()
+    };
+    // One RNG stream per *slot*, keyed by global env id: slot s of
+    // this group samples exactly like ungrouped actor base_id + s.
+    let mut rngs: Vec<Rng> = (0..b)
+        .map(|s| Rng::new(env_rng_seed(root_seed, base_id + s)))
+        .collect();
+    let mut obs_block = vec![0.0f32; b * obs_len];
+    let mut logits_block = vec![0.0f32; b * num_actions];
+    let mut baselines = vec![0.0f32; b];
+    let mut probs = vec![0.0f32; num_actions];
+    let mut actions = vec![0usize; b];
+    let mut steps = vec![SlotStep::default(); b];
+    let mut submitter = client.slice_submitter();
+
+    // Rent the group's B rollout buffers (give everything back and
+    // unblock the learner if the pool closes mid-rent: shutdown race).
+    let mut rollouts: Vec<Rollout> = Vec::with_capacity(b);
+    let rent_all = |rollouts: &mut Vec<Rollout>| -> bool {
+        debug_assert!(rollouts.is_empty());
+        for _ in 0..b {
+            match pool.rent() {
+                Some(r) => {
+                    debug_assert_eq!(
+                        (r.t, r.obs_len, r.num_actions),
+                        (unroll_length, obs_len, num_actions),
+                        "pool buffer shape mismatch"
+                    );
+                    rollouts.push(r);
+                }
+                None => {
+                    for r in rollouts.drain(..) {
+                        pool.recycle(r);
+                    }
+                    return false;
+                }
+            }
+        }
+        true
+    };
+    if !rent_all(&mut rollouts) {
+        queue.close();
+        return report;
+    }
+    venv.reset_all(&mut obs_block);
+    for (s, r) in rollouts.iter_mut().enumerate() {
+        r.set_obs(0, &obs_block[s * obs_len..(s + 1) * obs_len]);
+    }
+
+    loop {
+        for i in 0..unroll_length {
+            // One rendezvous for the whole slice (blocks on the batcher).
+            if submitter
+                .submit_slice(&obs_block, &mut logits_block, &mut baselines)
+                .is_none()
+            {
+                // Batcher closed or failed: no rollout will ever
+                // complete again — close the learner queue so the
+                // learner unblocks instead of waiting forever.
+                for r in rollouts.drain(..) {
+                    pool.recycle(r);
+                }
+                queue.close();
+                return report;
+            }
+            for (s, action) in actions.iter_mut().enumerate() {
+                *action = sample_action_scratch(
+                    &logits_block[s * num_actions..(s + 1) * num_actions],
+                    &mut probs,
+                    &mut rngs[s],
+                );
+            }
+            venv.step_batch(&actions, &mut obs_block, &mut steps);
+            // A dead group (remote stream lost) synthesizes terminal
+            // steps with replayed observations; keep the loop alive —
+            // the same fault-tolerance shape as the mono path — but do
+            // not count its fabricated frames/episodes into metrics,
+            // which would collapse mean returns toward zero and
+            // inflate SPS for the rest of the run.
+            let live = !venv.failed();
+            if live {
+                report.frames += b as u64;
+                metrics.add_frames(b as u64);
+            }
+            for (s, r) in rollouts.iter_mut().enumerate() {
+                let st = steps[s];
+                r.set_transition(
+                    i,
+                    actions[s],
+                    &logits_block[s * num_actions..(s + 1) * num_actions],
+                    st.reward,
+                    st.done,
+                );
+                if st.done && live {
+                    // the VecEnv auto-reset already happened; it
+                    // reported the finished episode's stats here
+                    metrics.record_episode(st.episode_return, st.episode_step);
+                    report.episodes += 1;
+                }
+                r.set_obs(i + 1, &obs_block[s * obs_len..(s + 1) * obs_len]);
+            }
+        }
+        // Ship all B filled buffers (slot order, no clone), then rent
+        // the next B and carry each slot's bootstrap obs over.
+        for r in rollouts.drain(..) {
+            if queue.send(r).is_err() {
+                return report; // learner queue closed
+            }
+            metrics.record_rollout();
+            report.rollouts += 1;
+        }
+        if !rent_all(&mut rollouts) {
+            return report; // pool closed: shutdown
+        }
+        for (s, r) in rollouts.iter_mut().enumerate() {
+            r.set_obs(0, &obs_block[s * obs_len..(s + 1) * obs_len]);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,6 +431,7 @@ mod tests {
                 num_actions: spec.num_actions,
                 obs_len: spec.obs_len(),
                 seed: 7,
+                first_id: 0,
             },
         );
 
@@ -313,6 +512,7 @@ mod tests {
                 num_actions: spec.num_actions,
                 obs_len: spec.obs_len(),
                 seed: 1,
+                first_id: 0,
             },
         );
         let r1 = rx.recv_batch(1).unwrap().remove(0);
@@ -328,6 +528,242 @@ mod tests {
         buffers.close();
         pool.join();
         infer_thread.join().unwrap();
+    }
+
+    /// Deterministic stub policy for the B-invariance tests: logits
+    /// depend only on the observation (position-weighted pixel sum),
+    /// so sampling depends only on (obs, slot RNG) and never on how
+    /// requests were batched.
+    fn obs_keyed_inference(
+        stream: crate::coordinator::dynamic_batcher::BatchStream,
+        obs_len: usize,
+        num_actions: usize,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let mut logits = Vec::new();
+            let mut baselines = Vec::new();
+            while let Some(batch) = stream.next_batch() {
+                let n = batch.len();
+                logits.clear();
+                baselines.clear();
+                for i in 0..n {
+                    let row = batch.obs(i);
+                    debug_assert_eq!(row.len(), obs_len);
+                    let hot = row
+                        .iter()
+                        .enumerate()
+                        .map(|(k, &v)| (k + 1) * (v as usize))
+                        .sum::<usize>()
+                        % num_actions;
+                    for a in 0..num_actions {
+                        logits.push(if a == hot { 2.0 } else { 0.0 });
+                    }
+                    baselines.push(0.0);
+                }
+                batch.respond(&logits, &baselines, num_actions).unwrap();
+            }
+        })
+    }
+
+    /// Collect `k` rollouts per env from a run, keyed by slot.
+    /// `grouped`: one group of `n` envs (rollouts arrive slot-major
+    /// per unroll from the single group thread, so de-interleaving is
+    /// deterministic).  Ungrouped runs are driven one env at a time
+    /// with `first_id` = the global env id.
+    fn run_and_collect(
+        n_envs: usize,
+        grouped: bool,
+        per_env: usize,
+        root_seed: u64,
+    ) -> Vec<Vec<Rollout>> {
+        let t = 5;
+        let spec = crate::env::spec_of("catch").unwrap();
+        let (obs_len, a) = (spec.obs_len(), spec.num_actions);
+        let mut by_env: Vec<Vec<Rollout>> = (0..n_envs).map(|_| Vec::new()).collect();
+        if grouped {
+            let (client, stream) = dynamic_batcher(
+                BatcherConfig::new(n_envs, Duration::from_micros(500), obs_len, a)
+                    .with_slots(n_envs),
+            );
+            let infer = obs_keyed_inference(stream, obs_len, a);
+            let (tx, rx) = batching_queue::<Rollout>(2 * n_envs);
+            let buffers = test_pool(3 * n_envs, t, obs_len, a);
+            let envs: Vec<Box<dyn Environment>> = (0..n_envs)
+                .map(|g| make_env("catch", crate::env::actor_seed(root_seed, g)).unwrap())
+                .collect();
+            let venv = crate::env::LocalVecEnv::new(envs).unwrap();
+            let pool = ActorPool::spawn_grouped(
+                vec![Box::new(venv) as Box<dyn crate::env::VecEnvironment>],
+                client.clone(),
+                tx,
+                buffers.clone(),
+                Metrics::shared(),
+                ActorConfig {
+                    unroll_length: t,
+                    num_actions: a,
+                    obs_len,
+                    seed: root_seed,
+                    first_id: 0,
+                },
+            );
+            for round in 0..per_env {
+                let batch = rx.recv_batch(n_envs).unwrap();
+                for (s, r) in batch.into_iter().enumerate() {
+                    assert!(r.is_complete(), "round {round} slot {s}");
+                    // keep a copy, recycle the pooled buffer (the test
+                    // outlives the pool's capacity otherwise)
+                    by_env[s].push(r.clone());
+                    buffers.recycle(r);
+                }
+            }
+            rx.close();
+            client.shutdown_for_tests();
+            buffers.close();
+            pool.join();
+            infer.join().unwrap();
+        } else {
+            for (g, rollouts) in by_env.iter_mut().enumerate() {
+                let (client, stream) = dynamic_batcher(BatcherConfig::new(
+                    1,
+                    Duration::from_micros(100),
+                    obs_len,
+                    a,
+                ));
+                let infer = obs_keyed_inference(stream, obs_len, a);
+                let (tx, rx) = batching_queue::<Rollout>(4);
+                let buffers = test_pool(4, t, obs_len, a);
+                let pool = ActorPool::spawn(
+                    vec![make_env("catch", crate::env::actor_seed(root_seed, g)).unwrap()],
+                    client.clone(),
+                    tx,
+                    buffers.clone(),
+                    Metrics::shared(),
+                    ActorConfig {
+                        unroll_length: t,
+                        num_actions: a,
+                        obs_len,
+                        seed: root_seed,
+                        first_id: g,
+                    },
+                );
+                for _ in 0..per_env {
+                    let r = rx.recv_batch(1).unwrap().remove(0);
+                    assert!(r.is_complete());
+                    rollouts.push(r.clone());
+                    buffers.recycle(r);
+                }
+                rx.close();
+                client.shutdown_for_tests();
+                buffers.close();
+                pool.join();
+                infer.join().unwrap();
+            }
+        }
+        by_env
+    }
+
+    /// The acceptance gate for the grouped path: for a fixed root seed
+    /// and a deterministic (obs-keyed) policy, `--envs_per_actor 1`
+    /// and the grouped path produce **bit-identical** per-env
+    /// trajectories — observations, actions, logits, rewards, dones.
+    /// Per-slot seeding (env seed AND sampling-RNG stream keyed by
+    /// global env id) is exactly what this pins, mirroring the
+    /// batch-size-invariance rule of `evaluate_batched`.
+    #[test]
+    fn grouped_path_is_bit_identical_to_singleton_path() {
+        let (n, per_env, root) = (3, 4, 99u64);
+        let singles = run_and_collect(n, false, per_env, root);
+        let grouped = run_and_collect(n, true, per_env, root);
+        for g in 0..n {
+            assert_eq!(singles[g].len(), per_env);
+            assert_eq!(grouped[g].len(), per_env);
+            for k in 0..per_env {
+                let (a, b) = (&singles[g][k], &grouped[g][k]);
+                assert_eq!(a.actions, b.actions, "env {g} rollout {k} actions");
+                assert_eq!(a.rewards, b.rewards, "env {g} rollout {k} rewards");
+                assert_eq!(a.dones, b.dones, "env {g} rollout {k} dones");
+                assert_eq!(
+                    a.observations, b.observations,
+                    "env {g} rollout {k} observations"
+                );
+                assert_eq!(
+                    a.behavior_logits, b.behavior_logits,
+                    "env {g} rollout {k} logits"
+                );
+            }
+        }
+    }
+
+    /// Grouped smoke test: groups fill valid contiguous rollouts and
+    /// shut down cleanly with pooled buffers in flight.
+    #[test]
+    fn grouped_actors_produce_valid_contiguous_rollouts() {
+        let t = 4;
+        let b = 3;
+        let spec = crate::env::spec_of("gridworld").unwrap();
+        let (obs_len, a) = (spec.obs_len(), spec.num_actions);
+        let (client, stream) = dynamic_batcher(
+            BatcherConfig::new(b, Duration::from_micros(300), obs_len, a).with_slots(b),
+        );
+        let (tx, rx) = batching_queue::<Rollout>(2 * b);
+        let metrics = Metrics::shared();
+        let infer_thread = std::thread::spawn(move || {
+            while let Some(batch) = stream.next_batch() {
+                let n = batch.len();
+                batch.respond(&vec![0.0; n * 4], &vec![0.0; n], 4).unwrap();
+            }
+        });
+        let buffers = test_pool(3 * b, t, obs_len, a);
+        let envs: Vec<Box<dyn Environment>> = (0..b)
+            .map(|i| make_env("gridworld", i as u64).unwrap())
+            .collect();
+        let venv = crate::env::LocalVecEnv::new(envs).unwrap();
+        let pool = ActorPool::spawn_grouped(
+            vec![Box::new(venv) as Box<dyn crate::env::VecEnvironment>],
+            client.clone(),
+            tx,
+            buffers.clone(),
+            metrics.clone(),
+            ActorConfig {
+                unroll_length: t,
+                num_actions: a,
+                obs_len,
+                seed: 5,
+                first_id: 0,
+            },
+        );
+        // two unrolls: slot-major shipping means batch k is
+        // [slot0, slot1, slot2]; slot s's rollout k+1 starts with the
+        // bootstrap obs of its rollout k (contiguity per slot)
+        let first = rx.recv_batch(b).unwrap();
+        let second = rx.recv_batch(b).unwrap();
+        for s in 0..b {
+            let (r1, r2) = (&first[s], &second[s]);
+            assert!(r1.is_complete() && r2.is_complete());
+            assert_eq!(
+                r1.observations[t * obs_len..(t + 1) * obs_len],
+                r2.observations[..obs_len],
+                "slot {s}: bootstrap obs must carry into the next rented buffer"
+            );
+            for i in 0..t {
+                assert!(r1.actions[i] >= 0 && r1.actions[i] < a as i32);
+            }
+        }
+        for r in first.into_iter().chain(second) {
+            buffers.recycle(r);
+        }
+        rx.close();
+        client.shutdown_for_tests();
+        buffers.close();
+        let reports = pool.join();
+        infer_thread.join().unwrap();
+        assert_eq!(reports.len(), 1, "one report per group");
+        assert_eq!(reports[0].rollouts % b as u64, 0);
+        assert!(reports[0].frames >= 2 * (b * t) as u64);
+        assert_eq!(
+            metrics.frames.load(std::sync::atomic::Ordering::Relaxed),
+            reports[0].frames
+        );
     }
 
     /// Shutdown with the pool fully drained: the actor blocks in
@@ -365,6 +801,7 @@ mod tests {
                 num_actions: spec.num_actions,
                 obs_len: spec.obs_len(),
                 seed: 2,
+                first_id: 0,
             },
         );
         let r = rx.recv_batch(1).unwrap().remove(0);

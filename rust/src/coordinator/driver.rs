@@ -10,6 +10,7 @@
 //! Layer discipline: everything here is coordination; all ML compute
 //! happens inside the AOT artifacts via [`crate::runtime`].
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -21,11 +22,12 @@ use crate::coordinator::dynamic_batcher::{dynamic_batcher, BatcherConfig, Batche
 use crate::coordinator::rollout::{stack_rollouts, Rollout, RolloutPool};
 use crate::coordinator::weights::WeightsStore;
 use crate::env::wrappers::WrapperCfg;
-use crate::env::{self, Environment};
+use crate::env::{self, Environment, LocalVecEnv, VecEnvironment};
 use crate::metrics::{CurveLogger, Metrics, Snapshot};
-use crate::rpc::{EnvServer, RemoteEnv};
+use crate::rpc::{EnvServer, RemoteEnv, RemoteVecEnv};
 use crate::runtime::{InferenceEngine, LearnerBatch, LearnerEngine, LearnerStats, ParamVecs};
 use crate::telemetry::gauges::{GaugesSnapshot, PipelineGauges};
+use crate::telemetry::sampler::GaugeSampler;
 use crate::{tb_info, tb_warn};
 
 /// One row of the training curve (CSV mirror, kept in memory too).
@@ -115,9 +117,20 @@ pub fn fold_seed(seed: u64) -> i32 {
 pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let t_start = Instant::now();
     crate::telemetry::log::set_max_level(cfg.log_level);
+    anyhow::ensure!(cfg.envs_per_actor >= 1, "envs_per_actor must be >= 1");
     // One gauge registry threaded through every pipeline stage; the
     // periodic report below prints its snapshot (DESIGN.md §Telemetry).
     let gauges = PipelineGauges::shared();
+    // Background occupancy time series (started before the pipeline
+    // spins up so warm-up starvation is captured too).
+    let sampler = match &cfg.gauge_log_path {
+        Some(p) => Some(GaugeSampler::start(
+            gauges.clone(),
+            p,
+            Duration::from_millis(cfg.gauge_sample_ms.max(1)),
+        )?),
+        None => None,
+    };
 
     // -- engines (compile artifacts; learner + inference each own a
     // client — xla handles are not Send, so the inference engine is
@@ -185,9 +198,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     );
     let metrics = Metrics::shared();
 
-    // -- environments (mono: local; poly: remote streams)
+    // -- environments (mono: local; poly: remote streams; grouped
+    // into VecEnvs of --envs_per_actor when > 1)
     let mut local_servers: Vec<EnvServer> = Vec::new();
-    let envs = build_envs(cfg, &manifest.env, &mut local_servers)?;
+    let envs = build_envs(cfg, &manifest.env, &mut local_servers, &gauges)?;
 
     // -- inference thread (constructs its own engine: xla is !Send)
     let weights_for_inference = weights.clone();
@@ -211,20 +225,33 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             Ok(())
         })?;
 
-    // -- actor pool
-    let pool = ActorPool::spawn(
-        envs,
-        infer_client.clone(),
-        rollout_tx.clone(),
-        buffer_pool.clone(),
-        metrics.clone(),
-        ActorConfig {
-            unroll_length: manifest.unroll_length,
-            num_actions,
-            obs_len: manifest.obs_len(),
-            seed: cfg.seed,
-        },
-    );
+    // -- actor pool (one thread per env, or per group of
+    // --envs_per_actor envs — same data path either way)
+    let actor_cfg = ActorConfig {
+        unroll_length: manifest.unroll_length,
+        num_actions,
+        obs_len: manifest.obs_len(),
+        seed: cfg.seed,
+        first_id: 0,
+    };
+    let pool = match envs {
+        BuiltEnvs::Singles(envs) => ActorPool::spawn(
+            envs,
+            infer_client.clone(),
+            rollout_tx.clone(),
+            buffer_pool.clone(),
+            metrics.clone(),
+            actor_cfg,
+        ),
+        BuiltEnvs::Groups(groups) => ActorPool::spawn_grouped(
+            groups,
+            infer_client.clone(),
+            rollout_tx.clone(),
+            buffer_pool.clone(),
+            metrics.clone(),
+            actor_cfg,
+        ),
+    };
 
     // -- stacker thread: double-buffered batch prefetch.  Two
     // LearnerBatch buffers circulate between this thread and the
@@ -322,6 +349,16 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     // Steady-state occupancy, captured before shutdown drains the
     // pipeline (afterwards the buffers actors hold are simply dropped).
     let gauges_final = gauges.snapshot();
+    if let Some(s) = sampler {
+        let rows = s.stop();
+        if let Some(p) = &cfg.gauge_log_path {
+            tb_info!(
+                "train",
+                "gauge time series: {rows} samples written to {}",
+                p.display()
+            );
+        }
+    }
 
     // -- orderly shutdown: stop actors + stacker first, then inference
     rollout_tx.close(); // actors' sends fail; stacker's rollout recv unblocks
@@ -365,23 +402,64 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     })
 }
 
-/// Build the actor environments for the configured mode.
+/// The actor substrate `build_envs` produced: one env per actor
+/// thread (the classic pool), or one [`VecEnvironment`] group per
+/// thread when `--envs_per_actor` > 1.
+enum BuiltEnvs {
+    Singles(Vec<Box<dyn Environment>>),
+    Groups(Vec<Box<dyn VecEnvironment>>),
+}
+
+/// Build the actor environments for the configured mode.  Env `id`
+/// (global, 0..num_actors) is always seeded `actor_seed(cfg.seed, id)`
+/// whether it lands in a singleton or in a group — the per-slot
+/// seeding contract that makes `--envs_per_actor` trajectory-neutral.
 fn build_envs(
     cfg: &TrainConfig,
     env_name: &str,
     local_servers: &mut Vec<EnvServer>,
-) -> Result<Vec<Box<dyn Environment>>> {
+    gauges: &Arc<PipelineGauges>,
+) -> Result<BuiltEnvs> {
+    let group = cfg.envs_per_actor.max(1);
+    // contiguous global-id chunks of size `group` (last may be short)
+    let chunks: Vec<std::ops::Range<usize>> = (0..cfg.num_actors)
+        .step_by(group)
+        .map(|lo| lo..(lo + group).min(cfg.num_actors))
+        .collect();
     match cfg.mode {
-        Mode::Mono => (0..cfg.num_actors)
-            .map(|id| env::make_wrapped(env_name, env::actor_seed(cfg.seed, id), &cfg.wrappers))
-            .collect(),
+        Mode::Mono => {
+            if group == 1 {
+                let envs = (0..cfg.num_actors)
+                    .map(|id| {
+                        env::make_wrapped(env_name, env::actor_seed(cfg.seed, id), &cfg.wrappers)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(BuiltEnvs::Singles(envs))
+            } else {
+                let groups = chunks
+                    .into_iter()
+                    .map(|ids| {
+                        let seeds: Vec<u64> =
+                            ids.map(|id| env::actor_seed(cfg.seed, id)).collect();
+                        let venv = LocalVecEnv::from_seeds(env_name, &seeds, &cfg.wrappers)?;
+                        Ok(Box::new(venv) as Box<dyn VecEnvironment>)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(BuiltEnvs::Groups(groups))
+            }
+        }
         Mode::Poly => {
+            let n_streams = chunks.len();
             let addresses = if cfg.server_addresses.is_empty() {
                 // single-machine poly: spawn local env servers, one per
-                // ~8 actors (paper: limit connections per server)
-                let n_servers = cfg.num_actors.div_ceil(8).max(1);
+                // ~8 streams (paper: limit connections per server) —
+                // with grouping, a stream already carries a whole group
+                let n_servers = n_streams.div_ceil(8).max(1);
                 for _ in 0..n_servers {
-                    local_servers.push(EnvServer::start("127.0.0.1:0")?);
+                    local_servers.push(EnvServer::start_with_gauges(
+                        "127.0.0.1:0",
+                        gauges.clone(),
+                    )?);
                 }
                 local_servers
                     .iter()
@@ -390,19 +468,36 @@ fn build_envs(
             } else {
                 cfg.server_addresses.clone()
             };
-            (0..cfg.num_actors)
-                .map(|id| {
-                    let addr = &addresses[id % addresses.len()];
-                    let env = RemoteEnv::connect(
-                        addr,
-                        env_name,
-                        env::actor_seed(cfg.seed, id),
-                        &cfg.wrappers,
-                    )
-                    .with_context(|| format!("connecting actor {id} to {addr}"))?;
-                    Ok(Box::new(env) as Box<dyn Environment>)
-                })
-                .collect()
+            if group == 1 {
+                let envs = (0..cfg.num_actors)
+                    .map(|id| {
+                        let addr = &addresses[id % addresses.len()];
+                        let env = RemoteEnv::connect(
+                            addr,
+                            env_name,
+                            env::actor_seed(cfg.seed, id),
+                            &cfg.wrappers,
+                        )
+                        .with_context(|| format!("connecting actor {id} to {addr}"))?;
+                        Ok(Box::new(env) as Box<dyn Environment>)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(BuiltEnvs::Singles(envs))
+            } else {
+                let groups = chunks
+                    .into_iter()
+                    .enumerate()
+                    .map(|(g, ids)| {
+                        let addr = &addresses[g % addresses.len()];
+                        let seeds: Vec<u64> =
+                            ids.map(|id| env::actor_seed(cfg.seed, id)).collect();
+                        let venv = RemoteVecEnv::connect(addr, env_name, &seeds, &cfg.wrappers)
+                            .with_context(|| format!("connecting group {g} to {addr}"))?;
+                        Ok(Box::new(venv) as Box<dyn VecEnvironment>)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(BuiltEnvs::Groups(groups))
+            }
         }
     }
 }

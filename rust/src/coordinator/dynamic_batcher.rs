@@ -164,6 +164,12 @@ struct Shared {
     inner: Mutex<Inner>,
     /// Wakes actors waiting for a free slot.
     slot_free: Condvar,
+    /// Slice submitters currently parked in checkout.  A slice needs B
+    /// free slots, so freeing one slot must `notify_all` while any is
+    /// parked (a `notify_one` could land on the slice, which re-sleeps,
+    /// losing the wakeup) — but the common single-slot-only case keeps
+    /// the cheap `notify_one`, no thundering herd.
+    slice_waiters: std::sync::atomic::AtomicUsize,
     /// Per-slot result rendezvous (all associated with `inner`'s mutex).
     wake: Vec<Condvar>,
     /// Recycled batch storages (one in steady state).
@@ -175,6 +181,20 @@ struct Shared {
 }
 
 impl Shared {
+    /// Wake waiter(s) after returning a slot to the free list: all of
+    /// them when a multi-slot slice is parked, one otherwise.
+    fn notify_slot_free(&self) {
+        if self
+            .slice_waiters
+            .load(std::sync::atomic::Ordering::Relaxed)
+            > 0
+        {
+            self.slot_free.notify_all();
+        } else {
+            self.slot_free.notify_one();
+        }
+    }
+
     fn take_storage(&self) -> BatchStorage {
         let mut pool = self.buffers.lock().unwrap();
         pool.pop().unwrap_or_else(|| BatchStorage {
@@ -337,7 +357,7 @@ impl InferenceClient {
                     inner.free.push(slot_id);
                     s.slots_in_use.sub(1);
                     drop(inner);
-                    s.slot_free.notify_one();
+                    s.notify_slot_free();
                     return Some(baseline);
                 }
                 SlotState::Failed => {
@@ -345,7 +365,7 @@ impl InferenceClient {
                     inner.free.push(slot_id);
                     s.slots_in_use.sub(1);
                     drop(inner);
-                    s.slot_free.notify_one();
+                    s.notify_slot_free();
                     return None;
                 }
                 // Queued (awaiting drain — served even after close) or
@@ -353,6 +373,17 @@ impl InferenceClient {
                 _ => {}
             }
             inner = s.wake[slot_id].wait(inner).unwrap();
+        }
+    }
+
+    /// A reusable group-submission handle for the grouped actor loop
+    /// (one per group thread; holds recycled slot-id scratch so
+    /// [`SliceSubmitter::submit_slice`] allocates nothing at steady
+    /// state).
+    pub fn slice_submitter(&self) -> SliceSubmitter {
+        SliceSubmitter {
+            shared: self.shared.clone(),
+            ids: Vec::new(),
         }
     }
 
@@ -372,6 +403,153 @@ impl InferenceClient {
     /// inference thread).
     pub fn stats_snapshot(&self) -> BatcherStats {
         self.shared.stats.lock().unwrap().clone()
+    }
+}
+
+/// Group-submission handle: submits a whole B-slice of observations
+/// to the batcher in **one** rendezvous — one lock acquisition checks
+/// out B slots and enqueues all B requests back to back, so a closing
+/// inference batch fills immediately instead of waiting out B
+/// independent condvar hops (the grouped-actor half of the VecEnv
+/// work; DESIGN.md §VecEnv).
+///
+/// One submitter per group thread ([`InferenceClient::slice_submitter`]);
+/// the slot-id scratch is recycled across calls, so a steady-state
+/// submission performs zero heap allocation.
+pub struct SliceSubmitter {
+    shared: Arc<Shared>,
+    ids: Vec<usize>,
+}
+
+impl SliceSubmitter {
+    /// Submit `obs` (`b * obs_len` f32s, b inferred) and block until
+    /// every row's result arrived: logits land in
+    /// `logits_out[k*num_actions..]`, baselines in `baselines_out[k]`.
+    /// Returns None if the batcher shut down (or any row's batch
+    /// failed) — after *all* rows have been collected, so slots are
+    /// never leaked.
+    ///
+    /// Checkout is all-or-nothing: the group takes its B slots only
+    /// when B are free (a partial hold would deadlock two groups
+    /// against each other on a tight pool).  The flip side: there is
+    /// no reservation, so on a pool without headroom a waiting slice
+    /// can be starved by concurrent single-slot [`InferenceClient::infer`]
+    /// callers snapping up freed slots first.  Size `slots` to the sum
+    /// of concurrent demand (the driver uses the total env count, so
+    /// every group and single can hold its slots simultaneously) —
+    /// starvation then cannot occur.
+    pub fn submit_slice(
+        &mut self,
+        obs: &[f32],
+        logits_out: &mut [f32],
+        baselines_out: &mut [f32],
+    ) -> Option<()> {
+        let s = &*self.shared;
+        assert!(
+            !obs.is_empty() && obs.len() % s.obs_len == 0,
+            "obs length {} is not a multiple of batcher obs_len {}",
+            obs.len(),
+            s.obs_len
+        );
+        let b = obs.len() / s.obs_len;
+        assert!(
+            b <= s.wake.len(),
+            "group of {b} exceeds the batcher slot pool ({}); size slots to the env count",
+            s.wake.len()
+        );
+        assert!(
+            logits_out.len() >= b * s.num_actions,
+            "logits_out too short: need {}, got {}",
+            b * s.num_actions,
+            logits_out.len()
+        );
+        assert!(
+            baselines_out.len() >= b,
+            "baselines_out too short: need {b}, got {}",
+            baselines_out.len()
+        );
+        self.ids.clear();
+        self.ids.reserve(b); // no-op once warmed up
+
+        let mut inner = s.inner.lock().unwrap();
+        let mut starved = false;
+        while !inner.closed && inner.free.len() < b {
+            if !starved {
+                // once per submission, like the single-slot path
+                starved = true;
+                s.slot_waits.inc();
+                // registered under the lock: slot-freers that read 0
+                // either already pushed the slot (we re-check below)
+                // or will see this count and notify_all
+                s.slice_waiters
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+            inner = s.slot_free.wait(inner).unwrap();
+        }
+        if starved {
+            s.slice_waiters
+                .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        if inner.closed {
+            return None;
+        }
+        let now = Instant::now();
+        for k in 0..b {
+            let id = inner.free.pop().expect("checked b slots free");
+            let slot = &mut inner.slots[id];
+            slot.obs
+                .copy_from_slice(&obs[k * s.obs_len..(k + 1) * s.obs_len]);
+            slot.state = SlotState::Queued;
+            slot.submitted = now;
+            inner.queue.push_back(id);
+            self.ids.push(id);
+        }
+        s.slots_in_use.add(b as u64);
+
+        // Collect row by row.  A batch response marks its whole slot
+        // set Done and notifies before this loop re-checks, so after
+        // the first wakeup the remaining rows usually collect without
+        // blocking.
+        let mut failed = false;
+        for (k, &id) in self.ids.iter().enumerate() {
+            loop {
+                match inner.slots[id].state {
+                    SlotState::Done => {
+                        logits_out[k * s.num_actions..(k + 1) * s.num_actions]
+                            .copy_from_slice(&inner.slots[id].logits);
+                        baselines_out[k] = inner.slots[id].baseline;
+                        inner.slots[id].state = SlotState::Free;
+                        inner.free.push(id);
+                        // free each slot the moment it is collected —
+                        // gauge decrement included, so occupancy can
+                        // never transiently read above the pool size —
+                        // and advertise it immediately: submitters
+                        // parked in checkout must not sleep through it
+                        // while this slice finishes
+                        s.slots_in_use.sub(1);
+                        s.notify_slot_free();
+                        break;
+                    }
+                    SlotState::Failed => {
+                        failed = true;
+                        inner.slots[id].state = SlotState::Free;
+                        inner.free.push(id);
+                        s.slots_in_use.sub(1);
+                        s.notify_slot_free();
+                        break;
+                    }
+                    // Queued (awaiting drain — served even after
+                    // close) or InFlight: keep waiting.
+                    _ => {}
+                }
+                inner = s.wake[id].wait(inner).unwrap();
+            }
+        }
+        if failed {
+            None
+        } else {
+            Some(())
+        }
     }
 }
 
@@ -603,6 +781,7 @@ pub fn dynamic_batcher(cfg: BatcherConfig) -> (InferenceClient, BatchStream) {
             closed: false,
         }),
         slot_free: Condvar::new(),
+        slice_waiters: std::sync::atomic::AtomicUsize::new(0),
         wake: (0..n_slots).map(|_| Condvar::new()).collect(),
         buffers: Mutex::new(Vec::new()),
         stats: Mutex::new(BatcherStats::with_max_batch(cfg.max_batch)),
@@ -984,6 +1163,118 @@ mod tests {
         assert!(b.join().unwrap().is_some());
         assert_eq!(g.slots_in_use.get(), 0, "all slots returned");
         client.close();
+    }
+
+    /// submit_slice routes every row's result back to its position,
+    /// fills full inference batches in one rendezvous, and counts one
+    /// request per row in the stats.
+    #[test]
+    fn slice_submission_routes_rows_and_fills_batches() {
+        let b = 4;
+        // generous timeout: if the slice really enqueues all rows at
+        // once, the batch closes full immediately — a timeout-closed
+        // batch here would stall the test visibly
+        let (client, stream) = dynamic_batcher(cfg(b, Duration::from_secs(10), 2, 3));
+        let h = run_echo_inference(stream, 3);
+        let mut submitter = client.slice_submitter();
+        let mut obs = vec![0.0f32; b * 2];
+        let mut logits = vec![0.0f32; b * 3];
+        let mut baselines = vec![0.0f32; b];
+        for round in 0..50 {
+            for k in 0..b {
+                obs[k * 2] = (round * 100 + k) as f32;
+            }
+            submitter
+                .submit_slice(&obs, &mut logits, &mut baselines)
+                .unwrap();
+            for k in 0..b {
+                let tag = (round * 100 + k) as f32;
+                assert_eq!(&logits[k * 3..(k + 1) * 3], &[tag; 3], "row {k} misrouted");
+                assert_eq!(baselines[k], -tag);
+            }
+        }
+        client.close();
+        let stats = h.join().unwrap();
+        assert_eq!(stats.requests, 50 * b as u64);
+        // every batch filled in one rendezvous: all full, none timed out
+        assert_eq!(stats.full_batches, 50);
+        assert_eq!(stats.timeout_batches, 0);
+    }
+
+    /// Group and single-slot submitters share one pool without losing
+    /// wakeups or results (the notify_all requirement).
+    #[test]
+    fn slice_and_single_submissions_coexist() {
+        let (client, stream) =
+            dynamic_batcher(cfg(3, Duration::from_micros(200), 1, 2).with_slots(4));
+        let h = run_echo_inference(stream, 2);
+        let group = {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                let mut sub = c.slice_submitter();
+                let mut logits = vec![0.0f32; 3 * 2];
+                let mut baselines = vec![0.0f32; 3];
+                for round in 0..60 {
+                    let obs = [
+                        (round * 10) as f32,
+                        (round * 10 + 1) as f32,
+                        (round * 10 + 2) as f32,
+                    ];
+                    sub.submit_slice(&obs, &mut logits, &mut baselines).unwrap();
+                    for k in 0..3 {
+                        assert_eq!(logits[k * 2], (round * 10 + k) as f32);
+                    }
+                }
+            })
+        };
+        let singles: Vec<_> = (0..2)
+            .map(|i| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    let mut logits = Vec::new();
+                    for k in 0..60 {
+                        let tag = (1000 + i * 100 + k) as f32;
+                        let bl = c.infer(&[tag], &mut logits).unwrap();
+                        assert_eq!(logits[0], tag);
+                        assert_eq!(bl, -tag);
+                    }
+                })
+            })
+            .collect();
+        group.join().unwrap();
+        for s in singles {
+            s.join().unwrap();
+        }
+        client.close();
+        let stats = h.join().unwrap();
+        assert_eq!(stats.requests, 60 * 3 + 2 * 60);
+    }
+
+    #[test]
+    fn slice_submission_fails_cleanly_on_shutdown() {
+        let (client, stream) = dynamic_batcher(cfg(2, Duration::from_millis(1), 1, 2));
+        drop(stream); // nothing will ever serve
+        let mut sub = client.slice_submitter();
+        let mut logits = vec![0.0f32; 2 * 2];
+        let mut baselines = vec![0.0f32; 2];
+        assert!(sub
+            .submit_slice(&[0.0, 1.0], &mut logits, &mut baselines)
+            .is_none());
+        // slots were returned: a later (also failing) call cannot hang
+        assert!(sub
+            .submit_slice(&[0.0, 1.0], &mut logits, &mut baselines)
+            .is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the batcher slot pool")]
+    fn slice_larger_than_slot_pool_panics() {
+        let (client, _stream) =
+            dynamic_batcher(cfg(2, Duration::from_millis(1), 1, 2).with_slots(2));
+        let mut sub = client.slice_submitter();
+        let mut logits = vec![0.0f32; 3 * 2];
+        let mut baselines = vec![0.0f32; 3];
+        let _ = sub.submit_slice(&[0.0; 3], &mut logits, &mut baselines);
     }
 
     #[test]

@@ -15,7 +15,10 @@
 pub mod catch;
 pub mod gridworld;
 pub mod minatar;
+pub mod vec;
 pub mod wrappers;
+
+pub use vec::{LocalVecEnv, SlotStep, VecEnvironment};
 
 use crate::util::rng::Rng;
 
@@ -37,6 +40,25 @@ impl EnvSpec {
     pub fn obs_shape(&self) -> [usize; 3] {
         [self.channels, self.height, self.width]
     }
+}
+
+/// Intern a dynamically-built env name as `&'static str`.
+///
+/// `EnvSpec::name` is `&'static str`; specs received over the wire
+/// (remote envs) build their names at runtime.  Leaking each one
+/// per *connection* grew memory without bound under reconnect churn —
+/// this table leaks each distinct name exactly once and hands the same
+/// `&'static` back forever after, so memory is bounded by the number
+/// of distinct names ever seen (tiny: one per served env name).
+pub fn intern_name(name: &str) -> &'static str {
+    static TABLE: std::sync::Mutex<Vec<&'static str>> = std::sync::Mutex::new(Vec::new());
+    let mut table = TABLE.lock().unwrap();
+    if let Some(&found) = table.iter().find(|&&n| n == name) {
+        return found;
+    }
+    let leaked: &'static str = Box::leak(name.to_string().into_boxed_str());
+    table.push(leaked);
+    leaked
 }
 
 /// Result of one environment transition.
@@ -285,6 +307,20 @@ mod tests {
         for id in 0..256 {
             assert!(seen.insert(actor_seed(123, id)));
         }
+    }
+
+    #[test]
+    fn intern_name_reuses_one_leak_per_distinct_name() {
+        let a = intern_name("remote/intern-test-env");
+        let b = intern_name("remote/intern-test-env");
+        assert_eq!(a, b);
+        assert_eq!(
+            a.as_ptr(),
+            b.as_ptr(),
+            "same name must return the same leaked allocation"
+        );
+        let c = intern_name("remote/intern-test-env-2");
+        assert_ne!(a.as_ptr(), c.as_ptr());
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! Vectorized environment groups: step B same-spec environments with
+//! **one** call into **one** contiguous observation block.
+//!
+//! The paper's PolyBeast serves one environment per stream; rlpyt
+//! (Stooke & Abbeel 2019) and TorchRL both show that stepping
+//! environments in vectorized groups — one call (and, over the wire,
+//! one frame) for B envs — is the single largest sampler-throughput
+//! lever.  [`VecEnvironment`] is the group-level analog of
+//! [`Environment`]: the grouped actor loop
+//! (`coordinator::actor_pool::spawn_grouped`) drives one group per OS
+//! thread instead of one env per thread, and the batched RPC frames
+//! (`rpc::codec::{HelloBatch, ObsBatch, ActionBatch}`) carry a whole
+//! group per round-trip.
+//!
+//! Auto-reset convention (identical to the wire protocol's): when slot
+//! `s` finishes an episode, its observation row already belongs to the
+//! *next* episode, and `SlotStep::{episode_return, episode_step}`
+//! describe the episode that just ended — the IMPALA boundary
+//! convention.  Per-slot seeding is part of the contract: slot `s`
+//! always runs the env seeded for global env id `base + s`, so a group
+//! of B produces bit-identical trajectories to B ungrouped envs (the
+//! same batch-size-invariance rule `evaluate_batched` pins).
+
+use super::wrappers::WrapperCfg;
+use super::{make_wrapped, EnvSpec, Environment};
+
+/// Result of one slot's transition inside a [`VecEnvironment`] step.
+///
+/// `episode_return`/`episode_step` are only meaningful when `done` is
+/// true: they describe the episode that just finished (the observation
+/// row already shows the auto-reset next episode).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SlotStep {
+    pub reward: f32,
+    pub done: bool,
+    pub episode_step: u32,
+    pub episode_return: f32,
+}
+
+/// A fixed-size group of same-spec environments stepped in lockstep.
+///
+/// Observation blocks are contiguous `[B, C, H, W]` f32 buffers
+/// (`batch() * spec().obs_len()` long); slot `s` owns the row
+/// `[s * obs_len, (s + 1) * obs_len)`.  Implementations auto-reset
+/// finished slots, so callers never issue per-slot resets.
+pub trait VecEnvironment: Send {
+    /// Shared spec of every env in the group.
+    fn spec(&self) -> &EnvSpec;
+
+    /// Number of environments in the group (B).
+    fn batch(&self) -> usize;
+
+    /// Deliver the group's initial observations into `obs_block`
+    /// (`batch() * obs_len` f32s).  **Once per stream, before the
+    /// first `step_batch`** — all later episode boundaries are handled
+    /// by per-slot auto-reset, so there is never a reason to call this
+    /// again, and implementations panic if it happens (a remote group
+    /// could only replay stale cached frames here; a silent divergence
+    /// between local and remote groups would be worse than the panic).
+    fn reset_all(&mut self, obs_block: &mut [f32]);
+
+    /// Apply `actions[s]` to slot `s` for every slot, write the next
+    /// observations into `obs_block`, and report per-slot
+    /// reward/done/episode stats into `steps`.  Finished slots are
+    /// auto-reset (their row shows the next episode's first frame).
+    fn step_batch(&mut self, actions: &[usize], obs_block: &mut [f32], steps: &mut [SlotStep]);
+
+    /// True once the group is permanently dead (e.g. a remote stream's
+    /// transport failed): `step_batch` now synthesizes terminal steps
+    /// with replayed observations rather than real experience.  Local
+    /// groups never fail.
+    fn failed(&self) -> bool {
+        false
+    }
+}
+
+/// In-process [`VecEnvironment`]: owns B boxed local envs and steps
+/// them sequentially on the caller's thread (one group = one actor
+/// thread; parallelism comes from multiple groups, exactly like the
+/// ungrouped pool — minus B−1 threads and B−1 batcher rendezvous).
+pub struct LocalVecEnv {
+    envs: Vec<Box<dyn Environment>>,
+    spec: EnvSpec,
+    ep_return: Vec<f32>,
+    ep_steps: Vec<u32>,
+    /// Guards the once-per-stream `reset_all` contract.
+    stepped: bool,
+}
+
+impl LocalVecEnv {
+    /// Group pre-built envs.  All must share one spec.
+    pub fn new(envs: Vec<Box<dyn Environment>>) -> anyhow::Result<LocalVecEnv> {
+        anyhow::ensure!(!envs.is_empty(), "a vec env needs at least one slot");
+        let spec = envs[0].spec().clone();
+        for (s, e) in envs.iter().enumerate() {
+            anyhow::ensure!(
+                e.spec() == &spec,
+                "slot {s} spec {:?} differs from slot 0 spec {:?}",
+                e.spec(),
+                spec
+            );
+        }
+        let b = envs.len();
+        Ok(LocalVecEnv {
+            envs,
+            spec,
+            ep_return: vec![0.0; b],
+            ep_steps: vec![0; b],
+            stepped: false,
+        })
+    }
+
+    /// Build a group of wrapped envs, one per seed (slot `s` gets
+    /// `seeds[s]` — the per-slot seeding contract).
+    pub fn from_seeds(
+        name: &str,
+        seeds: &[u64],
+        wrappers: &WrapperCfg,
+    ) -> anyhow::Result<LocalVecEnv> {
+        let envs = seeds
+            .iter()
+            .map(|&s| make_wrapped(name, s, wrappers))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        LocalVecEnv::new(envs)
+    }
+}
+
+impl VecEnvironment for LocalVecEnv {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn batch(&self) -> usize {
+        self.envs.len()
+    }
+
+    fn reset_all(&mut self, obs_block: &mut [f32]) {
+        assert!(
+            !self.stepped,
+            "reset_all after step_batch is unsupported: VecEnv streams auto-reset per slot"
+        );
+        let l = self.spec.obs_len();
+        debug_assert_eq!(obs_block.len(), self.envs.len() * l);
+        for (s, env) in self.envs.iter_mut().enumerate() {
+            env.reset(&mut obs_block[s * l..(s + 1) * l]);
+            self.ep_return[s] = 0.0;
+            self.ep_steps[s] = 0;
+        }
+    }
+
+    fn step_batch(&mut self, actions: &[usize], obs_block: &mut [f32], steps: &mut [SlotStep]) {
+        self.stepped = true;
+        let b = self.envs.len();
+        let l = self.spec.obs_len();
+        assert_eq!(actions.len(), b, "need one action per slot");
+        assert_eq!(steps.len(), b, "need one step result per slot");
+        assert_eq!(obs_block.len(), b * l, "obs block shape mismatch");
+        for (s, env) in self.envs.iter_mut().enumerate() {
+            let row = &mut obs_block[s * l..(s + 1) * l];
+            let st = env.step(actions[s], row);
+            self.ep_return[s] += st.reward;
+            self.ep_steps[s] += 1;
+            steps[s] = SlotStep {
+                reward: st.reward,
+                done: st.done,
+                episode_step: self.ep_steps[s],
+                episode_return: self.ep_return[s],
+            };
+            if st.done {
+                // auto-reset: the row now shows the next episode
+                env.reset(row);
+                self.ep_return[s] = 0.0;
+                self.ep_steps[s] = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::{self, Step};
+
+    /// Step a single env with manual reset, recording the same
+    /// trajectory signature the vec path produces.
+    fn solo_trajectory(
+        name: &str,
+        seed: u64,
+        actions: &[usize],
+    ) -> (Vec<Vec<f32>>, Vec<Step>, Vec<(u32, f32)>) {
+        let mut env = env::make_wrapped(name, seed, &WrapperCfg::default()).unwrap();
+        let l = env.spec().obs_len();
+        let mut obs = vec![0.0f32; l];
+        env.reset(&mut obs);
+        let (mut frames, mut steps, mut episodes) = (Vec::new(), Vec::new(), Vec::new());
+        let (mut ep_ret, mut ep_len) = (0.0f32, 0u32);
+        for &a in actions {
+            let st = env.step(a, &mut obs);
+            ep_ret += st.reward;
+            ep_len += 1;
+            if st.done {
+                episodes.push((ep_len, ep_ret));
+                ep_ret = 0.0;
+                ep_len = 0;
+                env.reset(&mut obs);
+            }
+            frames.push(obs.clone());
+            steps.push(st);
+        }
+        (frames, steps, episodes)
+    }
+
+    /// The per-slot seeding contract: a group of B produces exactly
+    /// the trajectories of B ungrouped envs, slot by slot, bit for
+    /// bit — including auto-reset frames and episode stats.
+    #[test]
+    fn group_matches_ungrouped_slot_by_slot() {
+        let name = "catch";
+        let seeds = [3u64, 14, 15];
+        let b = seeds.len();
+        let mut venv = LocalVecEnv::from_seeds(name, &seeds, &WrapperCfg::default()).unwrap();
+        let l = venv.spec().obs_len();
+        let na = venv.spec().num_actions;
+        assert_eq!(venv.batch(), b);
+
+        // per-slot action sequences (deterministic, slot-dependent)
+        let rounds = 40;
+        let slot_actions: Vec<Vec<usize>> = (0..b)
+            .map(|s| (0..rounds).map(|i| (i * (s + 2) + s) % na).collect())
+            .collect();
+
+        let mut obs_block = vec![0.0f32; b * l];
+        let mut steps = vec![SlotStep::default(); b];
+        let mut actions = vec![0usize; b];
+        venv.reset_all(&mut obs_block);
+
+        // solo references
+        let solos: Vec<_> = (0..b)
+            .map(|s| solo_trajectory(name, seeds[s], &slot_actions[s]))
+            .collect();
+
+        let mut vec_episodes: Vec<Vec<(u32, f32)>> = vec![Vec::new(); b];
+        for i in 0..rounds {
+            for s in 0..b {
+                actions[s] = slot_actions[s][i];
+            }
+            venv.step_batch(&actions, &mut obs_block, &mut steps);
+            for s in 0..b {
+                let (frames, solo_steps, _) = &solos[s];
+                assert_eq!(
+                    &obs_block[s * l..(s + 1) * l],
+                    &frames[i][..],
+                    "slot {s} obs diverged at round {i}"
+                );
+                assert_eq!(steps[s].reward, solo_steps[i].reward, "slot {s} round {i}");
+                assert_eq!(steps[s].done, solo_steps[i].done, "slot {s} round {i}");
+                if steps[s].done {
+                    vec_episodes[s].push((steps[s].episode_step, steps[s].episode_return));
+                }
+            }
+        }
+        for s in 0..b {
+            assert_eq!(
+                vec_episodes[s], solos[s].2,
+                "slot {s} episode stats must match the solo run"
+            );
+        }
+    }
+
+    #[test]
+    fn auto_reset_reports_episode_stats_once() {
+        // catch: episodes are 9 steps, terminal reward ±1
+        let mut venv = LocalVecEnv::from_seeds("catch", &[7], &WrapperCfg::default()).unwrap();
+        let l = venv.spec().obs_len();
+        let mut obs = vec![0.0f32; l];
+        let mut steps = [SlotStep::default()];
+        venv.reset_all(&mut obs);
+        let mut dones = 0;
+        for _ in 0..20 {
+            venv.step_batch(&[1], &mut obs, &mut steps);
+            if steps[0].done {
+                dones += 1;
+                assert_eq!(steps[0].episode_step, 9);
+                assert!(steps[0].episode_return == 1.0 || steps[0].episode_return == -1.0);
+                // the row already belongs to the next episode
+                assert_eq!(obs.iter().filter(|&&v| v == 1.0).count(), 2);
+            }
+        }
+        assert_eq!(dones, 2, "20 steps of 9-step episodes finish twice");
+    }
+
+    #[test]
+    fn mixed_specs_rejected() {
+        let a = env::make_env("catch", 0).unwrap();
+        let b = env::make_env("gridworld", 0).unwrap();
+        assert!(LocalVecEnv::new(vec![a, b]).is_err());
+        assert!(LocalVecEnv::new(Vec::new()).is_err());
+        assert!(LocalVecEnv::from_seeds("nope", &[1], &WrapperCfg::default()).is_err());
+    }
+}

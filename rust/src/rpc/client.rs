@@ -1,11 +1,14 @@
-//! Actor-side remote environment client.
+//! Actor-side remote environment clients.
 //!
 //! `RemoteEnv` speaks the stream protocol and implements the same
 //! `Environment` trait as local envs, so the actor pool is oblivious
 //! to whether its environments are in-process (mono mode) or served
 //! over TCP by env-server processes (poly mode) — the paper's
 //! "transparently runs using either a single-machine or a distributed
-//! setup".
+//! setup".  `RemoteVecEnv` is its group-level analog: one stream
+//! serves B envs through the batched frames (`HelloBatch` /
+//! `ObsBatch` / `ActionBatch`), implementing [`VecEnvironment`] so the
+//! grouped actor loop is equally transport-oblivious.
 //!
 //! Protocol note: the server auto-resets, so `reset()` after `done`
 //! costs no round-trip — the post-reset observation arrived with the
@@ -16,8 +19,33 @@ use std::net::TcpStream;
 use std::time::Duration;
 
 use crate::env::wrappers::WrapperCfg;
-use crate::env::{EnvSpec, Environment, Step};
-use crate::rpc::codec::{self, read_msg, write_msg, Msg, TAG_OBS};
+use crate::env::{intern_name, EnvSpec, Environment, SlotStep, Step, VecEnvironment};
+use crate::rpc::codec::{self, read_msg, write_msg, Msg, ObsHeader, TAG_OBS, TAG_OBS_BATCH};
+
+/// Read the server's `Spec` reply and convert it — the one definition
+/// of the Spec→`EnvSpec` handshake step, shared by both connect paths
+/// (mono and batched clients must report identical specs and errors
+/// for the same server).
+fn read_spec(reader: &mut BufReader<TcpStream>, env_name: &str) -> anyhow::Result<EnvSpec> {
+    match read_msg(reader)? {
+        Msg::Spec {
+            channels,
+            height,
+            width,
+            num_actions,
+        } => Ok(EnvSpec {
+            // interned, not leaked per connection: reconnect churn
+            // used to grow memory by one Box::leak per stream
+            name: intern_name(&format!("remote/{env_name}")),
+            channels: channels as usize,
+            height: height as usize,
+            width: width as usize,
+            num_actions: num_actions as usize,
+        }),
+        Msg::Error { message } => anyhow::bail!("server error: {message}"),
+        other => anyhow::bail!("expected Spec, got {other:?}"),
+    }
+}
 
 pub struct RemoteEnv {
     writer: TcpStream,
@@ -33,12 +61,6 @@ pub struct RemoteEnv {
     /// Stats of the last finished episode (for metrics).
     pub last_episode_return: f32,
     pub last_episode_step: u32,
-}
-
-/// Leaked &'static names for dynamically received specs. Bounded by the
-/// number of distinct (env, wrapper) spec shapes per process — tiny.
-fn leak_name(name: String) -> &'static str {
-    Box::leak(name.into_boxed_str())
 }
 
 impl RemoteEnv {
@@ -63,22 +85,7 @@ impl RemoteEnv {
                 wrappers: wrappers.clone(),
             },
         )?;
-        let spec = match read_msg(&mut reader)? {
-            Msg::Spec {
-                channels,
-                height,
-                width,
-                num_actions,
-            } => EnvSpec {
-                name: leak_name(format!("remote/{env_name}")),
-                channels: channels as usize,
-                height: height as usize,
-                width: width as usize,
-                num_actions: num_actions as usize,
-            },
-            Msg::Error { message } => anyhow::bail!("server error: {message}"),
-            other => anyhow::bail!("expected Spec, got {other:?}"),
-        };
+        let spec = read_spec(&mut reader, env_name)?;
         // initial observation
         let last_obs = match read_msg(&mut reader)? {
             Msg::Observation { obs, .. } => obs,
@@ -167,6 +174,216 @@ impl Environment for RemoteEnv {
 
     fn reseed(&mut self, _seed: u64) {
         // Seeding is fixed at Hello time for remote streams.
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Remote [`VecEnvironment`]: B server-side envs behind **one** TCP
+/// stream.  Each `step_batch` is a single `ActionBatch` → `ObsBatch`
+/// round-trip — B× fewer frames, syscalls and server threads than B
+/// [`RemoteEnv`]s, with the identical per-slot seeding contract
+/// (slot `s` runs `seeds[s]`).
+pub struct RemoteVecEnv {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    spec: EnvSpec,
+    b: usize,
+    /// Last observation block received (the server's auto-reset rows).
+    last_obs: Vec<f32>,
+    /// Per-slot headers of the last frame (reused every step).
+    headers: Vec<ObsHeader>,
+    /// Reusable action encoding buffer (`usize` → wire `u32`).
+    actions_u32: Vec<u32>,
+    /// Reusable read-frame / write-scratch buffers: the per-step
+    /// round-trip allocates nothing after the first frame.
+    frame_buf: Vec<u8>,
+    write_buf: Vec<u8>,
+    /// Why the stream died, when it has (transport/protocol errors are
+    /// reported as all-terminal steps; this keeps the typed cause).
+    last_error: Option<String>,
+    /// Guards the once-per-stream `reset_all` contract.
+    stepped: bool,
+}
+
+impl RemoteVecEnv {
+    /// Connect to an env server and begin a vectorized serving stream
+    /// of `seeds.len()` envs (slot `s` seeded by `seeds[s]`).
+    pub fn connect(
+        addr: &str,
+        env_name: &str,
+        seeds: &[u64],
+        wrappers: &WrapperCfg,
+    ) -> anyhow::Result<RemoteVecEnv> {
+        anyhow::ensure!(!seeds.is_empty(), "a vec env needs at least one slot");
+        let b = seeds.len();
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        // A group step's server-side latency scales with B (the server
+        // steps the B envs sequentially before replying), so the read
+        // timeout must too — a fixed 30 s would falsely kill large
+        // groups of slow envs that mono streams survive.  The known
+        // per-step busy-wait (`env_cost_us`) enters with 2× headroom.
+        stream.set_read_timeout(Some(
+            Duration::from_secs(30)
+                + Duration::from_secs(b as u64)
+                + Duration::from_micros(2 * b as u64 * wrappers.env_cost_us),
+        ))?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+
+        write_msg(
+            &mut writer,
+            &Msg::HelloBatch {
+                env: env_name.to_string(),
+                seeds: seeds.to_vec(),
+                wrappers: wrappers.clone(),
+            },
+        )?;
+        let spec = read_spec(&mut reader, env_name)?;
+        // initial observation block
+        let (headers, last_obs) = match read_msg(&mut reader)? {
+            Msg::ObsBatch { headers, obs } => (headers, obs),
+            Msg::Error { message } => anyhow::bail!("server error: {message}"),
+            other => anyhow::bail!("expected initial ObsBatch, got {other:?}"),
+        };
+        anyhow::ensure!(
+            headers.len() == b && last_obs.len() == b * spec.obs_len(),
+            "initial obs batch {} slots x {} f32s != requested {b} x {}",
+            headers.len(),
+            last_obs.len(),
+            spec.obs_len()
+        );
+        Ok(RemoteVecEnv {
+            writer,
+            reader,
+            spec,
+            b,
+            last_obs,
+            headers,
+            actions_u32: vec![0; b],
+            frame_buf: Vec::new(),
+            write_buf: Vec::new(),
+            last_error: None,
+            stepped: false,
+        })
+    }
+
+    /// Why the stream died (set once transport/protocol errors start
+    /// surfacing as all-terminal steps), if it has.
+    pub fn last_error(&self) -> Option<&str> {
+        self.last_error.as_deref()
+    }
+
+    /// Orderly stream shutdown.
+    pub fn close(&mut self) {
+        let _ = write_msg(&mut self.writer, &Msg::Bye);
+    }
+
+    /// Record the stream's death and synthesize an all-terminal step
+    /// (cached obs replayed) so the grouped actor keeps running — the
+    /// same fault-tolerance shape as [`RemoteEnv::step`].
+    fn fail_step(&mut self, why: String, obs_block: &mut [f32], steps: &mut [SlotStep]) {
+        if self.last_error.is_none() {
+            crate::tb_warn!("remote-vec-env", "stream failed: {why}");
+            self.last_error = Some(why);
+        }
+        obs_block.copy_from_slice(&self.last_obs);
+        for st in steps.iter_mut() {
+            *st = SlotStep {
+                reward: 0.0,
+                done: true,
+                episode_step: 0,
+                episode_return: 0.0,
+            };
+        }
+    }
+}
+
+impl Drop for RemoteVecEnv {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+impl VecEnvironment for RemoteVecEnv {
+    fn spec(&self) -> &EnvSpec {
+        &self.spec
+    }
+
+    fn batch(&self) -> usize {
+        self.b
+    }
+
+    fn reset_all(&mut self, obs_block: &mut [f32]) {
+        // Valid only before the first step: the connect handshake
+        // delivered every slot's episode-start frame, cached here.
+        // Later calls could only replay stale mid-episode frames while
+        // the server kept its episode state — the silent-divergence
+        // hazard the trait contract forbids.
+        assert!(
+            !self.stepped,
+            "reset_all after step_batch is unsupported: VecEnv streams auto-reset per slot"
+        );
+        obs_block.copy_from_slice(&self.last_obs);
+    }
+
+    fn step_batch(&mut self, actions: &[usize], obs_block: &mut [f32], steps: &mut [SlotStep]) {
+        self.stepped = true;
+        assert_eq!(actions.len(), self.b, "need one action per slot");
+        assert_eq!(steps.len(), self.b, "need one step result per slot");
+        assert_eq!(obs_block.len(), self.last_obs.len(), "obs block shape mismatch");
+        // Failure is latched: once the stream died, never touch the
+        // socket again.  A transiently-failed write followed by a
+        // successful one would resume the exchange one round out of
+        // sync — fabricated terminals interleaved with desynchronized
+        // real frames is strictly worse than staying dead.
+        if self.last_error.is_some() {
+            return self.fail_step(String::new(), obs_block, steps);
+        }
+        // Pooled-buffer fast path: one ActionBatch frame out, one
+        // ObsBatch frame decoded straight into the caller's block —
+        // zero heap allocation per group step on this end.
+        for (dst, &a) in self.actions_u32.iter_mut().zip(actions) {
+            *dst = a as u32;
+        }
+        if let Err(e) =
+            codec::write_action_batch(&mut self.writer, &mut self.write_buf, &self.actions_u32)
+        {
+            return self.fail_step(e.to_string(), obs_block, steps);
+        }
+        // .err() consumes the Result (whose Ok borrows frame_buf), so
+        // the borrow provably ends before fail_step re-borrows self
+        if let Some(e) = codec::read_frame(&mut self.reader, &mut self.frame_buf).err() {
+            return self.fail_step(e.to_string(), obs_block, steps);
+        }
+        if codec::frame_tag(&self.frame_buf) != Some(TAG_OBS_BATCH) {
+            // an Error frame (typed server-side rejection) or Bye
+            let why = match Msg::decode(&self.frame_buf) {
+                Ok(Msg::Error { message }) => format!("server error: {message}"),
+                Ok(other) => format!("expected ObsBatch, got {other:?}"),
+                Err(_) => "expected ObsBatch, got undecodable frame".to_string(),
+            };
+            return self.fail_step(why, obs_block, steps);
+        }
+        if let Err(e) =
+            codec::decode_obs_batch_into(&self.frame_buf, &mut self.headers, obs_block)
+        {
+            return self.fail_step(e.to_string(), obs_block, steps);
+        }
+        self.last_obs.copy_from_slice(obs_block);
+        for (st, h) in steps.iter_mut().zip(&self.headers) {
+            *st = SlotStep {
+                reward: h.reward,
+                done: h.done,
+                episode_step: h.episode_step,
+                episode_return: h.episode_return,
+            };
+        }
+    }
+
+    fn failed(&self) -> bool {
+        self.last_error.is_some()
     }
 }
 
@@ -302,5 +519,113 @@ mod tests {
         let addr = server.addr.to_string();
         let _env = RemoteEnv::connect(&addr, "catch", 0, &WrapperCfg::default()).unwrap();
         server.shutdown(); // must not hang with a live stream
+    }
+
+    /// The batched protocol's contract: a RemoteVecEnv group produces
+    /// bit-identical per-slot trajectories to local envs with the same
+    /// seeds — through one socket, one server thread, and one frame
+    /// pair per *group* step.
+    #[test]
+    fn remote_vec_matches_local_vec_trajectories() {
+        use crate::env::{LocalVecEnv, SlotStep, VecEnvironment};
+
+        let server = EnvServer::start("127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let cfg = WrapperCfg::default();
+        let seeds = [21u64, 22, 23, 24];
+        let b = seeds.len();
+        let mut remote =
+            RemoteVecEnv::connect(&addr, "minatar/breakout", &seeds, &cfg).unwrap();
+        let mut local = LocalVecEnv::from_seeds("minatar/breakout", &seeds, &cfg).unwrap();
+        assert_eq!(remote.batch(), b);
+        assert_eq!(remote.spec().obs_len(), local.spec().obs_len());
+        assert_eq!(remote.spec().num_actions, 6);
+
+        let l = local.spec().obs_len();
+        let (mut ro, mut lo) = (vec![0.0f32; b * l], vec![0.0f32; b * l]);
+        let (mut rs, mut ls) = (
+            vec![SlotStep::default(); b],
+            vec![SlotStep::default(); b],
+        );
+        remote.reset_all(&mut ro);
+        local.reset_all(&mut lo);
+        assert_eq!(ro, lo);
+        let mut actions = vec![0usize; b];
+        for i in 0..120 {
+            for (s, a) in actions.iter_mut().enumerate() {
+                *a = (i + s) % 6;
+            }
+            remote.step_batch(&actions, &mut ro, &mut rs);
+            local.step_batch(&actions, &mut lo, &mut ls);
+            assert_eq!(rs, ls, "step results diverged at round {i}");
+            assert_eq!(ro, lo, "obs blocks diverged at round {i}");
+        }
+        assert!(remote.last_error().is_none());
+        // one connection served the whole group, B steps per round
+        assert_eq!(
+            server.connections.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        assert_eq!(
+            server
+                .steps_served
+                .load(std::sync::atomic::Ordering::Relaxed),
+            120 * b as u64
+        );
+    }
+
+    /// Satellite contract: the server reports open streams and served
+    /// steps into a shared PipelineGauges registry (what the driver
+    /// prints as `env-streams N served M`).
+    #[test]
+    fn server_reports_streams_and_steps_into_gauges() {
+        use crate::telemetry::gauges::PipelineGauges;
+
+        let g = PipelineGauges::shared();
+        let mut server = EnvServer::start_with_gauges("127.0.0.1:0", g.clone()).unwrap();
+        let addr = server.addr.to_string();
+        assert_eq!(g.env_streams.get(), 0);
+        let mut env = RemoteEnv::connect(&addr, "catch", 1, &WrapperCfg::default()).unwrap();
+        // the stream registers (give the server thread a moment)
+        for _ in 0..2000 {
+            if g.env_streams.get() == 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(g.env_streams.get(), 1);
+        let mut obs = vec![0.0; env.spec().obs_len()];
+        env.reset(&mut obs);
+        for i in 0..10 {
+            if env.step(i % 3, &mut obs).done {
+                env.reset(&mut obs);
+            }
+        }
+        assert_eq!(g.env_steps.get(), 10, "served steps mirror the atomic counter");
+        assert!(g.snapshot().to_string().contains("env-streams 1 served 10"));
+        env.close();
+        drop(env);
+        for _ in 0..2000 {
+            if g.env_streams.get() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(g.env_streams.get(), 0, "stream close must unregister");
+        server.shutdown();
+    }
+
+    #[test]
+    fn remote_vec_unknown_env_reports_error() {
+        let server = EnvServer::start("127.0.0.1:0").unwrap();
+        let addr = server.addr.to_string();
+        let err = match RemoteVecEnv::connect(&addr, "atari/pong", &[0, 1], &WrapperCfg::default())
+        {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("connect should fail for unknown env"),
+        };
+        assert!(err.contains("unknown env"), "{err}");
+        // empty groups are rejected client-side, before any connection
+        assert!(RemoteVecEnv::connect(&addr, "catch", &[], &WrapperCfg::default()).is_err());
     }
 }

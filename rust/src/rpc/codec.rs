@@ -14,6 +14,13 @@
 //! either side sends `Bye`.  All integers little-endian; observations
 //! are raw f32 planes.
 //!
+//! **Batched tier** (DESIGN.md §VecEnv): a client that opens with
+//! `HelloBatch` (B seeds) gets a vectorized stream — `ObsBatch`
+//! carries B per-slot headers plus **one** contiguous `[B * obs_len]`
+//! observation payload, `ActionBatch` carries B actions.  One frame
+//! each way per group step instead of B, over one socket served by
+//! one thread.
+//!
 //! Two API tiers share the same wire format:
 //!
 //! * **Owned values** — [`Msg`] + [`write_msg`]/[`read_msg`]:
@@ -65,6 +72,23 @@ pub enum Msg {
     Bye,
     /// Server → client: fatal serving error (unknown env etc).
     Error { message: String },
+    /// Client → server: start a vectorized stream serving one env per
+    /// seed (slot `s` runs `seeds[s]` — the per-slot seeding contract).
+    HelloBatch {
+        env: String,
+        seeds: Vec<u64>,
+        wrappers: WrapperCfg,
+    },
+    /// Server → client: one frame for the whole group — B per-slot
+    /// headers plus one contiguous `[B * obs_len]` observation block.
+    /// Header semantics per slot match [`Msg::Observation`].
+    ObsBatch {
+        headers: Vec<ObsHeader>,
+        obs: Vec<f32>,
+    },
+    /// Client → server: one action per slot, same order as the
+    /// `ObsBatch` rows.
+    ActionBatch { actions: Vec<u32> },
 }
 
 pub const TAG_HELLO: u8 = 1;
@@ -73,6 +97,9 @@ pub const TAG_OBS: u8 = 3;
 pub const TAG_ACTION: u8 = 4;
 pub const TAG_BYE: u8 = 5;
 pub const TAG_ERROR: u8 = 6;
+pub const TAG_HELLO_BATCH: u8 = 7;
+pub const TAG_OBS_BATCH: u8 = 8;
+pub const TAG_ACTION_BATCH: u8 = 9;
 
 /// Tag byte of an encoded payload (None for an empty frame).
 pub fn frame_tag(payload: &[u8]) -> Option<u8> {
@@ -115,16 +142,48 @@ impl Buf<'_> {
 
 fn encode_observation_payload(b: &mut Buf<'_>, header: ObsHeader, obs: &[f32]) {
     b.u8(TAG_OBS);
-    b.f32(header.reward);
-    b.u8(header.done as u8);
-    b.u32(header.episode_step);
-    b.f32(header.episode_return);
+    encode_header(b, header);
     b.f32s(obs);
 }
 
 fn encode_action_payload(b: &mut Buf<'_>, action: u32) {
     b.u8(TAG_ACTION);
     b.u32(action);
+}
+
+fn encode_header(b: &mut Buf<'_>, header: ObsHeader) {
+    b.f32(header.reward);
+    b.u8(header.done as u8);
+    b.u32(header.episode_step);
+    b.f32(header.episode_return);
+}
+
+fn encode_wrappers(b: &mut Buf<'_>, w: &WrapperCfg) {
+    b.u32(w.action_repeat as u32);
+    b.u32(w.frame_stack as u32);
+    b.f32(w.reward_clip);
+    b.f32(w.sticky_action_p);
+    b.u32(w.time_limit);
+    b.u32(w.noop_max);
+    b.u8(w.episodic_life as u8);
+    b.u64(w.env_cost_us);
+}
+
+fn encode_obs_batch_payload(b: &mut Buf<'_>, headers: &[ObsHeader], obs: &[f32]) {
+    b.u8(TAG_OBS_BATCH);
+    b.u32(headers.len() as u32);
+    for &h in headers {
+        encode_header(b, h);
+    }
+    b.f32s(obs);
+}
+
+fn encode_action_batch_payload(b: &mut Buf<'_>, actions: &[u32]) {
+    b.u8(TAG_ACTION_BATCH);
+    b.u32(actions.len() as u32);
+    for &a in actions {
+        b.u32(a);
+    }
 }
 
 struct Cursor<'a> {
@@ -170,14 +229,56 @@ impl<'a> Cursor<'a> {
     fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
         let n = self.u32()? as usize;
         self.need(n * 4)?;
-        let mut v = Vec::with_capacity(n);
-        for k in 0..n {
-            let off = self.i + 4 * k;
-            v.push(f32::from_le_bytes(self.b[off..off + 4].try_into().unwrap()));
-        }
-        self.i += 4 * n;
+        let mut v = vec![0.0f32; n];
+        self.f32s_into(&mut v)?;
         Ok(v)
     }
+    /// Copy exactly `out.len()` raw f32s (no count prefix) — the one
+    /// definition of the bulk observation copy, shared by the owned
+    /// and both zero-alloc decode paths.
+    fn f32s_into(&mut self, out: &mut [f32]) -> anyhow::Result<()> {
+        self.need(out.len() * 4)?;
+        for (k, dst) in out.iter_mut().enumerate() {
+            let off = self.i + 4 * k;
+            *dst = f32::from_le_bytes(self.b[off..off + 4].try_into().unwrap());
+        }
+        self.i += 4 * out.len();
+        Ok(())
+    }
+}
+
+/// Encoded size of one per-slot observation header (reward f32 +
+/// done u8 + episode_step u32 + episode_return f32).
+const OBS_HEADER_BYTES: usize = 13;
+
+/// Encoded payload size of an `ObsBatch` frame for `b` slots of
+/// `obs_len` f32s each — lets the server reject a group whose frames
+/// could never fit under [`MAX_FRAME`] at handshake time (a typed
+/// error) instead of dying on the first oversized write.
+pub const fn obs_batch_payload_len(b: usize, obs_len: usize) -> usize {
+    1 + 4 + b * OBS_HEADER_BYTES + 4 + 4 * b * obs_len
+}
+
+fn decode_header(c: &mut Cursor<'_>) -> anyhow::Result<ObsHeader> {
+    Ok(ObsHeader {
+        reward: c.f32()?,
+        done: c.u8()? != 0,
+        episode_step: c.u32()?,
+        episode_return: c.f32()?,
+    })
+}
+
+fn decode_wrappers(c: &mut Cursor<'_>) -> anyhow::Result<WrapperCfg> {
+    Ok(WrapperCfg {
+        action_repeat: c.u32()? as usize,
+        frame_stack: c.u32()? as usize,
+        reward_clip: c.f32()?,
+        sticky_action_p: c.f32()?,
+        time_limit: c.u32()?,
+        noop_max: c.u32()?,
+        episodic_life: c.u8()? != 0,
+        env_cost_us: c.u64()?,
+    })
 }
 
 impl Msg {
@@ -200,15 +301,19 @@ impl Msg {
                 b.u8(TAG_HELLO);
                 b.str(env);
                 b.u64(*seed);
-                b.u32(wrappers.action_repeat as u32);
-                b.u32(wrappers.frame_stack as u32);
-                b.f32(wrappers.reward_clip);
-                b.f32(wrappers.sticky_action_p);
-                b.u32(wrappers.time_limit);
-                b.u32(wrappers.noop_max);
-                b.u8(wrappers.episodic_life as u8);
-                b.u64(wrappers.env_cost_us);
+                encode_wrappers(&mut b, wrappers);
             }
+            Msg::HelloBatch { env, seeds, wrappers } => {
+                b.u8(TAG_HELLO_BATCH);
+                b.str(env);
+                b.u32(seeds.len() as u32);
+                for &s in seeds {
+                    b.u64(s);
+                }
+                encode_wrappers(&mut b, wrappers);
+            }
+            Msg::ObsBatch { headers, obs } => encode_obs_batch_payload(&mut b, headers, obs),
+            Msg::ActionBatch { actions } => encode_action_batch_payload(&mut b, actions),
             Msg::Spec {
                 channels,
                 height,
@@ -252,17 +357,40 @@ impl Msg {
             TAG_HELLO => {
                 let env = c.str()?;
                 let seed = c.u64()?;
-                let wrappers = WrapperCfg {
-                    action_repeat: c.u32()? as usize,
-                    frame_stack: c.u32()? as usize,
-                    reward_clip: c.f32()?,
-                    sticky_action_p: c.f32()?,
-                    time_limit: c.u32()?,
-                    noop_max: c.u32()?,
-                    episodic_life: c.u8()? != 0,
-                    env_cost_us: c.u64()?,
-                };
+                let wrappers = decode_wrappers(&mut c)?;
                 Msg::Hello { env, seed, wrappers }
+            }
+            TAG_HELLO_BATCH => {
+                let env = c.str()?;
+                let n = c.u32()? as usize;
+                c.need(n * 8)?;
+                let mut seeds = Vec::with_capacity(n);
+                for _ in 0..n {
+                    seeds.push(c.u64()?);
+                }
+                let wrappers = decode_wrappers(&mut c)?;
+                Msg::HelloBatch { env, seeds, wrappers }
+            }
+            TAG_OBS_BATCH => {
+                let n = c.u32()? as usize;
+                c.need(n * OBS_HEADER_BYTES)?;
+                let mut headers = Vec::with_capacity(n);
+                for _ in 0..n {
+                    headers.push(decode_header(&mut c)?);
+                }
+                Msg::ObsBatch {
+                    headers,
+                    obs: c.f32s()?,
+                }
+            }
+            TAG_ACTION_BATCH => {
+                let n = c.u32()? as usize;
+                c.need(n * 4)?;
+                let mut actions = Vec::with_capacity(n);
+                for _ in 0..n {
+                    actions.push(c.u32()?);
+                }
+                Msg::ActionBatch { actions }
             }
             TAG_SPEC => Msg::Spec {
                 channels: c.u32()?,
@@ -270,13 +398,16 @@ impl Msg {
                 width: c.u32()?,
                 num_actions: c.u32()?,
             },
-            TAG_OBS => Msg::Observation {
-                reward: c.f32()?,
-                done: c.u8()? != 0,
-                episode_step: c.u32()?,
-                episode_return: c.f32()?,
-                obs: c.f32s()?,
-            },
+            TAG_OBS => {
+                let header = decode_header(&mut c)?;
+                Msg::Observation {
+                    reward: header.reward,
+                    done: header.done,
+                    episode_step: header.episode_step,
+                    episode_return: header.episode_return,
+                    obs: c.f32s()?,
+                }
+            }
             TAG_ACTION => Msg::Action { action: c.u32()? },
             TAG_BYE => Msg::Bye,
             TAG_ERROR => Msg::Error { message: c.str()? },
@@ -403,8 +534,9 @@ pub fn read_msg<R: Read>(r: &mut R) -> anyhow::Result<Msg> {
 
 // -- zero-allocation steady-state codecs -------------------------------------
 
-/// Header of an `Observation` frame, decoded without allocating.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// Header of an `Observation` frame (and of each `ObsBatch` slot),
+/// decoded without allocating.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ObsHeader {
     pub reward: f32,
     pub done: bool,
@@ -453,12 +585,7 @@ pub fn decode_observation_into(payload: &[u8], obs_out: &mut [f32]) -> anyhow::R
         "obs length {n} != destination buffer {}",
         obs_out.len()
     );
-    c.need(n * 4)?;
-    for (k, dst) in obs_out.iter_mut().enumerate() {
-        let off = c.i + 4 * k;
-        *dst = f32::from_le_bytes(c.b[off..off + 4].try_into().unwrap());
-    }
-    c.i += 4 * n;
+    c.f32s_into(obs_out)?;
     anyhow::ensure!(
         c.i == payload.len(),
         "{} trailing bytes in frame",
@@ -479,6 +606,98 @@ pub fn decode_action(payload: &[u8]) -> anyhow::Result<u32> {
         payload.len() - c.i
     );
     Ok(action)
+}
+
+// -- batched steady-state codecs (one frame per group step) ------------------
+
+/// Encode and write one `ObsBatch` frame from borrowed parts — the
+/// vectorized server's per-step path.  `obs` is the whole group's
+/// contiguous `[B * obs_len]` block; no owning [`Msg`] is ever built.
+pub fn write_obs_batch<W: Write>(
+    w: &mut W,
+    scratch: &mut Vec<u8>,
+    headers: &[ObsHeader],
+    obs: &[f32],
+) -> anyhow::Result<()> {
+    scratch.clear();
+    let mut b = Buf(scratch);
+    encode_obs_batch_payload(&mut b, headers, obs);
+    write_frame(w, scratch)
+}
+
+/// Encode and write one `ActionBatch` frame (vectorized client
+/// per-step path).  Zero allocation once `scratch` has warmed up.
+pub fn write_action_batch<W: Write>(
+    w: &mut W,
+    scratch: &mut Vec<u8>,
+    actions: &[u32],
+) -> anyhow::Result<()> {
+    scratch.clear();
+    let mut b = Buf(scratch);
+    encode_action_batch_payload(&mut b, actions);
+    write_frame(w, scratch)
+}
+
+/// Decode an `ObsBatch` payload directly into per-slot `headers_out`
+/// and the contiguous `obs_out` block (both must match the frame's
+/// group size exactly).  Zero allocation.
+pub fn decode_obs_batch_into(
+    payload: &[u8],
+    headers_out: &mut [ObsHeader],
+    obs_out: &mut [f32],
+) -> anyhow::Result<()> {
+    let mut c = Cursor { b: payload, i: 0 };
+    let tag = c.u8()?;
+    anyhow::ensure!(tag == TAG_OBS_BATCH, "expected ObsBatch frame, got tag {tag}");
+    let n = c.u32()? as usize;
+    anyhow::ensure!(
+        n == headers_out.len(),
+        "obs batch of {n} slots != expected {}",
+        headers_out.len()
+    );
+    for h in headers_out.iter_mut() {
+        *h = decode_header(&mut c)?;
+    }
+    let total = c.u32()? as usize;
+    anyhow::ensure!(
+        total == obs_out.len(),
+        "obs block of {total} f32s != destination buffer {}",
+        obs_out.len()
+    );
+    c.f32s_into(obs_out)?;
+    anyhow::ensure!(
+        c.i == payload.len(),
+        "{} trailing bytes in frame",
+        payload.len() - c.i
+    );
+    Ok(())
+}
+
+/// Decode an `ActionBatch` payload into `actions_out` (whose length
+/// must equal the frame's group size — a mismatch is the typed
+/// batched-frame length error the server reports).  Zero allocation.
+pub fn decode_action_batch_into(payload: &[u8], actions_out: &mut [u32]) -> anyhow::Result<()> {
+    let mut c = Cursor { b: payload, i: 0 };
+    let tag = c.u8()?;
+    anyhow::ensure!(
+        tag == TAG_ACTION_BATCH,
+        "expected ActionBatch frame, got tag {tag}"
+    );
+    let n = c.u32()? as usize;
+    anyhow::ensure!(
+        n == actions_out.len(),
+        "action batch of {n} != group size {}",
+        actions_out.len()
+    );
+    for a in actions_out.iter_mut() {
+        *a = c.u32()?;
+    }
+    anyhow::ensure!(
+        c.i == payload.len(),
+        "{} trailing bytes in frame",
+        payload.len() - c.i
+    );
+    Ok(())
 }
 
 #[cfg(test)]
@@ -642,6 +861,18 @@ mod tests {
             Msg::Error {
                 message: "boom".into(),
             },
+            Msg::HelloBatch {
+                env: "catch".into(),
+                seeds: vec![9, 8, 7],
+                wrappers: WrapperCfg::default(),
+            },
+            Msg::ObsBatch {
+                headers: vec![ObsHeader::default(); 2],
+                obs: vec![1.0; 6],
+            },
+            Msg::ActionBatch {
+                actions: vec![2, 0],
+            },
         ];
         for m in &variants {
             assert_eq!(&pooled_roundtrip(m, &mut scratch, &mut frame), m);
@@ -804,6 +1035,124 @@ mod tests {
         let err = read_frame(&mut &wire[..], &mut scratch).unwrap_err();
         let io = err.downcast_ref::<std::io::Error>().unwrap();
         assert_eq!(io.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn roundtrip_batched_variants() {
+        roundtrip(&Msg::HelloBatch {
+            env: "catch".into(),
+            seeds: vec![1, 2, 0xFFFF_FFFF_FFFF, 4],
+            wrappers: WrapperCfg::default(),
+        });
+        roundtrip(&Msg::ObsBatch {
+            headers: vec![
+                ObsHeader {
+                    reward: 1.0,
+                    done: true,
+                    episode_step: 9,
+                    episode_return: -1.0,
+                },
+                ObsHeader {
+                    reward: 0.0,
+                    done: false,
+                    episode_step: 3,
+                    episode_return: 0.5,
+                },
+            ],
+            obs: vec![0.25; 8],
+        });
+        roundtrip(&Msg::ActionBatch {
+            actions: vec![0, 5, 2],
+        });
+        // degenerate but legal: empty group
+        roundtrip(&Msg::ActionBatch { actions: vec![] });
+    }
+
+    #[test]
+    fn fuzz_pooled_batched_fast_paths() {
+        // property: random groups through write_obs_batch /
+        // write_action_batch match the owned-Msg wire bytes and decode
+        // identically through the zero-alloc decoders
+        let mut rng = Rng::new(123);
+        let mut scratch = Vec::new();
+        let mut frame = Vec::new();
+        for _ in 0..100 {
+            let b = 1 + rng.below(16);
+            let obs_len = 1 + rng.below(64);
+            let headers: Vec<ObsHeader> = (0..b)
+                .map(|_| ObsHeader {
+                    reward: rng.next_f32() - 0.5,
+                    done: rng.chance(0.3),
+                    episode_step: (rng.next_u64() & 0xFFFF) as u32,
+                    episode_return: rng.next_f32() * 10.0,
+                })
+                .collect();
+            let obs: Vec<f32> = (0..b * obs_len).map(|_| rng.next_f32()).collect();
+            let mut wire = Vec::new();
+            write_obs_batch(&mut wire, &mut scratch, &headers, &obs).unwrap();
+            let owned = Msg::ObsBatch {
+                headers: headers.clone(),
+                obs: obs.clone(),
+            };
+            let mut owned_wire = Vec::new();
+            write_msg(&mut owned_wire, &owned).unwrap();
+            assert_eq!(wire, owned_wire, "pooled obs-batch bytes must match owned");
+            let mut r = &wire[..];
+            let payload = read_frame(&mut r, &mut frame).unwrap();
+            assert_eq!(frame_tag(payload), Some(TAG_OBS_BATCH));
+            let mut headers_out = vec![ObsHeader::default(); b];
+            let mut obs_out = vec![0.0f32; b * obs_len];
+            decode_obs_batch_into(payload, &mut headers_out, &mut obs_out).unwrap();
+            assert_eq!(headers_out, headers);
+            assert_eq!(obs_out, obs);
+
+            let actions: Vec<u32> = (0..b).map(|_| rng.below(18) as u32).collect();
+            let mut wire = Vec::new();
+            write_action_batch(&mut wire, &mut scratch, &actions).unwrap();
+            let mut owned_wire = Vec::new();
+            write_msg(&mut owned_wire, &Msg::ActionBatch { actions: actions.clone() }).unwrap();
+            assert_eq!(wire, owned_wire);
+            let mut r = &wire[..];
+            let payload = read_frame(&mut r, &mut frame).unwrap();
+            let mut actions_out = vec![0u32; b];
+            decode_action_batch_into(payload, &mut actions_out).unwrap();
+            assert_eq!(actions_out, actions);
+        }
+    }
+
+    #[test]
+    fn batched_decoders_reject_size_mismatches() {
+        let headers = vec![ObsHeader::default(); 3];
+        let obs = vec![0.5f32; 12];
+        let payload = Msg::ObsBatch {
+            headers: headers.clone(),
+            obs: obs.clone(),
+        }
+        .encode();
+        // wrong slot count
+        let mut two = vec![ObsHeader::default(); 2];
+        let mut obs_out = vec![0.0f32; 12];
+        assert!(decode_obs_batch_into(&payload, &mut two, &mut obs_out).is_err());
+        // wrong obs length
+        let mut three = vec![ObsHeader::default(); 3];
+        let mut short = vec![0.0f32; 11];
+        assert!(decode_obs_batch_into(&payload, &mut three, &mut short).is_err());
+        // wrong tag
+        let bye = Msg::Bye.encode();
+        assert!(decode_obs_batch_into(&bye, &mut three, &mut obs_out).is_err());
+        assert!(decode_action_batch_into(&bye, &mut [0u32; 1]).is_err());
+        // action-batch length mismatch (the typed server error path)
+        let acts = Msg::ActionBatch {
+            actions: vec![1, 2, 3, 4],
+        }
+        .encode();
+        let mut out = [0u32; 3];
+        let err = decode_action_batch_into(&acts, &mut out).unwrap_err();
+        assert!(err.to_string().contains("action batch of 4"), "{err}");
+        // trailing bytes rejected
+        let mut extra = acts.clone();
+        extra.push(0);
+        assert!(decode_action_batch_into(&extra, &mut [0u32; 4]).is_err());
     }
 
     #[test]

@@ -8,6 +8,6 @@ pub mod client;
 pub mod codec;
 pub mod server;
 
-pub use client::RemoteEnv;
+pub use client::{RemoteEnv, RemoteVecEnv};
 pub use codec::Msg;
 pub use server::EnvServer;

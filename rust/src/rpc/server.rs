@@ -5,11 +5,20 @@
 //! new copy of the environment to serve to the client while the
 //! bidirectional streaming connection lasts."
 //!
-//! One OS thread per stream (the Rust analog of the paper's advice to
-//! limit GIL-contended connections per Python server — here a thread
-//! per env is cheap and scales to hundreds).  The server auto-resets
-//! finished episodes and reports episode stats at the boundary, so the
-//! client never issues an explicit reset round-trip.
+//! Two stream protocols share one listener (the first frame decides):
+//!
+//! * **Mono** (`Hello`): one env per stream — one OS thread, one
+//!   socket, two frames per env step (the paper's shape).
+//! * **Batched** (`HelloBatch`, DESIGN.md §VecEnv): B envs per stream —
+//!   still one thread and one socket, but two frames per *group* step
+//!   (`ObsBatch` ← / `ActionBatch` →), i.e. B× fewer server threads,
+//!   syscalls and frames than B mono streams for the same env traffic.
+//!
+//! The server auto-resets finished episodes and reports episode stats
+//! at the boundary (per slot, in the batched protocol), so the client
+//! never issues an explicit reset round-trip.  Stream/step occupancy
+//! is reported into a [`PipelineGauges`] registry when the server is
+//! started with [`EnvServer::start_with_gauges`].
 
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
@@ -18,17 +27,21 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::env;
+use crate::env::wrappers::WrapperCfg;
+use crate::env::{self, LocalVecEnv, SlotStep, VecEnvironment};
 use crate::rpc::codec::{
-    self, read_msg, write_msg, write_observation, Msg, ObsHeader, TAG_ACTION, TAG_BYE,
+    self, read_msg, write_msg, write_obs_batch, write_observation, Msg, ObsHeader, TAG_ACTION,
+    TAG_ACTION_BATCH, TAG_BYE,
 };
+use crate::telemetry::gauges::PipelineGauges;
 
 /// Handle to a running environment server.
 pub struct EnvServer {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
-    /// Total env steps served (all streams).
+    /// Total env steps served (all streams; B per round in batched
+    /// streams).
     pub steps_served: Arc<AtomicU64>,
     /// Streams accepted.
     pub connections: Arc<AtomicU64>,
@@ -46,6 +59,17 @@ impl EnvServer {
     /// server.shutdown();
     /// ```
     pub fn start(addr: &str) -> anyhow::Result<EnvServer> {
+        EnvServer::start_with_gauges(addr, PipelineGauges::shared())
+    }
+
+    /// [`start`](EnvServer::start), reporting open-stream count and
+    /// served steps into a shared gauge registry (`env_streams`,
+    /// `env_steps`) — how the driver surfaces local env servers in the
+    /// periodic report line.
+    pub fn start_with_gauges(
+        addr: &str,
+        gauges: Arc<PipelineGauges>,
+    ) -> anyhow::Result<EnvServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -66,11 +90,16 @@ impl EnvServer {
                             conns2.fetch_add(1, Ordering::Relaxed);
                             let stop3 = stop2.clone();
                             let steps3 = steps2.clone();
+                            let gauges3 = gauges.clone();
                             workers.push(
                                 std::thread::Builder::new()
                                     .name("env-server-stream".into())
                                     .spawn(move || {
-                                        if let Err(e) = serve_stream(stream, &stop3, &steps3) {
+                                        gauges3.env_streams.add(1);
+                                        let served =
+                                            serve_stream(stream, &stop3, &steps3, &gauges3);
+                                        gauges3.env_streams.sub(1);
+                                        if let Err(e) = served {
                                             // abrupt disconnects and protocol
                                             // errors are visible at the
                                             // default level, not silent
@@ -119,11 +148,14 @@ impl Drop for EnvServer {
     }
 }
 
-/// Serve one bidirectional stream: Hello → Spec → (Obs ← / Action →)*.
+/// Serve one bidirectional stream.  The opening frame picks the
+/// protocol: `Hello` → mono (Obs ← / Action →), `HelloBatch` →
+/// batched (ObsBatch ← / ActionBatch →).
 fn serve_stream(
     stream: TcpStream,
     stop: &AtomicBool,
     steps: &AtomicU64,
+    gauges: &PipelineGauges,
 ) -> anyhow::Result<()> {
     stream.set_nodelay(true)?;
     // Read timeout so server threads notice shutdown.
@@ -143,24 +175,87 @@ fn serve_stream(
             Err(e) => return Err(e),
         }
     };
-    let (env_name, seed, wrappers) = match hello {
-        Msg::Hello { env, seed, wrappers } => (env, seed, wrappers),
+    match hello {
+        Msg::Hello { env, seed, wrappers } => {
+            serve_mono(&mut writer, &mut reader, stop, steps, gauges, &env, seed, &wrappers)
+        }
+        Msg::HelloBatch { env, seeds, wrappers } => serve_batched(
+            &mut writer,
+            &mut reader,
+            stop,
+            steps,
+            gauges,
+            &env,
+            &seeds,
+            &wrappers,
+        ),
         other => {
-            let _ = write_msg(&mut writer, &Msg::Error { message: format!("expected Hello, got {other:?}") });
+            let _ = write_msg(
+                &mut writer,
+                &Msg::Error {
+                    message: format!("expected Hello, got {other:?}"),
+                },
+            );
             anyhow::bail!("bad handshake");
         }
-    };
+    }
+}
 
-    let mut env = match env::make_wrapped(&env_name, seed, &wrappers) {
+/// Fill `frame_buf` with the next frame, polling `stop` on idle read
+/// timeouts.  `Ok(true)` = frame ready in `frame_buf`; `Ok(false)` =
+/// stop requested (a best-effort `Bye` has been sent).  Shared by the
+/// mono and batched serve loops so shutdown polling and timeout
+/// classification cannot diverge between the two protocols.
+fn read_frame_or_stop(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    stop: &AtomicBool,
+    frame_buf: &mut Vec<u8>,
+) -> anyhow::Result<bool> {
+    loop {
+        match codec::read_frame(reader, frame_buf) {
+            Ok(_) => return Ok(true),
+            Err(e) if is_timeout(&e) => {
+                if stop.load(Ordering::Relaxed) {
+                    let _ = write_msg(writer, &Msg::Bye);
+                    return Ok(false);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// The typed-error contract, in one place: send an `Error` frame to
+/// the peer (best effort) and return the same message as the local
+/// stream error — both ends always see the typed cause, never a hang.
+fn reject(writer: &mut TcpStream, message: String) -> anyhow::Error {
+    let _ = write_msg(writer, &Msg::Error { message: message.clone() });
+    anyhow::Error::msg(message)
+}
+
+/// Mono serve loop: Spec → (Obs ← / Action →)* with auto-reset.
+#[allow(clippy::too_many_arguments)]
+fn serve_mono(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    stop: &AtomicBool,
+    steps: &AtomicU64,
+    gauges: &PipelineGauges,
+    env_name: &str,
+    seed: u64,
+    wrappers: &WrapperCfg,
+) -> anyhow::Result<()> {
+    let mut env = match env::make_wrapped(env_name, seed, wrappers) {
         Ok(e) => e,
         Err(e) => {
-            let _ = write_msg(&mut writer, &Msg::Error { message: e.to_string() });
+            let _ = write_msg(writer, &Msg::Error { message: e.to_string() });
             return Err(e);
         }
     };
     let spec = env.spec().clone();
     write_msg(
-        &mut writer,
+        writer,
         &Msg::Spec {
             channels: spec.channels as u32,
             height: spec.height as u32,
@@ -180,7 +275,7 @@ fn serve_stream(
     let mut episode_step: u32 = 0;
     let mut episode_return: f32 = 0.0;
     write_observation(
-        &mut writer,
+        writer,
         &mut write_buf,
         ObsHeader {
             reward: 0.0,
@@ -192,20 +287,8 @@ fn serve_stream(
     )?;
 
     loop {
-        // Fill frame_buf with the next frame (poll the stop flag on
-        // read timeouts).  The Ok borrow is dropped here; the payload
-        // is re-sliced below so no borrow crosses the loop.
-        loop {
-            match codec::read_frame(&mut reader, &mut frame_buf) {
-                Ok(_) => break,
-                Err(e) if is_timeout(&e) => {
-                    if stop.load(Ordering::Relaxed) {
-                        let _ = write_msg(&mut writer, &Msg::Bye);
-                        return Ok(());
-                    }
-                }
-                Err(e) => return Err(e),
-            }
+        if !read_frame_or_stop(reader, writer, stop, &mut frame_buf)? {
+            return Ok(()); // shutdown
         }
         let payload: &[u8] = &frame_buf;
         let action = match codec::frame_tag(payload) {
@@ -216,16 +299,19 @@ fn serve_stream(
                     Ok(m) => format!("{m:?}"),
                     Err(_) => format!("undecodable frame (tag {:?})", codec::frame_tag(payload)),
                 };
-                anyhow::bail!("expected Action, got {got}");
+                return Err(reject(writer, format!("expected Action, got {got}")));
             }
         };
         if action >= spec.num_actions {
-            let _ = write_msg(&mut writer, &Msg::Error { message: format!("action {action} out of range (< {})", spec.num_actions) });
-            anyhow::bail!("bad action");
+            return Err(reject(
+                writer,
+                format!("action {action} out of range (< {})", spec.num_actions),
+            ));
         }
 
         let st = env.step(action, &mut obs);
         steps.fetch_add(1, Ordering::Relaxed);
+        gauges.env_steps.inc();
         episode_step += 1;
         episode_return += st.reward;
         let (fin_step, fin_return) = (episode_step, episode_return);
@@ -235,7 +321,7 @@ fn serve_stream(
             episode_return = 0.0;
         }
         write_observation(
-            &mut writer,
+            writer,
             &mut write_buf,
             ObsHeader {
                 reward: st.reward,
@@ -245,6 +331,123 @@ fn serve_stream(
             },
             &obs,
         )?;
+    }
+}
+
+/// Batched serve loop: Spec → (ObsBatch ← / ActionBatch →)* with
+/// per-slot auto-reset.  One thread and one socket serve the whole
+/// group; each step exchanges exactly two frames regardless of B.
+#[allow(clippy::too_many_arguments)]
+fn serve_batched(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    stop: &AtomicBool,
+    steps: &AtomicU64,
+    gauges: &PipelineGauges,
+    env_name: &str,
+    seeds: &[u64],
+    wrappers: &WrapperCfg,
+) -> anyhow::Result<()> {
+    // Reject groups whose ObsBatch frames could never fit under the
+    // frame cap *at handshake time* (typed error on both ends) —
+    // otherwise the first write would die mid-stream with an opaque
+    // EOF on the client.  Checked against the wrapped spec, before
+    // paying for B env constructions.
+    match env::spec_of(env_name) {
+        Ok(base) => {
+            let wrapped = crate::env::wrappers::wrapped_spec(&base, wrappers);
+            let frame = codec::obs_batch_payload_len(seeds.len(), wrapped.obs_len());
+            if frame > codec::MAX_FRAME {
+                return Err(reject(
+                    writer,
+                    format!(
+                        "group of {} slots x {} f32 obs needs {frame}-byte frames \
+                         (cap {}); use smaller groups",
+                        seeds.len(),
+                        wrapped.obs_len(),
+                        codec::MAX_FRAME
+                    ),
+                ));
+            }
+        }
+        Err(e) => return Err(reject(writer, e.to_string())),
+    }
+    let mut venv = match LocalVecEnv::from_seeds(env_name, seeds, wrappers) {
+        Ok(v) => v,
+        Err(e) => {
+            let _ = write_msg(writer, &Msg::Error { message: e.to_string() });
+            return Err(e);
+        }
+    };
+    let spec = venv.spec().clone();
+    let b = venv.batch();
+    write_msg(
+        writer,
+        &Msg::Spec {
+            channels: spec.channels as u32,
+            height: spec.height as u32,
+            width: spec.width as u32,
+            num_actions: spec.num_actions as u32,
+        },
+    )?;
+
+    // Per-stream buffers, reused every round: the steady-state
+    // ObsBatch ← / ActionBatch → exchange allocates nothing
+    // (tests/alloc_regression.rs gates both codec ends).
+    let obs_len = spec.obs_len();
+    let mut obs_block = vec![0.0f32; b * obs_len];
+    let mut headers = vec![ObsHeader::default(); b];
+    let mut slot_steps = vec![SlotStep::default(); b];
+    let mut actions_u32 = vec![0u32; b];
+    let mut actions = vec![0usize; b];
+    let mut frame_buf: Vec<u8> = Vec::new();
+    let mut write_buf: Vec<u8> = Vec::new();
+    venv.reset_all(&mut obs_block);
+    write_obs_batch(writer, &mut write_buf, &headers, &obs_block)?;
+
+    loop {
+        if !read_frame_or_stop(reader, writer, stop, &mut frame_buf)? {
+            return Ok(()); // shutdown
+        }
+        let payload: &[u8] = &frame_buf;
+        match codec::frame_tag(payload) {
+            Some(TAG_ACTION_BATCH) => {
+                // a group-size mismatch (or a malformed frame) is a
+                // typed error on both ends, not a desynchronized hang
+                if let Err(e) = codec::decode_action_batch_into(payload, &mut actions_u32) {
+                    return Err(reject(writer, e.to_string()));
+                }
+            }
+            Some(TAG_BYE) => return Ok(()),
+            tag => {
+                return Err(reject(
+                    writer,
+                    format!("expected ActionBatch, got frame tag {tag:?}"),
+                ));
+            }
+        }
+        for (s, &a) in actions_u32.iter().enumerate() {
+            if a as usize >= spec.num_actions {
+                return Err(reject(
+                    writer,
+                    format!("slot {s} action {a} out of range (< {})", spec.num_actions),
+                ));
+            }
+            actions[s] = a as usize;
+        }
+
+        venv.step_batch(&actions, &mut obs_block, &mut slot_steps);
+        steps.fetch_add(b as u64, Ordering::Relaxed);
+        gauges.env_steps.add(b as u64);
+        for (h, st) in headers.iter_mut().zip(&slot_steps) {
+            *h = ObsHeader {
+                reward: st.reward,
+                done: st.done,
+                episode_step: st.episode_step,
+                episode_return: st.episode_return,
+            };
+        }
+        write_obs_batch(writer, &mut write_buf, &headers, &obs_block)?;
     }
 }
 

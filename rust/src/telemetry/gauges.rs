@@ -127,6 +127,11 @@ pub struct PipelineGauges {
     pub slots_in_use: Gauge,
     /// Times a request blocked waiting for a free inference slot.
     pub slot_waits: Counter,
+    /// `EnvServer`: serving streams currently open (one per env in the
+    /// mono protocol, one per *group* in the batched protocol).
+    pub env_streams: Gauge,
+    /// `EnvServer`: total env steps served across all streams.
+    pub env_steps: Counter,
 }
 
 impl PipelineGauges {
@@ -153,6 +158,8 @@ impl PipelineGauges {
             batches_ready: self.batches_ready.get(),
             slots_in_use: self.slots_in_use.get(),
             slot_waits: self.slot_waits.get(),
+            env_streams: self.env_streams.get(),
+            env_steps: self.env_steps.get(),
         }
     }
 }
@@ -169,6 +176,8 @@ pub struct GaugesSnapshot {
     pub batches_ready: u64,
     pub slots_in_use: u64,
     pub slot_waits: u64,
+    pub env_streams: u64,
+    pub env_steps: u64,
 }
 
 impl fmt::Display for GaugesSnapshot {
@@ -183,7 +192,18 @@ impl fmt::Display for GaugesSnapshot {
             self.batches_ready,
             self.slots_in_use,
             self.slot_waits,
-        )
+        )?;
+        // env-server occupancy: only poly runs with local (in-process)
+        // servers report it; stay quiet otherwise so mono report lines
+        // don't carry dead zeros.
+        if self.env_streams > 0 || self.env_steps > 0 {
+            write!(
+                f,
+                " env-streams {} served {}",
+                self.env_streams, self.env_steps
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -235,7 +255,7 @@ mod tests {
 
     #[test]
     fn display_reads_like_a_report_line() {
-        let s = GaugesSnapshot {
+        let mut s = GaugesSnapshot {
             pool_free: 3,
             pool_rented: 5,
             pool_rent_waits: 1,
@@ -243,11 +263,19 @@ mod tests {
             batches_ready: 2,
             slots_in_use: 6,
             slot_waits: 0,
+            env_streams: 0,
+            env_steps: 0,
         };
         let line = s.to_string();
         assert!(line.contains("pool 5/8 rented"), "{line}");
         assert!(line.contains("queue 4"), "{line}");
         assert!(line.contains("prefetch 2"), "{line}");
         assert!(line.contains("slots 6"), "{line}");
+        // env-server occupancy only appears once a server reported it
+        assert!(!line.contains("env-streams"), "{line}");
+        s.env_streams = 2;
+        s.env_steps = 1234;
+        let line = s.to_string();
+        assert!(line.contains("env-streams 2 served 1234"), "{line}");
     }
 }

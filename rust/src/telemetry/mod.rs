@@ -9,10 +9,15 @@
 //!   capturable by tests, off the experience path;
 //! * **occupancy** (pool/queue/slot fill) goes through [`gauges`] —
 //!   one relaxed atomic per update, readable at any time by the
-//!   report path, and safe inside the allocation-free hot loops.
+//!   report path, and safe inside the allocation-free hot loops;
+//! * **time series** of the gauges come from [`sampler`] — a
+//!   background thread that snapshots the registry into a CSV, so
+//!   starvation episodes are diagnosable after the run.
 
 pub mod gauges;
 pub mod log;
+pub mod sampler;
 
 pub use gauges::{Counter, Gauge, GaugesSnapshot, PipelineGauges};
 pub use log::{CaptureSink, Level, LogSink, Record};
+pub use sampler::GaugeSampler;

@@ -1,0 +1,202 @@
+//! Background gauge sampler: records the pipeline occupancy gauges as
+//! a CSV time series, so pool-starvation episodes are visible *after
+//! the fact* (the periodic report line only shows the instant it
+//! happens to print).
+//!
+//! The sampler thread wakes every `period`, snapshots the shared
+//! [`PipelineGauges`] registry (relaxed atomic loads — it never
+//! touches the hot path), and appends one CSV row.  The driver starts
+//! one when `--gauge_log_path` is set and stops it before shutdown
+//! tears the pipeline down.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::telemetry::gauges::PipelineGauges;
+
+/// CSV header of the gauge time series (mirrors
+/// [`crate::telemetry::gauges::GaugesSnapshot`] field by field).
+pub const GAUGE_CURVE_HEADER: &str = "elapsed_s,pool_free,pool_rented,pool_rent_waits,\
+queue_depth,batches_ready,slots_in_use,slot_waits,env_streams,env_steps";
+
+/// Handle to a running gauge sampler; [`stop`](GaugeSampler::stop) (or
+/// drop) joins the thread and flushes the file.
+pub struct GaugeSampler {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<u64>>,
+}
+
+impl GaugeSampler {
+    /// Start sampling `gauges` into a CSV at `path` every `period`
+    /// (floored at 1 ms).  The file is created (parents included) and
+    /// the header written before this returns, so a sampler that never
+    /// fires still leaves a parseable log.
+    pub fn start(
+        gauges: Arc<PipelineGauges>,
+        path: &Path,
+        period: Duration,
+    ) -> anyhow::Result<GaugeSampler> {
+        use std::io::Write;
+
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{GAUGE_CURVE_HEADER}")?;
+        let period = period.max(Duration::from_millis(1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("gauge-sampler".into())
+            .spawn(move || {
+                let t0 = Instant::now();
+                let mut rows = 0u64;
+                // poll the stop flag at a finer grain than the period
+                // so stop() never waits a whole (possibly long) period
+                let poll = period.min(Duration::from_millis(20));
+                let mut next = t0 + period;
+                loop {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let now = Instant::now();
+                    if now < next {
+                        std::thread::sleep(poll);
+                        continue;
+                    }
+                    // schedule from the actual write time: after a
+                    // scheduling stall this resumes on the current
+                    // period — a burst of back-to-back catch-up rows
+                    // would fabricate a flat regime at one instant
+                    // instead of honestly leaving a gap in the series
+                    next = now + period;
+                    let s = gauges.snapshot();
+                    let ok = writeln!(
+                        file,
+                        "{:.3},{},{},{},{},{},{},{},{},{}",
+                        t0.elapsed().as_secs_f64(),
+                        s.pool_free,
+                        s.pool_rented,
+                        s.pool_rent_waits,
+                        s.queue_depth,
+                        s.batches_ready,
+                        s.slots_in_use,
+                        s.slot_waits,
+                        s.env_streams,
+                        s.env_steps,
+                    )
+                    .is_ok();
+                    if !ok {
+                        break; // disk gone: stop sampling, keep training
+                    }
+                    rows += 1;
+                }
+                let _ = file.flush();
+                rows
+            })?;
+        Ok(GaugeSampler {
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// Stop the sampler and return the number of rows it recorded.
+    pub fn stop(mut self) -> u64 {
+        self.stop.store(true, Ordering::Relaxed);
+        match self.handle.take() {
+            Some(h) => h.join().unwrap_or(0),
+            None => 0,
+        }
+    }
+}
+
+impl Drop for GaugeSampler {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_occupancy_rows_until_stopped() {
+        let dir = std::env::temp_dir().join("tb_gauge_sampler_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("gauges.csv");
+        let g = PipelineGauges::shared();
+        g.pool_capacity.set(8);
+        g.pool_free.set(5);
+        g.queue_depth.set(2);
+        let sampler = GaugeSampler::start(g.clone(), &path, Duration::from_millis(5)).unwrap();
+        // poll (don't fixed-sleep: the sampler thread may be scheduled
+        // late on a loaded machine) until the first regime is on disk,
+        // then flip occupancy and wait for the second regime too
+        let rows_with = |col1: &str| {
+            std::fs::read_to_string(&path)
+                .unwrap()
+                .lines()
+                .skip(1)
+                .filter(|r| r.split(',').nth(1) == Some(col1))
+                .count()
+        };
+        for _ in 0..5000 {
+            if rows_with("5") >= 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        g.pool_free.set(1);
+        for _ in 0..5000 {
+            if rows_with("1") >= 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let rows = sampler.stop();
+        assert!(rows >= 2, "sampler recorded only {rows} rows");
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], GAUGE_CURVE_HEADER);
+        assert_eq!(lines.len() as u64, rows + 1);
+        let cols = GAUGE_CURVE_HEADER.split(',').count();
+        for row in &lines[1..] {
+            assert_eq!(row.split(',').count(), cols, "malformed row {row:?}");
+        }
+        // the time series caught both occupancy regimes (free=5 →
+        // rented=3, then free=1 → rented=7)
+        assert!(lines[1..].iter().any(|r| r.split(',').nth(1) == Some("5")));
+        assert!(
+            lines[1..].iter().any(|r| r.split(',').nth(1) == Some("1")),
+            "mid-run occupancy change must be visible in the series"
+        );
+        // elapsed_s is monotone
+        let times: Vec<f64> = lines[1..]
+            .iter()
+            .map(|r| r.split(',').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(times.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn stop_without_any_period_elapsed_is_clean() {
+        let dir = std::env::temp_dir().join("tb_gauge_sampler_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("gauges_empty.csv");
+        let g = PipelineGauges::shared();
+        let sampler = GaugeSampler::start(g, &path, Duration::from_secs(3600)).unwrap();
+        assert_eq!(sampler.stop(), 0);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 1, "header only");
+    }
+}

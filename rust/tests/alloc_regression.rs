@@ -120,6 +120,7 @@ fn actor_to_learner_path_is_allocation_free_at_steady_state() {
             num_actions,
             obs_len,
             seed: 5,
+            first_id: 0,
         },
     );
 
@@ -222,6 +223,7 @@ fn poly_actor_path_is_allocation_free_at_steady_state() {
             num_actions,
             obs_len,
             seed: 11,
+            first_id: 0,
         },
     );
 
@@ -273,6 +275,74 @@ fn poly_actor_path_is_allocation_free_at_steady_state() {
     );
 }
 
+/// The batched (VecEnv) half of the poly claim: a whole group's step
+/// — one `ActionBatch` out, one `ObsBatch` back, B envs stepped —
+/// must allocate nothing at steady state on *either* codec end.  The
+/// vectorized `EnvServer` runs in this process under the same
+/// counting allocator, so the gate covers `write_action_batch` /
+/// `read_frame` / `decode_obs_batch_into` client-side AND the
+/// server's reused frame/obs-block buffers.
+#[test]
+fn batched_remote_step_is_allocation_free_at_steady_state() {
+    use torchbeast::env::{SlotStep, VecEnvironment};
+    use torchbeast::rpc::RemoteVecEnv;
+
+    let _serial = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let wrappers = WrapperCfg::default();
+    let spec = env::spec_of("catch").unwrap();
+    let obs_len = spec.obs_len();
+    let b = 8usize;
+    let seeds: Vec<u64> = (0..b as u64).collect();
+
+    let mut server = EnvServer::start("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let mut venv = RemoteVecEnv::connect(&addr, "catch", &seeds, &wrappers).unwrap();
+    assert_eq!(venv.batch(), b);
+
+    let mut obs_block = vec![0.0f32; b * obs_len];
+    let mut steps = vec![SlotStep::default(); b];
+    let mut actions = vec![0usize; b];
+    venv.reset_all(&mut obs_block);
+
+    let warmup = 500;
+    let measure = 500;
+    for round in 0..warmup {
+        for (s, a) in actions.iter_mut().enumerate() {
+            *a = (round + s) % spec.num_actions;
+        }
+        venv.step_batch(&actions, &mut obs_block, &mut steps);
+    }
+    let a0 = allocations();
+    for round in 0..measure {
+        for (s, a) in actions.iter_mut().enumerate() {
+            *a = (round + s) % spec.num_actions;
+        }
+        venv.step_batch(&actions, &mut obs_block, &mut steps);
+    }
+    let allocs = allocations() - a0;
+    let frames = (measure * b) as f64;
+    let per_round = allocs as f64 / measure as f64;
+    let per_frame = allocs as f64 / frames;
+    eprintln!(
+        "batched steady state: {allocs} heap allocations over {measure} group rounds \
+         of {b} envs ({per_round:.4}/round, {per_frame:.4}/env step, both codec ends)"
+    );
+    assert!(
+        per_round < 0.02,
+        "batched rpc step path is allocating again: {per_round:.4} allocs per group round"
+    );
+    assert!(venv.last_error().is_none(), "{:?}", venv.last_error());
+
+    drop(venv);
+    server.shutdown();
+    assert_eq!(
+        server
+            .steps_served
+            .load(std::sync::atomic::Ordering::Relaxed),
+        (warmup + measure) as u64 * b as u64
+    );
+}
+
 /// Rollout handoff ships the pooled buffer itself: the backing
 /// allocation the learner side receives is the very allocation the
 /// actor filled (no clone anywhere in between).
@@ -314,6 +384,7 @@ fn rollout_handoff_moves_the_buffer_not_a_copy() {
             num_actions: spec.num_actions,
             obs_len,
             seed: 3,
+            first_id: 0,
         },
     );
     for _ in 0..4 {

@@ -1,0 +1,276 @@
+//! RPC error-path coverage: every protocol violation must surface a
+//! *typed* error on both ends of the stream — an `Error` frame for the
+//! peer, a loud stream error (or a terminal step) locally — and never
+//! a hang.  Driven over real sockets against an in-process
+//! `EnvServer`, with a raw client where the violation cannot be
+//! expressed through the well-behaved `RemoteEnv` API.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use torchbeast::env::wrappers::WrapperCfg;
+use torchbeast::env::{Environment, SlotStep, VecEnvironment};
+use torchbeast::rpc::codec::{read_msg, write_frame, write_msg, Msg};
+use torchbeast::rpc::{EnvServer, RemoteEnv, RemoteVecEnv};
+
+/// Raw protocol client: connect and complete the given handshake,
+/// returning (writer, reader) ready for misbehavior.
+fn raw_handshake(addr: &str, hello: &Msg) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    write_msg(&mut writer, hello).unwrap();
+    match read_msg(&mut reader).unwrap() {
+        Msg::Spec { .. } => {}
+        other => panic!("expected Spec, got {other:?}"),
+    }
+    // initial observation (mono) or observation batch (batched)
+    match read_msg(&mut reader).unwrap() {
+        Msg::Observation { .. } | Msg::ObsBatch { .. } => {}
+        other => panic!("expected initial obs, got {other:?}"),
+    }
+    (writer, reader)
+}
+
+#[test]
+fn out_of_range_action_returns_typed_error() {
+    let server = EnvServer::start("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let (mut w, mut r) = raw_handshake(
+        &addr,
+        &Msg::Hello {
+            env: "catch".into(),
+            seed: 0,
+            wrappers: WrapperCfg::default(),
+        },
+    );
+    write_msg(&mut w, &Msg::Action { action: 99 }).unwrap();
+    match read_msg(&mut r).unwrap() {
+        Msg::Error { message } => {
+            assert!(message.contains("out of range"), "{message}")
+        }
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+}
+
+#[test]
+fn undecodable_frame_returns_typed_error() {
+    let server = EnvServer::start("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let (mut w, mut r) = raw_handshake(
+        &addr,
+        &Msg::Hello {
+            env: "catch".into(),
+            seed: 0,
+            wrappers: WrapperCfg::default(),
+        },
+    );
+    // tag 250 is no known message
+    write_frame(&mut w, &[250u8, 1, 2, 3]).unwrap();
+    match read_msg(&mut r).unwrap() {
+        Msg::Error { message } => {
+            assert!(message.contains("undecodable"), "{message}")
+        }
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+}
+
+#[test]
+fn batched_length_mismatch_returns_typed_error() {
+    let server = EnvServer::start("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let (mut w, mut r) = raw_handshake(
+        &addr,
+        &Msg::HelloBatch {
+            env: "catch".into(),
+            seeds: vec![1, 2, 3, 4],
+            wrappers: WrapperCfg::default(),
+        },
+    );
+    // 3 actions for a group of 4
+    write_msg(
+        &mut w,
+        &Msg::ActionBatch {
+            actions: vec![0, 1, 2],
+        },
+    )
+    .unwrap();
+    match read_msg(&mut r).unwrap() {
+        Msg::Error { message } => {
+            assert!(message.contains("action batch of 3"), "{message}")
+        }
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+}
+
+#[test]
+fn batched_out_of_range_action_names_the_slot() {
+    let server = EnvServer::start("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let (mut w, mut r) = raw_handshake(
+        &addr,
+        &Msg::HelloBatch {
+            env: "catch".into(),
+            seeds: vec![1, 2],
+            wrappers: WrapperCfg::default(),
+        },
+    );
+    write_msg(
+        &mut w,
+        &Msg::ActionBatch {
+            actions: vec![0, 77],
+        },
+    )
+    .unwrap();
+    match read_msg(&mut r).unwrap() {
+        Msg::Error { message } => {
+            assert!(
+                message.contains("slot 1") && message.contains("out of range"),
+                "{message}"
+            );
+        }
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+}
+
+/// A group whose ObsBatch frames could never fit under MAX_FRAME is
+/// rejected with a typed Error at handshake time, not an opaque EOF
+/// on the first oversized write.
+#[test]
+fn oversized_group_rejected_at_handshake() {
+    let server = EnvServer::start("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let stream = TcpStream::connect(addr.as_str()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    // 1.2M slots x >= 17 bytes per slot per ObsBatch blows the 16 MiB
+    // cap for any env; the HelloBatch itself (~9.6 MB) still fits
+    write_msg(
+        &mut writer,
+        &Msg::HelloBatch {
+            env: "catch".into(),
+            seeds: vec![0; 1_200_000],
+            wrappers: WrapperCfg::default(),
+        },
+    )
+    .unwrap();
+    match read_msg(&mut reader).unwrap() {
+        Msg::Error { message } => {
+            assert!(message.contains("use smaller groups"), "{message}")
+        }
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+}
+
+/// A client that vanishes mid-episode must not wedge the server: the
+/// stream thread exits with a loud error and the server keeps
+/// accepting and serving new streams.
+#[test]
+fn mid_episode_disconnect_leaves_server_serving() {
+    let mut server = EnvServer::start("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    {
+        let mut env = RemoteEnv::connect(&addr, "catch", 0, &WrapperCfg::default()).unwrap();
+        let mut obs = vec![0.0; env.spec().obs_len()];
+        env.reset(&mut obs);
+        env.step(1, &mut obs); // mid-episode
+        // drop without Bye: simulate an abrupt death by leaking the
+        // socket state through a raw shutdown instead of close()
+    } // RemoteEnv's Drop sends Bye; kill a raw one too:
+    {
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        write_msg(
+            &mut writer,
+            &Msg::Hello {
+                env: "catch".into(),
+                seed: 1,
+                wrappers: WrapperCfg::default(),
+            },
+        )
+        .unwrap();
+        // vanish mid-handshake-reply (no Bye, no reads)
+        drop(writer);
+        drop(stream);
+    }
+    // the server still serves fresh streams end to end
+    let mut env = RemoteEnv::connect(&addr, "catch", 2, &WrapperCfg::default()).unwrap();
+    let mut obs = vec![0.0; env.spec().obs_len()];
+    env.reset(&mut obs);
+    for i in 0..30 {
+        if env.step(i % 3, &mut obs).done {
+            env.reset(&mut obs);
+        }
+    }
+    assert!(
+        server
+            .steps_served
+            .load(std::sync::atomic::Ordering::Relaxed)
+            >= 31
+    );
+    server.shutdown(); // must not hang on the dead streams
+}
+
+/// Server death mid-episode surfaces client-side as a terminal step
+/// (mono) / all-terminal steps + a recorded typed cause (batched) —
+/// the actor keeps running instead of hanging.
+#[test]
+fn server_death_surfaces_as_terminal_steps() {
+    let mut server = EnvServer::start("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let mut env = RemoteEnv::connect(&addr, "catch", 0, &WrapperCfg::default()).unwrap();
+    let seeds = [0u64, 1];
+    let mut venv = RemoteVecEnv::connect(&addr, "catch", &seeds, &WrapperCfg::default()).unwrap();
+    let mut obs = vec![0.0; env.spec().obs_len()];
+    let mut block = vec![0.0; venv.batch() * venv.spec().obs_len()];
+    let mut steps = vec![SlotStep::default(); venv.batch()];
+    env.reset(&mut obs);
+    venv.reset_all(&mut block);
+    env.step(1, &mut obs);
+    venv.step_batch(&[1, 1], &mut block, &mut steps);
+    assert!(venv.last_error().is_none());
+
+    server.shutdown();
+
+    let st = env.step(1, &mut obs);
+    assert!(st.done, "transport loss must read as a terminal step");
+    assert_eq!(st.reward, 0.0);
+    venv.step_batch(&[1, 1], &mut block, &mut steps);
+    assert!(steps.iter().all(|s| s.done && s.reward == 0.0));
+    assert!(
+        venv.last_error().is_some(),
+        "the typed cause must be recorded client-side"
+    );
+    // subsequent steps stay terminal (cached obs replayed), no panic
+    venv.step_batch(&[0, 2], &mut block, &mut steps);
+    assert!(steps.iter().all(|s| s.done));
+}
+
+/// RemoteVecEnv receiving a typed server rejection (here: an action
+/// the server's spec rejects) records the server's message and turns
+/// all-terminal instead of hanging on a stream the server abandoned.
+#[test]
+fn remote_vec_surfaces_server_rejection() {
+    let server = EnvServer::start("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let seeds = [5u64, 6, 7];
+    let mut venv = RemoteVecEnv::connect(&addr, "catch", &seeds, &WrapperCfg::default()).unwrap();
+    let b = venv.batch();
+    let mut block = vec![0.0; b * venv.spec().obs_len()];
+    let mut steps = vec![SlotStep::default(); b];
+    venv.reset_all(&mut block);
+    // catch has 3 actions; 9 is out of range — the server answers with
+    // an Error frame and drops the stream
+    venv.step_batch(&[9, 0, 0], &mut block, &mut steps);
+    assert!(steps.iter().all(|s| s.done));
+    let err = venv.last_error().expect("typed cause recorded");
+    assert!(err.contains("out of range"), "{err}");
+}

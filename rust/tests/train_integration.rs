@@ -66,6 +66,35 @@ fn poly_training_matches_pipeline_invariants() {
     }
 }
 
+/// Vectorized env groups through the real driver: `--envs_per_actor`
+/// must train end to end in both modes, with the same pipeline
+/// invariants as the classic pool (the B=1 path is covered by the two
+/// tests above, unchanged).
+#[test]
+fn grouped_training_runs_in_both_modes() {
+    let Some(cfg) = base_cfg("catch") else { return };
+    for mode in [Mode::Mono, Mode::Poly] {
+        let mut grouped = cfg.clone();
+        grouped.mode = mode;
+        grouped.envs_per_actor = 2; // 4 envs -> 2 groups of 2
+        let report = coordinator::train(&grouped).unwrap();
+        assert_eq!(report.steps, 12, "{mode:?}");
+        assert!(report.frames >= 1920, "{mode:?}: frames {}", report.frames);
+        assert!(report.episodes > 0, "{mode:?}");
+        for row in &report.history {
+            assert!(row.stats.total_loss().is_finite(), "{mode:?}");
+        }
+        // group size doesn't divide num_actors? still fine: 4 envs in
+        // groups of 3 -> groups of 3 + 1
+        let mut uneven = cfg.clone();
+        uneven.mode = mode;
+        uneven.envs_per_actor = 3;
+        uneven.total_steps = 4;
+        let report = coordinator::train(&uneven).unwrap();
+        assert_eq!(report.steps, 4, "{mode:?} uneven groups");
+    }
+}
+
 #[test]
 fn params_update_every_step() {
     let Some(cfg) = base_cfg("catch") else { return };

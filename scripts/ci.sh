@@ -10,8 +10,12 @@ cd "$(dirname "$0")/../rust"
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo build --release --benches (bench targets compile) =="
-cargo build --release --benches
+# Benches must not rot: `cargo bench --no-run` compiles every bench
+# target exactly the way `cargo bench` would run it (bench profile),
+# so a bench that stops building fails CI instead of bitrotting.
+# (Subsumes the old `cargo build --release --benches` step.)
+echo "== cargo bench --no-run =="
+cargo bench --no-run
 
 echo "== cargo test -q =="
 cargo test -q
