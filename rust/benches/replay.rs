@@ -1,0 +1,247 @@
+//! Bench: the experience-replay subsystem (DESIGN.md §Replay).
+//!
+//! Three measurements, all artifact-free (stub policy):
+//!
+//! 1. **Insert throughput** — ns per copy-in-place of a T-step
+//!    rollout into a warmed (FIFO-evicting) ring slot.
+//! 2. **Sample throughput** — ns per uniform draw + time-major stack
+//!    of the sampled rollout into a learner-batch column.
+//! 3. **End-to-end fps** — the full actor→batcher→queue→mixed-stacker
+//!    pipeline at `replay_ratio` 0 / 0.25 / 0.5: env fps (fresh frames
+//!    drained) vs learner fps (frames entering batches, replayed
+//!    columns included — the sample-efficiency lever replay buys).
+//!
+//! `cargo bench --bench replay`.  Pass `-- --json PATH` to also write
+//! the machine-readable summary `scripts/bench.sh` collects into
+//! `BENCH_5.json`.
+
+use std::time::{Duration, Instant};
+
+use torchbeast::coordinator::actor_pool::{ActorConfig, ActorPool};
+use torchbeast::coordinator::batching_queue::batching_queue;
+use torchbeast::coordinator::dynamic_batcher::{dynamic_batcher, BatcherConfig};
+use torchbeast::coordinator::replay::{stack_mixed, ReplayBuffer};
+use torchbeast::coordinator::rollout::{stack_rollout_into, Rollout, RolloutPool};
+use torchbeast::env::{self, Environment};
+use torchbeast::metrics::Metrics;
+use torchbeast::runtime::manifest::{DType, LeafSpec};
+use torchbeast::runtime::{LearnerBatch, Manifest};
+
+const UNROLL: usize = 20;
+const BATCH: usize = 8;
+const ENVS: usize = 8;
+const REPLAY_CAPACITY: usize = 256;
+
+fn stub_manifest(obs_shape: [usize; 3], num_actions: usize) -> Manifest {
+    Manifest {
+        dir: std::path::PathBuf::new(),
+        env: "catch".into(),
+        model: "stub".into(),
+        obs_shape,
+        num_actions,
+        unroll_length: UNROLL,
+        batch_size: BATCH,
+        inference_batch: ENVS,
+        inference_sizes: vec![ENVS],
+        param_count: 1,
+        params: vec![LeafSpec {
+            name: "w".into(),
+            shape: vec![1],
+            dtype: DType::F32,
+        }],
+        opt_state: vec![],
+        stats_names: vec![],
+        hyperparams: torchbeast::util::json::Json::Obj(vec![]),
+        hlo_sha256: String::new(),
+    }
+}
+
+/// A complete rollout of the manifest's shape (contents irrelevant).
+fn filled_rollout(obs_len: usize, num_actions: usize) -> Rollout {
+    let mut r = Rollout::new(UNROLL, obs_len, num_actions);
+    let obs = vec![0.25f32; obs_len];
+    let logits = vec![0.5f32; num_actions];
+    for i in 0..=UNROLL {
+        r.set_obs(i, &obs);
+    }
+    for i in 0..UNROLL {
+        r.set_transition(i, i % num_actions, &logits, 0.0, i == UNROLL - 1);
+    }
+    r
+}
+
+/// Insert + sample micro-benchmarks on a warmed ring.
+fn micro(obs_len: usize, num_actions: usize, m: &Manifest) -> (f64, f64) {
+    let mut rb = ReplayBuffer::new(REPLAY_CAPACITY, UNROLL, obs_len, num_actions, 1);
+    let r = filled_rollout(obs_len, num_actions);
+    for _ in 0..REPLAY_CAPACITY {
+        rb.insert(&r); // warm to capacity: every further insert evicts
+    }
+    let iters = 20_000u32;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        rb.insert(&r);
+    }
+    let insert_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+
+    let mut batch = LearnerBatch::zeros(m);
+    let t0 = Instant::now();
+    for i in 0..iters {
+        let s = rb.sample().expect("warmed ring");
+        stack_rollout_into(s, i as usize % BATCH, m, &mut batch);
+    }
+    let sample_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    (insert_ns, sample_ns)
+}
+
+struct MixRun {
+    env_fps: f64,
+    learner_fps: f64,
+    sampled: u64,
+}
+
+/// End-to-end stub-policy pipeline at a given replay ratio: ENVS catch
+/// actors → dynamic batcher → learner queue → mixed stacker (the
+/// driver's exact composition: plan → drain fresh → stack_mixed →
+/// insert + recycle), measured over `batches` learner batches.
+fn mixed_run(ratio: f64, batches: usize) -> MixRun {
+    let spec = env::spec_of("catch").unwrap();
+    let (obs_len, na) = (spec.obs_len(), spec.num_actions);
+    let m = stub_manifest(spec.obs_shape(), na);
+    let (client, stream) = dynamic_batcher(
+        BatcherConfig::new(ENVS, Duration::from_micros(2000), obs_len, na).with_slots(ENVS),
+    );
+    let (tx, rx) = batching_queue::<Rollout>(2 * BATCH);
+    let buffers = RolloutPool::new(ENVS + 3 * BATCH, UNROLL, obs_len, na);
+    let infer = std::thread::spawn(move || {
+        let logits = vec![0.0f32; ENVS * na];
+        let baselines = vec![0.0f32; ENVS];
+        while let Some(batch) = stream.next_batch() {
+            let n = batch.len();
+            batch
+                .respond(&logits[..n * na], &baselines[..n], na)
+                .unwrap();
+        }
+    });
+    let envs: Vec<Box<dyn Environment>> = (0..ENVS)
+        .map(|id| env::make_env("catch", env::actor_seed(1, id)).unwrap())
+        .collect();
+    let pool = ActorPool::spawn(
+        envs,
+        client.clone(),
+        tx,
+        buffers.clone(),
+        Metrics::shared(),
+        ActorConfig {
+            unroll_length: UNROLL,
+            num_actions: na,
+            obs_len,
+            seed: 1,
+            first_id: 0,
+        },
+    );
+
+    let mut replay = ReplayBuffer::new(2 * BATCH, UNROLL, obs_len, na, 9);
+    let mut scratch: Vec<Rollout> = Vec::with_capacity(BATCH);
+    let mut batch = LearnerBatch::zeros(&m);
+    let mut env_frames = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..batches {
+        let replayed = replay.plan(BATCH, ratio);
+        assert!(rx.recv_batch_into(BATCH - replayed, &mut scratch));
+        stack_mixed(&scratch, &mut replay, replayed, &m, &mut batch);
+        for r in scratch.drain(..) {
+            replay.insert(&r);
+            buffers.recycle(r);
+        }
+        env_frames += (BATCH - replayed) * UNROLL;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let sampled = replay.stats().sampled;
+    rx.close();
+    client.shutdown_for_tests();
+    buffers.close();
+    pool.join();
+    infer.join().unwrap();
+    MixRun {
+        env_fps: env_frames as f64 / wall,
+        learner_fps: (batches * BATCH * UNROLL) as f64 / wall,
+        sampled,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // optional machine-readable output: `-- --json PATH`
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_path: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--json" {
+            i += 1;
+            json_path = Some(
+                args.get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--json needs a path"))?
+                    .clone(),
+            );
+        }
+        i += 1;
+    }
+
+    let spec = env::spec_of("catch").unwrap();
+    let m = stub_manifest(spec.obs_shape(), spec.num_actions);
+    let (insert_ns, sample_ns) = micro(spec.obs_len(), spec.num_actions, &m);
+    println!(
+        "== replay ring (capacity {REPLAY_CAPACITY}, T={UNROLL}, catch obs) ==\n\
+         {:>24} {:>12.0} ns\n{:>24} {:>12.0} ns",
+        "insert (copy-in-place)", insert_ns, "sample + stack column", sample_ns
+    );
+
+    println!(
+        "\n== end-to-end mixed stacking: {ENVS} catch envs, stub policy, \
+         B={BATCH}, T={UNROLL} ==\n\
+         {:>12} {:>12} {:>14} {:>12} {:>10}",
+        "replay_ratio", "env_fps", "learner_fps", "sampled", "reuse"
+    );
+    let batches = 60;
+    let ratios = [0.0f64, 0.25, 0.5];
+    let mut runs = Vec::new();
+    for &ratio in &ratios {
+        let run = mixed_run(ratio, batches);
+        println!(
+            "{:>12.2} {:>12.0} {:>14.0} {:>12} {:>10.2}",
+            ratio,
+            run.env_fps,
+            run.learner_fps,
+            run.sampled,
+            run.learner_fps / run.env_fps.max(1e-9),
+        );
+        runs.push((ratio, run));
+    }
+    println!(
+        "(reuse = learner frames per fresh env frame: 1/(1 − ratio) once the\n\
+         ring is warm — the sample-efficiency lever replay buys)"
+    );
+
+    if let Some(path) = json_path {
+        let fps_rows: Vec<String> = runs
+            .iter()
+            .map(|(ratio, r)| {
+                format!(
+                    "    {{\"replay_ratio\": {ratio}, \"env_fps\": {:.1}, \
+                     \"learner_fps\": {:.1}, \"sampled\": {}}}",
+                    r.env_fps, r.learner_fps, r.sampled
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\n  \"bench\": \"replay\",\n  \"frames_per_step\": {},\n  \
+             \"replay_insert_ns\": {insert_ns:.1},\n  \
+             \"replay_sample_ns\": {sample_ns:.1},\n  \"fps\": [\n{}\n  ]\n}}\n",
+            BATCH * UNROLL,
+            fps_rows.join(",\n"),
+        );
+        std::fs::write(&path, json)?;
+        println!("json summary written to {path}");
+    }
+    Ok(())
+}

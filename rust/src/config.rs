@@ -60,6 +60,21 @@ pub struct TrainConfig {
     pub queue_capacity: usize,
     /// Env servers to connect to in poly mode (spawned if empty).
     pub server_addresses: Vec<String>,
+    /// Experience-replay ring capacity in rollouts (DESIGN.md
+    /// §Replay).  0 disables the subsystem entirely — the classic,
+    /// strictly on-policy path, byte for byte.
+    pub replay_capacity: usize,
+    /// Fraction of each learner batch drawn from the replay ring once
+    /// it has warmed up (filled to capacity).  Must be in [0, 1):
+    /// every batch keeps at least one fresh rollout so the ring keeps
+    /// refreshing.  0 = pure on-policy (bit-identical to the classic
+    /// path, pinned by test).
+    pub replay_ratio: f64,
+    /// Mid-run reconnect budget for batched (vec) env streams in poly
+    /// mode: on stream death, `RemoteVecEnv` attempts up to this many
+    /// fresh connects before latching the group terminal.  0 = latch
+    /// on first failure (the pre-reconnect behavior).
+    pub env_reconnect_attempts: u32,
     /// Environment wrapper stack (applied env-side).
     pub wrappers: WrapperCfg,
     /// CSV curve output; None disables.
@@ -94,6 +109,9 @@ impl Default for TrainConfig {
             inference_timeout_us: 2000,
             queue_capacity: 16,
             server_addresses: Vec::new(),
+            replay_capacity: 0,
+            replay_ratio: 0.0,
+            env_reconnect_attempts: 0,
             wrappers: WrapperCfg::default(),
             log_path: None,
             checkpoint_path: None,
@@ -168,6 +186,16 @@ impl TrainConfig {
                     })
                     .collect::<anyhow::Result<Vec<String>>>()?
             }
+            "replay_capacity" => self.replay_capacity = num(v)? as usize,
+            "replay_ratio" => {
+                let r = num(v)?;
+                anyhow::ensure!(
+                    (0.0..1.0).contains(&r),
+                    "replay_ratio must be in [0, 1), got {r}"
+                );
+                self.replay_ratio = r;
+            }
+            "env_reconnect_attempts" => self.env_reconnect_attempts = num(v)? as u32,
             "log_path" => self.log_path = Some(PathBuf::from(st(v)?)),
             "checkpoint_path" => self.checkpoint_path = Some(PathBuf::from(st(v)?)),
             "init_checkpoint" => self.init_checkpoint = Some(PathBuf::from(st(v)?)),
@@ -356,6 +384,31 @@ mod tests {
         // zero groups are rejected up front, not at spawn time
         let bad = Json::parse(r#"{"envs_per_actor": 0}"#).unwrap();
         assert!(c.apply_json(&bad).is_err());
+    }
+
+    #[test]
+    fn replay_and_reconnect_knobs_parse() {
+        let mut c = TrainConfig::default();
+        // the defaults preserve the classic path exactly
+        assert_eq!(c.replay_capacity, 0);
+        assert_eq!(c.replay_ratio, 0.0);
+        assert_eq!(c.env_reconnect_attempts, 0);
+        let j = Json::parse(
+            r#"{"replay_capacity": 64, "replay_ratio": 0.25, "env_reconnect_attempts": 3}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.replay_capacity, 64);
+        assert_eq!(c.replay_ratio, 0.25);
+        assert_eq!(c.env_reconnect_attempts, 3);
+        // CLI spelling too
+        c.apply_args(&["--replay_ratio=0.5".to_string()]).unwrap();
+        assert_eq!(c.replay_ratio, 0.5);
+        // out-of-range ratios are rejected up front, not at train time:
+        // 1.0 would starve the stacker of fresh rollouts forever
+        assert!(c.set("replay_ratio", &Json::Num(1.0)).is_err());
+        assert!(c.set("replay_ratio", &Json::Num(-0.1)).is_err());
+        assert_eq!(c.replay_ratio, 0.5, "rejected values must not stick");
     }
 
     #[test]

@@ -339,8 +339,12 @@ fn grouped_actor_loop(
             // the same fault-tolerance shape as the mono path — but do
             // not count its fabricated frames/episodes into metrics,
             // which would collapse mean returns toward zero and
-            // inflate SPS for the rest of the run.
-            let live = !venv.failed();
+            // inflate SPS for the rest of the run.  The per-round
+            // `last_step_synthesized` check also covers the one
+            // fabricated round a *successful* mid-run reconnect papers
+            // over (the group is live again, but this round's steps
+            // were synthesized, not stepped).
+            let live = !venv.failed() && !venv.last_step_synthesized();
             if live {
                 report.frames += b as u64;
                 metrics.add_frames(b as u64);

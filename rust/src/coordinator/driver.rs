@@ -19,6 +19,7 @@ use crate::config::{Mode, TrainConfig};
 use crate::coordinator::actor_pool::{ActorConfig, ActorPool};
 use crate::coordinator::batching_queue::{batching_queue, batching_queue_gauged};
 use crate::coordinator::dynamic_batcher::{dynamic_batcher, BatcherConfig, BatcherStats};
+use crate::coordinator::replay::{replay_count, stack_mixed, ReplayBuffer, ReplayStats};
 use crate::coordinator::rollout::{stack_rollouts, Rollout, RolloutPool};
 use crate::coordinator::weights::WeightsStore;
 use crate::env::wrappers::WrapperCfg;
@@ -64,6 +65,11 @@ pub struct TrainReport {
     /// steady state: every pool buffer is accounted for as free or
     /// rented, queue depth is the real backlog).
     pub gauges: GaugesSnapshot,
+    /// Replay-ring lifetime counters (insert/sample/evict), present
+    /// when the subsystem is active (`--replay_capacity` > 0 AND
+    /// `--replay_ratio` > 0 — at ratio 0 the ring is not constructed,
+    /// keeping the classic path byte-identical and memcpy-free).
+    pub replay: Option<ReplayStats>,
 }
 
 /// Fold a u64 run seed into the i32 the init artifact accepts.
@@ -79,11 +85,8 @@ pub fn fold_seed(seed: u64) -> i32 {
     if seed <= i32::MAX as u64 {
         return seed as i32;
     }
-    let mut z = seed;
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^= z >> 31;
-    let folded = (z >> 33) as i32; // top 31 bits: always non-negative
+    // top 31 bits of the splitmix64 avalanche: always non-negative
+    let folded = (crate::util::rng::splitmix64(seed) >> 33) as i32;
     tb_warn!(
         "train",
         "seed {seed} exceeds i32::MAX; hash-folded to {folded} for artifact \
@@ -118,6 +121,29 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let t_start = Instant::now();
     crate::telemetry::log::set_max_level(cfg.log_level);
     anyhow::ensure!(cfg.envs_per_actor >= 1, "envs_per_actor must be >= 1");
+    anyhow::ensure!(
+        (0.0..1.0).contains(&cfg.replay_ratio),
+        "replay_ratio must be in [0, 1), got {}",
+        cfg.replay_ratio
+    );
+    anyhow::ensure!(
+        cfg.replay_ratio == 0.0 || cfg.replay_capacity > 0,
+        "replay_ratio {} needs --replay_capacity > 0 (nothing to sample from)",
+        cfg.replay_ratio
+    );
+    // Reconnect applies to batched (vec) env streams only: mono mode
+    // has no streams, and singleton poly streams (`RemoteEnv`) latch
+    // terminal on failure.  Setting the knob where it cannot act is
+    // almost certainly a config mistake — say so loudly up front.
+    if cfg.env_reconnect_attempts > 0 && (cfg.mode == Mode::Mono || cfg.envs_per_actor == 1) {
+        tb_warn!(
+            "train",
+            "env_reconnect_attempts {} has no effect in this configuration: \
+             reconnect covers batched env streams only (poly mode with \
+             --envs_per_actor > 1)",
+            cfg.env_reconnect_attempts
+        );
+    }
     // One gauge registry threaded through every pipeline stage; the
     // periodic report below prints its snapshot (DESIGN.md §Telemetry).
     let gauges = PipelineGauges::shared();
@@ -259,6 +285,13 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     // B rollouts and stacks batch N+1 into the other buffer, then
     // recycles the rollouts into the pool.  Stacking cost is thereby
     // overlapped with — not added to — learner compute.
+    //
+    // With `--replay_capacity` > 0 the stacker also owns the replay
+    // ring (DESIGN.md §Replay): once warmed, each batch is composed
+    // of (1 − replay_ratio)·B fresh + replay_ratio·B sampled replayed
+    // rollouts, and every fresh rollout is copied into a ring slot
+    // before its pooled buffer recycles.  With capacity 0 (default)
+    // the loop below is the classic path, untouched.
     let (batch_tx, batch_rx) =
         batching_queue_gauged::<LearnerBatch>(2, gauges.batches_ready.clone());
     let (return_tx, return_rx) = batching_queue::<LearnerBatch>(2);
@@ -269,31 +302,84 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     }
     let stacker_manifest = manifest.clone();
     let stacker_pool = buffer_pool.clone();
+    let replay_ratio = cfg.replay_ratio;
+    // Columns a warmed ring would contribute per batch: ratio 0 plans
+    // none, and so does any ratio small enough that round(ratio·B)
+    // rounds to zero for this artifact's batch size.
+    let replay_planned = replay_count(manifest.batch_size, cfg.replay_ratio);
+    if cfg.replay_capacity > 0 && replay_planned == 0 {
+        tb_warn!(
+            "train",
+            "replay_capacity {} has no effect: replay_ratio {} plans \
+             round(ratio*B) = 0 replayed columns per batch of {}, so the ring \
+             is not constructed",
+            cfg.replay_capacity,
+            cfg.replay_ratio,
+            manifest.batch_size
+        );
+    }
+    // Construct the ring only when batches can actually sample from
+    // it — otherwise feeding it would be a pure memcpy tax on every
+    // stacker round (and the classic path must stay byte-identical).
+    let mut stacker_replay = if cfg.replay_capacity > 0 && replay_planned > 0 {
+        Some(ReplayBuffer::with_gauges(
+            cfg.replay_capacity,
+            manifest.unroll_length,
+            manifest.obs_len(),
+            manifest.num_actions,
+            cfg.seed,
+            gauges.clone(),
+        ))
+    } else {
+        None
+    };
     let stacker_thread = std::thread::Builder::new()
         .name("stacker".into())
-        .spawn(move || -> Duration {
+        .spawn(move || -> (Duration, Option<ReplayStats>) {
             let b = stacker_manifest.batch_size;
             let mut rollouts: Vec<Rollout> = Vec::with_capacity(b);
             let mut stacking = Duration::ZERO;
             loop {
-                // wait for a free batch buffer, then for B rollouts
+                // wait for a free batch buffer, then for the round's
+                // fresh rollouts (B, minus any replayed columns)
                 let Some(mut batch) = return_rx.recv() else { break };
-                if !rollout_rx.recv_batch_into(b, &mut rollouts) {
-                    break;
+                match stacker_replay.as_mut() {
+                    None => {
+                        if !rollout_rx.recv_batch_into(b, &mut rollouts) {
+                            break;
+                        }
+                        let t0 = Instant::now();
+                        stack_rollouts(&rollouts, &stacker_manifest, &mut batch);
+                        for r in rollouts.drain(..) {
+                            stacker_pool.recycle(r);
+                        }
+                        stacking += t0.elapsed();
+                    }
+                    Some(replay) => {
+                        // warmup gate: all-fresh batches until the
+                        // ring holds replay_capacity rollouts
+                        let replayed = replay.plan(b, replay_ratio);
+                        if !rollout_rx.recv_batch_into(b - replayed, &mut rollouts) {
+                            break;
+                        }
+                        let t0 = Instant::now();
+                        stack_mixed(&rollouts, replay, replayed, &stacker_manifest, &mut batch);
+                        for r in rollouts.drain(..) {
+                            // copy-in-place into a ring slot, then
+                            // hand the pooled buffer straight back
+                            replay.insert(&r);
+                            stacker_pool.recycle(r);
+                        }
+                        stacking += t0.elapsed();
+                    }
                 }
-                let t0 = Instant::now();
-                stack_rollouts(&rollouts, &stacker_manifest, &mut batch);
-                for r in rollouts.drain(..) {
-                    stacker_pool.recycle(r);
-                }
-                stacking += t0.elapsed();
                 if batch_tx.send(batch).is_err() {
                     break;
                 }
             }
             // unblock the learner whichever way this loop ended
             batch_tx.close();
-            stacking
+            (stacking, stacker_replay.map(|rb| rb.stats()))
         })?;
 
     // -- learner loop (inline on this thread)
@@ -368,9 +454,12 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     infer_client.close();
     weights.close();
     pool.join();
-    let stack_time = stacker_thread
+    let (stack_time, replay_stats) = stacker_thread
         .join()
         .map_err(|_| anyhow::anyhow!("stacker thread panicked"))?;
+    if let Some(rs) = &replay_stats {
+        tb_info!("train", "replay: {rs}");
+    }
     inference_thread
         .join()
         .map_err(|_| anyhow::anyhow!("inference thread panicked"))??;
@@ -399,6 +488,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         stack_time,
         learner_wait,
         gauges: gauges_final,
+        replay: replay_stats,
     })
 }
 
@@ -491,8 +581,13 @@ fn build_envs(
                         let addr = &addresses[g % addresses.len()];
                         let seeds: Vec<u64> =
                             ids.map(|id| env::actor_seed(cfg.seed, id)).collect();
-                        let venv = RemoteVecEnv::connect(addr, env_name, &seeds, &cfg.wrappers)
-                            .with_context(|| format!("connecting group {g} to {addr}"))?;
+                        let mut venv =
+                            RemoteVecEnv::connect(addr, env_name, &seeds, &cfg.wrappers)
+                                .with_context(|| format!("connecting group {g} to {addr}"))?;
+                        // bounded mid-run reconnects before the group
+                        // latches terminal (counted in env_reconnects)
+                        venv.set_reconnect(cfg.env_reconnect_attempts);
+                        venv.set_gauges(gauges.clone());
                         Ok(Box::new(venv) as Box<dyn VecEnvironment>)
                     })
                     .collect::<Result<Vec<_>>>()?;

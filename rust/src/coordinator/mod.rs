@@ -3,6 +3,7 @@
 //! * [`dynamic_batcher`] — batcher.cc reproduction (inference queue);
 //! * [`batching_queue`] — learner queue with backpressure;
 //! * [`rollout`] — pooled rollout buffers + time-major batch stacking;
+//! * [`replay`] — bounded replay ring: off-policy rollout mixing;
 //! * [`actor_pool`] — actor threads (local or remote envs);
 //! * [`weights`] — versioned learner→inference parameter store;
 //! * [`driver`] — `train()`: wires everything, runs the learner loop.
@@ -11,8 +12,10 @@ pub mod actor_pool;
 pub mod batching_queue;
 pub mod driver;
 pub mod dynamic_batcher;
+pub mod replay;
 pub mod rollout;
 pub mod weights;
 
 pub use driver::{evaluate, evaluate_batched, fold_seed, train, EvalReport, TrainReport};
+pub use replay::{ReplayBuffer, ReplayStats};
 pub use rollout::RolloutPool;

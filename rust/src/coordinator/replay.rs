@@ -1,0 +1,523 @@
+//! Experience replay: off-policy rollout mixing through the pooled
+//! learner pipeline (DESIGN.md §Replay).
+//!
+//! IMPALA's v-trace correction makes learning from stale trajectories
+//! sound — every [`Rollout`] already carries the behaviour-policy
+//! logits, so the learner's rho/c clipping handles the off-policyness
+//! of a replayed rollout exactly like it handles ordinary actor lag.
+//! The [`ReplayBuffer`] exploits that: a bounded, **preallocated**
+//! ring of rollout slots the driver's stacker thread feeds — each
+//! completed fresh rollout is copied in place into a slot before its
+//! pooled buffer recycles into the `RolloutPool`, and once the ring
+//! has warmed up (filled to capacity) every learner batch is composed
+//! of `(1 − replay_ratio)·B` fresh + `replay_ratio·B` uniformly
+//! sampled replayed rollouts ([`stack_mixed`]).
+//!
+//! Discipline carried over from the rest of the pipeline:
+//!
+//! * **Zero allocation at steady state** — slots are preallocated at
+//!   construction and written with [`Rollout::copy_from`]; sampling
+//!   returns a reference straight into the ring, stacked via
+//!   [`stack_rollout_into`] with no intermediate copy.  Gated by
+//!   `tests/alloc_regression.rs`.
+//! * **Reproducibility** — sampling draws from a seeded
+//!   [`Rng`](crate::util::rng::Rng) stream, so a fixed seed replays
+//!   the same mixture.
+//! * **Byte-identical opt-out** — `--replay_capacity 0` (the default)
+//!   never constructs a buffer; with a buffer present,
+//!   `--replay_ratio 0` plans zero replayed columns, so the stacked
+//!   batches are bit-identical to the classic path (pinned by test).
+//!
+//! Occupancy is reported into [`PipelineGauges`] (`replay_size`,
+//! `replay_sampled`, `replay_evicted`) — visible in the driver's
+//! periodic report line and the `GaugeSampler` CSV.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::coordinator::rollout::{stack_rollout_into, Rollout};
+use crate::runtime::{LearnerBatch, Manifest};
+use crate::telemetry::gauges::PipelineGauges;
+use crate::util::rng::Rng;
+
+/// Domain-separation constant folded into the run seed for the
+/// sampling RNG stream ("replay" in ASCII), so replay draws never
+/// alias an actor's action-sampling stream.
+const REPLAY_SEED_STREAM: u64 = 0x0000_7265_706C_6179;
+
+/// Bounded preallocated ring of rollout slots with FIFO eviction and
+/// seeded uniform sampling.  Owned by one thread (the driver's
+/// stacker); telemetry reads go through the shared gauge registry.
+pub struct ReplayBuffer {
+    /// All slots, preallocated at construction (physical order).
+    slots: Vec<Rollout>,
+    /// Slots currently holding a rollout (≤ capacity; grows until the
+    /// ring fills, then stays at capacity forever).
+    len: usize,
+    /// Next physical write position.  While filling, `head == len`;
+    /// once full it points at the **oldest** slot (the FIFO victim).
+    head: usize,
+    rng: Rng,
+    gauges: Arc<PipelineGauges>,
+    inserted: u64,
+    sampled: u64,
+    evicted: u64,
+}
+
+impl ReplayBuffer {
+    /// Preallocate `capacity` slots of the given rollout shape, with
+    /// sampling seeded by `seed` (occupancy reported into a detached
+    /// gauge registry; the driver uses
+    /// [`with_gauges`](ReplayBuffer::with_gauges) to share one).
+    pub fn new(
+        capacity: usize,
+        t: usize,
+        obs_len: usize,
+        num_actions: usize,
+        seed: u64,
+    ) -> ReplayBuffer {
+        ReplayBuffer::with_gauges(
+            capacity,
+            t,
+            obs_len,
+            num_actions,
+            seed,
+            PipelineGauges::shared(),
+        )
+    }
+
+    /// [`new`](ReplayBuffer::new), reporting occupancy (`replay_size`,
+    /// `replay_sampled`, `replay_evicted`) into a shared registry.
+    pub fn with_gauges(
+        capacity: usize,
+        t: usize,
+        obs_len: usize,
+        num_actions: usize,
+        seed: u64,
+        gauges: Arc<PipelineGauges>,
+    ) -> ReplayBuffer {
+        assert!(capacity > 0, "replay buffer needs at least one slot");
+        let slots = (0..capacity)
+            .map(|_| Rollout::new(t, obs_len, num_actions))
+            .collect();
+        gauges.replay_size.set(0);
+        ReplayBuffer {
+            slots,
+            len: 0,
+            head: 0,
+            rng: Rng::new(seed ^ REPLAY_SEED_STREAM),
+            gauges,
+            inserted: 0,
+            sampled: 0,
+            evicted: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Rollouts currently stored.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The warmup gate: sampling only begins once the ring has filled
+    /// to capacity, so early batches never over-replay the first few
+    /// (highly correlated) rollouts.
+    pub fn warmed_up(&self) -> bool {
+        self.len == self.capacity()
+    }
+
+    /// The rollout at *logical* index `i` (0 = oldest stored), if any.
+    /// Exposes the FIFO order for tests and inspection.
+    pub fn get(&self, i: usize) -> Option<&Rollout> {
+        if i >= self.len {
+            return None;
+        }
+        let phys = if self.len == self.capacity() {
+            (self.head + i) % self.capacity()
+        } else {
+            i
+        };
+        Some(&self.slots[phys])
+    }
+
+    /// Copy `r` in place into the next ring slot, evicting the oldest
+    /// stored rollout once the ring is full (FIFO).  No allocation.
+    pub fn insert(&mut self, r: &Rollout) {
+        debug_assert!(r.is_complete(), "only complete rollouts are replayable");
+        let evicting = self.len == self.capacity();
+        let cap = self.capacity();
+        self.slots[self.head].copy_from(r);
+        self.head = (self.head + 1) % cap;
+        self.inserted += 1;
+        if evicting {
+            self.evicted += 1;
+            self.gauges.replay_evicted.inc();
+        } else {
+            self.len += 1;
+            self.gauges.replay_size.set(self.len as u64);
+        }
+    }
+
+    /// Sample one stored rollout uniformly (seeded stream, with
+    /// replacement across calls).  Returns a reference straight into
+    /// the ring — stack it with [`stack_rollout_into`] and it never
+    /// leaves its slot.  `None` while the buffer is empty.
+    pub fn sample(&mut self) -> Option<&Rollout> {
+        if self.len == 0 {
+            return None;
+        }
+        let i = self.rng.below(self.len);
+        self.sampled += 1;
+        self.gauges.replay_sampled.inc();
+        self.get(i)
+    }
+
+    /// How many of a `batch_size`-rollout learner batch should come
+    /// from replay this round: 0 until the warmup gate opens, then
+    /// [`replay_count`]`(batch_size, ratio)` — additionally capped at
+    /// the stored count, so a ring smaller than `round(ratio·B)`
+    /// degrades to fewer replayed columns instead of overdrawing
+    /// (sampling is with replacement, but `stack_mixed` refuses to
+    /// draw more columns than the ring holds).
+    pub fn plan(&self, batch_size: usize, ratio: f64) -> usize {
+        if !self.warmed_up() {
+            return 0;
+        }
+        replay_count(batch_size, ratio).min(self.len)
+    }
+
+    /// Lifetime counters, for `TrainReport`.
+    pub fn stats(&self) -> ReplayStats {
+        ReplayStats {
+            capacity: self.capacity(),
+            len: self.len,
+            inserted: self.inserted,
+            sampled: self.sampled,
+            evicted: self.evicted,
+        }
+    }
+}
+
+/// Replayed rollouts per batch of `batch_size` at mixing `ratio`:
+/// `round(ratio · B)`, capped at `B − 1` so every batch carries at
+/// least one fresh rollout — otherwise the stacker would stop
+/// draining the learner queue and the buffer would never refresh.
+pub fn replay_count(batch_size: usize, ratio: f64) -> usize {
+    debug_assert!(batch_size > 0);
+    let k = (ratio.clamp(0.0, 1.0) * batch_size as f64).round() as usize;
+    k.min(batch_size - 1)
+}
+
+/// Compose one learner batch from `fresh` rollouts (columns
+/// `0..fresh.len()`) plus `replayed` uniform samples from the replay
+/// ring (columns `fresh.len()..B`), all through the existing
+/// time-major [`stack_rollout_into`] path.  `replayed == 0` makes
+/// this bit-identical to
+/// [`stack_rollouts`](crate::coordinator::rollout::stack_rollouts)
+/// (pinned by test).  The caller inserts the fresh rollouts into the
+/// ring *afterwards* (so a rollout never competes with itself within
+/// its own batch) and then recycles them into the `RolloutPool`.
+pub fn stack_mixed(
+    fresh: &[Rollout],
+    replay: &mut ReplayBuffer,
+    replayed: usize,
+    m: &Manifest,
+    batch: &mut LearnerBatch,
+) {
+    let b = m.batch_size;
+    assert_eq!(
+        fresh.len() + replayed,
+        b,
+        "mixed batch must fill exactly B columns ({} fresh + {replayed} replayed != {b})",
+        fresh.len()
+    );
+    assert!(
+        replayed <= replay.len(),
+        "cannot sample {replayed} rollouts from a replay buffer holding {}",
+        replay.len()
+    );
+    for (bi, r) in fresh.iter().enumerate() {
+        stack_rollout_into(r, bi, m, batch);
+    }
+    for bi in fresh.len()..b {
+        let r = replay.sample().expect("checked non-empty above");
+        stack_rollout_into(r, bi, m, batch);
+    }
+}
+
+/// Lifetime summary of a run's replay buffer, carried in
+/// `TrainReport::replay` when the subsystem is active
+/// (`--replay_capacity` > 0 and `--replay_ratio` > 0).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplayStats {
+    pub capacity: usize,
+    /// Slots filled at the end of the run.
+    pub len: usize,
+    pub inserted: u64,
+    pub sampled: u64,
+    pub evicted: u64,
+}
+
+impl fmt::Display for ReplayStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "size {}/{} inserted {} sampled {} evicted {}",
+            self.len, self.capacity, self.inserted, self.sampled, self.evicted
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::rollout::stack_rollouts;
+    use crate::runtime::manifest::{DType, LeafSpec};
+    use std::path::PathBuf;
+
+    const T: usize = 3;
+    const OBS: usize = 4;
+    const A: usize = 2;
+
+    fn tiny_manifest(b: usize) -> Manifest {
+        Manifest {
+            dir: PathBuf::new(),
+            env: "catch".into(),
+            model: "minatar".into(),
+            obs_shape: [1, 2, 2],
+            num_actions: A,
+            unroll_length: T,
+            batch_size: b,
+            inference_batch: 4,
+            inference_sizes: vec![4],
+            param_count: 1,
+            params: vec![LeafSpec {
+                name: "w".into(),
+                shape: vec![1],
+                dtype: DType::F32,
+            }],
+            opt_state: vec![],
+            stats_names: vec![],
+            hyperparams: crate::util::json::Json::Obj(vec![]),
+            hlo_sha256: String::new(),
+        }
+    }
+
+    /// A complete rollout whose every field encodes `tag` — sampling
+    /// and stacking tests identify rollouts by it.
+    fn tagged(tag: f32) -> Rollout {
+        let mut r = Rollout::new(T, OBS, A);
+        for i in 0..=T {
+            let obs: Vec<f32> = (0..OBS).map(|k| tag + i as f32 + k as f32 * 0.1).collect();
+            r.set_obs(i, &obs);
+        }
+        for i in 0..T {
+            let logits: Vec<f32> = (0..A).map(|k| tag + k as f32).collect();
+            r.set_transition(i, i % A, &logits, tag, i == T - 1);
+        }
+        r
+    }
+
+    /// The tag a stored rollout was built from (rewards are constant
+    /// per rollout above).
+    fn tag_of(r: &Rollout) -> f32 {
+        r.rewards[0]
+    }
+
+    #[test]
+    fn fills_then_evicts_fifo() {
+        let mut rb = ReplayBuffer::new(3, T, OBS, A, 1);
+        assert!(rb.is_empty());
+        assert!(!rb.warmed_up());
+        for k in 0..3 {
+            rb.insert(&tagged(k as f32));
+        }
+        assert_eq!(rb.len(), 3);
+        assert!(rb.warmed_up());
+        assert_eq!(rb.stats().evicted, 0);
+        // two more inserts evict the two oldest (FIFO): stored = 2,3,4
+        rb.insert(&tagged(3.0));
+        rb.insert(&tagged(4.0));
+        assert_eq!(rb.len(), 3, "ring never grows past capacity");
+        let stored: Vec<f32> = (0..3).map(|i| tag_of(rb.get(i).unwrap())).collect();
+        assert_eq!(stored, vec![2.0, 3.0, 4.0], "oldest evicted first");
+        assert!(rb.get(3).is_none());
+        let s = rb.stats();
+        assert_eq!((s.inserted, s.evicted, s.len), (5, 2, 3));
+    }
+
+    #[test]
+    fn gauges_track_size_samples_and_evictions() {
+        let g = PipelineGauges::shared();
+        let mut rb = ReplayBuffer::with_gauges(2, T, OBS, A, 9, g.clone());
+        rb.insert(&tagged(0.0));
+        assert_eq!(g.replay_size.get(), 1);
+        rb.insert(&tagged(1.0));
+        rb.insert(&tagged(2.0));
+        assert_eq!(g.replay_size.get(), 2, "size saturates at capacity");
+        assert_eq!(g.replay_evicted.get(), 1);
+        rb.sample().unwrap();
+        rb.sample().unwrap();
+        assert_eq!(g.replay_sampled.get(), 2);
+        assert!(g
+            .snapshot()
+            .to_string()
+            .contains("replay 2 (sampled 2 evicted 1)"));
+    }
+
+    /// Reproducibility contract: the same seed and insert sequence
+    /// draw the same sample sequence; a different seed draws a
+    /// different one (with overwhelming probability over 64 draws).
+    #[test]
+    fn sampling_is_deterministic_under_a_fixed_seed() {
+        let draw = |seed: u64| -> Vec<f32> {
+            let mut rb = ReplayBuffer::new(8, T, OBS, A, seed);
+            for k in 0..8 {
+                rb.insert(&tagged(k as f32));
+            }
+            (0..64).map(|_| tag_of(rb.sample().unwrap())).collect()
+        };
+        let a = draw(7);
+        assert_eq!(a, draw(7), "same seed must replay the same mixture");
+        assert_ne!(a, draw(8), "different seeds must not alias");
+        // uniform-ish: 64 draws over 8 slots should touch most slots
+        let distinct = {
+            let mut v = a.clone();
+            v.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            v.dedup();
+            v.len()
+        };
+        assert!(distinct >= 5, "sampling collapsed onto {distinct} slots");
+    }
+
+    #[test]
+    fn sample_on_empty_is_none() {
+        let mut rb = ReplayBuffer::new(4, T, OBS, A, 0);
+        assert!(rb.sample().is_none());
+        assert_eq!(rb.stats().sampled, 0, "a miss is not a sample");
+    }
+
+    /// The warmup gate: no sampled rollouts before `replay_capacity`
+    /// inserts have filled the ring, regardless of ratio.
+    #[test]
+    fn plan_gates_sampling_until_warm() {
+        let mut rb = ReplayBuffer::new(4, T, OBS, A, 3);
+        assert_eq!(rb.plan(8, 0.5), 0, "empty buffer plans no replay");
+        for k in 0..3 {
+            rb.insert(&tagged(k as f32));
+            assert_eq!(rb.plan(8, 0.5), 0, "warming buffer plans no replay");
+        }
+        rb.insert(&tagged(3.0));
+        assert!(rb.warmed_up());
+        assert_eq!(rb.plan(8, 0.5), 4, "warm buffer plans round(ratio*B)");
+        assert_eq!(rb.plan(8, 0.0), 0, "ratio 0 never replays, even warm");
+        // a ring smaller than round(ratio*B) degrades instead of
+        // overdrawing: round(0.99*8) = 7 capped at the 4 stored
+        assert_eq!(rb.plan(8, 0.99), 4, "plan never exceeds stored rollouts");
+    }
+
+    #[test]
+    fn replay_count_rounds_and_keeps_one_fresh_column() {
+        assert_eq!(replay_count(8, 0.0), 0);
+        assert_eq!(replay_count(8, 0.25), 2);
+        assert_eq!(replay_count(8, 0.5), 4);
+        assert_eq!(replay_count(4, 0.3), 1);
+        // the cap: at least one fresh rollout per batch, always
+        assert_eq!(replay_count(8, 0.99), 7);
+        assert_eq!(replay_count(1, 0.9), 0);
+        assert_eq!(replay_count(2, 0.5), 1);
+        // out-of-range ratios clamp instead of misbehaving
+        assert_eq!(replay_count(8, 1.5), 7);
+        assert_eq!(replay_count(8, -0.5), 0);
+    }
+
+    /// The acceptance gate: with `replay_ratio` 0 the mixed path
+    /// produces **bit-identical** learner batches to the classic
+    /// `stack_rollouts` path — inserts happen, batches don't change.
+    #[test]
+    fn ratio_zero_is_bit_identical_to_classic_stacking() {
+        let b = 3;
+        let m = tiny_manifest(b);
+        let mut rb = ReplayBuffer::new(2, T, OBS, A, 5);
+        for round in 0..4 {
+            let fresh: Vec<Rollout> =
+                (0..b).map(|k| tagged((round * b + k) as f32)).collect();
+            let mut classic = LearnerBatch::zeros(&m);
+            stack_rollouts(&fresh, &m, &mut classic);
+
+            let replayed = rb.plan(b, 0.0);
+            assert_eq!(replayed, 0);
+            let mut mixed = LearnerBatch::zeros(&m);
+            stack_mixed(&fresh, &mut rb, replayed, &m, &mut mixed);
+            for r in &fresh {
+                rb.insert(r); // feeding the ring must not touch batches
+            }
+
+            assert_eq!(classic.observations, mixed.observations, "round {round}");
+            assert_eq!(classic.actions, mixed.actions, "round {round}");
+            assert_eq!(classic.rewards, mixed.rewards, "round {round}");
+            assert_eq!(classic.dones, mixed.dones, "round {round}");
+            assert_eq!(
+                classic.behavior_logits, mixed.behavior_logits,
+                "round {round}"
+            );
+        }
+        assert_eq!(rb.stats().sampled, 0, "ratio 0 never samples");
+        assert!(rb.warmed_up(), "the ring still filled alongside");
+    }
+
+    /// Mixing places fresh rollouts in the leading columns and stored
+    /// ones in the trailing columns, bit-exact from their ring slots.
+    #[test]
+    fn mixed_batches_compose_fresh_then_replayed_columns() {
+        let b = 4;
+        let m = tiny_manifest(b);
+        let mut rb = ReplayBuffer::new(2, T, OBS, A, 11);
+        rb.insert(&tagged(100.0));
+        rb.insert(&tagged(200.0));
+        let fresh: Vec<Rollout> = vec![tagged(0.0), tagged(1.0)];
+        let replayed = rb.plan(b, 0.5);
+        assert_eq!(replayed, 2);
+        let mut batch = LearnerBatch::zeros(&m);
+        stack_mixed(&fresh, &mut rb, replayed, &m, &mut batch);
+        // column bi's reward at t=0 lives at index 0 * b + bi
+        let col_tag = |bi: usize| batch.rewards[bi];
+        assert_eq!(col_tag(0), 0.0);
+        assert_eq!(col_tag(1), 1.0);
+        for bi in 2..b {
+            let tag = col_tag(bi);
+            assert!(
+                tag == 100.0 || tag == 200.0,
+                "column {bi} must hold a stored rollout, got {tag}"
+            );
+        }
+        assert_eq!(rb.stats().sampled, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "exactly B columns")]
+    fn mixed_column_mismatch_panics() {
+        let m = tiny_manifest(4);
+        let mut rb = ReplayBuffer::new(2, T, OBS, A, 0);
+        let fresh = vec![tagged(0.0)];
+        let mut batch = LearnerBatch::zeros(&m);
+        stack_mixed(&fresh, &mut rb, 1, &m, &mut batch); // 1 + 1 != 4
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot sample")]
+    fn mixed_overdraw_on_cold_buffer_panics() {
+        let m = tiny_manifest(2);
+        let mut rb = ReplayBuffer::new(2, T, OBS, A, 0);
+        let fresh = vec![tagged(0.0)];
+        let mut batch = LearnerBatch::zeros(&m);
+        stack_mixed(&fresh, &mut rb, 1, &m, &mut batch); // nothing stored yet
+    }
+}

@@ -78,6 +78,25 @@ impl Rollout {
     pub fn is_complete(&self) -> bool {
         self.filled == self.t
     }
+
+    /// Copy another rollout's contents into this buffer **in place**
+    /// (both buffers keep their preallocated storage; zero heap
+    /// allocation).  This is the replay ring's write primitive —
+    /// the same copy-in-place discipline as the pool's recycle path.
+    /// Panics on shape mismatch (the slices disagree in length).
+    pub fn copy_from(&mut self, src: &Rollout) {
+        debug_assert_eq!(
+            (self.t, self.obs_len, self.num_actions),
+            (src.t, src.obs_len, src.num_actions),
+            "rollout shape mismatch"
+        );
+        self.observations.copy_from_slice(&src.observations);
+        self.actions.copy_from_slice(&src.actions);
+        self.rewards.copy_from_slice(&src.rewards);
+        self.dones.copy_from_slice(&src.dones);
+        self.behavior_logits.copy_from_slice(&src.behavior_logits);
+        self.filled = src.filled;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -241,30 +260,38 @@ impl RolloutPool {
 /// Stack B rollouts into the learner's time-major batch.
 /// `batch` buffers are reused across calls (no allocation).
 pub fn stack_rollouts(rollouts: &[Rollout], m: &Manifest, batch: &mut LearnerBatch) {
+    assert_eq!(rollouts.len(), m.batch_size, "need exactly B rollouts");
+    for (bi, r) in rollouts.iter().enumerate() {
+        stack_rollout_into(r, bi, m, batch);
+    }
+}
+
+/// Stack one rollout into batch column `bi` of the time-major layout —
+/// the per-column core of [`stack_rollouts`].  Replay mixing
+/// ([`crate::coordinator::replay`]) uses it to place sampled rollouts
+/// directly from their ring slots, with no intermediate copy and no
+/// allocation.
+pub fn stack_rollout_into(r: &Rollout, bi: usize, m: &Manifest, batch: &mut LearnerBatch) {
     let (t, b, a) = (m.unroll_length, m.batch_size, m.num_actions);
     let obs_len = m.obs_len();
-    assert_eq!(rollouts.len(), b, "need exactly B rollouts");
-    for r in rollouts {
-        assert!(r.is_complete(), "incomplete rollout");
-        assert_eq!(r.t, t);
-        assert_eq!(r.obs_len, obs_len);
+    assert!(bi < b, "batch column {bi} out of range (B = {b})");
+    assert!(r.is_complete(), "incomplete rollout");
+    assert_eq!(r.t, t);
+    assert_eq!(r.obs_len, obs_len);
+    for ti in 0..=t {
+        let dst = (ti * b + bi) * obs_len;
+        let src = ti * obs_len;
+        batch.observations[dst..dst + obs_len]
+            .copy_from_slice(&r.observations[src..src + obs_len]);
     }
-    for (bi, r) in rollouts.iter().enumerate() {
-        for ti in 0..=t {
-            let dst = (ti * b + bi) * obs_len;
-            let src = ti * obs_len;
-            batch.observations[dst..dst + obs_len]
-                .copy_from_slice(&r.observations[src..src + obs_len]);
-        }
-        for ti in 0..t {
-            let idx = ti * b + bi;
-            batch.actions[idx] = r.actions[ti];
-            batch.rewards[idx] = r.rewards[ti];
-            batch.dones[idx] = r.dones[ti];
-            let dst = idx * a;
-            batch.behavior_logits[dst..dst + a]
-                .copy_from_slice(&r.behavior_logits[ti * a..(ti + 1) * a]);
-        }
+    for ti in 0..t {
+        let idx = ti * b + bi;
+        batch.actions[idx] = r.actions[ti];
+        batch.rewards[idx] = r.rewards[ti];
+        batch.dones[idx] = r.dones[ti];
+        let dst = idx * a;
+        batch.behavior_logits[dst..dst + a]
+            .copy_from_slice(&r.behavior_logits[ti * a..(ti + 1) * a]);
     }
 }
 
@@ -349,6 +376,59 @@ mod tests {
             let dst = (t * b + bi) * obs_len;
             assert_eq!(batch.observations[dst], tag + t as f32);
         }
+    }
+
+    /// `copy_from` replicates every field in place — the replay ring's
+    /// write primitive must preserve the backing allocation.
+    #[test]
+    fn copy_from_replicates_in_place() {
+        let mut src = Rollout::new(3, 4, 2);
+        fill_rollout(&mut src, 7.0);
+        let mut dst = Rollout::new(3, 4, 2);
+        let ptr = dst.observations.as_ptr();
+        dst.copy_from(&src);
+        assert_eq!(dst.observations, src.observations);
+        assert_eq!(dst.actions, src.actions);
+        assert_eq!(dst.rewards, src.rewards);
+        assert_eq!(dst.dones, src.dones);
+        assert_eq!(dst.behavior_logits, src.behavior_logits);
+        assert_eq!(dst.filled, src.filled);
+        assert!(dst.is_complete());
+        assert_eq!(ptr, dst.observations.as_ptr(), "copy must reuse the buffer");
+    }
+
+    /// `stack_rollout_into` must place exactly one batch column — and
+    /// agree with the whole-batch `stack_rollouts` path bit for bit.
+    #[test]
+    fn stack_single_column_matches_whole_batch_path() {
+        let m = tiny_manifest(2, 3);
+        let mut rollouts = Vec::new();
+        for bi in 0..3 {
+            let mut r = Rollout::new(2, 4, 3);
+            fill_rollout(&mut r, 10.0 * bi as f32);
+            rollouts.push(r);
+        }
+        let mut whole = LearnerBatch::zeros(&m);
+        stack_rollouts(&rollouts, &m, &mut whole);
+        let mut columns = LearnerBatch::zeros(&m);
+        for (bi, r) in rollouts.iter().enumerate() {
+            stack_rollout_into(r, bi, &m, &mut columns);
+        }
+        assert_eq!(whole.observations, columns.observations);
+        assert_eq!(whole.actions, columns.actions);
+        assert_eq!(whole.rewards, columns.rewards);
+        assert_eq!(whole.dones, columns.dones);
+        assert_eq!(whole.behavior_logits, columns.behavior_logits);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn stack_column_out_of_range_panics() {
+        let m = tiny_manifest(2, 1);
+        let mut r = Rollout::new(2, 4, 3);
+        fill_rollout(&mut r, 0.0);
+        let mut batch = LearnerBatch::zeros(&m);
+        stack_rollout_into(&r, 1, &m, &mut batch);
     }
 
     #[test]

@@ -72,6 +72,18 @@ pub trait VecEnvironment: Send {
     fn failed(&self) -> bool {
         false
     }
+
+    /// True when the *most recent* `step_batch` result was synthesized
+    /// (a transport failure, including the one round a successful
+    /// mid-run reconnect papers over) rather than real env
+    /// transitions.  Synthesized rounds carry fabricated all-terminal
+    /// steps and must not be counted into frame/episode metrics — the
+    /// grouped actor loop checks this per round, in addition to the
+    /// permanent [`failed`](VecEnvironment::failed) latch.  Local
+    /// groups never synthesize.
+    fn last_step_synthesized(&self) -> bool {
+        false
+    }
 }
 
 /// In-process [`VecEnvironment`]: owns B boxed local envs and steps

@@ -23,7 +23,8 @@ fn usage() -> ! {
         "usage: torchbeast <command> [--key value ...]\n\
          commands:\n\
          \x20 train       run the actor-learner system (see config.rs for flags)\n\
-         \x20 env-server  serve environments over TCP (--listen addr:port)\n\
+         \x20 env-server  serve environments over TCP (--listen addr:port,\n\
+         \x20             --server_cpus N caps serve-loop threads; 0 = unlimited)\n\
          \x20 eval        evaluate a config's artifact with fresh params (--artifact_dir)\n\
          \x20 inspect     print an artifact bundle's manifest (--artifact_dir)"
     );
@@ -61,6 +62,10 @@ fn main() -> anyhow::Result<()> {
         }
         "env-server" => {
             let mut listen = "0.0.0.0:7001".to_string();
+            // Serve-loop thread cap (one thread per stream / env
+            // group): under heavy group counts this pins the server's
+            // CPU footprint; 0 = unlimited.
+            let mut server_cpus = 0usize;
             let mut i = 0;
             while i < rest.len() {
                 match rest[i].as_str() {
@@ -71,12 +76,31 @@ fn main() -> anyhow::Result<()> {
                             .ok_or_else(|| anyhow::anyhow!("--listen needs a value"))?
                             .clone();
                     }
+                    "--server_cpus" => {
+                        i += 1;
+                        let v = rest
+                            .get(i)
+                            .ok_or_else(|| anyhow::anyhow!("--server_cpus needs a value"))?;
+                        server_cpus = v.parse::<usize>().map_err(|_| {
+                            anyhow::anyhow!("--server_cpus expects a number, got {v:?}")
+                        })?;
+                    }
                     other => anyhow::bail!("unknown env-server flag {other:?}"),
                 }
                 i += 1;
             }
-            let server = EnvServer::start(&listen)?;
-            println!("env-server listening on {}", server.addr);
+            let server = EnvServer::start_with_options(
+                &listen,
+                torchbeast::telemetry::gauges::PipelineGauges::shared(),
+                server_cpus,
+            )?;
+            match server_cpus {
+                0 => println!("env-server listening on {}", server.addr),
+                n => println!(
+                    "env-server listening on {} (stream threads capped at {n})",
+                    server.addr
+                ),
+            }
             // Serve until killed; the periodic status line goes
             // through the telemetry sink like every other report.
             loop {

@@ -16,11 +16,27 @@
 
 use std::io::BufReader;
 use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::env::wrappers::WrapperCfg;
 use crate::env::{intern_name, EnvSpec, Environment, SlotStep, Step, VecEnvironment};
 use crate::rpc::codec::{self, read_msg, write_msg, Msg, ObsHeader, TAG_OBS, TAG_OBS_BATCH};
+use crate::telemetry::gauges::PipelineGauges;
+
+/// Fold a reconnect generation into a slot seed (splitmix64
+/// finalizer over the generation, XORed in).  A reconnected group
+/// must NOT re-handshake with the original seeds: env streams are
+/// deterministically seeded, so the server would rebuild envs that
+/// replay the run's opening episodes byte for byte — trajectories the
+/// learner already consumed — once per reconnect.  Deriving the
+/// seeds from (original seed, generation) keeps runs reproducible
+/// while giving every reconnect fresh episodes.
+fn reconnect_seed(seed: u64, generation: u32) -> u64 {
+    seed ^ crate::util::rng::splitmix64(
+        (generation as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    )
+}
 
 /// Read the server's `Spec` reply and convert it — the one definition
 /// of the Spec→`EnvSpec` handshake step, shared by both connect paths
@@ -202,8 +218,30 @@ pub struct RemoteVecEnv {
     /// Why the stream died, when it has (transport/protocol errors are
     /// reported as all-terminal steps; this keeps the typed cause).
     last_error: Option<String>,
+    /// Whether the most recent `step_batch` result was synthesized by
+    /// `fail_step` rather than stepped by real envs (true for latched
+    /// rounds AND for the one round a successful reconnect papers
+    /// over) — surfaced through `last_step_synthesized` so the
+    /// grouped actor loop keeps fabricated rounds out of metrics.
+    synthesized: bool,
     /// Guards the once-per-stream `reset_all` contract.
     stepped: bool,
+    /// Connection parameters, retained so a dead stream can be
+    /// re-established mid-run (fresh `HelloBatch` handshake — the
+    /// server builds B new envs, i.e. a group-wide reset).
+    addr: String,
+    env_name: String,
+    seeds: Vec<u64>,
+    wrappers: WrapperCfg,
+    /// Remaining mid-run reconnect budget (total over the group's
+    /// lifetime; 0 = latch terminal on first failure, the classic
+    /// behavior).  Set via [`set_reconnect`](RemoteVecEnv::set_reconnect).
+    reconnect_budget: u32,
+    /// Successful reconnects so far.
+    reconnects: u32,
+    /// Registry the `env_reconnects` counter reports into (detached by
+    /// default; the driver shares its pipeline registry).
+    gauges: Arc<PipelineGauges>,
 }
 
 impl RemoteVecEnv {
@@ -265,8 +303,39 @@ impl RemoteVecEnv {
             frame_buf: Vec::new(),
             write_buf: Vec::new(),
             last_error: None,
+            synthesized: false,
             stepped: false,
+            addr: addr.to_string(),
+            env_name: env_name.to_string(),
+            seeds: seeds.to_vec(),
+            wrappers: wrappers.clone(),
+            reconnect_budget: 0,
+            reconnects: 0,
+            gauges: PipelineGauges::shared(),
         })
+    }
+
+    /// Arm a bounded mid-run reconnect budget (total over the stream's
+    /// lifetime): on stream death, up to `attempts` fresh connects —
+    /// a new `HelloBatch` handshake, i.e. a server-side group reset,
+    /// with seeds re-derived per reconnect generation so the new envs
+    /// play fresh episodes — are tried before the group latches
+    /// terminal.  The failed round surfaces as all-terminal steps
+    /// whose observations are the new episode-start frames, so
+    /// rollouts stay consistent.
+    pub fn set_reconnect(&mut self, attempts: u32) {
+        self.reconnect_budget = attempts;
+    }
+
+    /// Report successful reconnects into a shared gauge registry
+    /// (`env_reconnects`) instead of the detached default.
+    pub fn set_gauges(&mut self, gauges: Arc<PipelineGauges>) {
+        self.gauges = gauges;
+    }
+
+    /// Successful mid-run reconnects so far.
+    pub fn reconnects(&self) -> u32 {
+        self.reconnects
     }
 
     /// Why the stream died (set once transport/protocol errors start
@@ -280,14 +349,98 @@ impl RemoteVecEnv {
         let _ = write_msg(&mut self.writer, &Msg::Bye);
     }
 
-    /// Record the stream's death and synthesize an all-terminal step
-    /// (cached obs replayed) so the grouped actor keeps running — the
-    /// same fault-tolerance shape as [`RemoteEnv::step`].
+    /// Stream death: spend the reconnect budget on fresh connects
+    /// (new `HelloBatch` handshake + server-side `reset_all` — the
+    /// server builds B new envs), then — reconnected or not — record
+    /// the round as all-terminal.  On success the returned
+    /// observations are the new episode-start frames, so the rollout
+    /// stays consistent (`done` = true, next obs = a fresh episode)
+    /// and the group keeps training; with the budget exhausted (or
+    /// unset) the failure latches and every later step synthesizes
+    /// terminals off the cached frame — the same fault-tolerance
+    /// shape as [`RemoteEnv::step`].
     fn fail_step(&mut self, why: String, obs_block: &mut [f32], steps: &mut [SlotStep]) {
+        let mut recovered = false;
         if self.last_error.is_none() {
-            crate::tb_warn!("remote-vec-env", "stream failed: {why}");
-            self.last_error = Some(why);
+            // reseed per reconnect generation: the server must build
+            // fresh (deterministic) episodes, not replay the opening
+            // trajectories the learner already consumed
+            let generation = self.reconnects + 1;
+            let reseeds: Vec<u64> = self
+                .seeds
+                .iter()
+                .map(|&s| reconnect_seed(s, generation))
+                .collect();
+            while self.reconnect_budget > 0 {
+                self.reconnect_budget -= 1;
+                match RemoteVecEnv::connect(
+                    &self.addr,
+                    &self.env_name,
+                    &reseeds,
+                    &self.wrappers,
+                ) {
+                    // the fresh stream must serve the *same* MDP: a
+                    // restarted server with a different spec (actions,
+                    // obs shape) would silently swap the task mid-run
+                    Ok(fresh) if fresh.spec == self.spec && fresh.b == self.b => {
+                        self.reconnects += 1;
+                        crate::tb_warn!(
+                            "remote-vec-env",
+                            "stream failed ({why}); reconnected to {} ({} attempts left)",
+                            self.addr,
+                            self.reconnect_budget
+                        );
+                        self.gauges.env_reconnects.inc();
+                        // carry the bookkeeping onto the fresh stream,
+                        // then swap it in (the dead stream's Drop-Bye
+                        // is a harmless failed write)
+                        let mut fresh = fresh;
+                        fresh.reconnect_budget = self.reconnect_budget;
+                        fresh.reconnects = self.reconnects;
+                        fresh.gauges = self.gauges.clone();
+                        // keep the *original* seeds as the derivation
+                        // base so generation g always reseeds the same
+                        // way, independent of how many hops led to it
+                        fresh.seeds = std::mem::take(&mut self.seeds);
+                        // this round consumes the handshake's
+                        // episode-start frames, so the once-per-stream
+                        // reset_all contract is already spent
+                        fresh.stepped = true;
+                        *self = fresh;
+                        recovered = true;
+                        break;
+                    }
+                    Ok(fresh) => {
+                        crate::tb_warn!(
+                            "remote-vec-env",
+                            "reconnect to {} returned a different spec ({:?} x {} slots \
+                             != {:?} x {} slots); discarding it ({} attempts left)",
+                            self.addr,
+                            fresh.spec,
+                            fresh.b,
+                            self.spec,
+                            self.b,
+                            self.reconnect_budget
+                        );
+                    }
+                    Err(e) => {
+                        crate::tb_warn!(
+                            "remote-vec-env",
+                            "reconnect to {} failed: {e} ({} attempts left)",
+                            self.addr,
+                            self.reconnect_budget
+                        );
+                    }
+                }
+            }
+            if !recovered {
+                crate::tb_warn!("remote-vec-env", "stream failed: {why}");
+                self.last_error = Some(why);
+            }
         }
+        // whatever path led here, this round's steps are fabricated —
+        // the grouped actor loop must keep them out of metrics
+        self.synthesized = true;
         obs_block.copy_from_slice(&self.last_obs);
         for st in steps.iter_mut() {
             *st = SlotStep {
@@ -380,10 +533,15 @@ impl VecEnvironment for RemoteVecEnv {
                 episode_return: h.episode_return,
             };
         }
+        self.synthesized = false; // real transitions this round
     }
 
     fn failed(&self) -> bool {
         self.last_error.is_some()
+    }
+
+    fn last_step_synthesized(&self) -> bool {
+        self.synthesized
     }
 }
 
@@ -391,6 +549,18 @@ impl VecEnvironment for RemoteVecEnv {
 mod tests {
     use super::*;
     use crate::rpc::server::EnvServer;
+
+    /// Reconnect reseeding: deterministic per (seed, generation),
+    /// never the identity, and distinct across generations — so a
+    /// reconnected group plays fresh episodes reproducibly instead of
+    /// replaying the trajectories the learner already consumed.
+    #[test]
+    fn reconnect_reseed_is_deterministic_and_fresh() {
+        assert_eq!(reconnect_seed(5, 1), reconnect_seed(5, 1));
+        assert_ne!(reconnect_seed(5, 1), 5, "generation 1 must reseed");
+        assert_ne!(reconnect_seed(5, 1), reconnect_seed(5, 2));
+        assert_ne!(reconnect_seed(5, 1), reconnect_seed(6, 1));
+    }
 
     #[test]
     fn connect_step_episode_cycle() {

@@ -70,6 +70,23 @@ impl EnvServer {
         addr: &str,
         gauges: Arc<PipelineGauges>,
     ) -> anyhow::Result<EnvServer> {
+        EnvServer::start_with_options(addr, gauges, 0)
+    }
+
+    /// [`start_with_gauges`](EnvServer::start_with_gauges) with a cap
+    /// on concurrent serve-loop threads (the standalone binary's
+    /// `--server_cpus` knob; 0 = unlimited).  The server serves one
+    /// stream per OS thread — one per env group in the batched
+    /// protocol — so under heavy group counts the cap bounds the
+    /// process's thread (≈ CPU) footprint.  Connections beyond the
+    /// cap stay in the TCP backlog: their handshakes are simply not
+    /// read until a serving thread finishes, so clients see latency,
+    /// never an error.
+    pub fn start_with_options(
+        addr: &str,
+        gauges: Arc<PipelineGauges>,
+        max_streams: usize,
+    ) -> anyhow::Result<EnvServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -85,6 +102,16 @@ impl EnvServer {
             .spawn(move || {
                 let mut workers: Vec<JoinHandle<()>> = Vec::new();
                 while !stop2.load(Ordering::Relaxed) {
+                    // reap finished workers first so the cap below
+                    // counts only live serving threads
+                    workers.retain(|h| !h.is_finished());
+                    if max_streams > 0 && workers.len() >= max_streams {
+                        // at the --server_cpus cap: park further
+                        // connections in the TCP backlog until a
+                        // serving thread retires
+                        std::thread::sleep(Duration::from_millis(2));
+                        continue;
+                    }
                     match listener.accept() {
                         Ok((stream, _peer)) => {
                             conns2.fetch_add(1, Ordering::Relaxed);
@@ -117,8 +144,6 @@ impl EnvServer {
                         }
                         Err(_) => break,
                     }
-                    // reap finished workers occasionally
-                    workers.retain(|h| !h.is_finished());
                 }
                 for h in workers {
                     let _ = h.join();

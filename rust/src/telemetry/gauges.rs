@@ -132,6 +132,17 @@ pub struct PipelineGauges {
     pub env_streams: Gauge,
     /// `EnvServer`: total env steps served across all streams.
     pub env_steps: Counter,
+    /// `RemoteVecEnv`: successful mid-run stream reconnects (bounded
+    /// by `--env_reconnect_attempts`; counted client-side).
+    pub env_reconnects: Counter,
+    /// `ReplayBuffer`: rollouts currently stored (0 while the replay
+    /// subsystem is disabled; ≤ `--replay_capacity` once enabled).
+    pub replay_size: Gauge,
+    /// `ReplayBuffer`: rollouts sampled into learner batches.
+    pub replay_sampled: Counter,
+    /// `ReplayBuffer`: rollouts overwritten by the FIFO ring after it
+    /// filled (each insert past capacity evicts the oldest slot).
+    pub replay_evicted: Counter,
 }
 
 impl PipelineGauges {
@@ -160,6 +171,10 @@ impl PipelineGauges {
             slot_waits: self.slot_waits.get(),
             env_streams: self.env_streams.get(),
             env_steps: self.env_steps.get(),
+            env_reconnects: self.env_reconnects.get(),
+            replay_size: self.replay_size.get(),
+            replay_sampled: self.replay_sampled.get(),
+            replay_evicted: self.replay_evicted.get(),
         }
     }
 }
@@ -178,6 +193,10 @@ pub struct GaugesSnapshot {
     pub slot_waits: u64,
     pub env_streams: u64,
     pub env_steps: u64,
+    pub env_reconnects: u64,
+    pub replay_size: u64,
+    pub replay_sampled: u64,
+    pub replay_evicted: u64,
 }
 
 impl fmt::Display for GaugesSnapshot {
@@ -201,6 +220,20 @@ impl fmt::Display for GaugesSnapshot {
                 f,
                 " env-streams {} served {}",
                 self.env_streams, self.env_steps
+            )?;
+        }
+        // client-side reconnect count: only poly runs with a reconnect
+        // budget that actually fired report it
+        if self.env_reconnects > 0 {
+            write!(f, " env-reconnects {}", self.env_reconnects)?;
+        }
+        // replay occupancy: only runs with --replay_capacity > 0 ever
+        // touch these, so classic report lines stay unchanged
+        if self.replay_size > 0 || self.replay_sampled > 0 || self.replay_evicted > 0 {
+            write!(
+                f,
+                " replay {} (sampled {} evicted {})",
+                self.replay_size, self.replay_sampled, self.replay_evicted
             )?;
         }
         Ok(())
@@ -263,8 +296,7 @@ mod tests {
             batches_ready: 2,
             slots_in_use: 6,
             slot_waits: 0,
-            env_streams: 0,
-            env_steps: 0,
+            ..GaugesSnapshot::default()
         };
         let line = s.to_string();
         assert!(line.contains("pool 5/8 rented"), "{line}");
@@ -273,9 +305,19 @@ mod tests {
         assert!(line.contains("slots 6"), "{line}");
         // env-server occupancy only appears once a server reported it
         assert!(!line.contains("env-streams"), "{line}");
+        // reconnects and replay stay quiet while those subsystems are off
+        assert!(!line.contains("env-reconnects"), "{line}");
+        assert!(!line.contains("replay"), "{line}");
         s.env_streams = 2;
         s.env_steps = 1234;
         let line = s.to_string();
         assert!(line.contains("env-streams 2 served 1234"), "{line}");
+        s.env_reconnects = 1;
+        s.replay_size = 64;
+        s.replay_sampled = 12;
+        s.replay_evicted = 3;
+        let line = s.to_string();
+        assert!(line.contains("env-reconnects 1"), "{line}");
+        assert!(line.contains("replay 64 (sampled 12 evicted 3)"), "{line}");
     }
 }

