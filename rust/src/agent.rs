@@ -44,7 +44,7 @@ pub fn argmax_action(logits: &[f32]) -> usize {
     logits
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap()) // tb-lint: allow(unwrap, logits are finite; softmax upstream rejects NaN)
         .map(|(i, _)| i)
         .unwrap_or(0)
 }

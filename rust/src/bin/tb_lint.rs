@@ -1,0 +1,65 @@
+//! `tb-lint` CLI: lint `rust/src` against the project invariants
+//! (DESIGN.md §Static-Analysis) and exit non-zero on any finding.
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo run --release --bin tb_lint            # lints this crate's src/
+//! cargo run --release --bin tb_lint -- <dir>   # lints an explicit root
+//! ```
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use torchbeast::lint;
+
+/// The source root: explicit argument, else this crate's `src/`
+/// (via `CARGO_MANIFEST_DIR` when run under cargo), else a best-effort
+/// guess relative to the working directory.
+fn source_root(arg: Option<String>) -> PathBuf {
+    if let Some(a) = arg {
+        return PathBuf::from(a);
+    }
+    if let Ok(manifest) = std::env::var("CARGO_MANIFEST_DIR") {
+        return PathBuf::from(manifest).join("src");
+    }
+    for guess in ["rust/src", "src"] {
+        let p = PathBuf::from(guess);
+        if p.is_dir() {
+            return p;
+        }
+    }
+    PathBuf::from(".")
+}
+
+fn main() -> ExitCode {
+    let root = source_root(std::env::args().nth(1));
+    match lint::lint_tree(&root) {
+        Err(e) => {
+            eprintln!("tb-lint: {e}");
+            ExitCode::from(2)
+        }
+        Ok(report) if report.findings.is_empty() => {
+            println!(
+                "tb-lint: clean — {} files under {}",
+                report.files,
+                root.display()
+            );
+            ExitCode::SUCCESS
+        }
+        Ok(report) => {
+            for f in &report.findings {
+                println!("{f}");
+            }
+            eprintln!(
+                "tb-lint: {} finding(s) in {} files under {}",
+                report.findings.len(),
+                report.files,
+                root.display()
+            );
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -87,7 +87,7 @@ impl ActorPool {
                     .spawn(move || {
                         actor_loop(id, env, client, queue, pool, metrics, seed, t, a, obs_len)
                     })
-                    .expect("spawn actor")
+                    .expect("spawn actor") // tb-lint: allow(unwrap, thread spawn fails only on OS resource exhaustion)
             })
             .collect();
         ActorPool { handles }
@@ -130,7 +130,7 @@ impl ActorPool {
                             obs_len,
                         )
                     })
-                    .expect("spawn actor group")
+                    .expect("spawn actor group") // tb-lint: allow(unwrap, thread spawn fails only on OS resource exhaustion)
             })
             .collect();
         ActorPool { handles }
@@ -140,7 +140,7 @@ impl ActorPool {
     pub fn join(self) -> Vec<ActorReport> {
         self.handles
             .into_iter()
-            .map(|h| h.join().expect("actor panicked"))
+            .map(|h| h.join().expect("actor panicked")) // tb-lint: allow(unwrap, join deliberately propagates actor panics)
             .collect()
     }
 

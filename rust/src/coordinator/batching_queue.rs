@@ -9,9 +9,15 @@
 //! receives exactly that many, FIFO.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 
 use crate::telemetry::gauges::Gauge;
+use crate::util::sync::{CheckedMutex, LockOrder};
+
+/// Rank of the queue state lock in the global acquisition order
+/// (registry in `util::sync`).  It is a leaf lock: nothing else is
+/// ever acquired while it is held.
+const STATE_ORDER: LockOrder = LockOrder::new(40, "batching_queue.state");
 
 struct State<T> {
     queue: VecDeque<T>,
@@ -19,7 +25,7 @@ struct State<T> {
 }
 
 struct Shared<T> {
-    state: Mutex<State<T>>,
+    state: CheckedMutex<State<T>>,
     not_full: Condvar,
     not_empty: Condvar,
     capacity: usize,
@@ -53,8 +59,9 @@ pub enum SendError {
 
 impl<T> QueueSender<T> {
     /// Blocking send; returns Err if the queue has been closed.
+    // tb-lint: no-alloc
     pub fn send(&self, item: T) -> Result<(), SendError> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.state.lock();
         loop {
             if st.closed {
                 return Err(SendError::Closed);
@@ -65,19 +72,19 @@ impl<T> QueueSender<T> {
                 self.shared.not_empty.notify_one();
                 return Ok(());
             }
-            st = self.shared.not_full.wait(st).unwrap();
+            st = st.wait(&self.shared.not_full);
         }
     }
 
     pub fn close(&self) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.state.lock();
         st.closed = true;
         self.shared.not_empty.notify_all();
         self.shared.not_full.notify_all();
     }
 
     pub fn len(&self) -> usize {
-        self.shared.state.lock().unwrap().queue.len()
+        self.shared.state.lock().queue.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -101,9 +108,10 @@ impl<T> QueueReceiver<T> {
     /// items into `out` (cleared first; reused across calls, so steady
     /// state moves items without growing the buffer).  Returns false
     /// when the queue is closed with fewer than `n` items remaining.
+    // tb-lint: no-alloc
     pub fn recv_batch_into(&self, n: usize, out: &mut Vec<T>) -> bool {
         out.clear();
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.state.lock();
         loop {
             if st.queue.len() >= n {
                 out.extend(st.queue.drain(..n));
@@ -115,13 +123,13 @@ impl<T> QueueReceiver<T> {
             if st.closed {
                 return false;
             }
-            st = self.shared.not_empty.wait(st).unwrap();
+            st = st.wait(&self.shared.not_empty);
         }
     }
 
     /// Blocking single dequeue; None once closed and empty.
     pub fn recv(&self) -> Option<T> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.state.lock();
         loop {
             if let Some(item) = st.queue.pop_front() {
                 self.shared.depth.sub(1);
@@ -131,13 +139,13 @@ impl<T> QueueReceiver<T> {
             if st.closed {
                 return None;
             }
-            st = self.shared.not_empty.wait(st).unwrap();
+            st = st.wait(&self.shared.not_empty);
         }
     }
 
     /// Non-blocking single dequeue (drain paths).
     pub fn try_recv(&self) -> Option<T> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.state.lock();
         let item = st.queue.pop_front();
         if item.is_some() {
             self.shared.depth.sub(1);
@@ -147,14 +155,14 @@ impl<T> QueueReceiver<T> {
     }
 
     pub fn close(&self) {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = self.shared.state.lock();
         st.closed = true;
         self.shared.not_empty.notify_all();
         self.shared.not_full.notify_all();
     }
 
     pub fn len(&self) -> usize {
-        self.shared.state.lock().unwrap().queue.len()
+        self.shared.state.lock().queue.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -178,10 +186,13 @@ pub fn batching_queue_gauged<T>(
     assert!(capacity > 0);
     depth.set(0);
     let shared = Arc::new(Shared {
-        state: Mutex::new(State {
-            queue: VecDeque::with_capacity(capacity),
-            closed: false,
-        }),
+        state: CheckedMutex::new(
+            STATE_ORDER,
+            State {
+                queue: VecDeque::with_capacity(capacity),
+                closed: false,
+            },
+        ),
         not_full: Condvar::new(),
         not_empty: Condvar::new(),
         capacity,

@@ -298,7 +298,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     for _ in 0..2 {
         return_tx
             .send(LearnerBatch::zeros(&manifest))
-            .expect("fresh return queue");
+            .expect("fresh return queue") // tb-lint: allow(unwrap, queue created two lines up; cannot be closed yet);
     }
     let stacker_manifest = manifest.clone();
     let stacker_pool = buffer_pool.clone();

@@ -26,11 +26,12 @@
 
 use std::collections::VecDeque;
 use std::fmt;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
 use crate::telemetry::gauges::{Counter, Gauge, PipelineGauges};
 use crate::util::stats::Summary;
+use crate::util::sync::{CheckedMutex, LockOrder};
 
 /// Batcher sizing: slot/result buffers are preallocated from these.
 #[derive(Debug, Clone)]
@@ -156,12 +157,19 @@ struct BatchStorage {
     obs: Vec<f32>,
 }
 
+/// Lock ranks for the batcher's three mutexes (registry in
+/// [`crate::util::sync`]): `inner` nests under `buffers` (storage
+/// checkout) and under `stats` (batch close), never the other way.
+const INNER_ORDER: LockOrder = LockOrder::new(10, "batcher.inner");
+const BUFFERS_ORDER: LockOrder = LockOrder::new(20, "batcher.buffers");
+const STATS_ORDER: LockOrder = LockOrder::new(30, "batcher.stats");
+
 struct Shared {
     obs_len: usize,
     num_actions: usize,
     max_batch: usize,
     timeout: Duration,
-    inner: Mutex<Inner>,
+    inner: CheckedMutex<Inner>,
     /// Wakes actors waiting for a free slot.
     slot_free: Condvar,
     /// Slice submitters currently parked in checkout.  A slice needs B
@@ -173,8 +181,8 @@ struct Shared {
     /// Per-slot result rendezvous (all associated with `inner`'s mutex).
     wake: Vec<Condvar>,
     /// Recycled batch storages (one in steady state).
-    buffers: Mutex<Vec<BatchStorage>>,
-    stats: Mutex<BatcherStats>,
+    buffers: CheckedMutex<Vec<BatchStorage>>,
+    stats: CheckedMutex<BatcherStats>,
     /// Telemetry: slots currently checked out / requests that starved.
     slots_in_use: Gauge,
     slot_waits: Counter,
@@ -196,7 +204,7 @@ impl Shared {
     }
 
     fn take_storage(&self) -> BatchStorage {
-        let mut pool = self.buffers.lock().unwrap();
+        let mut pool = self.buffers.lock();
         pool.pop().unwrap_or_else(|| BatchStorage {
             slot_ids: Vec::with_capacity(self.max_batch),
             obs: Vec::with_capacity(self.max_batch * self.obs_len),
@@ -206,12 +214,12 @@ impl Shared {
     fn return_storage(&self, mut storage: BatchStorage) {
         storage.slot_ids.clear();
         storage.obs.clear();
-        self.buffers.lock().unwrap().push(storage);
+        self.buffers.lock().push(storage);
     }
 
     /// Close the queue and fail everything still queued (stream gone).
     fn close_and_fail_queued(&self) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         inner.closed = true;
         while let Some(id) = inner.queue.pop_front() {
             inner.slots[id].state = SlotState::Failed;
@@ -223,7 +231,7 @@ impl Shared {
 
     /// Close the queue; queued requests stay to be drained by the stream.
     fn close(&self) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         inner.closed = true;
         drop(inner);
         self.slot_free.notify_all();
@@ -310,6 +318,7 @@ impl InferenceClient {
     /// (reused across calls — allocates only until its capacity covers
     /// `num_actions`).  Returns the baseline, or None if the batcher
     /// shut down (or the batch failed) before this request was served.
+    // tb-lint: no-alloc
     pub fn infer(&self, obs: &[f32], logits_out: &mut Vec<f32>) -> Option<f32> {
         let s = &*self.shared;
         assert_eq!(
@@ -323,7 +332,7 @@ impl InferenceClient {
         // Check out a slot and write the observation in place, then
         // wait for the result — one critical section end to end (the
         // condvar waits release the lock while blocked).
-        let mut inner = s.inner.lock().unwrap();
+        let mut inner = s.inner.lock();
         let mut starved = false;
         let slot_id = loop {
             if inner.closed {
@@ -338,7 +347,7 @@ impl InferenceClient {
                 starved = true;
                 s.slot_waits.inc();
             }
-            inner = s.slot_free.wait(inner).unwrap();
+            inner = inner.wait(&s.slot_free);
         };
         s.slots_in_use.add(1);
         inner.slots[slot_id].obs.copy_from_slice(obs);
@@ -372,7 +381,7 @@ impl InferenceClient {
                 // InFlight: keep waiting.
                 _ => {}
             }
-            inner = s.wake[slot_id].wait(inner).unwrap();
+            inner = inner.wait(&s.wake[slot_id]);
         }
     }
 
@@ -402,7 +411,7 @@ impl InferenceClient {
     /// client-side because the driver moves the stream into the
     /// inference thread).
     pub fn stats_snapshot(&self) -> BatcherStats {
-        self.shared.stats.lock().unwrap().clone()
+        self.shared.stats.lock().clone()
     }
 }
 
@@ -438,6 +447,7 @@ impl SliceSubmitter {
     /// of concurrent demand (the driver uses the total env count, so
     /// every group and single can hold its slots simultaneously) —
     /// starvation then cannot occur.
+    // tb-lint: no-alloc
     pub fn submit_slice(
         &mut self,
         obs: &[f32],
@@ -471,7 +481,7 @@ impl SliceSubmitter {
         self.ids.clear();
         self.ids.reserve(b); // no-op once warmed up
 
-        let mut inner = s.inner.lock().unwrap();
+        let mut inner = s.inner.lock();
         let mut starved = false;
         while !inner.closed && inner.free.len() < b {
             if !starved {
@@ -484,7 +494,7 @@ impl SliceSubmitter {
                 s.slice_waiters
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             }
-            inner = s.slot_free.wait(inner).unwrap();
+            inner = inner.wait(&s.slot_free);
         }
         if starved {
             s.slice_waiters
@@ -495,7 +505,8 @@ impl SliceSubmitter {
         }
         let now = Instant::now();
         for k in 0..b {
-            let id = inner.free.pop().expect("checked b slots free");
+            // the loop above verified b free slots under this lock
+            let id = inner.free.pop().expect("checked b slots free"); // tb-lint: allow(unwrap, b slots verified free)
             let slot = &mut inner.slots[id];
             slot.obs
                 .copy_from_slice(&obs[k * s.obs_len..(k + 1) * s.obs_len]);
@@ -542,7 +553,7 @@ impl SliceSubmitter {
                     // close) or InFlight: keep waiting.
                     _ => {}
                 }
-                inner = s.wake[id].wait(inner).unwrap();
+                inner = inner.wait(&s.wake[id]);
             }
         }
         if failed {
@@ -563,7 +574,8 @@ pub struct Batch {
 
 impl Batch {
     fn storage(&self) -> &BatchStorage {
-        self.storage.as_ref().expect("batch storage taken")
+        // storage is Some until respond/drop consumes the batch
+        self.storage.as_ref().expect("batch storage taken") // tb-lint: allow(unwrap, Some until respond/drop consumes the batch)
     }
 
     pub fn len(&self) -> usize {
@@ -593,6 +605,7 @@ impl Batch {
     /// *before* any result is written; the dropped batch then fails
     /// its requests, whose actors see None — never a panic or a
     /// misrouted result, even in release builds.
+    // tb-lint: no-alloc
     pub fn respond(
         mut self,
         logits: &[f32],
@@ -618,9 +631,9 @@ impl Batch {
                 got: baselines.len(),
             });
         }
-        let storage = self.storage.take().expect("batch storage taken");
+        let storage = self.storage.take().expect("batch storage taken"); // tb-lint: allow(unwrap, Some until respond/drop consumes the batch)
         {
-            let mut inner = self.shared.inner.lock().unwrap();
+            let mut inner = self.shared.inner.lock();
             for (i, &id) in storage.slot_ids.iter().enumerate() {
                 let slot = &mut inner.slots[id];
                 slot.logits
@@ -643,7 +656,7 @@ impl Drop for Batch {
     fn drop(&mut self) {
         if let Some(storage) = self.storage.take() {
             {
-                let mut inner = self.shared.inner.lock().unwrap();
+                let mut inner = self.shared.inner.lock();
                 for &id in &storage.slot_ids {
                     inner.slots[id].state = SlotState::Failed;
                 }
@@ -674,7 +687,7 @@ impl BatchStream {
         loop {
             let mut first_seen: Option<Instant> = None;
             {
-                let mut inner = s.inner.lock().unwrap();
+                let mut inner = s.inner.lock();
                 let n = inner.queue.len();
                 let full = n >= s.max_batch;
                 let timed_out =
@@ -684,7 +697,7 @@ impl BatchStream {
                     let take = n.min(s.max_batch);
                     let mut storage = s.take_storage();
                     for _ in 0..take {
-                        let id = inner.queue.pop_front().unwrap();
+                        let id = inner.queue.pop_front().unwrap(); // tb-lint: allow(unwrap, take <= queue length under this lock)
                         inner.slots[id].state = SlotState::InFlight;
                         storage.slot_ids.push(id);
                         // Gather into the contiguous batch buffer
@@ -695,7 +708,7 @@ impl BatchStream {
                     // Record stats while the slot table is still
                     // consistent (bounded accumulators: no allocation).
                     let now = Instant::now();
-                    let mut stats = s.stats.lock().unwrap();
+                    let mut stats = s.stats.lock();
                     stats.batches += 1;
                     stats.requests += take as u64;
                     if full {
@@ -734,7 +747,7 @@ impl BatchStream {
     }
 
     pub fn stats(&self) -> BatcherStats {
-        self.shared.stats.lock().unwrap().clone()
+        self.shared.stats.lock().clone()
     }
 
     /// Stop accepting requests; pending ones are still served.
@@ -774,17 +787,20 @@ pub fn dynamic_batcher(cfg: BatcherConfig) -> (InferenceClient, BatchStream) {
         num_actions: cfg.num_actions,
         max_batch: cfg.max_batch,
         timeout: cfg.timeout,
-        inner: Mutex::new(Inner {
-            slots,
-            free: (0..n_slots).rev().collect(),
-            queue: VecDeque::with_capacity(n_slots),
-            closed: false,
-        }),
+        inner: CheckedMutex::new(
+            INNER_ORDER,
+            Inner {
+                slots,
+                free: (0..n_slots).rev().collect(),
+                queue: VecDeque::with_capacity(n_slots),
+                closed: false,
+            },
+        ),
         slot_free: Condvar::new(),
         slice_waiters: std::sync::atomic::AtomicUsize::new(0),
         wake: (0..n_slots).map(|_| Condvar::new()).collect(),
-        buffers: Mutex::new(Vec::new()),
-        stats: Mutex::new(BatcherStats::with_max_batch(cfg.max_batch)),
+        buffers: CheckedMutex::new(BUFFERS_ORDER, Vec::new()),
+        stats: CheckedMutex::new(STATS_ORDER, BatcherStats::with_max_batch(cfg.max_batch)),
         slots_in_use: cfg.slots_in_use,
         slot_waits: cfg.slot_waits,
     });

@@ -149,6 +149,7 @@ impl ReplayBuffer {
 
     /// Copy `r` in place into the next ring slot, evicting the oldest
     /// stored rollout once the ring is full (FIFO).  No allocation.
+    // tb-lint: no-alloc
     pub fn insert(&mut self, r: &Rollout) {
         debug_assert!(r.is_complete(), "only complete rollouts are replayable");
         let evicting = self.len == self.capacity();
@@ -169,6 +170,7 @@ impl ReplayBuffer {
     /// replacement across calls).  Returns a reference straight into
     /// the ring — stack it with [`stack_rollout_into`] and it never
     /// leaves its slot.  `None` while the buffer is empty.
+    // tb-lint: no-alloc
     pub fn sample(&mut self) -> Option<&Rollout> {
         if self.len == 0 {
             return None;
@@ -224,6 +226,7 @@ pub fn replay_count(batch_size: usize, ratio: f64) -> usize {
 /// (pinned by test).  The caller inserts the fresh rollouts into the
 /// ring *afterwards* (so a rollout never competes with itself within
 /// its own batch) and then recycles them into the `RolloutPool`.
+// tb-lint: no-alloc
 pub fn stack_mixed(
     fresh: &[Rollout],
     replay: &mut ReplayBuffer,
@@ -247,7 +250,7 @@ pub fn stack_mixed(
         stack_rollout_into(r, bi, m, batch);
     }
     for bi in fresh.len()..b {
-        let r = replay.sample().expect("checked non-empty above");
+        let r = replay.sample().expect("checked non-empty above"); // tb-lint: allow(unwrap, non-empty verified before the loop)
         stack_rollout_into(r, bi, m, batch);
     }
 }

@@ -84,6 +84,7 @@ impl Rollout {
     /// allocation).  This is the replay ring's write primitive —
     /// the same copy-in-place discipline as the pool's recycle path.
     /// Panics on shape mismatch (the slices disagree in length).
+    // tb-lint: no-alloc
     pub fn copy_from(&mut self, src: &Rollout) {
         debug_assert_eq!(
             (self.t, self.obs_len, self.num_actions),
@@ -187,9 +188,10 @@ impl RolloutPool {
 
     /// Take a buffer out of the pool, blocking while it is empty.
     /// Returns `None` once the pool has been closed.
+    // tb-lint: no-alloc
     pub fn rent(&self) -> Option<Rollout> {
         let g = &self.shared.gauges;
-        let mut inner = self.shared.inner.lock().unwrap();
+        let mut inner = self.shared.inner.lock().unwrap(); // tb-lint: allow(unwrap, leaf pool lock; poison propagates)
         let mut starved = false;
         loop {
             if inner.closed {
@@ -205,13 +207,14 @@ impl RolloutPool {
                 starved = true;
                 g.pool_rent_waits.inc();
             }
-            inner = self.shared.available.wait(inner).unwrap();
+            inner = self.shared.available.wait(inner).unwrap(); // tb-lint: allow(unwrap, leaf pool lock; poison propagates)
         }
     }
 
     /// Non-blocking rent.
+    // tb-lint: no-alloc
     pub fn try_rent(&self) -> Option<Rollout> {
-        let mut inner = self.shared.inner.lock().unwrap();
+        let mut inner = self.shared.inner.lock().unwrap(); // tb-lint: allow(unwrap, leaf pool lock; poison propagates)
         if inner.closed {
             return None;
         }
@@ -225,9 +228,10 @@ impl RolloutPool {
     /// Return a buffer to the pool (reset for reuse).  Buffers handed
     /// back after close — or beyond capacity — are simply dropped (and
     /// stay counted as rented: they really are gone from the pool).
+    // tb-lint: no-alloc
     pub fn recycle(&self, mut r: Rollout) {
         r.filled = 0;
-        let mut inner = self.shared.inner.lock().unwrap();
+        let mut inner = self.shared.inner.lock().unwrap(); // tb-lint: allow(unwrap, leaf pool lock; poison propagates)
         if inner.closed || inner.free.len() >= self.shared.capacity {
             return;
         }
@@ -239,7 +243,7 @@ impl RolloutPool {
 
     /// Close the pool: every blocked and future `rent` returns `None`.
     pub fn close(&self) {
-        let mut inner = self.shared.inner.lock().unwrap();
+        let mut inner = self.shared.inner.lock().unwrap(); // tb-lint: allow(unwrap, leaf pool lock; poison propagates)
         inner.closed = true;
         drop(inner);
         self.shared.available.notify_all();
@@ -247,7 +251,7 @@ impl RolloutPool {
 
     /// Buffers currently available for rent.
     pub fn available(&self) -> usize {
-        self.shared.inner.lock().unwrap().free.len()
+        self.shared.inner.lock().unwrap().free.len() // tb-lint: allow(unwrap, leaf pool lock; poison propagates)
     }
 
     pub fn capacity(&self) -> usize {
@@ -259,6 +263,7 @@ impl RolloutPool {
 
 /// Stack B rollouts into the learner's time-major batch.
 /// `batch` buffers are reused across calls (no allocation).
+// tb-lint: no-alloc
 pub fn stack_rollouts(rollouts: &[Rollout], m: &Manifest, batch: &mut LearnerBatch) {
     assert_eq!(rollouts.len(), m.batch_size, "need exactly B rollouts");
     for (bi, r) in rollouts.iter().enumerate() {
@@ -271,6 +276,7 @@ pub fn stack_rollouts(rollouts: &[Rollout], m: &Manifest, batch: &mut LearnerBat
 /// ([`crate::coordinator::replay`]) uses it to place sampled rollouts
 /// directly from their ring slots, with no intermediate copy and no
 /// allocation.
+// tb-lint: no-alloc
 pub fn stack_rollout_into(r: &Rollout, bi: usize, m: &Manifest, batch: &mut LearnerBatch) {
     let (t, b, a) = (m.unroll_length, m.batch_size, m.num_actions);
     let obs_len = m.obs_len();

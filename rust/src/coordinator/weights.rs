@@ -40,7 +40,7 @@ impl WeightsStore {
     /// Publish a new snapshot; returns its version.
     pub fn publish(&self, params: ParamVecs) -> u64 {
         let (lock, cv) = &*self.state;
-        let mut st = lock.lock().unwrap();
+        let mut st = lock.lock().unwrap(); // tb-lint: allow(unwrap, leaf weights lock; poison propagates)
         st.version += 1;
         st.params = Arc::new(params);
         cv.notify_all();
@@ -50,14 +50,14 @@ impl WeightsStore {
     /// Latest snapshot (no blocking). Version 0 = nothing published.
     pub fn latest(&self) -> (u64, Arc<ParamVecs>) {
         let (lock, _) = &*self.state;
-        let st = lock.lock().unwrap();
+        let st = lock.lock().unwrap(); // tb-lint: allow(unwrap, leaf weights lock; poison propagates)
         (st.version, st.params.clone())
     }
 
     /// Block until a version newer than `than` exists (or closed).
     pub fn wait_newer(&self, than: u64) -> Option<(u64, Arc<ParamVecs>)> {
         let (lock, cv) = &*self.state;
-        let mut st = lock.lock().unwrap();
+        let mut st = lock.lock().unwrap(); // tb-lint: allow(unwrap, leaf weights lock; poison propagates)
         loop {
             if st.version > than {
                 return Some((st.version, st.params.clone()));
@@ -65,18 +65,18 @@ impl WeightsStore {
             if st.closed {
                 return None;
             }
-            st = cv.wait(st).unwrap();
+            st = cv.wait(st).unwrap(); // tb-lint: allow(unwrap, leaf weights lock; poison propagates)
         }
     }
 
     pub fn close(&self) {
         let (lock, cv) = &*self.state;
-        lock.lock().unwrap().closed = true;
+        lock.lock().unwrap().closed = true; // tb-lint: allow(unwrap, leaf weights lock; poison propagates)
         cv.notify_all();
     }
 
     pub fn version(&self) -> u64 {
-        self.state.0.lock().unwrap().version
+        self.state.0.lock().unwrap().version // tb-lint: allow(unwrap, leaf weights lock; poison propagates)
     }
 }
 

@@ -52,7 +52,7 @@ impl EnvSpec {
 /// of distinct names ever seen (tiny: one per served env name).
 pub fn intern_name(name: &str) -> &'static str {
     static TABLE: std::sync::Mutex<Vec<&'static str>> = std::sync::Mutex::new(Vec::new());
-    let mut table = TABLE.lock().unwrap();
+    let mut table = TABLE.lock().unwrap(); // tb-lint: allow(unwrap, leaf intern-table lock; poison propagates)
     if let Some(&found) = table.iter().find(|&&n| n == name) {
         return found;
     }

@@ -41,6 +41,7 @@ pub mod agent;
 pub mod config;
 pub mod coordinator;
 pub mod env;
+pub mod lint;
 pub mod metrics;
 pub mod rpc;
 pub mod runtime;

@@ -1,0 +1,163 @@
+//! `tb-lint`: the in-tree invariant checker (DESIGN.md §Static-Analysis).
+//!
+//! The repo's performance and hygiene conventions — zero steady-state
+//! allocation on the actor→batcher→learner path, all diagnostics
+//! through `telemetry::log`, typed errors instead of panics on the
+//! wire, justified atomic orderings — were previously enforced only by
+//! counting-allocator tests and review.  This module makes them
+//! machine-checked: a dependency-free line/token-level scanner
+//! ([`scanner`]) plus a rule engine ([`rules`]) walk `rust/src` and
+//! report violations with `file:line` diagnostics.
+//!
+//! The `tb_lint` binary (`src/bin/tb_lint.rs`) is the CI entry point:
+//! it exits non-zero on any finding, and `scripts/ci.sh` runs it on
+//! every PR.  The checker is self-hosting — this module and the rest
+//! of the tree lint clean.
+//!
+//! Rule inventory, suppression syntax and guidance for annotating new
+//! no-alloc regions live in DESIGN.md §Static-Analysis; the executable
+//! spec is the fixture suite in `rust/tests/lint_fixtures.rs`.
+
+use std::path::Path;
+
+pub mod rules;
+pub mod scanner;
+
+/// The enforced rule set.  `Ordering` is surfaced to users as
+/// `seqcst` (the token it polices).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// Allocating tokens inside a `no-alloc` fenced fn.
+    Alloc,
+    /// Raw print macros outside `telemetry/`, `main.rs`, `bin/`.
+    Print,
+    /// Unjustified `.unwrap()` / `.expect(` in non-test code.
+    Unwrap,
+    /// `Ordering::SeqCst` without an inline reason comment.
+    Ordering,
+    /// Directive problems: unknown rules, unused allows, dangling fences.
+    Suppression,
+}
+
+impl Rule {
+    /// The name used in diagnostics and in `allow(<name>, …)`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::Alloc => "alloc",
+            Rule::Print => "print",
+            Rule::Unwrap => "unwrap",
+            Rule::Ordering => "seqcst",
+            Rule::Suppression => "suppression",
+        }
+    }
+
+    /// Parse an allowable rule name (`suppression` findings cannot be
+    /// suppressed, so it does not parse).
+    pub fn parse(name: &str) -> Option<Rule> {
+        match name {
+            "alloc" => Some(Rule::Alloc),
+            "print" => Some(Rule::Print),
+            "unwrap" => Some(Rule::Unwrap),
+            "seqcst" => Some(Rule::Ordering),
+            _ => None,
+        }
+    }
+}
+
+/// One diagnostic: `file:line: [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path relative to the linted root (e.g. `rpc/codec.rs`).
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file,
+            self.line,
+            self.rule.name(),
+            self.message
+        )
+    }
+}
+
+/// Lint one file's source text.  `file` is the path relative to the
+/// linted root — it decides print-rule exemptions and labels the
+/// diagnostics.  This is the entry point the fixture tests use.
+pub fn lint_source(file: &str, src: &str) -> Vec<Finding> {
+    rules::analyze(file, src)
+}
+
+/// Result of linting a source tree.
+#[derive(Debug)]
+pub struct TreeReport {
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// All findings, ordered by file then line.
+    pub findings: Vec<Finding>,
+}
+
+/// Lint every `.rs` file under `src_root` (recursively, sorted order).
+pub fn lint_tree(src_root: &Path) -> anyhow::Result<TreeReport> {
+    let mut files: Vec<String> = Vec::new();
+    collect_rs(src_root, src_root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for rel in &files {
+        let full = src_root.join(rel);
+        let src = std::fs::read_to_string(&full)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", full.display()))?;
+        findings.extend(rules::analyze(rel, &src));
+    }
+    Ok(TreeReport {
+        files: files.len(),
+        findings,
+    })
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> anyhow::Result<()> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| anyhow::anyhow!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().map_or(false, |e| e == "rs") {
+            let rel = path.strip_prefix(root).unwrap_or(&path);
+            out.push(rel.to_string_lossy().replace('\\', "/"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finding_display_format() {
+        let f = Finding {
+            file: "rpc/codec.rs".to_string(),
+            line: 42,
+            rule: Rule::Unwrap,
+            message: "msg".to_string(),
+        };
+        assert_eq!(f.to_string(), "rpc/codec.rs:42: [unwrap] msg");
+    }
+
+    #[test]
+    fn rule_names_round_trip() {
+        for r in [Rule::Alloc, Rule::Print, Rule::Unwrap, Rule::Ordering] {
+            assert_eq!(Rule::parse(r.name()), Some(r));
+        }
+        assert_eq!(Rule::parse("suppression"), None);
+        assert_eq!(Rule::parse("bogus"), None);
+    }
+}

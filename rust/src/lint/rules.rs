@@ -1,0 +1,548 @@
+//! The `tb-lint` rule engine (DESIGN.md §Static-Analysis).
+//!
+//! Consumes the lexical lines produced by [`crate::lint::scanner`] and
+//! layers the structural tracking on top: brace depth, `fn` spans,
+//! `#[cfg(test)]` regions, and the two directive forms
+//!
+//! * `tb-lint: no-alloc` (own line, directly above a fn, attributes in
+//!   between are fine) — fences the fn as a zero-allocation region;
+//! * `tb-lint: allow(<rule>, <reason>)` — trailing on a line it
+//!   suppresses that rule on that line; on its own line directly above
+//!   a fn it suppresses the rule for the whole fn body.
+//!
+//! Five rules are enforced (inventory in DESIGN.md):
+//!
+//! 1. `alloc`   — allocating tokens inside a `no-alloc` fenced fn;
+//! 2. `print`   — raw `println!`-family macros outside `telemetry/`,
+//!    `main.rs` and `bin/`;
+//! 3. `unwrap`  — `.unwrap()` / `.expect(` in non-test code without a
+//!    justifying allow;
+//! 4. `seqcst`  — `Ordering::SeqCst` without an inline reason comment;
+//! 5. `suppression` — the directives themselves: unknown rule names,
+//!    missing reasons, dangling fences and unused allows are errors.
+//!
+//! All of `#[cfg(test)]` is exempt from rules 1–4: test code may
+//! unwrap, print and allocate freely.
+
+use super::scanner::{self, ScannedLine};
+use super::{Finding, Rule};
+
+/// Tokens banned inside a `no-alloc` fenced fn.
+const ALLOC_NEEDLES: [&str; 7] = [
+    "Vec::new",
+    "vec![",
+    "to_vec",
+    "format!",
+    "String::from",
+    "Box::new",
+    "clone()",
+];
+
+/// Raw output macros; diagnostics must go through `telemetry::log`.
+const PRINT_NEEDLES: [&str; 4] = ["println!", "eprintln!", "print!", "eprint!"];
+
+/// Panicking accessors that need a written justification.
+const UNWRAP_NEEDLES: [&str; 2] = [".unwrap()", ".expect("];
+
+/// Strongest atomic ordering; needs an inline reason comment.
+const SEQCST_NEEDLE: &str = "SeqCst";
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Token-boundary substring search: when the needle starts in an
+/// identifier character the match must not be preceded by one (so
+/// `eprintln!` never matches the `println!` needle and `into_vec`
+/// never matches `to_vec`), and when it ends in one it must not be
+/// followed by one (so `.unwrap()` never matches inside
+/// `.unwrap_or(…)`-like names — though that case is already excluded
+/// by the needle's trailing `()`).  Needles starting with `.` skip the
+/// preceding check: the receiver before the dot is an identifier.
+fn find_token(code: &str, needle: &str) -> bool {
+    let needs_pre = needle.chars().next().map_or(false, is_ident);
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(needle) {
+        let at = from + pos;
+        let end = at + needle.len();
+        let before_ok =
+            !needs_pre || code[..at].chars().next_back().map_or(true, |c| !is_ident(c));
+        let needs_post = needle.chars().next_back().map_or(false, is_ident);
+        let after_ok = !needs_post || code[end..].chars().next().map_or(true, |c| !is_ident(c));
+        if before_ok && after_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Files where the `print` rule does not apply: the logging subsystem
+/// itself, the CLI entry point, and the repo's own tools under `bin/`
+/// (stdout *is* their interface).  Paths are relative to `src/`.
+fn is_print_exempt(file: &str) -> bool {
+    let f = file.replace('\\', "/");
+    f == "main.rs" || f.starts_with("telemetry/") || f.starts_with("bin/")
+}
+
+enum Directive {
+    NoAlloc,
+    Allow(Rule),
+}
+
+/// Parse a directive out of a line comment's text, if one is present.
+/// `None` = no directive; `Some(Err(msg))` = malformed directive.
+fn parse_directive(comment: &str) -> Option<Result<Directive, String>> {
+    let marker = "tb-lint:";
+    let idx = comment.find(marker)?;
+    let rest = comment[idx + marker.len()..].trim();
+    if rest == "no-alloc" {
+        return Some(Ok(Directive::NoAlloc));
+    }
+    if let Some(args) = rest.strip_prefix("allow(") {
+        let end = match args.rfind(')') {
+            Some(e) => e,
+            None => return Some(Err("malformed allow: missing `)`".to_string())),
+        };
+        let inner = &args[..end];
+        let (rule_name, reason) = match inner.split_once(',') {
+            Some((r, why)) => (r.trim(), why.trim()),
+            None => (inner.trim(), ""),
+        };
+        let rule = match Rule::parse(rule_name) {
+            Some(r) => r,
+            None => {
+                return Some(Err(format!(
+                    "unknown rule `{rule_name}` in allow(…); known rules: alloc, print, unwrap, seqcst"
+                )))
+            }
+        };
+        if reason.is_empty() {
+            return Some(Err(format!(
+                "allow({rule_name}) needs a reason: `allow({rule_name}, <why>)`"
+            )));
+        }
+        return Some(Ok(Directive::Allow(rule)));
+    }
+    Some(Err(format!("unknown tb-lint directive `{rest}`")))
+}
+
+/// An `allow(rule, reason)` directive, tracked for the unused sweep.
+struct AllowRec {
+    line: usize,
+    rule: Rule,
+    used: bool,
+}
+
+/// An open fn body: `close_depth` is the brace depth just before its
+/// `{`, so the scope ends when depth returns to that value.
+struct FnScope {
+    close_depth: i32,
+    no_alloc: bool,
+    allow_idxs: Vec<usize>,
+}
+
+/// A fn whose signature has started but whose body `{` has not yet
+/// been seen (multi-line signatures, trait method declarations).
+struct PendingFn {
+    sig_depth: i32,
+    no_alloc: Option<usize>,
+    allow_idxs: Vec<usize>,
+}
+
+fn mk(file: &str, line: usize, rule: Rule, message: String) -> Finding {
+    Finding {
+        file: file.to_string(),
+        line,
+        rule,
+        message,
+    }
+}
+
+fn suppressed(
+    allows: &mut [AllowRec],
+    line_idxs: &[usize],
+    fn_idxs: &[usize],
+    rule: Rule,
+) -> bool {
+    for &i in line_idxs.iter().chain(fn_idxs.iter()) {
+        if allows[i].rule == rule {
+            allows[i].used = true;
+            return true;
+        }
+    }
+    false
+}
+
+/// Lint one file's source.  `file` is the path relative to `src/`
+/// (used for print-rule exemptions and in diagnostics).
+pub fn analyze(file: &str, src: &str) -> Vec<Finding> {
+    let lines: Vec<ScannedLine> = scanner::scan(src);
+    let print_exempt = is_print_exempt(file);
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut allows: Vec<AllowRec> = Vec::new();
+    let mut depth: i32 = 0;
+    let mut test_stack: Vec<i32> = Vec::new();
+    let mut fn_stack: Vec<FnScope> = Vec::new();
+    let mut pending_fn: Option<PendingFn> = None;
+    let mut pending_no_alloc: Option<usize> = None;
+    let mut pending_allow_idxs: Vec<usize> = Vec::new();
+    let mut pending_cfg_test: Option<i32> = None;
+
+    for (idx, line) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let code = line.code.as_str();
+        let blank = code.trim().is_empty();
+        // test state at line start; refined during the walk so the
+        // opening line of a test region already counts as test code
+        let mut in_test = !test_stack.is_empty();
+
+        // -- directives ---------------------------------------------------
+        let mut line_allow_idxs: Vec<usize> = Vec::new();
+        if !in_test && !line.doc {
+            match parse_directive(&line.comment) {
+                None => {}
+                Some(Err(msg)) => findings.push(mk(file, lineno, Rule::Suppression, msg)),
+                Some(Ok(Directive::NoAlloc)) => {
+                    if !blank {
+                        findings.push(mk(
+                            file,
+                            lineno,
+                            Rule::Suppression,
+                            "no-alloc fence must be on its own line above a fn".to_string(),
+                        ));
+                    } else if let Some(prev) = pending_no_alloc.replace(lineno) {
+                        findings.push(mk(
+                            file,
+                            prev,
+                            Rule::Suppression,
+                            "dangling no-alloc fence (no fn follows it)".to_string(),
+                        ));
+                    }
+                }
+                Some(Ok(Directive::Allow(rule))) => {
+                    allows.push(AllowRec {
+                        line: lineno,
+                        rule,
+                        used: false,
+                    });
+                    let i = allows.len() - 1;
+                    if blank {
+                        pending_allow_idxs.push(i);
+                    } else {
+                        line_allow_idxs.push(i);
+                    }
+                }
+            }
+        }
+
+        if code.contains("#[cfg(test)]") && pending_cfg_test.is_none() {
+            pending_cfg_test = Some(depth);
+        }
+
+        // -- structural walk ----------------------------------------------
+        // fn scopes active at any point during this line (a single-line
+        // fn opens and closes within the walk; its rules still apply)
+        let mut no_alloc_active = fn_stack.iter().any(|s| s.no_alloc);
+        let mut fn_allow_idxs: Vec<usize> = fn_stack
+            .iter()
+            .flat_map(|s| s.allow_idxs.iter().copied())
+            .collect();
+        if let Some(pf) = &pending_fn {
+            no_alloc_active |= pf.no_alloc.is_some();
+            fn_allow_idxs.extend(pf.allow_idxs.iter().copied());
+        }
+
+        let cs: Vec<char> = code.chars().collect();
+        let mut j = 0;
+        while j < cs.len() {
+            let c = cs[j];
+            if is_ident(c) && !c.is_ascii_digit() {
+                let start = j;
+                while j < cs.len() && is_ident(cs[j]) {
+                    j += 1;
+                }
+                if j - start == 2 && cs[start] == 'f' && cs[start + 1] == 'n' && pending_fn.is_none()
+                {
+                    // `fn(` with no name is a fn-pointer type, not a decl
+                    let mut k = j;
+                    while k < cs.len() && cs[k] == ' ' {
+                        k += 1;
+                    }
+                    if k < cs.len() && cs[k] == '(' {
+                        continue;
+                    }
+                    let pf = PendingFn {
+                        sig_depth: depth,
+                        no_alloc: pending_no_alloc.take(),
+                        allow_idxs: std::mem::take(&mut pending_allow_idxs),
+                    };
+                    no_alloc_active |= pf.no_alloc.is_some();
+                    fn_allow_idxs.extend(pf.allow_idxs.iter().copied());
+                    pending_fn = Some(pf);
+                }
+                continue;
+            }
+            match c {
+                '{' => {
+                    if let Some(pf) = pending_fn.take() {
+                        fn_stack.push(FnScope {
+                            close_depth: depth,
+                            no_alloc: pf.no_alloc.is_some(),
+                            allow_idxs: pf.allow_idxs,
+                        });
+                    }
+                    if pending_cfg_test.take().is_some() {
+                        test_stack.push(depth);
+                        in_test = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    while fn_stack.last().map_or(false, |s| s.close_depth >= depth) {
+                        fn_stack.pop();
+                    }
+                    while test_stack.last().map_or(false, |&d| d >= depth) {
+                        test_stack.pop();
+                    }
+                }
+                ';' => {
+                    // a `;` at signature depth means a bodiless fn
+                    // (trait method declaration): drop the pending fn
+                    let bodiless = pending_fn
+                        .as_ref()
+                        .map_or(false, |pf| pf.sig_depth == depth);
+                    if bodiless {
+                        if let Some(pf) = pending_fn.take() {
+                            if let Some(l) = pf.no_alloc {
+                                findings.push(mk(
+                                    file,
+                                    l,
+                                    Rule::Suppression,
+                                    "no-alloc fence on a bodiless fn declaration".to_string(),
+                                ));
+                            }
+                            // its allows fall through to the unused sweep
+                        }
+                    }
+                    if pending_cfg_test == Some(depth) {
+                        // e.g. `#[cfg(test)] use …;` — attribute spent
+                        pending_cfg_test = None;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+
+        // -- rules ----------------------------------------------------------
+        if !in_test && !blank {
+            if no_alloc_active {
+                for needle in ALLOC_NEEDLES {
+                    if find_token(code, needle)
+                        && !suppressed(&mut allows, &line_allow_idxs, &fn_allow_idxs, Rule::Alloc)
+                    {
+                        findings.push(mk(
+                            file,
+                            lineno,
+                            Rule::Alloc,
+                            format!("`{needle}` inside a no-alloc fenced fn"),
+                        ));
+                    }
+                }
+            }
+            if !print_exempt {
+                for needle in PRINT_NEEDLES {
+                    if find_token(code, needle)
+                        && !suppressed(&mut allows, &line_allow_idxs, &fn_allow_idxs, Rule::Print)
+                    {
+                        findings.push(mk(
+                            file,
+                            lineno,
+                            Rule::Print,
+                            format!(
+                                "`{needle}` outside telemetry/ and main.rs — use tb_info!/tb_warn!"
+                            ),
+                        ));
+                    }
+                }
+            }
+            for needle in UNWRAP_NEEDLES {
+                if find_token(code, needle)
+                    && !suppressed(&mut allows, &line_allow_idxs, &fn_allow_idxs, Rule::Unwrap)
+                {
+                    findings.push(mk(
+                        file,
+                        lineno,
+                        Rule::Unwrap,
+                        format!("`{needle}…` in non-test code needs `allow(unwrap, <reason>)`"),
+                    ));
+                }
+            }
+            if find_token(code, SEQCST_NEEDLE) {
+                let allowed =
+                    suppressed(&mut allows, &line_allow_idxs, &fn_allow_idxs, Rule::Ordering);
+                if !allowed && line.comment.trim().is_empty() {
+                    findings.push(mk(
+                        file,
+                        lineno,
+                        Rule::Ordering,
+                        "Ordering::SeqCst needs an inline reason comment".to_string(),
+                    ));
+                }
+            }
+        }
+
+        // -- pending-directive invalidation ---------------------------------
+        // A code line that is neither an attribute nor (part of) a fn
+        // declaration breaks the directive→fn attachment.
+        let trimmed = code.trim_start();
+        let is_attr = trimmed.starts_with("#[") || trimmed.starts_with("#!");
+        if !blank && !is_attr && pending_fn.is_none() {
+            if let Some(l) = pending_no_alloc.take() {
+                findings.push(mk(
+                    file,
+                    l,
+                    Rule::Suppression,
+                    "dangling no-alloc fence (no fn follows it)".to_string(),
+                ));
+            }
+            for i in pending_allow_idxs.drain(..) {
+                allows[i].used = true; // reported here, not in the unused sweep
+                findings.push(mk(
+                    file,
+                    allows[i].line,
+                    Rule::Suppression,
+                    "standalone allow must sit directly above a fn (use a trailing comment for line-level suppression)"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+
+    // -- end of file ---------------------------------------------------------
+    if let Some(l) = pending_no_alloc {
+        findings.push(mk(
+            file,
+            l,
+            Rule::Suppression,
+            "dangling no-alloc fence (no fn follows it)".to_string(),
+        ));
+    }
+    for a in &allows {
+        if !a.used {
+            findings.push(mk(
+                file,
+                a.line,
+                Rule::Suppression,
+                format!("unused suppression: no `{}` finding here", a.rule.name()),
+            ));
+        }
+    }
+    findings.sort_by(|a, b| (a.line, a.rule.name()).cmp(&(b.line, b.rule.name())));
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_at(src: &str) -> Vec<(Rule, usize)> {
+        analyze("some/file.rs", src)
+            .into_iter()
+            .map(|f| (f.rule, f.line))
+            .collect()
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(find_token("x.to_vec()", "to_vec"));
+        assert!(!find_token("x.into_vec()", "to_vec"));
+        assert!(find_token("eprintln!(\"\")", "eprintln!"));
+        assert!(!find_token("eprintln!(\"\")", "println!"));
+        assert!(!find_token("x.unwrap_or(0)", ".unwrap()"));
+        assert!(find_token("x.unwrap()", ".unwrap()"));
+        assert!(!find_token("fn expect(x: u32)", ".expect("));
+        assert!(find_token("j.expect(key)", ".expect("));
+    }
+
+    #[test]
+    fn unwrap_flagged_and_allowed() {
+        let src = "fn f() {\n    x.unwrap();\n    y.unwrap(); // tb-lint: allow(unwrap, fine)\n}\n";
+        assert_eq!(rules_at(src), vec![(Rule::Unwrap, 2)]);
+    }
+
+    #[test]
+    fn fn_level_allow_covers_body() {
+        let src = "// tb-lint: allow(unwrap, locks are leaf-level)\nfn f() {\n    a.unwrap();\n    b.expect(\"x\");\n}\n";
+        assert_eq!(rules_at(src), vec![]);
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() {\n        x.unwrap();\n        println!(\"dbg\");\n    }\n}\n";
+        assert_eq!(rules_at(src), vec![]);
+    }
+
+    #[test]
+    fn no_alloc_fence_catches_alloc_tokens() {
+        let src = "// tb-lint: no-alloc\nfn hot(v: &[f32]) {\n    let c = v.to_vec();\n}\nfn cold(v: &[f32]) {\n    let c = v.to_vec();\n}\n";
+        assert_eq!(rules_at(src), vec![(Rule::Alloc, 3)]);
+    }
+
+    #[test]
+    fn print_rule_and_exemptions() {
+        let src = "fn f() {\n    println!(\"hi\");\n}\n";
+        assert_eq!(rules_at(src), vec![(Rule::Print, 2)]);
+        assert_eq!(analyze("main.rs", src), vec![]);
+        assert_eq!(analyze("telemetry/log.rs", src), vec![]);
+        assert_eq!(analyze("bin/tb_lint.rs", src), vec![]);
+    }
+
+    #[test]
+    fn seqcst_needs_reason() {
+        let src = "fn f() {\n    X.store(1, Ordering::SeqCst);\n    Y.store(1, Ordering::SeqCst); // fence: pairs with load in g()\n}\n";
+        assert_eq!(rules_at(src), vec![(Rule::Ordering, 2)]);
+    }
+
+    #[test]
+    fn unknown_rule_and_unused_allow_are_errors() {
+        let src = "fn f() { // tb-lint: allow(frobnicate, what)\n    let x = 1; // tb-lint: allow(unwrap, never fires)\n}\n";
+        assert_eq!(
+            rules_at(src),
+            vec![(Rule::Suppression, 1), (Rule::Suppression, 2)]
+        );
+    }
+
+    #[test]
+    fn dangling_no_alloc_fence_is_an_error() {
+        let src = "// tb-lint: no-alloc\nstruct NotAFn;\n";
+        assert_eq!(rules_at(src), vec![(Rule::Suppression, 1)]);
+    }
+
+    #[test]
+    fn directives_in_strings_and_docs_ignored() {
+        let src = "/// example: `x.unwrap()` — docs never fire\nfn f() {\n    let s = \".unwrap()\";\n    let d = \"tb-lint: allow(print, nope)\";\n}\n";
+        assert_eq!(rules_at(src), vec![]);
+    }
+
+    #[test]
+    fn attributes_between_fence_and_fn_are_fine() {
+        let src = "// tb-lint: no-alloc\n#[inline]\nfn hot() {\n    let v = vec![1];\n}\n";
+        assert_eq!(rules_at(src), vec![(Rule::Alloc, 4)]);
+    }
+
+    #[test]
+    fn single_line_fn_scope_applies() {
+        let src = "// tb-lint: allow(unwrap, tiny)\nfn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert_eq!(rules_at(src), vec![]);
+    }
+
+    #[test]
+    fn multiline_signature_attaches_fence() {
+        let src = "// tb-lint: no-alloc\nfn hot(\n    a: &[f32],\n    b: &mut [f32],\n) {\n    let v = a.to_vec();\n}\n";
+        assert_eq!(rules_at(src), vec![(Rule::Alloc, 6)]);
+    }
+}

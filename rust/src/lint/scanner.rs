@@ -1,0 +1,259 @@
+//! Lexical line scanner for `tb-lint` (DESIGN.md §Static-Analysis).
+//!
+//! The rule engine works on *tokens in code*, so before any needle
+//! matching each source line is split into a code part and a comment
+//! part: string/char literal contents are dropped (the delimiters stay,
+//! so `"..."` scans as `""`), line/block comments are removed from the
+//! code part, and the text of a `//` comment is captured separately so
+//! directives can be parsed from it.  Doc comments (`///`, `//!`) are
+//! flagged: rule needles inside documentation prose or example code
+//! must never fire, and directives inside doc text are ignored.
+//!
+//! The scanner is deliberately lexical, not a parser: it understands
+//! exactly as much Rust as is needed to never mistake a string or a
+//! comment for code (including multi-line strings, raw strings
+//! `r#"…"#`, byte strings, char literals vs. lifetimes, and nested
+//! block comments).  Everything structural — brace depth, `fn`
+//! boundaries, `#[cfg(test)]` regions — is layered on top by the rule
+//! engine in [`crate::lint::rules`].
+
+/// One source line, lexically split.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScannedLine {
+    /// Code with string/char-literal contents and all comments removed.
+    pub code: String,
+    /// Text after `//` when the line carries a line comment (the text
+    /// after the slashes, untrimmed); empty otherwise.  Block-comment
+    /// text is never captured: directives must be line comments.
+    pub comment: String,
+    /// True when the comment is a doc comment (`///` or `//!`).
+    pub doc: bool,
+}
+
+/// Multi-line lexical mode carried across lines.
+enum Mode {
+    Code,
+    /// Inside a normal `"…"` string literal.
+    Str,
+    /// Inside a raw string literal with this many `#` delimiters.
+    RawStr(usize),
+    /// Inside `/* … */` block comments, nested this deep.
+    Block(usize),
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// If `chars[i..]` starts a raw (byte) string literal — `r"`, `r#"`,
+/// `br##"`, … — return `(hash_count, index_just_past_the_opening_quote)`.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut k = i;
+    if chars.get(k) == Some(&'b') {
+        k += 1;
+    }
+    if chars.get(k) != Some(&'r') {
+        return None;
+    }
+    k += 1;
+    let mut hashes = 0;
+    while chars.get(k) == Some(&'#') {
+        hashes += 1;
+        k += 1;
+    }
+    if chars.get(k) == Some(&'"') {
+        Some((hashes, k + 1))
+    } else {
+        None
+    }
+}
+
+/// Split every line of `src` into code and comment parts.
+pub fn scan(src: &str) -> Vec<ScannedLine> {
+    let mut out = Vec::new();
+    let mut mode = Mode::Code;
+    for raw in src.lines() {
+        let chars: Vec<char> = raw.chars().collect();
+        let n = chars.len();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut doc = false;
+        let mut i = 0;
+        while i < n {
+            match mode {
+                Mode::Str => match chars[i] {
+                    '\\' => i += 2,
+                    '"' => {
+                        code.push('"');
+                        i += 1;
+                        mode = Mode::Code;
+                    }
+                    _ => i += 1,
+                },
+                Mode::RawStr(hashes) => {
+                    if chars[i] == '"'
+                        && chars[i + 1..].len() >= hashes
+                        && chars[i + 1..i + 1 + hashes].iter().all(|&c| c == '#')
+                    {
+                        code.push('"');
+                        i += 1 + hashes;
+                        mode = Mode::Code;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::Block(depth) => {
+                    if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        i += 2;
+                        mode = if depth > 1 { Mode::Block(depth - 1) } else { Mode::Code };
+                    } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        i += 2;
+                        mode = Mode::Block(depth + 1);
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::Code => {
+                    let c = chars[i];
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        // line comment: capture text, finish the line
+                        let rest: String = chars[i + 2..].iter().collect();
+                        doc = rest.starts_with('/') || rest.starts_with('!');
+                        comment = rest;
+                        break;
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        i += 2;
+                        mode = Mode::Block(1);
+                    } else if c == '"' {
+                        code.push('"');
+                        i += 1;
+                        mode = Mode::Str;
+                    } else if (c == 'r' || c == 'b')
+                        && !code.chars().next_back().map_or(false, is_ident)
+                    {
+                        if let Some((hashes, after)) = raw_string_open(&chars, i) {
+                            code.push('"');
+                            i = after;
+                            mode = Mode::RawStr(hashes);
+                        } else {
+                            code.push(c);
+                            i += 1;
+                        }
+                    } else if c == '\'' {
+                        // char literal vs. lifetime
+                        if chars.get(i + 1) == Some(&'\\') {
+                            // escaped char literal: '\n', '\\', '\u{…}'
+                            let mut k = i + 2;
+                            if chars.get(k) == Some(&'u') {
+                                while k < n && chars[k] != '}' {
+                                    k += 1;
+                                }
+                            }
+                            k += 1;
+                            if chars.get(k) == Some(&'\'') {
+                                code.push_str("''");
+                                i = k + 1;
+                            } else {
+                                code.push('\'');
+                                i += 1;
+                            }
+                        } else if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                            // simple char literal: 'x'
+                            code.push_str("''");
+                            i += 3;
+                        } else {
+                            // lifetime ('a, 'static) or stray quote
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(ScannedLine { code, comment, doc });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        scan(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strips_string_contents() {
+        let c = codes("let x = \"vec![oops]\";");
+        assert_eq!(c[0], "let x = \"\";");
+    }
+
+    #[test]
+    fn strips_line_comments_and_flags_doc() {
+        let lines = scan("let a = 1; // trailing note\n/// doc with unwrap()\n//! inner doc");
+        assert_eq!(lines[0].code, "let a = 1; ");
+        assert_eq!(lines[0].comment, " trailing note");
+        assert!(!lines[0].doc);
+        assert_eq!(lines[1].code, "");
+        assert!(lines[1].doc);
+        assert!(lines[2].doc);
+    }
+
+    #[test]
+    fn multi_line_string_spans_lines() {
+        let c = codes("let s = \"first \\\n    second\";\nlet t = 1;");
+        assert_eq!(c[0], "let s = \"");
+        assert_eq!(c[1], "\";");
+        assert_eq!(c[2], "let t = 1;");
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let c = codes("let v = r#\"{\"a\": [1, {\"b\": 2}]}\"#;");
+        assert_eq!(c[0], "let v = \"\";");
+        // multi-line raw string: braces inside must not leak into code
+        let c = codes("let v = r#\"{\n  \"x\": {}\n}\"#; let y = 2;");
+        assert_eq!(c[0], "let v = \"");
+        assert_eq!(c[1], "");
+        assert_eq!(c[2], "\"; let y = 2;");
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let c = codes("fn f<'a>(x: &'a str) -> char { '{' }");
+        assert_eq!(c[0], "fn f<'a>(x: &'a str) -> char { '' }");
+        let c = codes("let q = b'\"'; let esc = '\\n'; let bs = '\\\\';");
+        assert_eq!(c[0], "let q = b''; let esc = ''; let bs = '';");
+    }
+
+    #[test]
+    fn unicode_escape_char_literal() {
+        let c = codes("let e = '\\u{1F600}'; let after = \"s\";");
+        assert_eq!(c[0], "let e = ''; let after = \"\";");
+    }
+
+    #[test]
+    fn block_comments_nested_and_multiline() {
+        let c = codes("let a = 1; /* vec![ */ let b = 2;\nx /* outer /* inner */ still */ y\ndone");
+        assert_eq!(c[0], "let a = 1;  let b = 2;");
+        assert_eq!(c[1], "x  y");
+        assert_eq!(c[2], "done");
+    }
+
+    #[test]
+    fn raw_string_not_confused_with_ident_ending_in_r() {
+        // `writer"` is an identifier followed by a normal string start
+        let c = codes("let x = writer\"abc\";");
+        assert_eq!(c[0], "let x = writer\"\";");
+    }
+
+    #[test]
+    fn division_is_not_a_comment() {
+        let c = codes("let half = n / 2; let quarter = n / 4;");
+        assert_eq!(c[0], "let half = n / 2; let quarter = n / 4;");
+    }
+}

@@ -90,7 +90,7 @@ impl Metrics {
 
     pub fn record_episode(&self, ep_return: f32, ep_steps: u32) {
         self.episodes.fetch_add(1, Ordering::Relaxed);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap(); // tb-lint: allow(unwrap, leaf metrics lock; poison propagates the recording panic)
         inner.return_ema.add(ep_return as f64);
         inner.step_ema.add(ep_steps as f64);
         if inner.last_returns.len() >= RETURN_WINDOW {
@@ -101,7 +101,7 @@ impl Metrics {
 
     pub fn record_learner_step(&self, total_loss: f32) {
         self.learner_steps.fetch_add(1, Ordering::Relaxed);
-        self.inner.lock().unwrap().loss_ema.add(total_loss as f64);
+        self.inner.lock().unwrap().loss_ema.add(total_loss as f64); // tb-lint: allow(unwrap, leaf metrics lock; poison propagates the recording panic)
     }
 
     pub fn record_rollout(&self) {
@@ -109,7 +109,7 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.inner.lock().unwrap(); // tb-lint: allow(unwrap, leaf metrics lock; poison propagates the recording panic)
         let frames = self.frames.load(Ordering::Relaxed);
         let elapsed = self.start.elapsed().as_secs_f64();
         let mean_return = if inner.last_returns.is_empty() {

@@ -206,13 +206,13 @@ impl<'a> Cursor<'a> {
     }
     fn u32(&mut self) -> anyhow::Result<u32> {
         self.need(4)?;
-        let v = u32::from_le_bytes(self.b[self.i..self.i + 4].try_into().unwrap());
+        let v = u32::from_le_bytes(self.b[self.i..self.i + 4].try_into().unwrap()); // tb-lint: allow(unwrap, need(4) above guarantees the slice is 4 bytes)
         self.i += 4;
         Ok(v)
     }
     fn u64(&mut self) -> anyhow::Result<u64> {
         self.need(8)?;
-        let v = u64::from_le_bytes(self.b[self.i..self.i + 8].try_into().unwrap());
+        let v = u64::from_le_bytes(self.b[self.i..self.i + 8].try_into().unwrap()); // tb-lint: allow(unwrap, need(8) above guarantees the slice is 8 bytes)
         self.i += 8;
         Ok(v)
     }
@@ -240,7 +240,7 @@ impl<'a> Cursor<'a> {
         self.need(out.len() * 4)?;
         for (k, dst) in out.iter_mut().enumerate() {
             let off = self.i + 4 * k;
-            *dst = f32::from_le_bytes(self.b[off..off + 4].try_into().unwrap());
+            *dst = f32::from_le_bytes(self.b[off..off + 4].try_into().unwrap()); // tb-lint: allow(unwrap, need() above covers every 4-byte chunk)
         }
         self.i += 4 * out.len();
         Ok(())
@@ -293,6 +293,7 @@ impl Msg {
     /// Encode into a reusable buffer (cleared first).  Steady-state
     /// callers reuse `out` across frames, so encoding allocates
     /// nothing once the buffer's capacity has warmed up.
+    // tb-lint: no-alloc
     pub fn encode_into(&self, out: &mut Vec<u8>) {
         out.clear();
         let mut b = Buf(out);
@@ -443,6 +444,7 @@ pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> anyhow::Result<()> {
 
 /// Write one framed message through a reusable scratch buffer
 /// (zero allocation once `scratch` has warmed up).
+// tb-lint: no-alloc
 pub fn write_msg_into<W: Write>(w: &mut W, scratch: &mut Vec<u8>, msg: &Msg) -> anyhow::Result<()> {
     msg.encode_into(scratch);
     write_frame(w, scratch)
@@ -547,6 +549,7 @@ pub struct ObsHeader {
 /// Encode and write one `Observation` frame from borrowed parts —
 /// the server's per-step path, with the obs plane taken by slice so
 /// no owning [`Msg`] is ever built.
+// tb-lint: no-alloc
 pub fn write_observation<W: Write>(
     w: &mut W,
     scratch: &mut Vec<u8>,
@@ -560,6 +563,7 @@ pub fn write_observation<W: Write>(
 }
 
 /// Encode and write one `Action` frame (client per-step path).
+// tb-lint: no-alloc
 pub fn write_action<W: Write>(w: &mut W, scratch: &mut Vec<u8>, action: u32) -> anyhow::Result<()> {
     scratch.clear();
     let mut b = Buf(scratch);
@@ -569,6 +573,7 @@ pub fn write_action<W: Write>(w: &mut W, scratch: &mut Vec<u8>, action: u32) -> 
 
 /// Decode an `Observation` payload directly into `obs_out` (whose
 /// length must equal the frame's obs length).  Zero allocation.
+// tb-lint: no-alloc
 pub fn decode_observation_into(payload: &[u8], obs_out: &mut [f32]) -> anyhow::Result<ObsHeader> {
     let mut c = Cursor { b: payload, i: 0 };
     let tag = c.u8()?;
@@ -595,6 +600,7 @@ pub fn decode_observation_into(payload: &[u8], obs_out: &mut [f32]) -> anyhow::R
 }
 
 /// Decode an `Action` payload.  Zero allocation.
+// tb-lint: no-alloc
 pub fn decode_action(payload: &[u8]) -> anyhow::Result<u32> {
     let mut c = Cursor { b: payload, i: 0 };
     let tag = c.u8()?;
@@ -613,6 +619,7 @@ pub fn decode_action(payload: &[u8]) -> anyhow::Result<u32> {
 /// Encode and write one `ObsBatch` frame from borrowed parts — the
 /// vectorized server's per-step path.  `obs` is the whole group's
 /// contiguous `[B * obs_len]` block; no owning [`Msg`] is ever built.
+// tb-lint: no-alloc
 pub fn write_obs_batch<W: Write>(
     w: &mut W,
     scratch: &mut Vec<u8>,
@@ -627,6 +634,7 @@ pub fn write_obs_batch<W: Write>(
 
 /// Encode and write one `ActionBatch` frame (vectorized client
 /// per-step path).  Zero allocation once `scratch` has warmed up.
+// tb-lint: no-alloc
 pub fn write_action_batch<W: Write>(
     w: &mut W,
     scratch: &mut Vec<u8>,
@@ -641,6 +649,7 @@ pub fn write_action_batch<W: Write>(
 /// Decode an `ObsBatch` payload directly into per-slot `headers_out`
 /// and the contiguous `obs_out` block (both must match the frame's
 /// group size exactly).  Zero allocation.
+// tb-lint: no-alloc
 pub fn decode_obs_batch_into(
     payload: &[u8],
     headers_out: &mut [ObsHeader],
@@ -676,6 +685,7 @@ pub fn decode_obs_batch_into(
 /// Decode an `ActionBatch` payload into `actions_out` (whose length
 /// must equal the frame's group size — a mismatch is the typed
 /// batched-frame length error the server reports).  Zero allocation.
+// tb-lint: no-alloc
 pub fn decode_action_batch_into(payload: &[u8], actions_out: &mut [u32]) -> anyhow::Result<()> {
     let mut c = Cursor { b: payload, i: 0 };
     let tag = c.u8()?;

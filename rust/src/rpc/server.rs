@@ -136,7 +136,7 @@ impl EnvServer {
                                             );
                                         }
                                     })
-                                    .expect("spawn stream thread"),
+                                    .expect("spawn stream thread"), // tb-lint: allow(unwrap, thread spawn fails only on OS resource exhaustion)
                             );
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {

@@ -117,7 +117,7 @@ pub fn load(path: &Path, manifest: &Manifest) -> Result<ParamVecs> {
         let mut buf = vec![0u8; n * 4];
         r.read_exact(&mut buf)?;
         for (i, chunk) in buf.chunks_exact(4).enumerate() {
-            data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            data[i] = f32::from_le_bytes(chunk.try_into().unwrap()); // tb-lint: allow(unwrap, chunks_exact(4) yields exactly 4-byte chunks)
         }
         out.push(data);
     }

@@ -49,16 +49,16 @@ impl LeafSpec {
     fn from_json(j: &Json) -> anyhow::Result<LeafSpec> {
         Ok(LeafSpec {
             name: j
-                .expect("name")?
+                .expect("name")? // tb-lint: allow(unwrap, Json::expect returns Result, not a panic; see util/json.rs)
                 .as_str()
                 .ok_or_else(|| anyhow::anyhow!("leaf name not a string"))?
                 .to_string(),
             shape: j
-                .expect("shape")?
+                .expect("shape")? // tb-lint: allow(unwrap, Json::expect returns Result, not a panic; see util/json.rs)
                 .usize_list()
                 .ok_or_else(|| anyhow::anyhow!("leaf shape not a list"))?,
             dtype: DType::parse(
-                j.expect("dtype")?
+                j.expect("dtype")? // tb-lint: allow(unwrap, Json::expect returns Result, not a panic; see util/json.rs)
                     .as_str()
                     .ok_or_else(|| anyhow::anyhow!("leaf dtype not a string"))?,
             )?,
@@ -93,7 +93,7 @@ impl Manifest {
     pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
         let j = parse_file(&dir.join("manifest.json"))?;
         let leaf_list = |key: &str| -> anyhow::Result<Vec<LeafSpec>> {
-            j.expect(key)?
+            j.expect(key)? // tb-lint: allow(unwrap, Json::expect returns Result, not a panic; see util/json.rs)
                 .as_arr()
                 .ok_or_else(|| anyhow::anyhow!("{key} not a list"))?
                 .iter()
@@ -101,18 +101,18 @@ impl Manifest {
                 .collect()
         };
         let obs: Vec<usize> = j
-            .expect("obs_shape")?
+            .expect("obs_shape")? // tb-lint: allow(unwrap, Json::expect returns Result, not a panic; see util/json.rs)
             .usize_list()
             .ok_or_else(|| anyhow::anyhow!("obs_shape not a list"))?;
         anyhow::ensure!(obs.len() == 3, "obs_shape must be rank 3");
         let str_field = |key: &str| -> anyhow::Result<String> {
-            Ok(j.expect(key)?
+            Ok(j.expect(key)? // tb-lint: allow(unwrap, Json::expect returns Result, not a panic; see util/json.rs)
                 .as_str()
                 .ok_or_else(|| anyhow::anyhow!("{key} not a string"))?
                 .to_string())
         };
         let num_field = |key: &str| -> anyhow::Result<usize> {
-            j.expect(key)?
+            j.expect(key)? // tb-lint: allow(unwrap, Json::expect returns Result, not a panic; see util/json.rs)
                 .as_usize()
                 .ok_or_else(|| anyhow::anyhow!("{key} not a number"))
         };
@@ -139,13 +139,13 @@ impl Manifest {
             params: leaf_list("params")?,
             opt_state: leaf_list("opt_state")?,
             stats_names: j
-                .expect("stats_names")?
+                .expect("stats_names")? // tb-lint: allow(unwrap, Json::expect returns Result, not a panic; see util/json.rs)
                 .as_arr()
                 .ok_or_else(|| anyhow::anyhow!("stats_names not a list"))?
                 .iter()
                 .map(|s| s.as_str().unwrap_or("?").to_string())
                 .collect(),
-            hyperparams: j.expect("hyperparams")?.clone(),
+            hyperparams: j.expect("hyperparams")?.clone(), // tb-lint: allow(unwrap, Json::expect returns Result, not a panic; see util/json.rs)
             hlo_sha256: str_field("hlo_sha256")?,
         };
         // consistency: param_count equals the sum of leaf sizes

@@ -168,7 +168,7 @@ impl InferenceEngine {
             .map(|(s, m)| (*s, m))
             .find(|(s, _)| *s >= n)
             .unwrap_or_else(|| {
-                let (s, m) = self.inference.last().unwrap();
+                let (s, m) = self.inference.last().unwrap(); // tb-lint: allow(unwrap, inference table is non-empty by construction)
                 (*s, m)
             });
 
@@ -326,7 +326,7 @@ impl LearnerEngine {
             outs.len(),
             n_p + n_o + 1
         );
-        let stats_lit = outs.pop().unwrap();
+        let stats_lit = outs.pop().unwrap(); // tb-lint: allow(unwrap, length checked by the ensure above)
         let stats = LearnerStats {
             values: literal_to_f32s(&stats_lit)?,
         };

@@ -221,20 +221,20 @@ impl CaptureSink {
 
     /// Captured lines, formatted as the stderr sink would print them.
     pub fn lines(&self) -> Vec<String> {
-        self.lines.lock().unwrap().iter().map(|(_, l)| l.clone()).collect()
+        self.lines.lock().unwrap().iter().map(|(_, l)| l.clone()).collect() // tb-lint: allow(unwrap, leaf capture-sink lock; poison propagates)
     }
 
     /// Captured `(level, line)` records.
     pub fn records(&self) -> Vec<(Level, String)> {
-        self.lines.lock().unwrap().clone()
+        self.lines.lock().unwrap().clone() // tb-lint: allow(unwrap, leaf capture-sink lock; poison propagates)
     }
 
     pub fn contains(&self, needle: &str) -> bool {
-        self.lines.lock().unwrap().iter().any(|(_, l)| l.contains(needle))
+        self.lines.lock().unwrap().iter().any(|(_, l)| l.contains(needle)) // tb-lint: allow(unwrap, leaf capture-sink lock; poison propagates)
     }
 
     pub fn len(&self) -> usize {
-        self.lines.lock().unwrap().len()
+        self.lines.lock().unwrap().len() // tb-lint: allow(unwrap, leaf capture-sink lock; poison propagates)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -245,7 +245,7 @@ impl CaptureSink {
 impl LogSink for CaptureSink {
     fn log(&self, r: &Record<'_>) {
         let line = format!("[{}] [{}] {}", r.level, r.target, r.args);
-        self.lines.lock().unwrap().push((r.level, line));
+        self.lines.lock().unwrap().push((r.level, line)); // tb-lint: allow(unwrap, leaf capture-sink lock; poison propagates)
     }
 }
 

@@ -360,7 +360,7 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap(); // tb-lint: allow(unwrap, span contains only ASCII digit/sign bytes)
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))

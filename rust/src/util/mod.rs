@@ -8,3 +8,4 @@ pub mod counting_alloc;
 pub mod json;
 pub mod rng;
 pub mod stats;
+pub mod sync;

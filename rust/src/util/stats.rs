@@ -58,7 +58,7 @@ impl Summary {
             return f64::NAN;
         }
         let mut v = self.samples.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap()); // tb-lint: allow(unwrap, bench samples are finite durations, never NaN)
         let rank = ((q / 100.0) * (v.len() - 1) as f64).round() as usize;
         v[rank.min(v.len() - 1)]
     }
@@ -224,6 +224,7 @@ impl Bench {
         });
     }
 
+    // tb-lint: allow(print, bench tables print to stdout by contract)
     pub fn report(&self) {
         println!("\n== bench: {} ==", self.name);
         println!(

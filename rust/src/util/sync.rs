@@ -1,0 +1,315 @@
+//! Debug-checked lock ordering (DESIGN.md §Static-Analysis).
+//!
+//! The coordinator's hot paths nest a small, fixed set of mutexes
+//! (dynamic batcher: `inner` → `buffers` → `stats`; learner queue:
+//! `state`, never nested).  A lock-order regression there deadlocks CI
+//! silently instead of failing a test, so this module wraps
+//! `std::sync::Mutex` with a rank check: every [`CheckedMutex`] carries
+//! a [`LockOrder`] (a rank plus a diagnostic name), and in debug builds
+//! a thread-local stack of held ranks asserts that locks are always
+//! acquired in strictly increasing rank order.  Violations panic with
+//! both lock names — loudly, at the acquisition site, in whatever test
+//! first exercises the bad nesting.
+//!
+//! Release builds compile the tracking away entirely: no thread-local
+//! traffic, no branches, and — important for the allocation-regression
+//! gate — the debug tracking itself is a fixed-size array, so even
+//! debug builds never allocate on lock/unlock.
+//!
+//! Rank registry (keep globally unique; gaps are deliberate so new
+//! locks can slot in between):
+//!
+//! | rank | lock                              |
+//! |------|-----------------------------------|
+//! | 10   | `dynamic_batcher` `inner`         |
+//! | 20   | `dynamic_batcher` `buffers`       |
+//! | 30   | `dynamic_batcher` `stats`         |
+//! | 40   | `batching_queue` `state`          |
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// A lock's place in the global acquisition order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LockOrder {
+    /// Position in the acquisition order; a thread may only take a
+    /// lock whose rank is strictly greater than every rank it holds.
+    pub rank: u16,
+    /// Name used in violation panics (e.g. `"batcher.inner"`).
+    pub name: &'static str,
+}
+
+impl LockOrder {
+    pub const fn new(rank: u16, name: &'static str) -> LockOrder {
+        LockOrder { rank, name }
+    }
+}
+
+/// Deepest checked-lock nesting tracked per thread (the real code
+/// nests at most 2; 16 leaves headroom without heap allocation).
+#[cfg(debug_assertions)]
+const MAX_HELD: usize = 16;
+
+#[cfg(debug_assertions)]
+#[derive(Clone, Copy)]
+struct Held {
+    ranks: [u16; MAX_HELD],
+    names: [&'static str; MAX_HELD],
+    len: usize,
+}
+
+#[cfg(debug_assertions)]
+impl Held {
+    const EMPTY: Held = Held {
+        ranks: [0; MAX_HELD],
+        names: [""; MAX_HELD],
+        len: 0,
+    };
+}
+
+#[cfg(debug_assertions)]
+thread_local! {
+    static HELD: std::cell::Cell<Held> = const { std::cell::Cell::new(Held::EMPTY) };
+}
+
+#[cfg(debug_assertions)]
+fn rank_push(order: LockOrder) {
+    HELD.with(|cell| {
+        let mut held = cell.get();
+        if held.len > 0 {
+            let top_rank = held.ranks[held.len - 1];
+            let top_name = held.names[held.len - 1];
+            assert!(
+                top_rank < order.rank,
+                "lock-order violation: acquiring `{}` (rank {}) while holding `{}` (rank {}); \
+                 checked locks must be taken in strictly increasing rank order",
+                order.name,
+                order.rank,
+                top_name,
+                top_rank,
+            );
+        }
+        assert!(held.len < MAX_HELD, "checked-lock nesting deeper than {MAX_HELD}");
+        held.ranks[held.len] = order.rank;
+        held.names[held.len] = order.name;
+        held.len += 1;
+        cell.set(held);
+    });
+}
+
+#[cfg(debug_assertions)]
+fn rank_pop(order: LockOrder) {
+    HELD.with(|cell| {
+        let mut held = cell.get();
+        // Guards may legally drop out of LIFO order; remove the most
+        // recent entry with this rank rather than asserting LIFO.
+        let mut i = held.len;
+        while i > 0 {
+            i -= 1;
+            if held.ranks[i] == order.rank {
+                for j in i..held.len - 1 {
+                    held.ranks[j] = held.ranks[j + 1];
+                    held.names[j] = held.names[j + 1];
+                }
+                held.len -= 1;
+                cell.set(held);
+                return;
+            }
+        }
+        // Unbalanced pop: only reachable if a guard was forged; ignore
+        // rather than panic during another panic's unwind.
+    });
+}
+
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+fn rank_push(_order: LockOrder) {}
+
+#[cfg(not(debug_assertions))]
+#[inline(always)]
+fn rank_pop(_order: LockOrder) {}
+
+/// `Mutex` wrapper that asserts rank-ordered acquisition in debug
+/// builds.  Poisoning is handled here once: a poisoned lock means a
+/// thread panicked while holding it, and every consumer of these locks
+/// previously propagated that panic — so the wrapper does too.
+#[derive(Debug)]
+pub struct CheckedMutex<T> {
+    order: LockOrder,
+    inner: Mutex<T>,
+}
+
+impl<T> CheckedMutex<T> {
+    pub const fn new(order: LockOrder, value: T) -> CheckedMutex<T> {
+        CheckedMutex {
+            order,
+            inner: Mutex::new(value),
+        }
+    }
+
+    /// Lock, asserting rank order against locks this thread holds.
+    /// Poison panics are concentrated here so call sites stay
+    /// unwrap-free.
+    pub fn lock(&self) -> CheckedGuard<'_, T> {
+        rank_push(self.order);
+        let guard = match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                rank_pop(self.order);
+                panic!(
+                    "lock `{}` poisoned: a thread panicked while holding it ({poisoned})",
+                    self.order.name
+                );
+            }
+        };
+        CheckedGuard {
+            guard: Some(guard),
+            order: self.order,
+        }
+    }
+
+    pub fn order(&self) -> LockOrder {
+        self.order
+    }
+}
+
+/// Guard for a [`CheckedMutex`]; releases the rank entry on drop.
+///
+/// The `Option` is `None` only transiently inside [`CheckedGuard::wait`]
+/// while the raw guard is lent to `Condvar::wait`.
+pub struct CheckedGuard<'a, T> {
+    guard: Option<MutexGuard<'a, T>>,
+    order: LockOrder,
+}
+
+impl<'a, T> CheckedGuard<'a, T> {
+    /// Block on `cv`, releasing and re-acquiring the underlying mutex —
+    /// the checked-lock equivalent of `Condvar::wait`.  The rank stays
+    /// on the held stack while blocked: the thread cannot acquire
+    /// anything else while parked, and the mutex is re-held by the
+    /// time this returns.
+    // tb-lint: allow(unwrap, guard is always Some outside wait; see CheckedGuard docs)
+    pub fn wait(mut self, cv: &Condvar) -> CheckedGuard<'a, T> {
+        let raw = self.guard.take().expect("guard present outside wait");
+        let raw = match cv.wait(raw) {
+            Ok(g) => g,
+            Err(poisoned) => panic!(
+                "lock `{}` poisoned during condvar wait ({poisoned})",
+                self.order.name
+            ),
+        };
+        self.guard = Some(raw);
+        self
+    }
+}
+
+impl<T> Deref for CheckedGuard<'_, T> {
+    type Target = T;
+    // tb-lint: allow(unwrap, guard is always Some outside wait; see CheckedGuard docs)
+    fn deref(&self) -> &T {
+        self.guard.as_ref().expect("guard present outside wait")
+    }
+}
+
+impl<T> DerefMut for CheckedGuard<'_, T> {
+    // tb-lint: allow(unwrap, guard is always Some outside wait; see CheckedGuard docs)
+    fn deref_mut(&mut self) -> &mut T {
+        self.guard.as_mut().expect("guard present outside wait")
+    }
+}
+
+impl<T> Drop for CheckedGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.guard.is_some() {
+            rank_pop(self.order);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    const LOW: LockOrder = LockOrder::new(1, "test.low");
+    const HIGH: LockOrder = LockOrder::new(2, "test.high");
+
+    #[test]
+    fn lock_and_mutate() {
+        let m = CheckedMutex::new(LOW, 41);
+        *m.lock() += 1;
+        assert_eq!(*m.lock(), 42);
+    }
+
+    #[test]
+    fn increasing_rank_nesting_is_fine() {
+        let a = CheckedMutex::new(LOW, 1);
+        let b = CheckedMutex::new(HIGH, 2);
+        let ga = a.lock();
+        let gb = b.lock();
+        assert_eq!(*ga + *gb, 3);
+    }
+
+    #[test]
+    fn non_lifo_guard_drop_is_fine() {
+        let a = CheckedMutex::new(LOW, 1);
+        let b = CheckedMutex::new(HIGH, 2);
+        let ga = a.lock();
+        let gb = b.lock();
+        drop(ga);
+        drop(gb);
+        // stack is clean again: re-acquiring low rank must not trip
+        let _ = a.lock();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "lock-order violation")]
+    fn decreasing_rank_nesting_panics() {
+        let a = CheckedMutex::new(LOW, 1);
+        let b = CheckedMutex::new(HIGH, 2);
+        let _gb = b.lock();
+        let _ga = a.lock();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "lock-order violation")]
+    fn equal_rank_nesting_panics() {
+        let a = CheckedMutex::new(LOW, 1);
+        let b = CheckedMutex::new(LOW, 2);
+        let _ga = a.lock();
+        let _gb = b.lock();
+    }
+
+    #[test]
+    fn wait_releases_and_reacquires() {
+        let pair = Arc::new((CheckedMutex::new(LOW, false), Condvar::new()));
+        let pair2 = pair.clone();
+        let waiter = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            let mut g = m.lock();
+            while !*g {
+                g = g.wait(cv);
+            }
+            *g
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        {
+            let (m, cv) = &*pair;
+            *m.lock() = true;
+            cv.notify_all();
+        }
+        assert!(waiter.join().unwrap());
+    }
+
+    #[test]
+    fn rank_is_released_after_wait_scope_ends() {
+        // after a lock+wait cycle completes, taking a lower rank works
+        let high = CheckedMutex::new(HIGH, 0);
+        let low = CheckedMutex::new(LOW, 0);
+        drop(high.lock());
+        let _ = low.lock();
+    }
+}

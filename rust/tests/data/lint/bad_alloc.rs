@@ -1,0 +1,13 @@
+//! Fixture: allocating tokens inside a `no-alloc` fenced fn.
+
+// tb-lint: no-alloc
+fn hot(v: &[f32]) -> Vec<f32> {
+    let copied = v.to_vec();
+    let boxed = Box::new(copied.len());
+    drop(boxed);
+    copied
+}
+
+fn cold(v: &[f32]) -> Vec<f32> {
+    v.to_vec()
+}

@@ -1,0 +1,6 @@
+//! Fixture: raw print macros outside telemetry/ and main.rs.
+
+fn report(x: u32) {
+    println!("x = {x}");
+    eprintln!("warning: {x}");
+}

@@ -1,0 +1,10 @@
+//! Fixture: `Ordering::SeqCst` without an inline reason comment.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+static X: AtomicU32 = AtomicU32::new(0);
+
+fn f() {
+    X.store(1, Ordering::SeqCst);
+    X.store(2, Ordering::SeqCst); // fence: pairs with the load in g()
+}

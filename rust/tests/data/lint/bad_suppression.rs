@@ -1,0 +1,10 @@
+//! Fixture: broken directives — unknown rule, unused allow, dangling fence.
+
+fn f(x: Option<u32>) -> u32 {
+    let y = 1; // tb-lint: allow(frobnicate, no such rule)
+    let z = 2; // tb-lint: allow(unwrap, never fires on this line)
+    x.unwrap_or(y + z)
+}
+
+// tb-lint: no-alloc
+struct NotAFn;

@@ -1,0 +1,13 @@
+//! Fixture: unjustified `.unwrap()` / `.expect(` in non-test code.
+
+fn f(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+
+fn g(r: Result<u32, String>) -> u32 {
+    r.expect("boom")
+}
+
+fn justified(x: Option<u32>) -> u32 {
+    x.unwrap() // tb-lint: allow(unwrap, fixture: justified on this line)
+}

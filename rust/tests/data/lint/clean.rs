@@ -1,0 +1,28 @@
+//! Fixture: a file that must produce zero findings — fenced hot path
+//! without allocation, fallible code without panicking accessors, and
+//! a test module exercising every freedom test code is granted.
+
+// tb-lint: no-alloc
+fn hot(dst: &mut [f32], src: &[f32]) {
+    dst.copy_from_slice(src);
+}
+
+fn fallible(x: Option<u32>) -> u32 {
+    x.unwrap_or(0)
+}
+
+/// Doc text may mention `x.unwrap()` or `println!` freely; so may
+/// strings: the scanner never reads needles out of either.
+fn strings() -> &'static str {
+    "a string saying vec![1] and .unwrap() is not code"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_do_anything() {
+        let v = vec![1, 2, 3];
+        assert_eq!(v.clone().pop().unwrap(), 3);
+        println!("tests may print");
+    }
+}

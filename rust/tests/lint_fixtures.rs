@@ -1,0 +1,143 @@
+//! Fixture suite for `tb-lint` (DESIGN.md §Static-Analysis): known-bad
+//! snippets under `tests/data/lint/` must produce exactly the seeded
+//! diagnostics (rule + line), the clean fixture must produce none, and
+//! the crate's own `src/` tree must lint clean — the same self-hosting
+//! gate `scripts/ci.sh` enforces via the `tb_lint` binary.
+
+use torchbeast::lint::{lint_source, lint_tree, Rule};
+
+/// Findings of a fixture as comparable `(rule, line)` pairs.
+fn rules_at(file: &str, src: &str) -> Vec<(Rule, usize)> {
+    lint_source(file, src)
+        .into_iter()
+        .map(|f| (f.rule, f.line))
+        .collect()
+}
+
+#[test]
+fn bad_alloc_fixture() {
+    let src = include_str!("data/lint/bad_alloc.rs");
+    let findings = lint_source("bad_alloc.rs", src);
+    assert_eq!(
+        findings
+            .iter()
+            .map(|f| (f.rule, f.line))
+            .collect::<Vec<_>>(),
+        vec![(Rule::Alloc, 5), (Rule::Alloc, 6)]
+    );
+    // exact diagnostics name the offending token
+    assert_eq!(findings[0].message, "`to_vec` inside a no-alloc fenced fn");
+    assert_eq!(
+        findings[1].message,
+        "`Box::new` inside a no-alloc fenced fn"
+    );
+    // the unfenced fn with the same token produced no finding
+    assert!(findings.iter().all(|f| f.line < 10));
+}
+
+#[test]
+fn bad_print_fixture() {
+    let src = include_str!("data/lint/bad_print.rs");
+    assert_eq!(
+        rules_at("bad_print.rs", src),
+        vec![(Rule::Print, 4), (Rule::Print, 5)]
+    );
+    // the same source is exempt under telemetry/ and main.rs
+    assert_eq!(rules_at("telemetry/bad_print.rs", src), vec![]);
+    assert_eq!(rules_at("main.rs", src), vec![]);
+}
+
+#[test]
+fn bad_unwrap_fixture() {
+    let src = include_str!("data/lint/bad_unwrap.rs");
+    // lines 4 and 8 fire; line 12 is suppressed by its trailing allow
+    assert_eq!(
+        rules_at("bad_unwrap.rs", src),
+        vec![(Rule::Unwrap, 4), (Rule::Unwrap, 8)]
+    );
+}
+
+#[test]
+fn bad_seqcst_fixture() {
+    let src = include_str!("data/lint/bad_seqcst.rs");
+    let findings = lint_source("bad_seqcst.rs", src);
+    // line 8 has no reason comment; line 9's inline comment passes
+    assert_eq!(
+        findings
+            .iter()
+            .map(|f| (f.rule, f.line))
+            .collect::<Vec<_>>(),
+        vec![(Rule::Ordering, 8)]
+    );
+    assert_eq!(
+        findings[0].message,
+        "Ordering::SeqCst needs an inline reason comment"
+    );
+}
+
+#[test]
+fn bad_suppression_fixture() {
+    let src = include_str!("data/lint/bad_suppression.rs");
+    let findings = lint_source("bad_suppression.rs", src);
+    assert_eq!(
+        findings
+            .iter()
+            .map(|f| (f.rule, f.line))
+            .collect::<Vec<_>>(),
+        vec![
+            (Rule::Suppression, 4),
+            (Rule::Suppression, 5),
+            (Rule::Suppression, 9),
+        ]
+    );
+    assert!(findings[0].message.contains("unknown rule `frobnicate`"));
+    assert_eq!(
+        findings[1].message,
+        "unused suppression: no `unwrap` finding here"
+    );
+    assert_eq!(
+        findings[2].message,
+        "dangling no-alloc fence (no fn follows it)"
+    );
+}
+
+#[test]
+fn clean_fixture_has_zero_findings() {
+    let src = include_str!("data/lint/clean.rs");
+    assert_eq!(rules_at("clean.rs", src), vec![]);
+}
+
+#[test]
+fn finding_renders_file_line_rule() {
+    let src = include_str!("data/lint/bad_print.rs");
+    let findings = lint_source("sub/dir/bad_print.rs", src);
+    assert_eq!(
+        findings[0].to_string(),
+        "sub/dir/bad_print.rs:4: [print] `println!` outside telemetry/ and main.rs — use tb_info!/tb_warn!"
+    );
+}
+
+/// The self-hosting gate: the crate's own source tree must be clean.
+/// This is the same check `cargo run --bin tb_lint` performs in CI,
+/// kept as a test so `cargo test` alone catches regressions.
+#[test]
+fn src_tree_is_lint_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint_tree(&root).expect("lint src tree");
+    assert!(
+        report.findings.is_empty(),
+        "tb-lint findings in src/:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    // sanity: the walk really saw the tree, not an empty directory
+    assert!(
+        report.files >= 40,
+        "expected the full source tree, scanned only {} files",
+        report.files
+    );
+}

@@ -20,6 +20,19 @@ cargo bench --no-run
 echo "== cargo test -q =="
 cargo test -q
 
+# Invariant discipline is machine-checked: the in-tree linter
+# (src/lint/, DESIGN.md §Static-Analysis) must find zero violations —
+# no-alloc fences, telemetry routing, unwrap justifications, SeqCst
+# reasons, and the suppression comments themselves.
+echo "== tb-lint (self-hosting invariant check) =="
+cargo run --release --quiet --bin tb_lint
+
+# Adversarial hardening: >=10k mutated frames per codec decode path
+# must produce typed errors, never panics or unbounded allocation, in
+# the optimized build that ships.
+echo "== cargo test --release --test fuzz_codec =="
+cargo test --release --test fuzz_codec -- --nocapture
+
 # Perf discipline is gated, not advisory: the counting-allocator test
 # must prove the actor->queue->stack path allocation-free in release
 # mode (debug-mode results are identical, but release is what ships).
