@@ -79,8 +79,8 @@ fn main() -> anyhow::Result<()> {
     let engine = match &cfg.init_checkpoint {
         Some(path) => {
             let mut e = InferenceEngine::load(&cfg.artifact_dir)?;
-            let params = checkpoint::load(path, &e.manifest)?;
-            e.set_params(&params, 1)?;
+            let (params, version) = checkpoint::load(path, &e.manifest)?;
+            e.set_params(&params, version.max(1))?;
             env_name = e.manifest.env.clone();
             println!("policy: greedy from {}", path.display());
             Some(e)

@@ -13,7 +13,7 @@
 //!
 //! `cargo bench --bench replay`.  Pass `-- --json PATH` to also write
 //! the machine-readable summary `scripts/bench.sh` collects into
-//! `BENCH_5.json`.
+//! `BENCH_7.json`.
 
 use std::time::{Duration, Instant};
 
@@ -22,6 +22,7 @@ use torchbeast::coordinator::batching_queue::batching_queue;
 use torchbeast::coordinator::dynamic_batcher::{dynamic_batcher, BatcherConfig};
 use torchbeast::coordinator::replay::{stack_mixed, ReplayBuffer};
 use torchbeast::coordinator::rollout::{stack_rollout_into, Rollout, RolloutPool};
+use torchbeast::coordinator::weights::VersionHandle;
 use torchbeast::env::{self, Environment};
 use torchbeast::metrics::Metrics;
 use torchbeast::runtime::manifest::{DType, LeafSpec};
@@ -138,6 +139,7 @@ fn mixed_run(ratio: f64, batches: usize) -> MixRun {
             obs_len,
             seed: 1,
             first_id: 0,
+            policy_version: VersionHandle::default(),
         },
     );
 

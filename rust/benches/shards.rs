@@ -1,0 +1,209 @@
+//! Bench: sharded-learner round throughput (DESIGN.md §Sharded-Learner).
+//!
+//! Artifact-free: stub shard engines (no xla) emulate a fixed per-step
+//! compute cost with a calibrated spin, so the measurement isolates
+//! what the sharding layer itself adds per round — the rank-50 barrier,
+//! the fixed-order averaging of params + optimizer state, and worker
+//! 0's publish to the weights store.  Each round steps one distinct
+//! `B×T` batch per shard, so `learner_fps` scales ideally as N× the
+//! single-shard figure; the gap from ideal is the sync cost.
+//!
+//! `cargo bench --bench shards`.  Pass `-- --json PATH` to also write
+//! the machine-readable summary `scripts/bench.sh` collects into
+//! `BENCH_7.json`.
+
+use std::time::{Duration, Instant};
+
+use torchbeast::coordinator::batching_queue::batching_queue;
+use torchbeast::coordinator::learner_pool::{ShardEngine, ShardedLearner};
+use torchbeast::coordinator::weights::WeightsStore;
+use torchbeast::runtime::{LearnerBatch, LearnerStats, ParamVecs};
+
+const UNROLL: usize = 20;
+const BATCH: usize = 8;
+/// f32s of parameter state averaged at the barrier each round (and the
+/// same again of optimizer state) — sized like a small conv agent so
+/// the reduction cost is visible, not vanishing.
+const PARAM_LEN: usize = 64 * 1024;
+/// Emulated engine compute per step, spent in a spin (a sleep would
+/// let the OS quantize the round time and hide the barrier cost).
+const STEP_COST: Duration = Duration::from_micros(300);
+
+/// Host-only shard with realistic state volume: the step touches every
+/// parameter (so averaging cannot be optimized away) and spins out the
+/// emulated compute budget.
+struct StubShard {
+    params: ParamVecs,
+    opt: ParamVecs,
+}
+
+impl StubShard {
+    fn new() -> StubShard {
+        StubShard {
+            params: vec![vec![0.5f32; PARAM_LEN]],
+            opt: vec![vec![0.0f32; PARAM_LEN]],
+        }
+    }
+}
+
+impl ShardEngine for StubShard {
+    fn step_shard(
+        &mut self,
+        batch: &LearnerBatch,
+    ) -> anyhow::Result<(LearnerStats, ParamVecs, ParamVecs)> {
+        let t0 = Instant::now();
+        let g = batch.rewards.iter().sum::<f32>() / batch.rewards.len() as f32;
+        for (m, p) in self.opt[0].iter_mut().zip(self.params[0].iter_mut()) {
+            *m = 0.9 * *m + g;
+            *p -= 1e-4 * *m;
+        }
+        while t0.elapsed() < STEP_COST {
+            std::hint::spin_loop();
+        }
+        let stats = LearnerStats { values: vec![g] };
+        Ok((stats, self.params.clone(), self.opt.clone()))
+    }
+
+    fn install(&mut self, params: &ParamVecs, opt: &ParamVecs) -> anyhow::Result<()> {
+        self.params = params.clone();
+        self.opt = opt.clone();
+        Ok(())
+    }
+}
+
+fn mk_batch(reward: f32) -> LearnerBatch {
+    let (t, b) = (UNROLL, BATCH);
+    LearnerBatch {
+        observations: vec![0.0; (t + 1) * b * 4],
+        actions: vec![0; t * b],
+        rewards: vec![reward; t * b],
+        dones: vec![0.0; t * b],
+        behavior_logits: vec![0.0; t * b * 3],
+        policy_versions: vec![0; b],
+    }
+}
+
+struct ShardRun {
+    rounds_per_s: f64,
+    learner_fps: f64,
+    final_version: u64,
+}
+
+/// Drive `n` shards for `rounds` synchronized rounds through the full
+/// production path: private input queues, barrier average, worker-0
+/// publish, buffer return — exactly the driver's `step_round` loop.
+fn shard_run(n: usize, rounds: usize) -> anyhow::Result<ShardRun> {
+    let weights = WeightsStore::new();
+    let (ret_tx, ret_rx) = batching_queue::<LearnerBatch>(2 * n);
+    let pool = ShardedLearner::spawn(
+        n,
+        |_idx| Ok(StubShard::new()),
+        ret_tx,
+        Some(weights.clone()),
+    )?;
+    // warm: thread creation, first-touch of the param buffers
+    for _ in 0..5 {
+        let batches: Vec<LearnerBatch> = (0..n).map(|s| mk_batch(s as f32)).collect();
+        pool.step_round(batches).expect("warmup round");
+        for _ in 0..n {
+            let _ = ret_rx.recv();
+        }
+    }
+    let t0 = Instant::now();
+    for k in 0..rounds {
+        let batches: Vec<LearnerBatch> = (0..n).map(|s| mk_batch((k + s) as f32)).collect();
+        pool.step_round(batches).expect("bench round");
+        for _ in 0..n {
+            let _ = ret_rx.recv();
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let final_version = weights.version();
+    pool.join()?;
+    weights.close();
+    Ok(ShardRun {
+        rounds_per_s: rounds as f64 / wall,
+        learner_fps: (rounds * n * BATCH * UNROLL) as f64 / wall,
+        final_version,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    // optional machine-readable output: `-- --json PATH`
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_path: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--json" {
+            i += 1;
+            json_path = Some(
+                args.get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--json needs a path"))?
+                    .clone(),
+            );
+        }
+        i += 1;
+    }
+
+    println!(
+        "== sharded learner rounds: {PARAM_LEN} f32 params (+opt), \
+         B={BATCH}, T={UNROLL}, {}us emulated step ==\n\
+         {:>12} {:>12} {:>14} {:>10}",
+        STEP_COST.as_micros(),
+        "num_learners",
+        "rounds/s",
+        "learner_fps",
+        "speedup"
+    );
+    let rounds = 200;
+    let shard_counts = [1usize, 2];
+    let mut runs = Vec::new();
+    let mut base_fps = 0.0f64;
+    for &n in &shard_counts {
+        let run = shard_run(n, rounds)?;
+        assert_eq!(
+            run.final_version,
+            (rounds + 5) as u64,
+            "one publish per round (warmup included)"
+        );
+        if n == 1 {
+            base_fps = run.learner_fps;
+        }
+        println!(
+            "{:>12} {:>12.0} {:>14.0} {:>9.2}x",
+            n,
+            run.rounds_per_s,
+            run.learner_fps,
+            run.learner_fps / base_fps.max(1e-9),
+        );
+        runs.push((n, run));
+    }
+    println!(
+        "(each round steps one distinct B*T batch per shard and averages\n\
+         params + opt state at the barrier; ideal speedup is N x)"
+    );
+
+    if let Some(path) = json_path {
+        let rows: Vec<String> = runs
+            .iter()
+            .map(|(n, r)| {
+                format!(
+                    "    {{\"num_learners\": {n}, \"rounds_per_s\": {:.1}, \
+                     \"learner_fps\": {:.1}}}",
+                    r.rounds_per_s, r.learner_fps
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\n  \"bench\": \"shards\",\n  \"param_len\": {PARAM_LEN},\n  \
+             \"frames_per_batch\": {},\n  \"step_cost_us\": {},\n  \
+             \"shard_fps\": [\n{}\n  ]\n}}\n",
+            BATCH * UNROLL,
+            STEP_COST.as_micros(),
+            rows.join(",\n"),
+        );
+        std::fs::write(&path, json)?;
+        println!("json summary written to {path}");
+    }
+    Ok(())
+}

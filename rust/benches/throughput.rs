@@ -85,6 +85,7 @@ fn grouped_run(envs: usize, envs_per_actor: usize, rollout_rounds: usize) -> Gro
         obs_len,
         seed: 1,
         first_id: 0,
+        policy_version: torchbeast::coordinator::weights::VersionHandle::default(),
     };
     let n_threads;
     let pool = if envs_per_actor == 1 {

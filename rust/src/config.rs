@@ -70,6 +70,18 @@ pub struct TrainConfig {
     /// refreshing.  0 = pure on-policy (bit-identical to the classic
     /// path, pinned by test).
     pub replay_ratio: f64,
+    /// Replay staleness bound in policy versions (DESIGN.md
+    /// §Sharded-Learner): a ring slot whose rollout was collected more
+    /// than this many published weight versions ago is evicted rather
+    /// than sampled.  0 = unbounded (every stored rollout stays
+    /// sampleable) — the pre-staleness behavior, byte for byte.
+    pub replay_staleness: u64,
+    /// Learner worker threads (DESIGN.md §Sharded-Learner).  1 = the
+    /// classic inline learner loop, byte for byte; N > 1 shards each
+    /// round across N workers that each step their own `LearnerEngine`
+    /// on their own prefetched batch, average parameters + optimizer
+    /// state at a barrier, and publish one averaged version per round.
+    pub num_learners: usize,
     /// Mid-run reconnect budget for batched (vec) env streams in poly
     /// mode: on stream death, `RemoteVecEnv` attempts up to this many
     /// fresh connects before latching the group terminal.  0 = latch
@@ -111,6 +123,8 @@ impl Default for TrainConfig {
             server_addresses: Vec::new(),
             replay_capacity: 0,
             replay_ratio: 0.0,
+            replay_staleness: 0,
+            num_learners: 1,
             env_reconnect_attempts: 0,
             wrappers: WrapperCfg::default(),
             log_path: None,
@@ -194,6 +208,12 @@ impl TrainConfig {
                     "replay_ratio must be in [0, 1), got {r}"
                 );
                 self.replay_ratio = r;
+            }
+            "replay_staleness" => self.replay_staleness = num(v)? as u64,
+            "num_learners" => {
+                let n = num(v)? as usize;
+                anyhow::ensure!(n >= 1, "num_learners must be >= 1, got {n}");
+                self.num_learners = n;
             }
             "env_reconnect_attempts" => self.env_reconnect_attempts = num(v)? as u32,
             "log_path" => self.log_path = Some(PathBuf::from(st(v)?)),
@@ -409,6 +429,25 @@ mod tests {
         assert!(c.set("replay_ratio", &Json::Num(1.0)).is_err());
         assert!(c.set("replay_ratio", &Json::Num(-0.1)).is_err());
         assert_eq!(c.replay_ratio, 0.5, "rejected values must not stick");
+    }
+
+    #[test]
+    fn sharded_learner_knobs_parse() {
+        let mut c = TrainConfig::default();
+        // the defaults preserve the classic single-learner path exactly
+        assert_eq!(c.num_learners, 1);
+        assert_eq!(c.replay_staleness, 0);
+        let j = Json::parse(r#"{"num_learners": 2, "replay_staleness": 8}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.num_learners, 2);
+        assert_eq!(c.replay_staleness, 8);
+        // CLI spelling too
+        c.apply_args(&["--num_learners=4".to_string()]).unwrap();
+        assert_eq!(c.num_learners, 4);
+        // zero learners are rejected up front, not at spawn time
+        let bad = Json::parse(r#"{"num_learners": 0}"#).unwrap();
+        assert!(c.apply_json(&bad).is_err());
+        assert_eq!(c.num_learners, 4, "rejected values must not stick");
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::agent::sample_action_scratch;
 use crate::coordinator::batching_queue::QueueSender;
 use crate::coordinator::dynamic_batcher::InferenceClient;
 use crate::coordinator::rollout::{Rollout, RolloutPool};
+use crate::coordinator::weights::VersionHandle;
 use crate::env::{Environment, SlotStep, VecEnvironment};
 use crate::metrics::Metrics;
 use crate::util::rng::Rng;
@@ -52,6 +53,14 @@ pub struct ActorConfig {
     /// one sample identically for the same env — the per-slot seeding
     /// contract behind the B-invariance test below.
     pub first_id: usize,
+    /// Live view of the published weight version: each rollout is
+    /// stamped with the version in effect when its unroll *starts*, so
+    /// the learner can measure exact per-batch policy lag
+    /// (`learner_version - rollout.policy_version`).  The default
+    /// handle always reads 0 — stamps stay 0 and lag reads as zero,
+    /// which is the correct degenerate answer for tests/benches that
+    /// never publish weights.
+    pub policy_version: VersionHandle,
 }
 
 /// The per-env action-sampling RNG stream (global env id, not thread
@@ -82,10 +91,13 @@ impl ActorPool {
                 let metrics = metrics.clone();
                 let seed = env_rng_seed(cfg.seed, cfg.first_id + id);
                 let (t, a, obs_len) = (cfg.unroll_length, cfg.num_actions, cfg.obs_len);
+                let version = cfg.policy_version.clone();
                 std::thread::Builder::new()
                     .name(format!("actor-{id}"))
                     .spawn(move || {
-                        actor_loop(id, env, client, queue, pool, metrics, seed, t, a, obs_len)
+                        actor_loop(
+                            id, env, client, queue, pool, metrics, seed, t, a, obs_len, version,
+                        )
                     })
                     .expect("spawn actor") // tb-lint: allow(unwrap, thread spawn fails only on OS resource exhaustion)
             })
@@ -122,12 +134,13 @@ impl ActorPool {
                 base += venv.batch();
                 let root = cfg.seed;
                 let (t, a, obs_len) = (cfg.unroll_length, cfg.num_actions, cfg.obs_len);
+                let version = cfg.policy_version.clone();
                 std::thread::Builder::new()
                     .name(format!("actor-group-{g}"))
                     .spawn(move || {
                         grouped_actor_loop(
                             g, group_base, venv, client, queue, pool, metrics, root, t, a,
-                            obs_len,
+                            obs_len, version,
                         )
                     })
                     .expect("spawn actor group") // tb-lint: allow(unwrap, thread spawn fails only on OS resource exhaustion)
@@ -165,6 +178,7 @@ fn actor_loop(
     unroll_length: usize,
     num_actions: usize,
     obs_len: usize,
+    version: VersionHandle,
 ) -> ActorReport {
     let mut report = ActorReport {
         actor_id,
@@ -190,6 +204,7 @@ fn actor_loop(
     );
     env.reset(&mut obs);
     rollout.set_obs(0, &obs);
+    rollout.policy_version = version.get();
     let mut ep_return = 0.0f32;
     let mut ep_steps = 0u32;
 
@@ -236,6 +251,7 @@ fn actor_loop(
         };
         rollout = next;
         rollout.set_obs(0, &obs);
+        rollout.policy_version = version.get();
     }
 }
 
@@ -257,6 +273,7 @@ fn grouped_actor_loop(
     unroll_length: usize,
     num_actions: usize,
     obs_len: usize,
+    version: VersionHandle,
 ) -> ActorReport {
     let b = venv.batch();
     let mut report = ActorReport {
@@ -306,8 +323,10 @@ fn grouped_actor_loop(
         return report;
     }
     venv.reset_all(&mut obs_block);
+    let v0 = version.get();
     for (s, r) in rollouts.iter_mut().enumerate() {
         r.set_obs(0, &obs_block[s * obs_len..(s + 1) * obs_len]);
+        r.policy_version = v0;
     }
 
     loop {
@@ -379,8 +398,12 @@ fn grouped_actor_loop(
         if !rent_all(&mut rollouts) {
             return report; // pool closed: shutdown
         }
+        // one version read per unroll round: all B slots of a group
+        // started this unroll under the same published weights
+        let v = version.get();
         for (s, r) in rollouts.iter_mut().enumerate() {
             r.set_obs(0, &obs_block[s * obs_len..(s + 1) * obs_len]);
+            r.policy_version = v;
         }
     }
 }
@@ -436,6 +459,7 @@ mod tests {
                 obs_len: spec.obs_len(),
                 seed: 7,
                 first_id: 0,
+                policy_version: VersionHandle::default(),
             },
         );
 
@@ -517,6 +541,7 @@ mod tests {
                 obs_len: spec.obs_len(),
                 seed: 1,
                 first_id: 0,
+                policy_version: VersionHandle::default(),
             },
         );
         let r1 = rx.recv_batch(1).unwrap().remove(0);
@@ -608,6 +633,7 @@ mod tests {
                     obs_len,
                     seed: root_seed,
                     first_id: 0,
+                    policy_version: VersionHandle::default(),
                 },
             );
             for round in 0..per_env {
@@ -648,6 +674,7 @@ mod tests {
                         obs_len,
                         seed: root_seed,
                         first_id: g,
+                        policy_version: VersionHandle::default(),
                     },
                 );
                 for _ in 0..per_env {
@@ -734,6 +761,7 @@ mod tests {
                 obs_len,
                 seed: 5,
                 first_id: 0,
+                policy_version: VersionHandle::default(),
             },
         );
         // two unrolls: slot-major shipping means batch k is
@@ -806,6 +834,7 @@ mod tests {
                 obs_len: spec.obs_len(),
                 seed: 2,
                 first_id: 0,
+                policy_version: VersionHandle::default(),
             },
         );
         let r = rx.recv_batch(1).unwrap().remove(0);

@@ -19,6 +19,7 @@ use crate::config::{Mode, TrainConfig};
 use crate::coordinator::actor_pool::{ActorConfig, ActorPool};
 use crate::coordinator::batching_queue::{batching_queue, batching_queue_gauged};
 use crate::coordinator::dynamic_batcher::{dynamic_batcher, BatcherConfig, BatcherStats};
+use crate::coordinator::learner_pool::ShardedLearner;
 use crate::coordinator::replay::{replay_count, stack_mixed, ReplayBuffer, ReplayStats};
 use crate::coordinator::rollout::{stack_rollouts, Rollout, RolloutPool};
 use crate::coordinator::weights::WeightsStore;
@@ -121,6 +122,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let t_start = Instant::now();
     crate::telemetry::log::set_max_level(cfg.log_level);
     anyhow::ensure!(cfg.envs_per_actor >= 1, "envs_per_actor must be >= 1");
+    anyhow::ensure!(cfg.num_learners >= 1, "num_learners must be >= 1");
     anyhow::ensure!(
         (0.0..1.0).contains(&cfg.replay_ratio),
         "replay_ratio must be in [0, 1), got {}",
@@ -171,16 +173,29 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     );
 
     // -- initial parameters (seeded init, or a checkpoint to resume)
+    let mut resume_version = 0u64;
     let initial = match &cfg.init_checkpoint {
         Some(path) => {
-            let params = crate::runtime::checkpoint::load(path, &manifest)?;
+            let (params, version) = crate::runtime::checkpoint::load(path, &manifest)?;
             learner.set_params(&params)?;
-            tb_info!("train", "resumed params from {}", path.display());
+            resume_version = version;
+            tb_info!(
+                "train",
+                "resumed params from {} (weight version {version})",
+                path.display()
+            );
             params
         }
         None => learner.init_params(fold_seed(cfg.seed))?,
     };
     let weights = WeightsStore::new();
+    // Resume continues the version sequence the checkpoint recorded
+    // (legacy TBCK1 files carry version 0 and restart it) — policy-lag
+    // telemetry and replay staleness both key off this counter, so a
+    // reset would make old rollouts look fresher than they are.
+    if resume_version > 0 {
+        weights.seed_version(resume_version);
+    }
     weights.publish(initial.clone());
 
     // -- queues
@@ -236,11 +251,17 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         .name("inference".into())
         .spawn(move || -> Result<()> {
             let mut engine = InferenceEngine::load(&artifact_dir)?;
+            // Preallocated host mirror of the parameter leaves: the
+            // steady-state weight refresh below copies into it in
+            // place (allocation-free read path; the first adoption
+            // sizes it once).
+            let mut host_params = ParamVecs::new();
             while let Some(batch) = infer_stream.next_batch() {
                 // adopt the newest weights before evaluating
-                let (v, params) = weights_for_inference.latest();
-                if v > engine.param_version {
-                    engine.set_params(&params, v)?;
+                if let Some(v) =
+                    weights_for_inference.copy_newer_into(engine.param_version, &mut host_params)
+                {
+                    engine.set_params(&host_params, v)?;
                 }
                 // The batch is already one contiguous [n * obs_len]
                 // buffer — handed to the runtime without a gather copy.
@@ -259,6 +280,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         obs_len: manifest.obs_len(),
         seed: cfg.seed,
         first_id: 0,
+        // actors stamp each rollout with the weight version its unroll
+        // started under — the learner measures exact policy lag from it
+        policy_version: weights.handle(),
     };
     let pool = match envs {
         BuiltEnvs::Singles(envs) => ActorPool::spawn(
@@ -279,10 +303,11 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         ),
     };
 
-    // -- stacker thread: double-buffered batch prefetch.  Two
-    // LearnerBatch buffers circulate between this thread and the
-    // learner loop: while the learner runs step N, the stacker drains
-    // B rollouts and stacks batch N+1 into the other buffer, then
+    // -- stacker thread: double-buffered batch prefetch.  The
+    // LearnerBatch buffers (num_learners + 1 of them; two in the
+    // classic single-learner setup) circulate between this thread and
+    // the learner loop: while the learner runs step N, the stacker
+    // drains B rollouts and stacks batch N+1 into a free buffer, then
     // recycles the rollouts into the pool.  Stacking cost is thereby
     // overlapped with — not added to — learner compute.
     //
@@ -292,10 +317,14 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     // rollouts, and every fresh rollout is copied into a ring slot
     // before its pooled buffer recycles.  With capacity 0 (default)
     // the loop below is the classic path, untouched.
+    // N learner shards hold N batches mid-round while the stacker
+    // prefetches one more; `--num_learners 1` keeps today's two
+    // circulating buffers (the classic double-buffered path, verbatim).
+    let n_batch_buffers = cfg.num_learners + 1;
     let (batch_tx, batch_rx) =
-        batching_queue_gauged::<LearnerBatch>(2, gauges.batches_ready.clone());
-    let (return_tx, return_rx) = batching_queue::<LearnerBatch>(2);
-    for _ in 0..2 {
+        batching_queue_gauged::<LearnerBatch>(n_batch_buffers, gauges.batches_ready.clone());
+    let (return_tx, return_rx) = batching_queue::<LearnerBatch>(n_batch_buffers);
+    for _ in 0..n_batch_buffers {
         return_tx
             .send(LearnerBatch::zeros(&manifest))
             .expect("fresh return queue") // tb-lint: allow(unwrap, queue created two lines up; cannot be closed yet);
@@ -322,17 +351,31 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     // it — otherwise feeding it would be a pure memcpy tax on every
     // stacker round (and the classic path must stay byte-identical).
     let mut stacker_replay = if cfg.replay_capacity > 0 && replay_planned > 0 {
-        Some(ReplayBuffer::with_gauges(
+        let mut ring = ReplayBuffer::with_gauges(
             cfg.replay_capacity,
             manifest.unroll_length,
             manifest.obs_len(),
             manifest.num_actions,
             cfg.seed,
             gauges.clone(),
-        ))
+        );
+        ring.set_staleness(cfg.replay_staleness);
+        Some(ring)
     } else {
         None
     };
+    if cfg.replay_staleness > 0 && stacker_replay.is_none() {
+        tb_warn!(
+            "train",
+            "replay_staleness {} has no effect: the replay ring is not active \
+             (needs --replay_capacity > 0 and a replay_ratio that plans \
+             replayed columns)",
+            cfg.replay_staleness
+        );
+    }
+    // The stacker reads the live weight version each round so the ring
+    // can evict rollouts more than --replay_staleness versions old.
+    let stacker_version = weights.handle();
     let stacker_thread = std::thread::Builder::new()
         .name("stacker".into())
         .spawn(move || -> (Duration, Option<ReplayStats>) {
@@ -356,6 +399,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                         stacking += t0.elapsed();
                     }
                     Some(replay) => {
+                        // age the ring against the live weight version
+                        // before planning: slots older than the
+                        // staleness bound are evicted, never sampled
+                        replay.set_current_version(stacker_version.get());
                         // warmup gate: all-fresh batches until the
                         // ring holds replay_capacity rollouts
                         let replayed = replay.plan(b, replay_ratio);
@@ -382,7 +429,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             (stacking, stacker_replay.map(|rb| rb.stats()))
         })?;
 
-    // -- learner loop (inline on this thread)
+    // -- learner loop: the classic inline loop for --num_learners 1
+    // (byte-for-byte, pinned by the integration test), or the sharded
+    // round loop for N > 1.  Both record per-step curves/report lines
+    // through the same closure and measure exact per-batch policy lag.
     let mut logger = match &cfg.log_path {
         Some(p) => Some(CurveLogger::create(p)?),
         None => None,
@@ -390,22 +440,12 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let mut history = Vec::new();
     let mut final_params = initial;
     let mut learner_wait = Duration::ZERO;
-    for step in 1..=cfg.total_steps {
-        let t_wait = Instant::now();
-        let Some(batch) = batch_rx.recv() else {
-            break;
-        };
-        learner_wait += t_wait.elapsed();
-        let (stats, snapshot) = learner.step(&batch)?;
-        // hand the buffer back so the stacker can prefetch step N+2
-        let _ = return_tx.send(batch);
-        weights.publish(snapshot.clone());
-        final_params = snapshot;
+    let mut shard_error: Option<anyhow::Error> = None;
+    let mut record_step = |step: u64, stats: &LearnerStats| -> Result<()> {
         metrics.record_learner_step(stats.total_loss());
-
         let snap = metrics.snapshot();
         if let Some(log) = logger.as_mut() {
-            log.log(step, &snap, &stats)?;
+            log.log(step, &snap, stats)?;
         }
         history.push(CurveRow {
             step,
@@ -429,6 +469,72 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 snap.mean_return,
                 gauges.snapshot(),
             );
+        }
+        Ok(())
+    };
+    if cfg.num_learners > 1 {
+        // Sharded path: N workers each load their own engine (xla is
+        // !Send, so construction happens inside the worker threads),
+        // all starting from the same snapshot the inline path would.
+        let shard_dir = cfg.artifact_dir.clone();
+        let shard_init = final_params.clone();
+        let sharded = ShardedLearner::spawn(
+            cfg.num_learners,
+            move |_idx| {
+                let mut engine = LearnerEngine::load(&shard_dir)?;
+                engine.set_params(&shard_init)?;
+                Ok(engine)
+            },
+            return_tx.clone(),
+            Some(weights.clone()),
+        )?;
+        'rounds: for step in 1..=cfg.total_steps {
+            let t_wait = Instant::now();
+            let mut round = Vec::with_capacity(cfg.num_learners);
+            for _ in 0..cfg.num_learners {
+                let Some(batch) = batch_rx.recv() else {
+                    break 'rounds;
+                };
+                round.push(batch);
+            }
+            learner_wait += t_wait.elapsed();
+            // exact per-batch policy lag: the published version minus
+            // the version each column's unroll was collected under
+            let v = weights.version();
+            for batch in &round {
+                for &pv in &batch.policy_versions {
+                    gauges.policy_lag.record(v.saturating_sub(pv));
+                }
+            }
+            let Some(result) = sharded.step_round(round) else {
+                break;
+            };
+            final_params = result.params;
+            record_step(step, &result.stats)?;
+        }
+        sharded.shutdown();
+        if let Err(e) = sharded.join() {
+            shard_error = Some(e);
+        }
+    } else {
+        for step in 1..=cfg.total_steps {
+            let t_wait = Instant::now();
+            let Some(batch) = batch_rx.recv() else {
+                break;
+            };
+            learner_wait += t_wait.elapsed();
+            // exact per-batch policy lag: the published version minus
+            // the version each column's unroll was collected under
+            let v = weights.version();
+            for &pv in &batch.policy_versions {
+                gauges.policy_lag.record(v.saturating_sub(pv));
+            }
+            let (stats, snapshot) = learner.step(&batch)?;
+            // hand the buffer back so the stacker can prefetch step N+2
+            let _ = return_tx.send(batch);
+            weights.publish(snapshot.clone());
+            final_params = snapshot;
+            record_step(step, &stats)?;
         }
     }
 
@@ -467,9 +573,14 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     for server in &mut local_servers {
         server.shutdown();
     }
+    if let Some(e) = shard_error {
+        return Err(e);
+    }
 
     if let Some(path) = &cfg.checkpoint_path {
-        crate::runtime::checkpoint::save(path, &manifest, &final_params)?;
+        // stamped with the published weight version, so a resumed run
+        // continues the version sequence instead of restarting it
+        crate::runtime::checkpoint::save(path, &manifest, &final_params, weights.version())?;
         tb_info!("train", "checkpoint written to {}", path.display());
     }
 

@@ -1,0 +1,566 @@
+//! Sharded learner: `--num_learners` worker threads, each owning a
+//! [`LearnerEngine`], stepping *distinct* prefetched batches and
+//! synchronizing at a barrier every round — synchronous data
+//! parallelism in the spirit of the paper's multi-learner follow-ups.
+//!
+//! Per round, each worker:
+//!   1. receives one [`LearnerBatch`] on its private queue (the driver
+//!      dispatches exactly one batch per shard per round);
+//!   2. runs its engine's fused step (`step_full`), producing a
+//!      post-step parameter + optimizer-state snapshot;
+//!   3. hands the batch buffer straight back to the stacker (overlap:
+//!      the stacker refills while the shards synchronize);
+//!   4. enters the [`ShardSync`] barrier.  The **last** arriver
+//!      averages all contributions — stats, params, opt state — in
+//!      worker-index order (a deterministic f32 reduction), then wakes
+//!      everyone;
+//!   5. installs the averaged state into its engine
+//!      ([`LearnerEngine::install_state`]: no optimizer reset — the
+//!      run is continuing, not restarting).  Worker 0 additionally
+//!      publishes the averaged snapshot to the [`WeightsStore`]
+//!      (bumping the weight version actors stamp rollouts with) and
+//!      ships a [`RoundResult`] to the driver.
+//!
+//! Engines are constructed *inside* the worker threads via the factory
+//! closure passed to [`ShardedLearner::spawn`] — xla handles are not
+//! `Send`, the same constraint that shapes the inference thread.
+//!
+//! With `--num_learners 1` the driver never constructs this type: the
+//! classic inline learner loop runs verbatim (pinned byte-for-byte by
+//! the integration test), so the default path pays nothing.
+
+use std::sync::{Arc, Condvar};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::coordinator::batching_queue::{batching_queue, QueueReceiver, QueueSender};
+use crate::coordinator::weights::WeightsStore;
+use crate::runtime::{LearnerBatch, LearnerEngine, LearnerStats, ParamVecs};
+use crate::util::sync::{CheckedMutex, LockOrder};
+
+/// Rank of the shard barrier lock in the global acquisition order
+/// (registry in `util::sync`).  It is a leaf lock: engine compute and
+/// queue traffic both happen outside it.
+const SYNC_ORDER: LockOrder = LockOrder::new(50, "learner_pool.sync");
+
+/// What a shard must provide to participate in a sync round.  The real
+/// implementation is [`LearnerEngine`]; tests drive the pool with
+/// cheap host-only stubs (no artifacts, no xla).
+pub trait ShardEngine {
+    /// One learner step on `batch`: returns (stats, post-step params,
+    /// post-step optimizer state) — the worker's barrier contribution.
+    fn step_shard(&mut self, batch: &LearnerBatch)
+        -> Result<(LearnerStats, ParamVecs, ParamVecs)>;
+
+    /// Adopt the barrier-averaged state (params + optimizer) without
+    /// resetting step counters: the run is continuing.
+    fn install(&mut self, params: &ParamVecs, opt: &ParamVecs) -> Result<()>;
+}
+
+impl ShardEngine for LearnerEngine {
+    fn step_shard(
+        &mut self,
+        batch: &LearnerBatch,
+    ) -> Result<(LearnerStats, ParamVecs, ParamVecs)> {
+        self.step_full(batch)
+    }
+
+    fn install(&mut self, params: &ParamVecs, opt: &ParamVecs) -> Result<()> {
+        self.install_state(params, opt)
+    }
+}
+
+/// One synchronized round's outcome, shipped by worker 0: the averaged
+/// loss stats and the averaged parameter snapshot (what the weights
+/// store now serves, and what a checkpoint at this instant would save).
+pub struct RoundResult {
+    pub stats: LearnerStats,
+    pub params: ParamVecs,
+}
+
+type Contribution = (LearnerStats, ParamVecs, ParamVecs);
+
+struct SyncState {
+    /// Per-worker contributions for the in-flight round (slot i is
+    /// taken by the averaging pass).
+    parts: Vec<Option<Contribution>>,
+    arrived: usize,
+    /// Completed-round counter; waiters block until it advances.
+    generation: u64,
+    /// The last completed round's averaged state.  Safe to read after
+    /// waking: it is only overwritten when *all* workers have arrived
+    /// for the next round, which requires every worker to have read
+    /// (and installed) this one first.
+    avg: Option<Contribution>,
+    /// First failure message; latches the whole pool into an error
+    /// state so no shard blocks forever on a dead peer.
+    failed: Option<String>,
+}
+
+/// The barrier itself: rank-50 leaf lock + condvar (see `util::sync`).
+struct ShardSync {
+    state: CheckedMutex<SyncState>,
+    cv: Condvar,
+    n: usize,
+}
+
+impl ShardSync {
+    fn new(n: usize) -> ShardSync {
+        ShardSync {
+            state: CheckedMutex::new(
+                SYNC_ORDER,
+                SyncState {
+                    parts: (0..n).map(|_| None).collect(),
+                    arrived: 0,
+                    generation: 0,
+                    avg: None,
+                    failed: None,
+                },
+            ),
+            cv: Condvar::new(),
+            n,
+        }
+    }
+
+    /// Contribute worker `idx`'s step result and block until the round
+    /// completes; returns a copy of the round's averaged state.
+    fn exchange(&self, idx: usize, part: Contribution) -> Result<Contribution> {
+        let mut st = self.state.lock();
+        if let Some(msg) = &st.failed {
+            anyhow::bail!("shard sync failed: {msg}");
+        }
+        debug_assert!(st.parts[idx].is_none(), "worker {idx} double-arrived");
+        st.parts[idx] = Some(part);
+        st.arrived += 1;
+        let gen = st.generation;
+        if st.arrived == self.n {
+            st.avg = Some(average(&mut st.parts));
+            st.arrived = 0;
+            st.generation += 1;
+            self.cv.notify_all();
+        } else {
+            while st.generation == gen && st.failed.is_none() {
+                st = st.wait(&self.cv);
+            }
+            if let Some(msg) = &st.failed {
+                anyhow::bail!("shard sync failed: {msg}");
+            }
+        }
+        let avg = st
+            .avg
+            .as_ref()
+            .expect("a completed round always leaves its average behind"); // tb-lint: allow(unwrap, generation only advances after avg is stored)
+        Ok(avg.clone())
+    }
+
+    /// Latch the pool into a failed state and wake every waiter (they
+    /// return errors instead of blocking on a peer that will never
+    /// arrive).
+    fn fail(&self, msg: &str) {
+        let mut st = self.state.lock();
+        if st.failed.is_none() {
+            st.failed = Some(msg.into());
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// Average all contributions in worker-index order: sum into worker
+/// 0's buffers left to right, then scale by 1/n.  Fixed order makes
+/// the f32 reduction deterministic — N=2 runs reproduce bit-for-bit.
+fn average(parts: &mut [Option<Contribution>]) -> Contribution {
+    let n = parts.len();
+    let (mut stats, mut params, mut opt) = parts[0]
+        .take()
+        .expect("averaging runs only when every slot is filled"); // tb-lint: allow(unwrap, barrier arrives exactly n times before averaging)
+    for part in parts.iter_mut().skip(1) {
+        let (s, p, o) = part
+            .take()
+            .expect("averaging runs only when every slot is filled"); // tb-lint: allow(unwrap, barrier arrives exactly n times before averaging)
+        for (a, b) in stats.values.iter_mut().zip(&s.values) {
+            *a += b;
+        }
+        for (av, bv) in params.iter_mut().zip(&p) {
+            debug_assert_eq!(av.len(), bv.len(), "shard param shapes diverged");
+            for (a, b) in av.iter_mut().zip(bv) {
+                *a += b;
+            }
+        }
+        for (av, bv) in opt.iter_mut().zip(&o) {
+            debug_assert_eq!(av.len(), bv.len(), "shard opt shapes diverged");
+            for (a, b) in av.iter_mut().zip(bv) {
+                *a += b;
+            }
+        }
+    }
+    let inv = 1.0f32 / n as f32;
+    for v in stats.values.iter_mut() {
+        *v *= inv;
+    }
+    for leaf in params.iter_mut().chain(opt.iter_mut()) {
+        for x in leaf.iter_mut() {
+            *x *= inv;
+        }
+    }
+    (stats, params, opt)
+}
+
+/// Handle to the sharded learner: feed it one batch per shard per
+/// round, read back the averaged result.
+pub struct ShardedLearner {
+    inputs: Vec<QueueSender<LearnerBatch>>,
+    results: QueueReceiver<RoundResult>,
+    handles: Vec<JoinHandle<Result<u64>>>,
+}
+
+impl ShardedLearner {
+    /// Spawn `n` shard workers.  `make_engine(idx)` runs *inside*
+    /// worker `idx`'s thread (engines hold !Send xla handles) and must
+    /// hand every shard identical starting state — diverged shards
+    /// would silently train a moving average of different models.
+    /// Stepped batch buffers go back out through `returns` (the
+    /// stacker's refill queue); `weights`, when given, receives worker
+    /// 0's averaged snapshot every round.
+    pub fn spawn<E, F>(
+        n: usize,
+        make_engine: F,
+        returns: QueueSender<LearnerBatch>,
+        weights: Option<WeightsStore>,
+    ) -> Result<ShardedLearner>
+    where
+        E: ShardEngine + 'static,
+        F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(n >= 1, "need at least one learner shard");
+        let sync = Arc::new(ShardSync::new(n));
+        let (result_tx, result_rx) = batching_queue::<RoundResult>(1);
+        let make = Arc::new(make_engine);
+        let mut inputs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for idx in 0..n {
+            // capacity 1: the round protocol never leaves more than
+            // one batch in flight per shard
+            let (tx, rx) = batching_queue::<LearnerBatch>(1);
+            inputs.push(tx);
+            let make = make.clone();
+            let sync = sync.clone();
+            let returns = returns.clone();
+            let results = result_tx.clone();
+            let weights = if idx == 0 { weights.clone() } else { None };
+            let handle = std::thread::Builder::new()
+                .name(format!("learner-{idx}"))
+                .spawn(move || -> Result<u64> {
+                    let engine = match make(idx) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            sync.fail(&format!("worker {idx} engine construction: {e}"));
+                            results.close();
+                            return Err(e);
+                        }
+                    };
+                    worker_loop(idx, engine, rx, returns, sync, results, weights)
+                })?;
+            handles.push(handle);
+        }
+        Ok(ShardedLearner {
+            inputs,
+            results: result_rx,
+            handles,
+        })
+    }
+
+    /// How many shards this pool runs.
+    pub fn shards(&self) -> usize {
+        self.inputs.len()
+    }
+
+    /// Dispatch one batch per shard (index order) and block for the
+    /// round's averaged result.  `None` means the pool stopped — a
+    /// worker failed or shut down; [`join`](ShardedLearner::join)
+    /// returns the underlying error.
+    pub fn step_round(&self, batches: Vec<LearnerBatch>) -> Option<RoundResult> {
+        assert_eq!(
+            batches.len(),
+            self.inputs.len(),
+            "one batch per learner shard per round"
+        );
+        for (tx, batch) in self.inputs.iter().zip(batches) {
+            if tx.send(batch).is_err() {
+                return None;
+            }
+        }
+        self.results.recv()
+    }
+
+    /// Close every shard's input; workers drain and exit.
+    pub fn shutdown(&self) {
+        for tx in &self.inputs {
+            tx.close();
+        }
+    }
+
+    /// Shut down and join all workers.  Returns the number of rounds
+    /// completed, or the first worker error.
+    pub fn join(self) -> Result<u64> {
+        self.shutdown();
+        let mut rounds = 0u64;
+        let mut first_err: Option<anyhow::Error> = None;
+        for h in self.handles {
+            match h.join() {
+                Ok(Ok(r)) => rounds = rounds.max(r),
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow::anyhow!("learner shard panicked"));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(rounds),
+        }
+    }
+}
+
+fn worker_loop<E: ShardEngine>(
+    idx: usize,
+    mut engine: E,
+    input: QueueReceiver<LearnerBatch>,
+    returns: QueueSender<LearnerBatch>,
+    sync: Arc<ShardSync>,
+    results: QueueSender<RoundResult>,
+    weights: Option<WeightsStore>,
+) -> Result<u64> {
+    let mut rounds = 0u64;
+    while let Some(batch) = input.recv() {
+        let part = match engine.step_shard(&batch) {
+            Ok(p) => p,
+            Err(e) => {
+                sync.fail(&format!("worker {idx} step: {e}"));
+                results.close();
+                return Err(e);
+            }
+        };
+        // recycle the buffer before the barrier: the stacker prefetches
+        // the next round while the shards synchronize
+        let _ = returns.send(batch);
+        let (stats, params, opt) = match sync.exchange(idx, part) {
+            Ok(avg) => avg,
+            Err(e) => {
+                results.close();
+                return Err(e);
+            }
+        };
+        if let Err(e) = engine.install(&params, &opt) {
+            sync.fail(&format!("worker {idx} install: {e}"));
+            results.close();
+            return Err(e);
+        }
+        rounds += 1;
+        if idx == 0 {
+            if let Some(w) = &weights {
+                w.publish(params.clone());
+            }
+            if results.send(RoundResult { stats, params }).is_err() {
+                break; // driver gone: orderly shutdown
+            }
+        }
+    }
+    if idx == 0 {
+        results.close();
+    }
+    Ok(rounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Host-only shard: one 4-float param leaf, one 1-float "momentum"
+    /// leaf.  The update rule is deliberately batch-dependent and
+    /// nonlinear in history, so averaging bugs cannot cancel out.
+    struct StubEngine {
+        params: ParamVecs,
+        opt: ParamVecs,
+        steps: u64,
+        fail_on_step: Option<u64>,
+    }
+
+    impl StubEngine {
+        fn new() -> StubEngine {
+            StubEngine {
+                params: vec![vec![1.0, 2.0, 3.0, 4.0]],
+                opt: vec![vec![0.0]],
+                steps: 0,
+                fail_on_step: None,
+            }
+        }
+    }
+
+    impl ShardEngine for StubEngine {
+        fn step_shard(
+            &mut self,
+            batch: &LearnerBatch,
+        ) -> Result<(LearnerStats, ParamVecs, ParamVecs)> {
+            self.steps += 1;
+            if self.fail_on_step == Some(self.steps) {
+                anyhow::bail!("injected failure at step {}", self.steps);
+            }
+            let g = batch.rewards.iter().sum::<f32>() / batch.rewards.len() as f32;
+            self.opt[0][0] = 0.9 * self.opt[0][0] + g;
+            let m = self.opt[0][0];
+            for (i, p) in self.params[0].iter_mut().enumerate() {
+                *p -= 0.1 * m * (i as f32 + 1.0);
+            }
+            let stats = LearnerStats {
+                values: vec![g, m, self.steps as f32],
+            };
+            Ok((stats, self.params.clone(), self.opt.clone()))
+        }
+
+        fn install(&mut self, params: &ParamVecs, opt: &ParamVecs) -> Result<()> {
+            self.params = params.clone();
+            self.opt = opt.clone();
+            Ok(())
+        }
+    }
+
+    fn mk_batch(reward: f32) -> LearnerBatch {
+        LearnerBatch {
+            observations: vec![0.0; 8],
+            actions: vec![0; 2],
+            rewards: vec![reward, reward],
+            dones: vec![0.0; 2],
+            behavior_logits: vec![0.0; 4],
+            policy_versions: vec![0; 2],
+        }
+    }
+
+    fn run_pool(n: usize, rounds: &[Vec<f32>]) -> (Vec<ParamVecs>, u64) {
+        let (ret_tx, ret_rx) = batching_queue::<LearnerBatch>(2 * n);
+        let pool = ShardedLearner::spawn(n, |_idx| Ok(StubEngine::new()), ret_tx, None).unwrap();
+        let mut snapshots = Vec::new();
+        for round in rounds {
+            assert_eq!(round.len(), n);
+            let batches: Vec<LearnerBatch> = round.iter().map(|&r| mk_batch(r)).collect();
+            let result = pool.step_round(batches).expect("round result");
+            snapshots.push(result.params);
+            // drain the recycled buffers like the stacker would
+            for _ in 0..n {
+                assert!(ret_rx.recv().is_some(), "stepped batch must come back");
+            }
+        }
+        let completed = pool.join().unwrap();
+        (snapshots, completed)
+    }
+
+    /// One shard is the degenerate barrier: the pool must step exactly
+    /// like a plain sequential engine over the same batches.
+    #[test]
+    fn single_shard_matches_sequential_engine() {
+        let rewards = [0.5f32, -1.0, 2.0, 0.25];
+        let rounds: Vec<Vec<f32>> = rewards.iter().map(|&r| vec![r]).collect();
+        let (sharded, completed) = run_pool(1, &rounds);
+        assert_eq!(completed, rewards.len() as u64);
+
+        let mut seq = StubEngine::new();
+        for (k, &r) in rewards.iter().enumerate() {
+            let (_, params, opt) = seq.step_shard(&mk_batch(r)).unwrap();
+            // averaging over n=1 divides by 1: bit-identical
+            assert_eq!(sharded[k], params, "round {k} params");
+            seq.install(&params, &opt).unwrap();
+        }
+    }
+
+    /// Two shards: the first round's published params must equal the
+    /// hand-computed average of two independently stepped engines, and
+    /// the whole run must reproduce bit-for-bit.
+    #[test]
+    fn two_shards_average_deterministically() {
+        let rounds = vec![vec![1.0f32, 3.0], vec![-0.5, 0.5], vec![2.0, -2.0]];
+        let (run_a, completed) = run_pool(2, &rounds);
+        assert_eq!(completed, 3);
+
+        // hand-compute round 1: two fresh engines, one batch each
+        let mut e0 = StubEngine::new();
+        let mut e1 = StubEngine::new();
+        let (_, p0, _) = e0.step_shard(&mk_batch(1.0)).unwrap();
+        let (_, p1, _) = e1.step_shard(&mk_batch(3.0)).unwrap();
+        let expect: Vec<f32> = p0[0]
+            .iter()
+            .zip(&p1[0])
+            .map(|(a, b)| (a + b) * 0.5)
+            .collect();
+        assert_eq!(run_a[0][0], expect, "round 1 must be the shard average");
+
+        // determinism: a second identical run reproduces every snapshot
+        let (run_b, _) = run_pool(2, &rounds);
+        assert_eq!(run_a.len(), run_b.len());
+        for (k, (a, b)) in run_a.iter().zip(&run_b).enumerate() {
+            assert_eq!(a, b, "round {k} must reproduce bit-for-bit");
+        }
+    }
+
+    /// Worker 0 publishes every round's average to the weights store,
+    /// bumping the version monotonically.
+    #[test]
+    fn worker_zero_publishes_versions() {
+        let weights = WeightsStore::new();
+        let (ret_tx, ret_rx) = batching_queue::<LearnerBatch>(4);
+        let pool = ShardedLearner::spawn(
+            2,
+            |_idx| Ok(StubEngine::new()),
+            ret_tx,
+            Some(weights.clone()),
+        )
+        .unwrap();
+        for k in 0..3u64 {
+            let r = pool
+                .step_round(vec![mk_batch(1.0), mk_batch(2.0)])
+                .expect("round result");
+            assert_eq!(weights.version(), k + 1, "one publish per round");
+            let (_, latest) = weights.latest();
+            assert_eq!(*latest, r.params, "store serves the round average");
+            for _ in 0..2 {
+                let _ = ret_rx.recv();
+            }
+        }
+        pool.join().unwrap();
+    }
+
+    /// A failing shard must not deadlock its peers: the round returns
+    /// None and join surfaces the error.
+    #[test]
+    fn shard_failure_unblocks_peers_and_surfaces_error() {
+        let (ret_tx, _ret_rx) = batching_queue::<LearnerBatch>(8);
+        let pool = ShardedLearner::spawn(
+            2,
+            |idx| {
+                let mut e = StubEngine::new();
+                if idx == 1 {
+                    e.fail_on_step = Some(2);
+                }
+                Ok(e)
+            },
+            ret_tx,
+            None,
+        )
+        .unwrap();
+        assert!(pool.step_round(vec![mk_batch(1.0), mk_batch(1.0)]).is_some());
+        assert!(
+            pool.step_round(vec![mk_batch(1.0), mk_batch(1.0)]).is_none(),
+            "the failed round must not hang or succeed"
+        );
+        let err = pool.join().unwrap_err();
+        assert!(
+            err.to_string().contains("injected failure"),
+            "join must surface the worker error, got: {err}"
+        );
+    }
+}

@@ -6,12 +6,14 @@
 //! * [`replay`] — bounded replay ring: off-policy rollout mixing;
 //! * [`actor_pool`] — actor threads (local or remote envs);
 //! * [`weights`] — versioned learner→inference parameter store;
+//! * [`learner_pool`] — sharded learner: N workers, barrier-averaged;
 //! * [`driver`] — `train()`: wires everything, runs the learner loop.
 
 pub mod actor_pool;
 pub mod batching_queue;
 pub mod driver;
 pub mod dynamic_batcher;
+pub mod learner_pool;
 pub mod replay;
 pub mod rollout;
 pub mod weights;

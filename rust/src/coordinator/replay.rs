@@ -51,17 +51,32 @@ const REPLAY_SEED_STREAM: u64 = 0x0000_7265_706C_6179;
 pub struct ReplayBuffer {
     /// All slots, preallocated at construction (physical order).
     slots: Vec<Rollout>,
-    /// Slots currently holding a rollout (≤ capacity; grows until the
-    /// ring fills, then stays at capacity forever).
+    /// Slots currently holding a rollout (≤ capacity).  Grows until
+    /// the ring fills; FIFO eviction holds it at capacity, staleness
+    /// eviction can shrink it back down.
     len: usize,
-    /// Next physical write position.  While filling, `head == len`;
-    /// once full it points at the **oldest** slot (the FIFO victim).
+    /// Next physical write position (`== (tail + len) % capacity`).
     head: usize,
+    /// Physical position of the **oldest** stored rollout — the FIFO
+    /// victim, and where staleness eviction trims from.
+    tail: usize,
+    /// Staleness bound in policy versions (`--replay_staleness`);
+    /// 0 = unbounded, the pre-staleness behavior byte for byte.
+    staleness: u64,
+    /// Newest published weight version, fed by the stacker each round
+    /// via [`set_current_version`](ReplayBuffer::set_current_version).
+    current_version: u64,
+    /// Warmup latch: set once the ring first fills.  Staleness
+    /// eviction may shrink `len` below capacity afterwards, but the
+    /// warmup gate never closes again (the early-over-replay hazard it
+    /// guards against is gone for good once the ring has been full).
+    has_warmed: bool,
     rng: Rng,
     gauges: Arc<PipelineGauges>,
     inserted: u64,
     sampled: u64,
     evicted: u64,
+    stale_evicted: u64,
 }
 
 impl ReplayBuffer {
@@ -105,12 +120,34 @@ impl ReplayBuffer {
             slots,
             len: 0,
             head: 0,
+            tail: 0,
+            staleness: 0,
+            current_version: 0,
+            has_warmed: false,
             rng: Rng::new(seed ^ REPLAY_SEED_STREAM),
             gauges,
             inserted: 0,
             sampled: 0,
             evicted: 0,
+            stale_evicted: 0,
         }
+    }
+
+    /// Set the staleness bound K in policy versions (0 = unbounded):
+    /// stored rollouts whose stamp lags the current version by more
+    /// than K are evicted on insert/sample instead of trained on.
+    pub fn set_staleness(&mut self, k: u64) {
+        self.staleness = k;
+    }
+
+    /// Advance the learner's published weight version (monotone; stale
+    /// values are ignored) and prefix-evict ring slots that fell out
+    /// of the staleness window, freeing their capacity for fresh
+    /// inserts.
+    // tb-lint: no-alloc
+    pub fn set_current_version(&mut self, v: u64) {
+        self.current_version = self.current_version.max(v);
+        self.evict_stale();
     }
 
     pub fn capacity(&self) -> usize {
@@ -128,9 +165,10 @@ impl ReplayBuffer {
 
     /// The warmup gate: sampling only begins once the ring has filled
     /// to capacity, so early batches never over-replay the first few
-    /// (highly correlated) rollouts.
+    /// (highly correlated) rollouts.  A latch: staleness eviction may
+    /// later shrink the ring, but the gate never closes again.
     pub fn warmed_up(&self) -> bool {
-        self.len == self.capacity()
+        self.has_warmed
     }
 
     /// The rollout at *logical* index `i` (0 = oldest stored), if any.
@@ -139,43 +177,102 @@ impl ReplayBuffer {
         if i >= self.len {
             return None;
         }
-        let phys = if self.len == self.capacity() {
-            (self.head + i) % self.capacity()
-        } else {
-            i
-        };
-        Some(&self.slots[phys])
+        Some(&self.slots[(self.tail + i) % self.capacity()])
+    }
+
+    /// Whether the rollout at logical index `i` has fallen out of the
+    /// staleness window.
+    // tb-lint: no-alloc
+    fn is_stale_at(&self, i: usize) -> bool {
+        let phys = (self.tail + i) % self.capacity();
+        is_stale(
+            self.current_version,
+            self.slots[phys].policy_version,
+            self.staleness,
+        )
+    }
+
+    /// Trim stale rollouts off the FIFO front.  Version stamps are
+    /// only roughly monotone in insertion order (actors race), so this
+    /// clears the prefix cheaply; stragglers further in are skipped by
+    /// [`sample`](ReplayBuffer::sample)'s probe instead.
+    // tb-lint: no-alloc
+    fn evict_stale(&mut self) {
+        if self.staleness == 0 || self.len == 0 {
+            return;
+        }
+        let cap = self.capacity();
+        let before = self.len;
+        while self.len > 0 && self.is_stale_at(0) {
+            self.tail = (self.tail + 1) % cap;
+            self.len -= 1;
+            self.stale_evicted += 1;
+            self.gauges.replay_evicted.inc();
+        }
+        if self.len != before {
+            self.gauges.replay_size.set(self.len as u64);
+        }
+    }
+
+    /// Stored rollouts currently inside the staleness window (== `len`
+    /// while the bound is disabled).  `plan` caps at this, so a batch
+    /// never asks for more replayed columns than are legal to sample.
+    pub fn fresh_len(&self) -> usize {
+        if self.staleness == 0 {
+            return self.len;
+        }
+        (0..self.len).filter(|&i| !self.is_stale_at(i)).count()
     }
 
     /// Copy `r` in place into the next ring slot, evicting the oldest
-    /// stored rollout once the ring is full (FIFO).  No allocation.
+    /// stored rollout once the ring is full (FIFO) — after trimming
+    /// any rollouts the staleness bound has expired.  No allocation.
     // tb-lint: no-alloc
     pub fn insert(&mut self, r: &Rollout) {
         debug_assert!(r.is_complete(), "only complete rollouts are replayable");
-        let evicting = self.len == self.capacity();
+        self.evict_stale();
         let cap = self.capacity();
-        self.slots[self.head].copy_from(r);
-        self.head = (self.head + 1) % cap;
-        self.inserted += 1;
-        if evicting {
+        if self.len == cap {
+            self.tail = (self.tail + 1) % cap;
+            self.len -= 1;
             self.evicted += 1;
             self.gauges.replay_evicted.inc();
-        } else {
-            self.len += 1;
-            self.gauges.replay_size.set(self.len as u64);
         }
+        self.slots[self.head].copy_from(r);
+        self.head = (self.head + 1) % cap;
+        self.len += 1;
+        self.inserted += 1;
+        if self.len == cap {
+            self.has_warmed = true;
+        }
+        self.gauges.replay_size.set(self.len as u64);
     }
 
     /// Sample one stored rollout uniformly (seeded stream, with
     /// replacement across calls).  Returns a reference straight into
     /// the ring — stack it with [`stack_rollout_into`] and it never
-    /// leaves its slot.  `None` while the buffer is empty.
+    /// leaves its slot.  `None` while the buffer is empty or every
+    /// stored rollout is outside the staleness window.
+    ///
+    /// With a staleness bound set, a draw landing on a stale
+    /// mid-ring slot (version stamps are only roughly monotone in
+    /// insertion order) probes forward cyclically to the next fresh
+    /// slot — so a returned rollout is **never** older than the bound.
     // tb-lint: no-alloc
     pub fn sample(&mut self) -> Option<&Rollout> {
+        self.evict_stale();
         if self.len == 0 {
             return None;
         }
-        let i = self.rng.below(self.len);
+        let mut i = self.rng.below(self.len);
+        let mut probed = 0;
+        while self.is_stale_at(i) {
+            probed += 1;
+            if probed >= self.len {
+                return None; // nothing fresh remains
+            }
+            i = (i + 1) % self.len;
+        }
         self.sampled += 1;
         self.gauges.replay_sampled.inc();
         self.get(i)
@@ -184,15 +281,16 @@ impl ReplayBuffer {
     /// How many of a `batch_size`-rollout learner batch should come
     /// from replay this round: 0 until the warmup gate opens, then
     /// [`replay_count`]`(batch_size, ratio)` — additionally capped at
-    /// the stored count, so a ring smaller than `round(ratio·B)`
-    /// degrades to fewer replayed columns instead of overdrawing
-    /// (sampling is with replacement, but `stack_mixed` refuses to
-    /// draw more columns than the ring holds).
+    /// the sampleable (fresh) count, so a ring smaller than
+    /// `round(ratio·B)` — or one partly expired by the staleness
+    /// bound — degrades to fewer replayed columns instead of
+    /// overdrawing (sampling is with replacement, but `stack_mixed`
+    /// refuses to draw more columns than the ring holds).
     pub fn plan(&self, batch_size: usize, ratio: f64) -> usize {
         if !self.warmed_up() {
             return 0;
         }
-        replay_count(batch_size, ratio).min(self.len)
+        replay_count(batch_size, ratio).min(self.fresh_len())
     }
 
     /// Lifetime counters, for `TrainReport`.
@@ -203,8 +301,18 @@ impl ReplayBuffer {
             inserted: self.inserted,
             sampled: self.sampled,
             evicted: self.evicted,
+            stale_evicted: self.stale_evicted,
         }
     }
+}
+
+/// Whether a rollout stamped `policy_version` is outside the
+/// staleness window at `current` under bound `k` (0 = unbounded,
+/// nothing is ever stale) — the staleness predicate shared by the
+/// ring's eviction and sampling paths.
+// tb-lint: no-alloc
+pub fn is_stale(current: u64, policy_version: u64, k: u64) -> bool {
+    k > 0 && current.saturating_sub(policy_version) > k
 }
 
 /// Replayed rollouts per batch of `batch_size` at mixing `ratio`:
@@ -265,7 +373,10 @@ pub struct ReplayStats {
     pub len: usize,
     pub inserted: u64,
     pub sampled: u64,
+    /// FIFO evictions (ring at capacity).
     pub evicted: u64,
+    /// Staleness evictions (`--replay_staleness` expired the slot).
+    pub stale_evicted: u64,
 }
 
 impl fmt::Display for ReplayStats {
@@ -274,7 +385,12 @@ impl fmt::Display for ReplayStats {
             f,
             "size {}/{} inserted {} sampled {} evicted {}",
             self.len, self.capacity, self.inserted, self.sampled, self.evicted
-        )
+        )?;
+        // quiet while the staleness bound is off (or never fired)
+        if self.stale_evicted > 0 {
+            write!(f, " stale-evicted {}", self.stale_evicted)?;
+        }
+        Ok(())
     }
 }
 
@@ -502,6 +618,112 @@ mod tests {
             );
         }
         assert_eq!(rb.stats().sampled, 2);
+    }
+
+    /// A tagged rollout stamped with a behaviour-policy version.
+    fn tagged_v(tag: f32, version: u64) -> Rollout {
+        let mut r = tagged(tag);
+        r.policy_version = version;
+        r
+    }
+
+    /// Staleness eviction trims the FIFO front oldest-first as the
+    /// current version advances, and the warmup latch stays open while
+    /// the ring shrinks.
+    #[test]
+    fn staleness_evicts_oldest_versions_first() {
+        let mut rb = ReplayBuffer::new(4, T, OBS, A, 1);
+        rb.set_staleness(2);
+        for k in 0..4u64 {
+            rb.insert(&tagged_v(k as f32, k + 1)); // versions 1..=4
+        }
+        assert!(rb.warmed_up());
+        assert_eq!(rb.stats().stale_evicted, 0);
+        rb.set_current_version(4);
+        // lag of version v is 4 - v: only version 1 (lag 3) is > 2
+        assert_eq!(rb.len(), 3);
+        assert_eq!(rb.stats().stale_evicted, 1);
+        let stored: Vec<f32> = (0..rb.len()).map(|i| tag_of(rb.get(i).unwrap())).collect();
+        assert_eq!(stored, vec![1.0, 2.0, 3.0], "oldest version evicted first");
+        rb.set_current_version(6);
+        // versions 2 and 3 (lags 4, 3) expire; version 4 (lag 2) stays
+        assert_eq!(rb.len(), 1);
+        assert_eq!(rb.stats().stale_evicted, 3);
+        assert_eq!(tag_of(rb.get(0).unwrap()), 3.0);
+        assert!(rb.warmed_up(), "warmup latch survives the eviction shrink");
+        assert!(rb.plan(4, 0.5) <= 1, "plan shrinks with the fresh count");
+        // freed capacity is reusable: fresh inserts refill without FIFO
+        // eviction of live slots
+        let evicted_before = rb.stats().evicted;
+        rb.insert(&tagged_v(9.0, 6));
+        assert_eq!(rb.len(), 2);
+        assert_eq!(rb.stats().evicted, evicted_before, "no FIFO victim needed");
+        let s = rb.stats();
+        assert!(s.to_string().contains("stale-evicted 3"), "{s}");
+    }
+
+    /// The acceptance gate: with `--replay_staleness K` set, `sample`
+    /// provably never returns a rollout more than K versions old —
+    /// even when insertion order carries version inversions (actor
+    /// raciness), which prefix eviction alone cannot clear.
+    #[test]
+    fn sampling_never_returns_rollouts_older_than_k() {
+        let mut rb = ReplayBuffer::new(8, T, OBS, A, 3);
+        rb.set_staleness(3);
+        // insertion order deliberately non-monotone in version
+        let versions = [5u64, 2, 7, 3, 8, 2, 9, 10];
+        for &v in &versions {
+            rb.insert(&tagged_v(v as f32, v));
+        }
+        assert!(rb.warmed_up());
+        rb.set_current_version(10);
+        // prefix eviction clears versions 5 and 2 off the front; the
+        // mid-ring stale stragglers (3 and 2) stay stored but must
+        // never be sampled
+        assert_eq!(rb.len(), 6);
+        assert_eq!(rb.fresh_len(), 4);
+        let mut draws = 0;
+        for _ in 0..256 {
+            if let Some(v) = rb.sample().map(|r| r.policy_version) {
+                draws += 1;
+                assert!(10 - v <= 3, "sampled a stale rollout (version {v})");
+            }
+        }
+        assert_eq!(draws, 256, "fresh slots must stay sampleable");
+        assert!(rb.plan(8, 0.99) <= rb.fresh_len(), "plan respects freshness");
+    }
+
+    /// When every stored rollout has expired, `sample` returns `None`
+    /// instead of violating the bound, and `plan` asks for nothing.
+    #[test]
+    fn fully_stale_ring_samples_nothing() {
+        let mut rb = ReplayBuffer::new(2, T, OBS, A, 5);
+        rb.set_staleness(1);
+        rb.insert(&tagged_v(0.0, 1));
+        rb.insert(&tagged_v(1.0, 1));
+        assert!(rb.warmed_up());
+        rb.set_current_version(100);
+        assert_eq!(rb.len(), 0, "everything expired");
+        assert!(rb.sample().is_none());
+        assert_eq!(rb.plan(4, 0.5), 0);
+        assert_eq!(rb.stats().sampled, 0, "a miss is not a sample");
+    }
+
+    /// Staleness off (the default) is byte-identical to the old ring:
+    /// version stamps are carried but never evict or bias sampling.
+    #[test]
+    fn staleness_disabled_ignores_version_stamps() {
+        let draw = |stale: bool| -> Vec<f32> {
+            let mut rb = ReplayBuffer::new(4, T, OBS, A, 21);
+            if stale {
+                rb.set_current_version(1_000_000);
+            }
+            for k in 0..4u64 {
+                rb.insert(&tagged_v(k as f32, k + 1));
+            }
+            (0..32).map(|_| tag_of(rb.sample().unwrap())).collect()
+        };
+        assert_eq!(draw(false), draw(true), "k = 0 must never evict or probe");
     }
 
     #[test]

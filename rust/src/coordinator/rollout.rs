@@ -31,6 +31,11 @@ pub struct Rollout {
     pub behavior_logits: Vec<f32>,
     /// How many transitions are filled (== t when complete).
     pub filled: usize,
+    /// Published weight version the behaviour policy ran at when the
+    /// unroll started (0 = unstamped).  The learner's policy lag for
+    /// this rollout is `learner_version - policy_version` — the exact
+    /// off-policyness v-trace corrects (DESIGN.md §Sharded-Learner).
+    pub policy_version: u64,
 }
 
 impl Rollout {
@@ -45,6 +50,7 @@ impl Rollout {
             dones: vec![0.0; t],
             behavior_logits: vec![0.0; t * num_actions],
             filled: 0,
+            policy_version: 0,
         }
     }
 
@@ -97,6 +103,7 @@ impl Rollout {
         self.dones.copy_from_slice(&src.dones);
         self.behavior_logits.copy_from_slice(&src.behavior_logits);
         self.filled = src.filled;
+        self.policy_version = src.policy_version;
     }
 }
 
@@ -231,6 +238,7 @@ impl RolloutPool {
     // tb-lint: no-alloc
     pub fn recycle(&self, mut r: Rollout) {
         r.filled = 0;
+        r.policy_version = 0;
         let mut inner = self.shared.inner.lock().unwrap(); // tb-lint: allow(unwrap, leaf pool lock; poison propagates)
         if inner.closed || inner.free.len() >= self.shared.capacity {
             return;
@@ -284,6 +292,7 @@ pub fn stack_rollout_into(r: &Rollout, bi: usize, m: &Manifest, batch: &mut Lear
     assert!(r.is_complete(), "incomplete rollout");
     assert_eq!(r.t, t);
     assert_eq!(r.obs_len, obs_len);
+    batch.policy_versions[bi] = r.policy_version;
     for ti in 0..=t {
         let dst = (ti * b + bi) * obs_len;
         let src = ti * obs_len;
@@ -401,6 +410,35 @@ mod tests {
         assert_eq!(dst.filled, src.filled);
         assert!(dst.is_complete());
         assert_eq!(ptr, dst.observations.as_ptr(), "copy must reuse the buffer");
+    }
+
+    /// The version stamp rides every hop: `copy_from` (the replay
+    /// ring's write), `stack_rollout_into` (the batch column), and the
+    /// pool's recycle reset.
+    #[test]
+    fn policy_version_stamps_through_copy_stack_and_recycle() {
+        let m = tiny_manifest(2, 3);
+        let mut rollouts = Vec::new();
+        for bi in 0..3 {
+            let mut r = Rollout::new(2, 4, 3);
+            fill_rollout(&mut r, bi as f32);
+            r.policy_version = 100 + bi as u64;
+            rollouts.push(r);
+        }
+        // copy_from carries the stamp
+        let mut slot = Rollout::new(2, 4, 3);
+        slot.copy_from(&rollouts[1]);
+        assert_eq!(slot.policy_version, 101);
+        // stacking records one stamp per batch column
+        let mut batch = LearnerBatch::zeros(&m);
+        stack_rollouts(&rollouts, &m, &mut batch);
+        assert_eq!(batch.policy_versions, vec![100, 101, 102]);
+        // recycle resets the stamp along with filled
+        let pool = RolloutPool::new(1, 2, 4, 3);
+        let mut r = pool.rent().unwrap();
+        r.policy_version = 7;
+        pool.recycle(r);
+        assert_eq!(pool.rent().unwrap().policy_version, 0);
     }
 
     /// `stack_rollout_into` must place exactly one batch column — and

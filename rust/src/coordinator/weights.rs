@@ -5,8 +5,14 @@
 //! the newest version before serving the next batch.  The version
 //! counter doubles as the staleness signal: the behaviour-policy lag
 //! of a rollout is `learner_version - version_used_by_actor`, the
-//! quantity V-trace corrects for.
+//! quantity V-trace corrects for.  Actors read the counter through a
+//! lock-free [`VersionHandle`] to stamp each unroll (DESIGN.md
+//! §Sharded-Learner), and the inference thread refreshes through
+//! [`copy_newer_into`](WeightsStore::copy_newer_into) — an
+//! allocation-free read path that copies into its preallocated host
+//! buffers instead of cloning the snapshot.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::runtime::ParamVecs;
@@ -21,6 +27,27 @@ struct State {
 #[derive(Clone)]
 pub struct WeightsStore {
     state: Arc<(Mutex<State>, Condvar)>,
+    /// Lock-free mirror of `State::version` for hot-path readers
+    /// (actors stamping rollouts).  Written under the state lock;
+    /// Release-published so a handle read observes a version no newer
+    /// than what `latest()` would return.
+    version: Arc<AtomicU64>,
+}
+
+/// Lock-free read handle on the published weight version.  Actors
+/// clone one per thread and stamp every unroll with
+/// [`get`](VersionHandle::get); a detached default handle always
+/// reads 0 (tests, benches).
+#[derive(Clone, Default)]
+pub struct VersionHandle(Arc<AtomicU64>);
+
+impl VersionHandle {
+    /// Newest published weight version (0 = nothing published yet).
+    // tb-lint: no-alloc
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Acquire)
+    }
 }
 
 impl WeightsStore {
@@ -34,6 +61,7 @@ impl WeightsStore {
                 }),
                 Condvar::new(),
             )),
+            version: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -43,8 +71,23 @@ impl WeightsStore {
         let mut st = lock.lock().unwrap(); // tb-lint: allow(unwrap, leaf weights lock; poison propagates)
         st.version += 1;
         st.params = Arc::new(params);
+        self.version.store(st.version, Ordering::Release);
         cv.notify_all();
         st.version
+    }
+
+    /// Seed the version counter (checkpoint resume: the monotone
+    /// sequence continues from the restored version instead of
+    /// resetting to 0).  Must be called before the first `publish`.
+    pub fn seed_version(&self, version: u64) {
+        let (lock, _) = &*self.state;
+        let mut st = lock.lock().unwrap(); // tb-lint: allow(unwrap, leaf weights lock; poison propagates)
+        assert!(
+            st.version == 0,
+            "seed_version after publish would break monotonicity"
+        );
+        st.version = version;
+        self.version.store(version, Ordering::Release);
     }
 
     /// Latest snapshot (no blocking). Version 0 = nothing published.
@@ -52,6 +95,39 @@ impl WeightsStore {
         let (lock, _) = &*self.state;
         let st = lock.lock().unwrap(); // tb-lint: allow(unwrap, leaf weights lock; poison propagates)
         (st.version, st.params.clone())
+    }
+
+    /// Copy the latest snapshot into `dst` iff it is newer than
+    /// `have`, returning the adopted version.  This is the inference
+    /// thread's steady-state refresh: `dst` is its preallocated host
+    /// buffer set, so a refresh moves bytes leaf-by-leaf and never
+    /// touches the heap (mismatched leaf shapes fall back to a
+    /// resizing copy — first adoption only, when `dst` is empty).
+    // tb-lint: no-alloc
+    pub fn copy_newer_into(&self, have: u64, dst: &mut ParamVecs) -> Option<u64> {
+        // cheap lock-free reject: the common case is "nothing new"
+        if self.version.load(Ordering::Acquire) <= have {
+            return None;
+        }
+        let (lock, _) = &*self.state;
+        let st = lock.lock().unwrap(); // tb-lint: allow(unwrap, leaf weights lock; poison propagates)
+        if st.version <= have {
+            return None;
+        }
+        let src: &ParamVecs = &st.params;
+        if dst.len() == src.len()
+            && dst.iter().zip(src.iter()).all(|(d, s)| d.len() == s.len())
+        {
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                d.copy_from_slice(s);
+            }
+        } else {
+            dst.clear();
+            // first adoption only: dst is empty / reshaped, so the
+            // resizing copy is off the steady-state path
+            dst.extend(src.iter().cloned());
+        }
+        Some(st.version)
     }
 
     /// Block until a version newer than `than` exists (or closed).
@@ -77,6 +153,11 @@ impl WeightsStore {
 
     pub fn version(&self) -> u64 {
         self.state.0.lock().unwrap().version // tb-lint: allow(unwrap, leaf weights lock; poison propagates)
+    }
+
+    /// Lock-free version handle for actor-side rollout stamping.
+    pub fn handle(&self) -> VersionHandle {
+        VersionHandle(self.version.clone())
     }
 }
 
@@ -131,5 +212,47 @@ mod tests {
         let (_, old) = w.latest();
         w.publish(vec![vec![9.0, 9.0]]);
         assert_eq!(old[0], vec![1.0, 2.0], "old snapshot unchanged");
+    }
+
+    #[test]
+    fn version_handle_tracks_publishes() {
+        let w = WeightsStore::new();
+        let h = w.handle();
+        assert_eq!(h.get(), 0);
+        w.publish(vec![vec![1.0]]);
+        assert_eq!(h.get(), 1);
+        w.publish(vec![vec![2.0]]);
+        assert_eq!(h.get(), 2);
+        // detached default handle (tests/benches) always reads 0
+        assert_eq!(VersionHandle::default().get(), 0);
+    }
+
+    #[test]
+    fn copy_newer_into_adopts_and_rejects() {
+        let w = WeightsStore::new();
+        let mut dst: ParamVecs = Vec::new();
+        assert_eq!(w.copy_newer_into(0, &mut dst), None, "nothing published");
+        w.publish(vec![vec![1.0, 2.0], vec![3.0]]);
+        assert_eq!(w.copy_newer_into(0, &mut dst), Some(1), "first adoption");
+        assert_eq!(dst, vec![vec![1.0, 2.0], vec![3.0]]);
+        assert_eq!(w.copy_newer_into(1, &mut dst), None, "already current");
+        w.publish(vec![vec![5.0, 6.0], vec![7.0]]);
+        // steady state: same shapes — the copy reuses dst's allocations
+        let ptr = dst[0].as_ptr();
+        assert_eq!(w.copy_newer_into(1, &mut dst), Some(2));
+        assert_eq!(dst, vec![vec![5.0, 6.0], vec![7.0]]);
+        assert_eq!(ptr, dst[0].as_ptr(), "refresh must reuse the buffer");
+    }
+
+    #[test]
+    fn seed_version_continues_monotone() {
+        let w = WeightsStore::new();
+        w.seed_version(41);
+        assert_eq!(w.version(), 41);
+        assert_eq!(w.handle().get(), 41);
+        assert_eq!(w.publish(vec![vec![1.0]]), 42, "resume continues, no reset");
+        // a reader holding the restored version sees the new publish
+        let mut dst: ParamVecs = Vec::new();
+        assert_eq!(w.copy_newer_into(41, &mut dst), Some(42));
     }
 }

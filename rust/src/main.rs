@@ -125,10 +125,14 @@ fn main() -> anyhow::Result<()> {
             // inference slots (0 = the artifact's full batch).
             let mut learner = torchbeast::runtime::LearnerEngine::load(&cfg.artifact_dir)?;
             let (params, what) = match &cfg.init_checkpoint {
-                Some(path) => (
-                    torchbeast::runtime::checkpoint::load(path, &learner.manifest)?,
-                    format!("checkpoint {}", path.display()),
-                ),
+                Some(path) => {
+                    let (params, version) =
+                        torchbeast::runtime::checkpoint::load(path, &learner.manifest)?;
+                    (
+                        params,
+                        format!("checkpoint {} (weight version {version})", path.display()),
+                    )
+                }
                 None => (
                     learner.init_params(coordinator::fold_seed(cfg.seed))?,
                     format!("random init (seed {})", cfg.seed),

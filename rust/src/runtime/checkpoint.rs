@@ -6,8 +6,9 @@
 //! cross-language contract — it is trivially readable from Python):
 //!
 //! ```text
-//! magic  "TBCK1\n"
+//! magic  "TBCK2\n"
 //! u32le  leaf count
+//! u64le  weight version (the monotone Weights counter at save time)
 //! per leaf:
 //!   u32le name_len ++ name utf8
 //!   u32le rank ++ rank * u64le dims
@@ -16,6 +17,9 @@
 //!
 //! `save`/`load` validate against the manifest (names, shapes, order),
 //! so loading a checkpoint into a mismatched artifact fails loudly.
+//! Legacy `TBCK1` files (no version field) still load, reporting
+//! weight version 0 — resume then restarts the version sequence, which
+//! is exactly what those checkpoints recorded.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -25,10 +29,12 @@ use anyhow::{Context, Result};
 use super::manifest::Manifest;
 use super::ParamVecs;
 
-const MAGIC: &[u8; 6] = b"TBCK1\n";
+const MAGIC_V1: &[u8; 6] = b"TBCK1\n";
+const MAGIC: &[u8; 6] = b"TBCK2\n";
 
-/// Write a parameter snapshot (manifest leaf order).
-pub fn save(path: &Path, manifest: &Manifest, params: &ParamVecs) -> Result<()> {
+/// Write a parameter snapshot (manifest leaf order) stamped with the
+/// weight version it was published as.
+pub fn save(path: &Path, manifest: &Manifest, params: &ParamVecs, version: u64) -> Result<()> {
     anyhow::ensure!(
         params.len() == manifest.params.len(),
         "snapshot has {} leaves, manifest {}",
@@ -41,6 +47,7 @@ pub fn save(path: &Path, manifest: &Manifest, params: &ParamVecs) -> Result<()> 
     let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
     w.write_all(MAGIC)?;
     w.write_all(&(params.len() as u32).to_le_bytes())?;
+    w.write_all(&version.to_le_bytes())?;
     for (leaf, data) in manifest.params.iter().zip(params) {
         anyhow::ensure!(
             data.len() == leaf.elems(),
@@ -76,20 +83,27 @@ fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
-/// Load a snapshot and validate it against the manifest.
-pub fn load(path: &Path, manifest: &Manifest) -> Result<ParamVecs> {
+/// Load a snapshot and validate it against the manifest.  Returns the
+/// leaves plus the weight version recorded at save time (0 for legacy
+/// TBCK1 files, which predate the version stamp).
+pub fn load(path: &Path, manifest: &Manifest) -> Result<(ParamVecs, u64)> {
     let mut r = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
     );
     let mut magic = [0u8; 6];
     r.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "not a TBCK1 checkpoint: {}", path.display());
+    anyhow::ensure!(
+        &magic == MAGIC || &magic == MAGIC_V1,
+        "not a TBCK1/TBCK2 checkpoint: {}",
+        path.display()
+    );
     let count = read_u32(&mut r)? as usize;
     anyhow::ensure!(
         count == manifest.params.len(),
         "checkpoint has {count} leaves, manifest {}",
         manifest.params.len()
     );
+    let version = if &magic == MAGIC { read_u64(&mut r)? } else { 0 };
     let mut out = Vec::with_capacity(count);
     for leaf in &manifest.params {
         let name_len = read_u32(&mut r)? as usize;
@@ -121,7 +135,7 @@ pub fn load(path: &Path, manifest: &Manifest) -> Result<ParamVecs> {
         }
         out.push(data);
     }
-    Ok(out)
+    Ok((out, version))
 }
 
 #[cfg(test)]
@@ -168,9 +182,40 @@ mod tests {
         let params = vec![vec![1.0, -2.0, 3.5], vec![0.0, 0.25, -0.5, 9.0]];
         let dir = std::env::temp_dir().join("tb_ckpt_test");
         let path = dir.join("a.ckpt");
-        save(&path, &m, &params).unwrap();
-        let loaded = load(&path, &m).unwrap();
+        save(&path, &m, &params, 17).unwrap();
+        let (loaded, version) = load(&path, &m).unwrap();
         assert_eq!(loaded, params);
+        assert_eq!(version, 17, "weight version survives the round trip");
+    }
+
+    #[test]
+    fn legacy_tbck1_loads_as_version_zero() {
+        // hand-write a TBCK1 file (the pre-version format) and check
+        // it still loads, reporting version 0
+        let m = tiny_manifest();
+        let params = vec![vec![1.0, -2.0, 3.5], vec![0.0, 0.25, -0.5, 9.0]];
+        let dir = std::env::temp_dir().join("tb_ckpt_test_v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy.ckpt");
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC_V1);
+        bytes.extend_from_slice(&(params.len() as u32).to_le_bytes());
+        for (leaf, data) in m.params.iter().zip(&params) {
+            bytes.extend_from_slice(&(leaf.name.len() as u32).to_le_bytes());
+            bytes.extend_from_slice(leaf.name.as_bytes());
+            bytes.extend_from_slice(&(leaf.shape.len() as u32).to_le_bytes());
+            for &d in &leaf.shape {
+                bytes.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            bytes.extend_from_slice(&(data.len() as u32).to_le_bytes());
+            for &x in data {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        std::fs::write(&path, bytes).unwrap();
+        let (loaded, version) = load(&path, &m).unwrap();
+        assert_eq!(loaded, params);
+        assert_eq!(version, 0, "legacy files predate the version stamp");
     }
 
     #[test]
@@ -179,7 +224,7 @@ mod tests {
         let params = vec![vec![0.0; 3], vec![0.0; 4]];
         let dir = std::env::temp_dir().join("tb_ckpt_test2");
         let path = dir.join("b.ckpt");
-        save(&path, &m, &params).unwrap();
+        save(&path, &m, &params, 1).unwrap();
 
         let mut other = tiny_manifest();
         other.params[1].shape = vec![4]; // same elems, different shape
@@ -204,7 +249,7 @@ mod tests {
         let m = tiny_manifest();
         let bad = vec![vec![0.0; 3], vec![0.0; 5]];
         let dir = std::env::temp_dir().join("tb_ckpt_test4");
-        assert!(save(&dir.join("c.ckpt"), &m, &bad).is_err());
+        assert!(save(&dir.join("c.ckpt"), &m, &bad, 0).is_err());
     }
 
     #[test]

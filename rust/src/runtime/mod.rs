@@ -218,6 +218,10 @@ pub struct LearnerBatch {
     pub dones: Vec<f32>,
     /// `[T, B, A]`
     pub behavior_logits: Vec<f32>,
+    /// `[B]` behaviour-policy weight version per batch column (0 =
+    /// unstamped).  Metadata for the policy-lag telemetry, not a
+    /// learner-artifact input.
+    pub policy_versions: Vec<u64>,
 }
 
 impl LearnerBatch {
@@ -229,6 +233,7 @@ impl LearnerBatch {
             rewards: vec![0.0; t * b],
             dones: vec![0.0; t * b],
             behavior_logits: vec![0.0; t * b * a],
+            policy_versions: vec![0; b],
         }
     }
 }
@@ -293,9 +298,33 @@ impl LearnerEngine {
         Ok(())
     }
 
+    /// Install parameters *and* optimizer state (sharded-learner sync:
+    /// every worker adopts the barrier-averaged state between steps).
+    /// Unlike [`set_params`](LearnerEngine::set_params) this neither
+    /// zeroes the optimizer nor resets the step counter — the run is
+    /// continuing, not restarting.
+    pub fn install_state(&mut self, params: &ParamVecs, opt: &ParamVecs) -> Result<()> {
+        self.params = buffers_from_vecs(&self.client, params, &self.manifest.params)?;
+        self.opt_state = buffers_from_vecs(&self.client, opt, &self.manifest.opt_state)?;
+        Ok(())
+    }
+
     /// One learner step. Consumes a rollout batch, updates params and
     /// optimizer state in place, returns (stats, new param snapshot).
     pub fn step(&mut self, batch: &LearnerBatch) -> Result<(LearnerStats, ParamVecs)> {
+        let (stats, params, _opt) = self.step_full(batch)?;
+        Ok((stats, params))
+    }
+
+    /// [`step`](LearnerEngine::step), additionally returning the
+    /// post-step optimizer-state snapshot.  The sharded learner
+    /// averages both across workers; params and opt state already
+    /// round-trip through the host here (see the tuple note below), so
+    /// exposing the opt snapshot costs nothing extra.
+    pub fn step_full(
+        &mut self,
+        batch: &LearnerBatch,
+    ) -> Result<(LearnerStats, ParamVecs, ParamVecs)> {
         let m = &self.manifest;
         let (t, b, a) = (m.unroll_length, m.batch_size, m.num_actions);
         let [c, h, w] = m.obs_shape;
@@ -340,7 +369,7 @@ impl LearnerEngine {
         self.params = buffers_from_vecs(&self.client, &snapshot, &self.manifest.params)?;
         self.opt_state = buffers_from_vecs(&self.client, &opt_vecs, &self.manifest.opt_state)?;
         self.steps += 1;
-        Ok((stats, snapshot))
+        Ok((stats, snapshot, opt_vecs))
     }
 
     pub fn mean_step_time(&self) -> std::time::Duration {

@@ -104,6 +104,70 @@ impl fmt::Debug for Gauge {
     }
 }
 
+/// Number of [`LagHist`] buckets: exact counts for lags 0–3, then
+/// power-of-two ranges 4–7, 8–15, 16–31, and 32+.
+pub const LAG_BUCKETS: usize = 8;
+
+/// Policy-lag histogram: one relaxed-atomic record per batch column of
+/// `learner_version − rollout.policy_version` — the measured
+/// off-policyness v-trace corrects (DESIGN.md §Sharded-Learner).
+/// Clones share the same underlying counters; a detached default
+/// instance reads all-zero.
+#[derive(Clone, Default)]
+pub struct LagHist {
+    count: Arc<AtomicU64>,
+    sum: Arc<AtomicU64>,
+    max: Arc<AtomicU64>,
+    buckets: Arc<[AtomicU64; LAG_BUCKETS]>,
+}
+
+impl LagHist {
+    pub fn new() -> LagHist {
+        LagHist::default()
+    }
+
+    /// Record one per-column lag observation (hot-path safe: four
+    /// relaxed atomic ops, no locks, no allocation).
+    // tb-lint: no-alloc
+    #[inline]
+    pub fn record(&self, lag: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(lag, Ordering::Relaxed);
+        self.max.fetch_max(lag, Ordering::Relaxed);
+        let b = match lag {
+            0..=3 => lag as usize,
+            4..=7 => 4,
+            8..=15 => 5,
+            16..=31 => 6,
+            _ => 7,
+        };
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time bucket counts (independent relaxed reads).
+    pub fn buckets(&self) -> [u64; LAG_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+}
+
+impl fmt::Debug for LagHist {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "LagHist(n={}, max={})", self.count(), self.max())
+    }
+}
+
 /// The occupancy gauges of one training (or evaluation) pipeline.
 /// Handles are `Clone` (shared atomics), so the driver clones
 /// individual gauges into the components that update them.
@@ -141,8 +205,14 @@ pub struct PipelineGauges {
     /// `ReplayBuffer`: rollouts sampled into learner batches.
     pub replay_sampled: Counter,
     /// `ReplayBuffer`: rollouts overwritten by the FIFO ring after it
-    /// filled (each insert past capacity evicts the oldest slot).
+    /// filled (each insert past capacity evicts the oldest slot) or
+    /// expired by the `--replay_staleness` bound.
     pub replay_evicted: Counter,
+    /// Per-batch-column policy lag (`learner_version −
+    /// rollout.policy_version`), recorded by the driver as it hands
+    /// each batch to the learner.  All-zero while version stamping is
+    /// inactive (eval, detached test pipelines).
+    pub policy_lag: LagHist,
 }
 
 impl PipelineGauges {
@@ -175,6 +245,10 @@ impl PipelineGauges {
             replay_size: self.replay_size.get(),
             replay_sampled: self.replay_sampled.get(),
             replay_evicted: self.replay_evicted.get(),
+            lag_count: self.policy_lag.count(),
+            lag_sum: self.policy_lag.sum(),
+            lag_max: self.policy_lag.max(),
+            lag_buckets: self.policy_lag.buckets(),
         }
     }
 }
@@ -197,6 +271,13 @@ pub struct GaugesSnapshot {
     pub replay_size: u64,
     pub replay_sampled: u64,
     pub replay_evicted: u64,
+    /// Policy-lag observations recorded (batch columns seen).
+    pub lag_count: u64,
+    /// Sum of recorded lags (mean = `lag_sum / lag_count`).
+    pub lag_sum: u64,
+    pub lag_max: u64,
+    /// Histogram counts: lags 0, 1, 2, 3, 4–7, 8–15, 16–31, 32+.
+    pub lag_buckets: [u64; LAG_BUCKETS],
 }
 
 impl fmt::Display for GaugesSnapshot {
@@ -234,6 +315,16 @@ impl fmt::Display for GaugesSnapshot {
                 f,
                 " replay {} (sampled {} evicted {})",
                 self.replay_size, self.replay_sampled, self.replay_evicted
+            )?;
+        }
+        // policy-lag distribution: only drivers stamping rollout
+        // versions record it, so detached pipelines stay quiet
+        if self.lag_count > 0 {
+            write!(
+                f,
+                " lag mean {:.2} max {}",
+                self.lag_sum as f64 / self.lag_count as f64,
+                self.lag_max
             )?;
         }
         Ok(())
@@ -287,6 +378,27 @@ mod tests {
     }
 
     #[test]
+    fn lag_hist_records_count_sum_max_and_buckets() {
+        let h = LagHist::new();
+        let h2 = h.clone();
+        for lag in [0u64, 1, 1, 3, 5, 12, 40] {
+            h.record(lag);
+        }
+        assert_eq!(h2.count(), 7, "clones share the counters");
+        assert_eq!(h2.sum(), 62);
+        assert_eq!(h2.max(), 40);
+        assert_eq!(h2.buckets(), [1, 2, 0, 1, 1, 1, 0, 1]);
+        assert_eq!(format!("{h:?}"), "LagHist(n=7, max=40)");
+        // the registry snapshot carries the same numbers
+        let p = PipelineGauges::new();
+        p.policy_lag.record(2);
+        p.policy_lag.record(6);
+        let s = p.snapshot();
+        assert_eq!((s.lag_count, s.lag_sum, s.lag_max), (2, 8, 6));
+        assert_eq!(s.lag_buckets, [0, 0, 1, 0, 1, 0, 0, 0]);
+    }
+
+    #[test]
     fn display_reads_like_a_report_line() {
         let mut s = GaugesSnapshot {
             pool_free: 3,
@@ -319,5 +431,12 @@ mod tests {
         let line = s.to_string();
         assert!(line.contains("env-reconnects 1"), "{line}");
         assert!(line.contains("replay 64 (sampled 12 evicted 3)"), "{line}");
+        // policy lag stays quiet until something records it
+        assert!(!line.contains("lag"), "{line}");
+        s.lag_count = 4;
+        s.lag_sum = 6;
+        s.lag_max = 3;
+        let line = s.to_string();
+        assert!(line.contains("lag mean 1.50 max 3"), "{line}");
     }
 }

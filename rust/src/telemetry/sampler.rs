@@ -21,7 +21,7 @@ use crate::telemetry::gauges::PipelineGauges;
 /// [`crate::telemetry::gauges::GaugesSnapshot`] field by field).
 pub const GAUGE_CURVE_HEADER: &str = "elapsed_s,pool_free,pool_rented,pool_rent_waits,\
 queue_depth,batches_ready,slots_in_use,slot_waits,env_streams,env_steps,env_reconnects,\
-replay_size,replay_sampled,replay_evicted";
+replay_size,replay_sampled,replay_evicted,lag_count,lag_sum,lag_max";
 
 /// Handle to a running gauge sampler; [`stop`](GaugeSampler::stop) (or
 /// drop) joins the thread and flushes the file.
@@ -79,7 +79,7 @@ impl GaugeSampler {
                     let s = gauges.snapshot();
                     let ok = writeln!(
                         file,
-                        "{:.3},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                        "{:.3},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                         t0.elapsed().as_secs_f64(),
                         s.pool_free,
                         s.pool_rented,
@@ -94,6 +94,9 @@ impl GaugeSampler {
                         s.replay_size,
                         s.replay_sampled,
                         s.replay_evicted,
+                        s.lag_count,
+                        s.lag_sum,
+                        s.lag_max,
                     )
                     .is_ok();
                     if !ok {

@@ -25,6 +25,7 @@
 //! | 20   | `dynamic_batcher` `buffers`       |
 //! | 30   | `dynamic_batcher` `stats`         |
 //! | 40   | `batching_queue` `state`          |
+//! | 50   | `learner_pool` `sync`             |
 
 use std::ops::{Deref, DerefMut};
 use std::sync::{Condvar, Mutex, MutexGuard};

@@ -19,6 +19,7 @@ use torchbeast::coordinator::actor_pool::{ActorConfig, ActorPool};
 use torchbeast::coordinator::batching_queue::batching_queue;
 use torchbeast::coordinator::dynamic_batcher::{dynamic_batcher, BatcherConfig};
 use torchbeast::coordinator::rollout::{stack_rollouts, Rollout, RolloutPool};
+use torchbeast::coordinator::weights::VersionHandle;
 use torchbeast::env::wrappers::{wrapped_spec, WrapperCfg};
 use torchbeast::env::{self, Environment};
 use torchbeast::metrics::Metrics;
@@ -121,6 +122,7 @@ fn actor_to_learner_path_is_allocation_free_at_steady_state() {
             obs_len,
             seed: 5,
             first_id: 0,
+            policy_version: VersionHandle::default(),
         },
     );
 
@@ -224,6 +226,7 @@ fn poly_actor_path_is_allocation_free_at_steady_state() {
             obs_len,
             seed: 11,
             first_id: 0,
+            policy_version: VersionHandle::default(),
         },
     );
 
@@ -363,7 +366,7 @@ fn replay_insert_sample_stack_path_is_allocation_free_at_steady_state() {
 
     // complete "fresh" rollouts to circulate (contents irrelevant to
     // the gate; shapes match the manifest)
-    let fresh: Vec<Rollout> = (0..b)
+    let mut fresh: Vec<Rollout> = (0..b)
         .map(|k| {
             let mut r = Rollout::new(UNROLL, obs_len, num_actions);
             let obs = vec![k as f32; obs_len];
@@ -415,6 +418,63 @@ fn replay_insert_sample_stack_path_is_allocation_free_at_steady_state() {
     let s = replay.stats();
     assert!(s.sampled > 0, "the gate must actually exercise sampling");
     assert_eq!(s.len, 16, "the ring stays at capacity");
+
+    // Phase 2 — the stamped → staleness-checked path (DESIGN.md
+    // §Sharded-Learner): fresh rollouts now carry an advancing policy
+    // version, the ring learns the current version before every plan,
+    // and slots more than K versions old are tail-evicted.  The whole
+    // stamp → evict → probe → stack → insert round must be just as
+    // allocation-free as the unbounded one.
+    let staleness = 6u64;
+    replay.set_staleness(staleness);
+    let mut stale_round = |replay: &mut ReplayBuffer, fresh: &mut [Rollout], version: u64| {
+        for r in fresh.iter_mut() {
+            r.policy_version = version;
+        }
+        replay.set_current_version(version);
+        let replayed = replay.plan(b, ratio);
+        let fresh_n = b - replayed;
+        stack_mixed(&fresh[..fresh_n], replay, replayed, &manifest, &mut batch);
+        for r in &fresh[..fresh_n] {
+            replay.insert(r);
+        }
+    };
+
+    // warm: advance far enough that the phase-1 slots (all version 0)
+    // and a few stamped generations age out through the stale path
+    let mut version = 0u64;
+    for _ in 0..32 {
+        version += 1;
+        stale_round(&mut replay, &mut fresh, version);
+    }
+    let warm_stale = replay.stats().stale_evicted;
+    assert!(warm_stale > 0, "the staleness-eviction path must be warm");
+
+    let a0 = allocations();
+    for _ in 0..rounds {
+        version += 1;
+        stale_round(&mut replay, &mut fresh, version);
+    }
+    let allocs = allocations() - a0;
+    let per_round = allocs as f64 / rounds as f64;
+    eprintln!(
+        "staleness steady state: {allocs} heap allocations over {rounds} stamped rounds \
+         ({per_round:.4}/round: stamp + evict + plan + sample + stack + insert)"
+    );
+    assert!(
+        per_round < 0.02,
+        "staleness-checked replay path is allocating again: {per_round:.4} per round"
+    );
+    let s = replay.stats();
+    assert!(
+        s.stale_evicted > warm_stale,
+        "measured rounds must keep exercising stale eviction"
+    );
+    // one insert and one version bump per round: the ring holds exactly
+    // the last K+1 generations at steady state, and after eviction
+    // every held slot is sampleable (fresh)
+    assert_eq!(s.len, staleness as usize + 1, "ring is staleness-bounded");
+    assert_eq!(replay.fresh_len(), s.len, "no stale slot survives eviction");
 }
 
 /// Rollout handoff ships the pooled buffer itself: the backing
@@ -459,6 +519,7 @@ fn rollout_handoff_moves_the_buffer_not_a_copy() {
             obs_len,
             seed: 3,
             first_id: 0,
+            policy_version: VersionHandle::default(),
         },
     );
     for _ in 0..4 {

@@ -40,12 +40,20 @@ fn checkpoint_resume_continues_from_saved_params() {
     let r1 = coordinator::train(&cfg1).unwrap();
     assert!(ckpt.exists());
 
-    // the checkpoint must round-trip exactly
+    // the checkpoint must round-trip exactly, carrying the weight
+    // version in effect when it was written: the initial publish plus
+    // one publish per learner step
     let learner = LearnerEngine::load(&dir).unwrap();
-    let loaded = checkpoint::load(&ckpt, &learner.manifest).unwrap();
+    let (loaded, saved_version) = checkpoint::load(&ckpt, &learner.manifest).unwrap();
     assert_eq!(loaded, r1.final_params);
+    assert_eq!(
+        saved_version,
+        1 + r1.steps,
+        "checkpoint must record the published weight version"
+    );
 
     // phase 2: resume; initial params are the checkpoint, not seed init
+    let ckpt2 = tmp.join("phase2.ckpt");
     let cfg2 = TrainConfig {
         artifact_dir: dir.clone(),
         num_actors: 4,
@@ -53,12 +61,22 @@ fn checkpoint_resume_continues_from_saved_params() {
         seed: 21,
         log_interval: 0,
         init_checkpoint: Some(ckpt.clone()),
+        checkpoint_path: Some(ckpt2.clone()),
         ..TrainConfig::default()
     };
     let r2 = coordinator::train(&cfg2).unwrap();
     // resumed run must have moved away from the checkpoint
     assert_ne!(r2.final_params, r1.final_params);
     assert_eq!(r2.steps, 4);
+    // and its version sequence must continue monotonically from the
+    // saved version (seed_version + initial publish + one per step),
+    // not restart from zero
+    let (_, resumed_version) = checkpoint::load(&ckpt2, &learner.manifest).unwrap();
+    assert_eq!(
+        resumed_version,
+        saved_version + 1 + r2.steps,
+        "resume must continue the weight-version sequence"
+    );
 }
 
 #[test]
@@ -69,8 +87,8 @@ fn evaluate_checkpoint_consistency() {
     let ckpt = tmp.join("eval.ckpt");
     let mut learner = LearnerEngine::load(&dir).unwrap();
     let params = learner.init_params(33).unwrap();
-    checkpoint::save(&ckpt, &learner.manifest, &params).unwrap();
-    let loaded = checkpoint::load(&ckpt, &learner.manifest).unwrap();
+    checkpoint::save(&ckpt, &learner.manifest, &params, 1).unwrap();
+    let (loaded, _version) = checkpoint::load(&ckpt, &learner.manifest).unwrap();
     // greedy eval of identical params must be identical (deterministic env seed)
     let w = torchbeast::env::wrappers::WrapperCfg::default();
     let a = coordinator::evaluate(&dir, &params, 5, 9, &w).unwrap();

@@ -267,6 +267,170 @@ fn evaluate_batched_reports_throughput() {
     );
 }
 
+/// Deterministic synthetic batch (contents derived from `salt` only),
+/// shaped for the artifact's manifest — the fixed input that makes
+/// sharded-vs-inline comparisons exact.
+fn synthetic_batch(m: &torchbeast::runtime::Manifest, salt: usize) -> LearnerBatch {
+    let mut batch = LearnerBatch::zeros(m);
+    for (i, o) in batch.observations.iter_mut().enumerate() {
+        *o = (((i + salt) * 2654435761) % 97) as f32 / 97.0;
+    }
+    for (i, a) in batch.actions.iter_mut().enumerate() {
+        *a = ((i + salt) % m.num_actions) as i32;
+    }
+    for (i, r) in batch.rewards.iter_mut().enumerate() {
+        *r = if (i + salt) % 5 == 0 { 1.0 } else { 0.0 };
+    }
+    batch
+}
+
+/// The `--num_learners 1` acceptance pin (DESIGN.md §Sharded-Learner):
+/// one shard through the pool — step, degenerate average over n=1,
+/// install — must reproduce the inline learner loop bit for bit on the
+/// same batch sequence, with the *real* artifact engine on both sides.
+#[test]
+fn sharded_single_learner_matches_inline_loop() {
+    use torchbeast::coordinator::batching_queue::batching_queue;
+    use torchbeast::coordinator::learner_pool::ShardedLearner;
+
+    let Some(cfg) = base_cfg("catch") else { return };
+    let dir = cfg.artifact_dir.clone();
+    let mut inline = LearnerEngine::load(&dir).unwrap();
+    let init = inline.init_params(17).unwrap();
+    let manifest = inline.manifest.clone();
+    inline.set_params(&init).unwrap();
+
+    let steps = 4usize;
+    let mut inline_snaps = Vec::with_capacity(steps);
+    for k in 0..steps {
+        let (_, snap) = inline.step(&synthetic_batch(&manifest, k)).unwrap();
+        inline_snaps.push(snap);
+    }
+
+    let (ret_tx, ret_rx) = batching_queue::<LearnerBatch>(2);
+    let factory_init = init.clone();
+    let pool = ShardedLearner::spawn(
+        1,
+        move |_idx| {
+            let mut e = LearnerEngine::load(&dir)?;
+            e.set_params(&factory_init)?;
+            Ok(e)
+        },
+        ret_tx,
+        None,
+    )
+    .unwrap();
+    for (k, expect) in inline_snaps.iter().enumerate() {
+        let result = pool
+            .step_round(vec![synthetic_batch(&manifest, k)])
+            .expect("round result");
+        assert_eq!(
+            &result.params, expect,
+            "step {k}: one shard must be bit-identical to the inline loop"
+        );
+        let _ = ret_rx.recv();
+    }
+    pool.join().unwrap();
+}
+
+/// N=2 gradient-sync determinism with the real engine: two identical
+/// runs over the same batch schedule must produce bit-identical
+/// averaged parameter trajectories (fixed-order f32 reduction), and
+/// the averaged run must differ from either shard stepping alone.
+#[test]
+fn sharded_two_learners_deterministic_with_real_engine() {
+    use torchbeast::coordinator::batching_queue::batching_queue;
+    use torchbeast::coordinator::learner_pool::ShardedLearner;
+
+    let Some(cfg) = base_cfg("catch") else { return };
+    let dir = cfg.artifact_dir.clone();
+    let mut probe = LearnerEngine::load(&dir).unwrap();
+    let init = probe.init_params(29).unwrap();
+    let manifest = probe.manifest.clone();
+
+    let steps = 3usize;
+    let run = || {
+        let dir = dir.clone();
+        let factory_init = init.clone();
+        let (ret_tx, ret_rx) = batching_queue::<LearnerBatch>(4);
+        let pool = ShardedLearner::spawn(
+            2,
+            move |_idx| {
+                let mut e = LearnerEngine::load(&dir)?;
+                e.set_params(&factory_init)?;
+                Ok(e)
+            },
+            ret_tx,
+            None,
+        )
+        .unwrap();
+        let mut snaps = Vec::with_capacity(steps);
+        for k in 0..steps {
+            // distinct batches per shard: the average is nontrivial
+            let batches = vec![
+                synthetic_batch(&manifest, 2 * k),
+                synthetic_batch(&manifest, 2 * k + 1),
+            ];
+            snaps.push(pool.step_round(batches).expect("round result").params);
+            for _ in 0..2 {
+                let _ = ret_rx.recv();
+            }
+        }
+        pool.join().unwrap();
+        snaps
+    };
+    let a = run();
+    let b = run();
+    for (k, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x, y, "round {k} must reproduce bit-for-bit");
+    }
+
+    // the average is not either shard's solo trajectory
+    probe.set_params(&init).unwrap();
+    let (_, solo) = probe.step(&synthetic_batch(&manifest, 0)).unwrap();
+    assert_ne!(a[0], solo, "two distinct batches must yield a true average");
+}
+
+/// Driver-level sharding acceptance: `--num_learners 2` trains end to
+/// end, publishes one weight version per synchronized round, and the
+/// policy-lag histogram in the gauges snapshot is populated with a
+/// nonzero distribution (actors run behind the learner by design).
+#[test]
+fn sharded_training_reports_policy_lag() {
+    let Some(mut cfg) = base_cfg("catch") else { return };
+    cfg.num_learners = 2;
+    let report = coordinator::train(&cfg).unwrap();
+    assert_eq!(report.steps, 12);
+    for row in &report.history {
+        assert!(row.stats.total_loss().is_finite());
+        assert!(row.stats.grad_norm().is_finite());
+    }
+    let g = report.gauges;
+    assert!(g.lag_count > 0, "every consumed batch records its lag: {g:?}");
+    assert!(
+        g.lag_max >= 1,
+        "12 rounds with in-flight unrolls must observe nonzero lag: {g:?}"
+    );
+
+    // staleness-bounded replay composes with sharding: the knob is
+    // plumbed driver -> stacker -> ring, and the run still completes
+    let Some(mut cfg2) = base_cfg("catch") else { return };
+    cfg2.num_learners = 2;
+    cfg2.replay_capacity = 8;
+    cfg2.replay_ratio = 0.25;
+    cfg2.replay_staleness = 4;
+    let report2 = coordinator::train(&cfg2).unwrap();
+    assert_eq!(report2.steps, 12);
+    let rs = report2.replay.expect("replay stats present when enabled");
+    assert!(rs.sampled > 0, "warmed batches must sample: {rs:?}");
+
+    // the single-learner default also records lag (the histogram is
+    // not a sharded-only feature)
+    let Some(cfg1) = base_cfg("catch") else { return };
+    let r1 = coordinator::train(&cfg1).unwrap();
+    assert!(r1.gauges.lag_count > 0);
+}
+
 /// The telemetry acceptance gate: pool occupancy, learner-queue depth
 /// and stacker prefetch lead are all visible in the TrainReport, and
 /// the pre-shutdown snapshot accounts for every pooled buffer.

@@ -2,21 +2,24 @@
 # Bench artifact harness:  scripts/bench.sh [out.json]
 #
 # Runs the stub-policy benches (no AOT artifacts needed) and writes a
-# machine-readable summary — default BENCH_5.json at the repo root —
+# machine-readable summary — default BENCH_7.json at the repo root —
 # so the repo's perf trajectory is diffable from PR 5 on:
 #
 #   * benches/replay.rs   -> replay insert/sample ns + end-to-end fps
 #                            at replay_ratio 0 / 0.25 / 0.5 (and the
 #                            frames-per-step of the stub workload)
+#   * benches/shards.rs   -> sharded-learner round throughput,
+#                            num_learners 1 vs 2 (barrier + averaging
+#                            cost against an emulated engine step)
 #   * benches/throughput.rs (grouped-actor section; the artifact-bound
 #                            E2 section self-skips without artifacts)
 #
-# Human-readable tables go to stdout; the JSON comes from the replay
-# bench's --json flag.
+# Human-readable tables go to stdout; the JSON sections come from the
+# replay/shards benches' --json flags and are merged into one object.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
-out="${1:-BENCH_5.json}"
+out="${1:-BENCH_7.json}"
 case "$out" in
     /*) ;;
     *) out="$(pwd)/$out" ;;
@@ -24,10 +27,28 @@ esac
 
 cd rust
 
-echo "== cargo bench --bench replay (writes $out) =="
-cargo bench --bench replay -- --json "$out"
+tmp_replay="$(mktemp)"
+tmp_shards="$(mktemp)"
+trap 'rm -f "$tmp_replay" "$tmp_shards"' EXIT
+
+echo "== cargo bench --bench replay =="
+cargo bench --bench replay -- --json "$tmp_replay"
+
+echo "== cargo bench --bench shards =="
+cargo bench --bench shards -- --json "$tmp_shards"
 
 echo "== cargo bench --bench throughput (stub grouped-actor section) =="
 cargo bench --bench throughput
+
+{
+    echo '{'
+    echo '  "status": "run",'
+    echo '  "replay":'
+    sed 's/^/  /' "$tmp_replay"
+    echo '  ,'
+    echo '  "shards":'
+    sed 's/^/  /' "$tmp_shards"
+    echo '}'
+} > "$out"
 
 echo "bench summary written to $out"

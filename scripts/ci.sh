@@ -40,10 +40,17 @@ echo "== cargo test --release --test alloc_regression =="
 cargo test --release --test alloc_regression -- --nocapture
 
 # The replay subsystem's contracts (ratio-0 bit-identity, seeded
-# sampling determinism, FIFO eviction, the warmup gate) must hold
-# under the optimized build that ships, not just dev profile.
+# sampling determinism, FIFO/staleness eviction, the warmup gate) must
+# hold under the optimized build that ships, not just dev profile.
 echo "== cargo test --release replay =="
 cargo test --release replay
+
+# Same for the sharded learner (DESIGN.md §Sharded-Learner): the
+# barrier average's determinism and the N=1 degenerate-path identity
+# are release-mode contracts — f32 reduction order matters most under
+# the optimizer.
+echo "== cargo test --release learner_pool =="
+cargo test --release learner_pool
 
 # The documentation surface is gated too: rustdoc must build clean
 # (broken intra-doc links and bad doc syntax are warnings -> errors).
