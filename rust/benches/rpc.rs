@@ -6,12 +6,19 @@
 //! both ends, observation decode straight into the caller's buffer)
 //! the steady-state step exchange should allocate nothing; a counting
 //! global allocator audits that alongside the latency numbers.
+//!
+//! The final section benches the policy-server tier: PolicyClients
+//! submitting B-slot observation groups to a standalone PolicyServer
+//! that coalesces them into backend batches.  Pass `-- --json PATH`
+//! to also write the machine-readable summary `scripts/bench.sh`
+//! collects into `BENCH_8.json`.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use torchbeast::env::wrappers::WrapperCfg;
 use torchbeast::env::{Environment, SlotStep, VecEnvironment};
 use torchbeast::rpc::{EnvServer, RemoteEnv, RemoteVecEnv};
+use torchbeast::serving::{run_inference_loop, PolicyClient, PolicyServer, PolicyServerConfig};
 use torchbeast::util::counting_alloc::{allocations, CountingAllocator};
 use torchbeast::util::stats::Summary;
 
@@ -19,6 +26,22 @@ use torchbeast::util::stats::Summary;
 static ALLOC: CountingAllocator = CountingAllocator;
 
 fn main() -> anyhow::Result<()> {
+    // optional machine-readable output: `-- --json PATH`
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_path: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--json" {
+            i += 1;
+            json_path = Some(
+                args.get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--json needs a path"))?
+                    .clone(),
+            );
+        }
+        i += 1;
+    }
+
     let server = EnvServer::start("127.0.0.1:0")?;
     let addr = server.addr.to_string();
 
@@ -181,8 +204,122 @@ fn main() -> anyhow::Result<()> {
          fewer wire frames per env step and 32x fewer server threads (the\n\
          rlpyt/TorchRL vectorized-sampler result, reproduced over TCP)."
     );
+
+    // served inference (policy-server tier): streams of PolicyClients
+    // submit B-slot observation groups to a standalone PolicyServer
+    // which coalesces them into backend batches (tags 7-10 inverted:
+    // the client ships obs, the server answers sampled actions).
+    println!(
+        "\n== served inference (policy-server tier): {} rounds per stream ==",
+        SERVE_ROUNDS
+    );
+    println!(
+        "{:>10} {:>10} {:>16} {:>12} {:>12}",
+        "streams", "group_B", "actions_sec", "p50_us", "p99_us"
+    );
+    let obs_shape = [1usize, 2, 3];
+    let obs_len: usize = obs_shape.iter().product();
+    let num_actions = 4usize;
+    let mut served_rows = Vec::new();
+    for &streams in &[1usize, 4, 8] {
+        for &b in &[1usize, 4] {
+            // max_batch = streams * B lets one wave of concurrent
+            // requests coalesce into a single backend batch; the short
+            // timeout flushes stragglers.
+            let cfg = PolicyServerConfig::new(obs_shape, num_actions, streams * b)
+                .with_batch_timeout(Duration::from_micros(200));
+            let mut server = PolicyServer::start("127.0.0.1:0", cfg)?;
+            let batches = server.take_batch_stream().unwrap();
+            let backend = std::thread::spawn(move || {
+                run_inference_loop(&batches, num_actions, |obs, n, logits, baselines| {
+                    logits.clear();
+                    logits.resize(n * num_actions, 0.0);
+                    baselines.clear();
+                    baselines.resize(n, 0.0);
+                    for (s, bl) in baselines.iter_mut().enumerate() {
+                        let sum: f32 = obs[s * obs_len..(s + 1) * obs_len].iter().sum();
+                        *bl = sum;
+                        for (a, l) in logits[s * num_actions..(s + 1) * num_actions]
+                            .iter_mut()
+                            .enumerate()
+                        {
+                            *l = sum * 0.1 + a as f32 * 0.01;
+                        }
+                    }
+                    Ok(())
+                })
+            });
+            let addr = server.addr.to_string();
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..streams)
+                .map(|g| {
+                    let addr = addr.clone();
+                    std::thread::spawn(move || {
+                        let seeds: Vec<u64> =
+                            (0..b as u64).map(|s| (g as u64) * 100 + s).collect();
+                        let mut client =
+                            PolicyClient::connect(std::slice::from_ref(&addr), &seeds).unwrap();
+                        let obs = vec![0.25f32; b * obs_len];
+                        let mut actions = vec![0usize; b];
+                        let mut lat = Vec::with_capacity(SERVE_ROUNDS);
+                        for _ in 0..SERVE_ROUNDS {
+                            let t = Instant::now();
+                            client.act(&obs, &mut actions).unwrap();
+                            lat.push(t.elapsed().as_micros() as f64);
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            let mut slat = Summary::new();
+            for h in handles {
+                for v in h.join().unwrap() {
+                    slat.add(v);
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let actions_sec = (streams * b * SERVE_ROUNDS) as f64 / wall;
+            server.shutdown();
+            backend.join().unwrap()?;
+            println!(
+                "{:>10} {:>10} {:>16.0} {:>12.0} {:>12.0}",
+                streams,
+                b,
+                actions_sec,
+                slat.p50(),
+                slat.p99()
+            );
+            served_rows.push(format!(
+                "    {{\"streams\": {streams}, \"group_B\": {b}, \
+                 \"actions_per_sec\": {:.1}, \"p50_us\": {:.1}, \"p99_us\": {:.1}}}",
+                actions_sec,
+                slat.p50(),
+                slat.p99()
+            ));
+        }
+    }
+    println!(
+        "\npaper-shaped check: served actions/s grows with streams while the\n\
+         backend sees ~one coalesced batch per wave (the PolyBeast dynamic\n\
+         batching result, served out-of-process)."
+    );
+
+    if let Some(path) = json_path {
+        let json = format!(
+            "{{\n  \"bench\": \"rpc\",\n  \"env_step_p50_us\": {:.1},\n  \
+             \"env_step_p99_us\": {:.1},\n  \"served\": [\n{}\n  ]\n}}\n",
+            lat.p50(),
+            lat.p99(),
+            served_rows.join(",\n"),
+        );
+        std::fs::write(&path, json)?;
+        println!("json summary written to {path}");
+    }
     Ok(())
 }
 
 /// Steps per env in the batched-stream comparison.
 const BATCH_STEPS: usize = 1000;
+
+/// Act rounds per client stream in the served-inference sweep.
+const SERVE_ROUNDS: usize = 400;

@@ -1,0 +1,27 @@
+//! Standalone policy-inference server (DESIGN.md §Policy-Server).
+//!
+//! Thin wrapper over [`torchbeast::serving::policy_server_main`] so
+//! deployments can ship the serving tier as its own binary; the same
+//! entry point backs `torchbeast policy-server`.
+//!
+//! ```text
+//! policy_server --listen 0.0.0.0:7002 --artifact_dir artifacts/catch \
+//!               --init_checkpoint runs/catch.tbck --server_cpus 8
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!(
+            "usage: policy_server [--listen addr:port] [--server_cpus N]\n\
+             \x20                    [--max_batch N] [--slots N] [--retry_after_ms N]\n\
+             \x20                    [--artifact_dir DIR] [--init_checkpoint PATH]\n\
+             \x20                    [--seed N] [--inference_timeout_us N]\n\
+             \x20                    [--policy_admission_ms N] [--gauge_log_path CSV]\n\
+             \x20                    [--gauge_sample_ms N] [--log_level LVL] [--config FILE]\n\
+             serves batched action inference over TCP; see DESIGN.md \u{00a7}Policy-Server"
+        );
+        return Ok(());
+    }
+    torchbeast::serving::policy_server_main(&args)
+}

@@ -85,8 +85,20 @@ pub struct TrainConfig {
     /// Mid-run reconnect budget for batched (vec) env streams in poly
     /// mode: on stream death, `RemoteVecEnv` attempts up to this many
     /// fresh connects before latching the group terminal.  0 = latch
-    /// on first failure (the pre-reconnect behavior).
+    /// on first failure (the pre-reconnect behavior).  Also the
+    /// failover budget of `PolicyClient` streams built via
+    /// `from_config`.
     pub env_reconnect_attempts: u32,
+    /// Policy-server replicas for remote-inference actor fleets
+    /// (DESIGN.md §Policy-Server): `PolicyClient::from_config` opens
+    /// its stream against the first reachable entry and fails over
+    /// through the rest when a stream dies.
+    pub policy_addresses: Vec<String>,
+    /// Policy-server admission bound in milliseconds: an in-flight
+    /// request that cannot check its slots out of a saturated pool
+    /// within this wait is answered with a typed `Busy` frame instead
+    /// of queueing unboundedly.
+    pub policy_admission_ms: u64,
     /// Environment wrapper stack (applied env-side).
     pub wrappers: WrapperCfg,
     /// CSV curve output; None disables.
@@ -126,6 +138,8 @@ impl Default for TrainConfig {
             replay_staleness: 0,
             num_learners: 1,
             env_reconnect_attempts: 0,
+            policy_addresses: Vec::new(),
+            policy_admission_ms: 50,
             wrappers: WrapperCfg::default(),
             log_path: None,
             checkpoint_path: None,
@@ -216,6 +230,21 @@ impl TrainConfig {
                 self.num_learners = n;
             }
             "env_reconnect_attempts" => self.env_reconnect_attempts = num(v)? as u32,
+            "policy_addresses" => {
+                self.policy_addresses = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("policy_addresses expects a list"))?
+                    .iter()
+                    .map(|s| {
+                        s.as_str().map(str::to_string).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "policy_addresses entries must be strings, got {s:?}"
+                            )
+                        })
+                    })
+                    .collect::<anyhow::Result<Vec<String>>>()?
+            }
+            "policy_admission_ms" => self.policy_admission_ms = num(v)? as u64,
             "log_path" => self.log_path = Some(PathBuf::from(st(v)?)),
             "checkpoint_path" => self.checkpoint_path = Some(PathBuf::from(st(v)?)),
             "init_checkpoint" => self.init_checkpoint = Some(PathBuf::from(st(v)?)),
@@ -366,6 +395,33 @@ mod tests {
         let ok = Json::parse(r#"{"server_addresses": ["a:1", "b:2"]}"#).unwrap();
         c.apply_json(&ok).unwrap();
         assert_eq!(c.server_addresses, vec!["a:1".to_string(), "b:2".to_string()]);
+    }
+
+    #[test]
+    fn policy_serving_knobs_parse() {
+        let c = TrainConfig::default();
+        assert!(c.policy_addresses.is_empty());
+        assert_eq!(c.policy_admission_ms, 50);
+        let mut c = TrainConfig::default();
+        let j = Json::parse(
+            r#"{"policy_addresses": ["127.0.0.1:7002", "127.0.0.1:7003"],
+                "policy_admission_ms": 5}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.policy_addresses.len(), 2);
+        assert_eq!(c.policy_admission_ms, 5);
+        // non-string replica entries are a config error, not a silent ""
+        let bad = Json::parse(r#"{"policy_addresses": ["a:1", 7003]}"#).unwrap();
+        let err = c.apply_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("policy_addresses"), "{err}");
+        // CLI path
+        let args: Vec<String> = ["--policy_admission_ms", "25"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.policy_admission_ms, 25);
     }
 
     #[test]

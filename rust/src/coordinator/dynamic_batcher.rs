@@ -148,6 +148,13 @@ struct Inner {
     free: Vec<usize>,
     /// FIFO of queued slot ids — the single source of request order.
     queue: VecDeque<usize>,
+    /// Slots promised to slice submitters parked in checkout (sum of
+    /// their group sizes).  While nonzero, single-slot checkout leaves
+    /// this many slots in the free list, so a stream of singles can no
+    /// longer starve a waiting slice on a pool without headroom (the
+    /// reservation is withdrawn when the slice checks out, times out
+    /// of bounded admission, or observes close).
+    reserved: usize,
     closed: bool,
 }
 
@@ -338,8 +345,13 @@ impl InferenceClient {
             if inner.closed {
                 return None;
             }
-            if let Some(id) = inner.free.pop() {
-                break id;
+            // Leave `reserved` slots for parked slice submitters —
+            // singles snapping up every freed slot used to starve a
+            // waiting group on a pool without headroom.
+            if inner.free.len() > inner.reserved {
+                if let Some(id) = inner.free.pop() {
+                    break id;
+                }
             }
             if !starved {
                 // once per request: how often checkout starved, not
@@ -415,6 +427,22 @@ impl InferenceClient {
     }
 }
 
+/// Outcome of a bounded slice submission
+/// ([`SliceSubmitter::submit_slice_bounded`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SliceOutcome {
+    /// Every row's result was collected into the output buffers.
+    Served,
+    /// The slot pool stayed saturated past the admission bound: the
+    /// slice took no slots and the caller should reject/retry (the
+    /// policy server answers a typed `Busy` frame — DESIGN.md
+    /// §Policy-Server).
+    Busy,
+    /// The batcher shut down (or the slice's batch failed) before all
+    /// rows were served.
+    Closed,
+}
+
 /// Group-submission handle: submits a whole B-slice of observations
 /// to the batcher in **one** rendezvous — one lock acquisition checks
 /// out B slots and enqueues all B requests back to back, so a closing
@@ -440,13 +468,12 @@ impl SliceSubmitter {
     ///
     /// Checkout is all-or-nothing: the group takes its B slots only
     /// when B are free (a partial hold would deadlock two groups
-    /// against each other on a tight pool).  The flip side: there is
-    /// no reservation, so on a pool without headroom a waiting slice
-    /// can be starved by concurrent single-slot [`InferenceClient::infer`]
-    /// callers snapping up freed slots first.  Size `slots` to the sum
-    /// of concurrent demand (the driver uses the total env count, so
-    /// every group and single can hold its slots simultaneously) —
-    /// starvation then cannot occur.
+    /// against each other on a tight pool), and a starving slice
+    /// *reserves* its B slots, which single-slot
+    /// [`InferenceClient::infer`] callers honor — so on a pool without
+    /// headroom freed slots accumulate for the slice instead of being
+    /// snapped up one by one (the PR-8 starvation fix; stress-tested
+    /// under mixed submitters at saturation).
     // tb-lint: no-alloc
     pub fn submit_slice(
         &mut self,
@@ -454,6 +481,28 @@ impl SliceSubmitter {
         logits_out: &mut [f32],
         baselines_out: &mut [f32],
     ) -> Option<()> {
+        match self.submit_slice_bounded(obs, logits_out, baselines_out, None) {
+            SliceOutcome::Served => Some(()),
+            SliceOutcome::Closed => None,
+            // unbounded admission never rejects
+            SliceOutcome::Busy => unreachable!("Busy without an admission bound"),
+        }
+    }
+
+    /// [`submit_slice`](SliceSubmitter::submit_slice) with **bounded
+    /// admission**: if the slot pool stays saturated for `admission`,
+    /// the slice gives up its reservation and returns
+    /// [`SliceOutcome::Busy`] without ever holding a slot — the
+    /// backpressure primitive behind the policy server's typed `Busy`
+    /// frames.  `admission: None` waits unboundedly (never `Busy`).
+    // tb-lint: no-alloc
+    pub fn submit_slice_bounded(
+        &mut self,
+        obs: &[f32],
+        logits_out: &mut [f32],
+        baselines_out: &mut [f32],
+        admission: Option<Duration>,
+    ) -> SliceOutcome {
         let s = &*self.shared;
         assert!(
             !obs.is_empty() && obs.len() % s.obs_len == 0,
@@ -481,6 +530,7 @@ impl SliceSubmitter {
         self.ids.clear();
         self.ids.reserve(b); // no-op once warmed up
 
+        let deadline = admission.map(|d| Instant::now() + d);
         let mut inner = s.inner.lock();
         let mut starved = false;
         while !inner.closed && inner.free.len() < b {
@@ -493,15 +543,39 @@ impl SliceSubmitter {
                 // or will see this count and notify_all
                 s.slice_waiters
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                // reserve our B slots: singles leave `reserved` slots
+                // in the free list, so freed slots accumulate for this
+                // slice instead of leaking away one by one
+                inner.reserved += b;
             }
-            inner = inner.wait(&s.slot_free);
+            match deadline {
+                None => inner = inner.wait(&s.slot_free),
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        // bounded admission expired: withdraw the
+                        // reservation without taking any slot, and
+                        // wake everyone — slots this slice stopped
+                        // reserving are up for grabs by any waiter
+                        inner.reserved -= b;
+                        s.slice_waiters
+                            .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+                        drop(inner);
+                        s.slot_free.notify_all();
+                        return SliceOutcome::Busy;
+                    }
+                    let (g, _timed_out) = inner.wait_timeout(&s.slot_free, dl - now);
+                    inner = g;
+                }
+            }
         }
         if starved {
+            inner.reserved -= b;
             s.slice_waiters
                 .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
         }
         if inner.closed {
-            return None;
+            return SliceOutcome::Closed;
         }
         let now = Instant::now();
         for k in 0..b {
@@ -557,9 +631,9 @@ impl SliceSubmitter {
             }
         }
         if failed {
-            None
+            SliceOutcome::Closed
         } else {
-            Some(())
+            SliceOutcome::Served
         }
     }
 }
@@ -793,6 +867,7 @@ pub fn dynamic_batcher(cfg: BatcherConfig) -> (InferenceClient, BatchStream) {
                 slots,
                 free: (0..n_slots).rev().collect(),
                 queue: VecDeque::with_capacity(n_slots),
+                reserved: 0,
                 closed: false,
             },
         ),
@@ -1280,6 +1355,141 @@ mod tests {
         assert!(sub
             .submit_slice(&[0.0, 1.0], &mut logits, &mut baselines)
             .is_none());
+    }
+
+    /// PR-8 regression (satellite 4): on a pool with **zero headroom**
+    /// a waiting slice must not be starved by single-slot callers
+    /// snapping up freed slots one by one — the reservation makes
+    /// singles yield until the slice has its B slots.  Mixed
+    /// submitters at saturation; everything completes, nothing
+    /// deadlocks, every row routes correctly.
+    #[test]
+    fn mixed_submitters_all_complete_at_saturation() {
+        let b = 4usize;
+        let (client, stream) =
+            dynamic_batcher(cfg(b, Duration::from_micros(200), 1, 2).with_slots(b));
+        let h = run_echo_inference(stream, 2);
+        let slices: Vec<_> = (0..2)
+            .map(|gid| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    let mut sub = c.slice_submitter();
+                    let mut logits = vec![0.0f32; b * 2];
+                    let mut baselines = vec![0.0f32; b];
+                    let mut obs = vec![0.0f32; b];
+                    for round in 0..40usize {
+                        for (k, o) in obs.iter_mut().enumerate() {
+                            *o = (gid * 100_000 + round * 100 + k) as f32;
+                        }
+                        sub.submit_slice(&obs, &mut logits, &mut baselines).unwrap();
+                        for k in 0..b {
+                            assert_eq!(logits[k * 2], obs[k], "row {k} misrouted");
+                            assert_eq!(baselines[k], -obs[k]);
+                        }
+                    }
+                })
+            })
+            .collect();
+        let singles: Vec<_> = (0..3)
+            .map(|i| {
+                let c = client.clone();
+                std::thread::spawn(move || {
+                    let mut logits = Vec::new();
+                    for k in 0..120usize {
+                        let tag = (7_000_000 + i * 1000 + k) as f32;
+                        let bl = c.infer(&[tag], &mut logits).unwrap();
+                        assert_eq!(logits[0], tag);
+                        assert_eq!(bl, -tag);
+                    }
+                })
+            })
+            .collect();
+        for t in slices {
+            t.join().unwrap();
+        }
+        for t in singles {
+            t.join().unwrap();
+        }
+        client.close();
+        let stats = h.join().unwrap();
+        assert_eq!(stats.requests, 2 * 40 * b as u64 + 3 * 120);
+    }
+
+    /// Bounded admission: a slice that cannot get its slots within the
+    /// admission window returns `Busy` having taken (and kept) nothing,
+    /// and the withdrawn reservation leaves the pool fully usable.
+    #[test]
+    fn bounded_admission_rejects_busy_without_taking_slots() {
+        let g = PipelineGauges::new();
+        let (client, stream) = dynamic_batcher(
+            cfg(2, Duration::from_millis(1), 1, 2)
+                .with_slots(1)
+                .with_gauges(&g),
+        );
+        // occupy the only slot with a single request; nothing serves yet
+        let single = {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                let mut logits = Vec::new();
+                c.infer(&[5.0], &mut logits)
+            })
+        };
+        for _ in 0..2000 {
+            if g.slots_in_use.get() == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(g.slots_in_use.get(), 1);
+        let mut sub = client.slice_submitter();
+        let mut logits = vec![0.0f32; 2];
+        let mut baselines = vec![0.0f32; 1];
+        let out = sub.submit_slice_bounded(
+            &[9.0],
+            &mut logits,
+            &mut baselines,
+            Some(Duration::from_millis(10)),
+        );
+        assert_eq!(out, SliceOutcome::Busy);
+        assert_eq!(g.slots_in_use.get(), 1, "a rejected slice must hold no slots");
+        assert_eq!(g.slot_waits.get(), 1, "the rejected admission counted as starved");
+        // the withdrawn reservation doesn't wedge the pool: serve the
+        // single, then the same submitter's retry goes through
+        let batch = stream.next_batch().unwrap();
+        let n = batch.len();
+        batch.respond(&vec![0.0; n * 2], &vec![0.0; n], 2).unwrap();
+        assert!(single.join().unwrap().is_some());
+        let h = run_echo_inference(stream, 2);
+        let out = sub.submit_slice_bounded(
+            &[9.0],
+            &mut logits,
+            &mut baselines,
+            Some(Duration::from_secs(5)),
+        );
+        assert_eq!(out, SliceOutcome::Served);
+        assert_eq!(logits[0], 9.0);
+        assert_eq!(baselines[0], -9.0);
+        client.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn bounded_admission_reports_closed_on_shutdown() {
+        let (client, stream) = dynamic_batcher(cfg(2, Duration::from_millis(1), 1, 2));
+        drop(stream);
+        let mut sub = client.slice_submitter();
+        let mut logits = vec![0.0f32; 2 * 2];
+        let mut baselines = vec![0.0f32; 2];
+        assert_eq!(
+            sub.submit_slice_bounded(
+                &[0.0, 1.0],
+                &mut logits,
+                &mut baselines,
+                Some(Duration::from_secs(5))
+            ),
+            SliceOutcome::Closed,
+            "shutdown beats the admission timer"
+        );
     }
 
     #[test]

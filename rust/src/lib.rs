@@ -45,6 +45,7 @@ pub mod lint;
 pub mod metrics;
 pub mod rpc;
 pub mod runtime;
+pub mod serving;
 pub mod telemetry;
 pub mod util;
 pub mod vtrace;

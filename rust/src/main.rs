@@ -1,9 +1,10 @@
-//! torchbeast CLI: train | env-server | eval | inspect.
+//! torchbeast CLI: train | env-server | policy-server | eval | inspect.
 //!
 //! ```text
 //! torchbeast train --artifact_dir artifacts/catch --mode mono --num_actors 8 \
 //!                  --total_steps 2000 --log_path runs/catch.csv
 //! torchbeast env-server --listen 0.0.0.0:7001
+//! torchbeast policy-server --listen 0.0.0.0:7002 --artifact_dir artifacts/catch
 //! torchbeast inspect --artifact_dir artifacts/catch
 //! ```
 //!
@@ -11,6 +12,10 @@
 //! bundle (build with `make artifacts`).  `env-server` runs a
 //! standalone environment server process for distributed (poly) runs —
 //! point `--server_addresses '["host:port", ...]'` at them.
+//! `policy-server` serves batched action inference to remote actor
+//! fleets (DESIGN.md §Policy-Server) — point `--policy_addresses
+//! '["host:port", ...]'` at replicas (also a standalone binary,
+//! `policy_server`).
 
 use torchbeast::config::TrainConfig;
 use torchbeast::coordinator;
@@ -25,6 +30,10 @@ fn usage() -> ! {
          \x20 train       run the actor-learner system (see config.rs for flags)\n\
          \x20 env-server  serve environments over TCP (--listen addr:port,\n\
          \x20             --server_cpus N caps serve-loop threads; 0 = unlimited)\n\
+         \x20 policy-server  serve batched action inference over TCP (--listen,\n\
+         \x20             --artifact_dir, --init_checkpoint, --server_cpus,\n\
+         \x20             --max_batch, --slots, --policy_admission_ms,\n\
+         \x20             --retry_after_ms; see DESIGN.md \u{00a7}Policy-Server)\n\
          \x20 eval        evaluate a config's artifact with fresh params (--artifact_dir)\n\
          \x20 inspect     print an artifact bundle's manifest (--artifact_dir)"
     );
@@ -115,6 +124,7 @@ fn main() -> anyhow::Result<()> {
                 );
             }
         }
+        "policy-server" => torchbeast::serving::policy_server_main(rest),
         "eval" => {
             let mut cfg = TrainConfig::default();
             cfg.apply_args(rest)?;

@@ -89,6 +89,11 @@ pub enum Msg {
     /// Client → server: one action per slot, same order as the
     /// `ObsBatch` rows.
     ActionBatch { actions: Vec<u32> },
+    /// Server → client: admission-control rejection — the slot pool
+    /// stayed saturated past the server's bounded admission wait.  The
+    /// stream survives; the client backs off `retry_after_ms` and
+    /// resends the same request (DESIGN.md §Policy-Server).
+    Busy { retry_after_ms: u32 },
 }
 
 pub const TAG_HELLO: u8 = 1;
@@ -100,6 +105,7 @@ pub const TAG_ERROR: u8 = 6;
 pub const TAG_HELLO_BATCH: u8 = 7;
 pub const TAG_OBS_BATCH: u8 = 8;
 pub const TAG_ACTION_BATCH: u8 = 9;
+pub const TAG_BUSY: u8 = 10;
 
 /// Tag byte of an encoded payload (None for an empty frame).
 pub fn frame_tag(payload: &[u8]) -> Option<u8> {
@@ -349,6 +355,10 @@ impl Msg {
                 b.u8(TAG_ERROR);
                 b.str(message);
             }
+            Msg::Busy { retry_after_ms } => {
+                b.u8(TAG_BUSY);
+                b.u32(*retry_after_ms);
+            }
         }
     }
 
@@ -412,6 +422,9 @@ impl Msg {
             TAG_ACTION => Msg::Action { action: c.u32()? },
             TAG_BYE => Msg::Bye,
             TAG_ERROR => Msg::Error { message: c.str()? },
+            TAG_BUSY => Msg::Busy {
+                retry_after_ms: c.u32()?,
+            },
             t => anyhow::bail!("unknown message tag {t}"),
         };
         if c.i != payload.len() {
@@ -755,6 +768,8 @@ mod tests {
         roundtrip(&Msg::Error {
             message: "unknown env".into(),
         });
+        roundtrip(&Msg::Busy { retry_after_ms: 5 });
+        roundtrip(&Msg::Busy { retry_after_ms: 0 });
     }
 
     #[test]
@@ -883,6 +898,7 @@ mod tests {
             Msg::ActionBatch {
                 actions: vec![2, 0],
             },
+            Msg::Busy { retry_after_ms: 7 },
         ];
         for m in &variants {
             assert_eq!(&pooled_roundtrip(m, &mut scratch, &mut frame), m);

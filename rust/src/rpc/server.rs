@@ -476,7 +476,7 @@ fn serve_batched(
     }
 }
 
-fn is_timeout(e: &anyhow::Error) -> bool {
+pub(crate) fn is_timeout(e: &anyhow::Error) -> bool {
     e.downcast_ref::<std::io::Error>()
         .map(|io| {
             matches!(

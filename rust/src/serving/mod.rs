@@ -1,0 +1,1154 @@
+//! Policy-inference serving tier (DESIGN.md §Policy-Server).
+//!
+//! TorchBeast's PolyBeast splits environments from the learner behind
+//! an RPC boundary so each tier can scale independently (paper §5.2);
+//! this module takes the split to its conclusion: a standalone
+//! `policy-server` process that serves *action inference* to remote
+//! actor fleets.  The wire protocol reuses the batched env-stream
+//! frames (tags 7–9) with the direction inverted — the client sends
+//! `ObsBatch` and receives `ActionBatch` — so the codec, fuzzers and
+//! frame-cap checks all carry over unchanged:
+//!
+//! ```text
+//! client                                server
+//!   HelloBatch{seeds} ─────────────────▶  (seeds = per-slot sampling seeds)
+//!   ◀───────────────────────────── Spec
+//!   ObsBatch{B rows} ──────────────────▶  submit_slice_bounded
+//!   ◀──────────── ActionBatch{B actions}  (or Busy{retry_after_ms})
+//!   ...                                   (or Error{message} + close)
+//! ```
+//!
+//! **Admission control** is two-layered (DESIGN.md §Policy-Server):
+//! *new connections* beyond `--server_cpus` park in the TCP backlog
+//! (the env-server pattern), while *in-flight streams* submit into the
+//! slot pool with a bounded wait — if the pool stays saturated past
+//! the admission bound, the round is answered with a typed
+//! [`Msg::Busy`] frame instead of queueing unboundedly, and the stream
+//! survives for the client's retry.  Per-request latency lands in the
+//! bounded [`LatencyRing`](crate::util::stats::LatencyRing) inside
+//! [`PipelineGauges`] (p50/p99 in the report line and gauge CSV).
+//!
+//! [`PolicyClient`] is the actor-fleet side: one TCP stream per env
+//! group, transparent retry on `Busy`, and bounded failover across
+//! `--policy_addresses` replicas when a stream dies — the serving
+//! analogue of `RemoteVecEnv`'s reconnect machinery.
+//!
+//! Determinism contract: slot `s` of a stream samples its actions from
+//! an [`Rng`] seeded with `seeds[s]`, advanced exactly once per
+//! *served* round (`Busy` rounds do not advance it), so a fixed
+//! checkpoint + fixed seeds yield bit-identical action streams to an
+//! in-process batcher fed the same observations
+//! (`tests/policy_server.rs::served_actions_match_in_process_batcher`).
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::agent;
+use crate::coordinator::dynamic_batcher::{
+    dynamic_batcher, BatcherConfig, BatchStream, InferenceClient, SliceOutcome, SliceSubmitter,
+};
+use crate::coordinator::weights::WeightsStore;
+use crate::env::wrappers::WrapperCfg;
+use crate::rpc::codec::{
+    self, read_msg, write_msg, Msg, ObsHeader, TAG_ACTION_BATCH, TAG_BUSY, TAG_BYE, TAG_OBS_BATCH,
+};
+use crate::rpc::server::is_timeout;
+use crate::runtime::{InferenceEngine, Manifest, ParamVecs};
+use crate::telemetry::gauges::PipelineGauges;
+use crate::util::rng::Rng;
+
+/// Sizing and admission knobs of one policy server.
+#[derive(Debug, Clone)]
+pub struct PolicyServerConfig {
+    /// Observation shape `[channels, height, width]` (the Spec reply;
+    /// `obs_len` is its product).
+    pub obs_shape: [usize; 3],
+    /// Logits per request.
+    pub num_actions: usize,
+    /// Inference batch: a batch closes at this many rows...
+    pub max_batch: usize,
+    /// ... or when the oldest pending row waited this long.
+    pub batch_timeout: Duration,
+    /// Slot-pool size (concurrent rows in flight across all streams).
+    pub slots: usize,
+    /// Bounded admission wait: a round that cannot check its slots out
+    /// of a saturated pool within this bound is answered `Busy`.
+    pub admission: Duration,
+    /// Backoff hint carried in `Busy` frames.
+    pub retry_after_ms: u32,
+    /// Cap on concurrent serving threads (the `--server_cpus`
+    /// generalization); connections beyond it park in the TCP backlog.
+    /// 0 = unlimited.
+    pub max_streams: usize,
+}
+
+impl PolicyServerConfig {
+    pub fn new(
+        obs_shape: [usize; 3],
+        num_actions: usize,
+        max_batch: usize,
+    ) -> PolicyServerConfig {
+        PolicyServerConfig {
+            obs_shape,
+            num_actions,
+            max_batch,
+            batch_timeout: Duration::from_micros(2000),
+            slots: 2 * max_batch,
+            admission: Duration::from_millis(50),
+            retry_after_ms: 10,
+            max_streams: 0,
+        }
+    }
+
+    /// Flat f32 count of one observation row.
+    pub fn obs_len(&self) -> usize {
+        self.obs_shape.iter().product()
+    }
+
+    pub fn with_slots(mut self, slots: usize) -> PolicyServerConfig {
+        self.slots = slots;
+        self
+    }
+
+    pub fn with_batch_timeout(mut self, timeout: Duration) -> PolicyServerConfig {
+        self.batch_timeout = timeout;
+        self
+    }
+
+    pub fn with_admission(mut self, admission: Duration) -> PolicyServerConfig {
+        self.admission = admission;
+        self
+    }
+
+    pub fn with_retry_after_ms(mut self, ms: u32) -> PolicyServerConfig {
+        self.retry_after_ms = ms;
+        self
+    }
+
+    pub fn with_max_streams(mut self, max_streams: usize) -> PolicyServerConfig {
+        self.max_streams = max_streams;
+        self
+    }
+}
+
+/// Per-stream serving parameters (copied into each stream thread).
+#[derive(Clone, Copy)]
+struct ServeParams {
+    channels: u32,
+    height: u32,
+    width: u32,
+    obs_len: usize,
+    num_actions: usize,
+    slots: usize,
+    admission: Duration,
+    retry_after_ms: u32,
+}
+
+/// Handle to a running policy-inference server.  The accept loop and
+/// stream threads run in the background; the caller drives the
+/// batcher's [`BatchStream`] with an inference backend
+/// ([`run_engine_loop`] for the real AOT engine, or any closure via
+/// [`run_inference_loop`] — how tests serve stub policies without
+/// artifacts).
+pub struct PolicyServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    client: InferenceClient,
+    stream: Option<BatchStream>,
+    /// `ObsBatch` rounds answered with an `ActionBatch` (all streams).
+    pub requests_served: Arc<AtomicU64>,
+    /// Streams accepted.
+    pub connections: Arc<AtomicU64>,
+}
+
+impl PolicyServer {
+    /// Bind and start serving on `addr` with a detached gauge registry
+    /// (use port 0 for an ephemeral port; the bound address is in
+    /// `self.addr`).
+    pub fn start(addr: &str, cfg: PolicyServerConfig) -> anyhow::Result<PolicyServer> {
+        PolicyServer::start_with_gauges(addr, cfg, PipelineGauges::shared())
+    }
+
+    /// [`start`](PolicyServer::start), reporting served/busy counts,
+    /// request latency and slot occupancy into a shared registry
+    /// (`serve_requests`, `serve_busy`, `serve_latency`,
+    /// `slots_in_use`, `slot_waits`).
+    pub fn start_with_gauges(
+        addr: &str,
+        cfg: PolicyServerConfig,
+        gauges: Arc<PipelineGauges>,
+    ) -> anyhow::Result<PolicyServer> {
+        let obs_len = cfg.obs_len();
+        anyhow::ensure!(obs_len > 0, "obs_shape must be non-empty");
+        anyhow::ensure!(cfg.num_actions > 0, "num_actions must be > 0");
+        anyhow::ensure!(cfg.max_batch > 0, "max_batch must be > 0");
+        anyhow::ensure!(
+            cfg.slots >= cfg.max_batch,
+            "slot pool ({}) smaller than max_batch ({}) can never fill a batch",
+            cfg.slots,
+            cfg.max_batch
+        );
+        let bcfg = BatcherConfig::new(cfg.max_batch, cfg.batch_timeout, obs_len, cfg.num_actions)
+            .with_slots(cfg.slots)
+            .with_gauges(&gauges);
+        let (client, stream) = dynamic_batcher(bcfg);
+
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        let conns = Arc::new(AtomicU64::new(0));
+        let params = ServeParams {
+            channels: cfg.obs_shape[0] as u32,
+            height: cfg.obs_shape[1] as u32,
+            width: cfg.obs_shape[2] as u32,
+            obs_len,
+            num_actions: cfg.num_actions,
+            slots: cfg.slots,
+            admission: cfg.admission,
+            retry_after_ms: cfg.retry_after_ms,
+        };
+        let max_streams = cfg.max_streams;
+
+        let stop2 = stop.clone();
+        let served2 = served.clone();
+        let conns2 = conns.clone();
+        let client2 = client.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("policy-server-accept".into())
+            .spawn(move || {
+                let mut workers: Vec<JoinHandle<()>> = Vec::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    // reap finished workers first so the cap below
+                    // counts only live serving threads
+                    workers.retain(|h| !h.is_finished());
+                    if max_streams > 0 && workers.len() >= max_streams {
+                        // at the thread cap: park further connections
+                        // in the TCP backlog until a stream retires —
+                        // connection-level admission control (clients
+                        // see latency, never an error)
+                        std::thread::sleep(Duration::from_millis(2));
+                        continue;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            conns2.fetch_add(1, Ordering::Relaxed);
+                            let stop3 = stop2.clone();
+                            let served3 = served2.clone();
+                            let gauges3 = gauges.clone();
+                            let submitter = client2.slice_submitter();
+                            workers.push(
+                                std::thread::Builder::new()
+                                    .name("policy-server-stream".into())
+                                    .spawn(move || {
+                                        if let Err(e) = serve_stream(
+                                            stream, &stop3, submitter, params, &gauges3, &served3,
+                                        ) {
+                                            crate::tb_warn!(
+                                                "policy-server",
+                                                "stream ended with error: {e}"
+                                            );
+                                        }
+                                    })
+                                    .expect("spawn stream thread"), // tb-lint: allow(unwrap, thread spawn fails only on OS resource exhaustion)
+                            );
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for h in workers {
+                    let _ = h.join();
+                }
+            })?;
+
+        Ok(PolicyServer {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+            client,
+            stream: Some(stream),
+            requests_served: served,
+            connections: conns,
+        })
+    }
+
+    /// Take the batcher's consumer end to drive with an inference
+    /// backend (once; the server itself never runs inference — XLA
+    /// engines are not `Send`, so the backend lives on whichever
+    /// thread the caller owns).
+    pub fn take_batch_stream(&mut self) -> Option<BatchStream> {
+        self.stream.take()
+    }
+
+    /// Stop accepting, fail in-flight submissions, join every stream
+    /// thread.  The inference backend's `next_batch` loop sees `None`
+    /// after the drain and exits on its own.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // closing the batcher wakes submissions parked in admission
+        // (they observe Closed, answer Bye, and their threads retire)
+        self.client.close();
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        // the untaken stream would otherwise hold queued requests
+        drop(self.stream.take());
+    }
+}
+
+impl Drop for PolicyServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The typed-error contract (mirrors the env server's): send an
+/// `Error` frame to the peer (best effort) and return the same message
+/// as the local stream error — both ends always see the typed cause,
+/// never a hang.
+fn reject(writer: &mut TcpStream, message: String) -> anyhow::Error {
+    let _ = write_msg(writer, &Msg::Error { message: message.clone() });
+    anyhow::Error::msg(message)
+}
+
+/// Per-stream serving state, allocated once at handshake and reused
+/// every round (the round loop is zero-alloc at steady state —
+/// `tests/alloc_regression.rs` gates it).
+struct StreamState {
+    obs_block: Vec<f32>,
+    headers: Vec<ObsHeader>,
+    logits: Vec<f32>,
+    baselines: Vec<f32>,
+    actions_u32: Vec<u32>,
+    /// Softmax scratch for action sampling (`num_actions` f32s).
+    scratch: Vec<f32>,
+    /// Per-slot sampling rngs (seeded by the HelloBatch seeds; slot
+    /// `s` advances once per served round — the determinism contract).
+    rngs: Vec<Rng>,
+    frame_buf: Vec<u8>,
+    write_buf: Vec<u8>,
+}
+
+enum RoundOutcome {
+    /// ActionBatch written.
+    Responded,
+    /// Typed Busy written; the stream survives for the retry.
+    Busy,
+    /// The batcher closed under us (server shutdown).
+    Shutdown,
+}
+
+/// Serve one policy stream: HelloBatch → Spec handshake, then the
+/// (ObsBatch ← / ActionBatch →)* round loop with bounded admission.
+fn serve_stream(
+    stream: TcpStream,
+    stop: &AtomicBool,
+    mut submitter: SliceSubmitter,
+    p: ServeParams,
+    gauges: &PipelineGauges,
+    served: &AtomicU64,
+) -> anyhow::Result<()> {
+    stream.set_nodelay(true)?;
+    // Read timeout so stream threads notice shutdown.
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+
+    // Handshake: the HelloBatch seeds double as per-slot action
+    // sampling seeds (the serving analogue of per-slot env seeding).
+    let hello = loop {
+        match read_msg(&mut reader) {
+            Ok(m) => break m,
+            Err(e) if is_timeout(&e) => {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    };
+    let seeds = match hello {
+        Msg::HelloBatch { seeds, .. } => seeds,
+        other => {
+            return Err(reject(
+                &mut writer,
+                format!("expected HelloBatch, got {other:?}"),
+            ))
+        }
+    };
+    let b = seeds.len();
+    if b == 0 {
+        return Err(reject(
+            &mut writer,
+            "a policy stream needs at least one slot".to_string(),
+        ));
+    }
+    // Groups larger than the slot pool could never check out their
+    // slice: typed error at handshake time, not a submit-time panic.
+    if b > p.slots {
+        return Err(reject(
+            &mut writer,
+            format!(
+                "group of {b} slots exceeds the inference slot pool ({}); \
+                 use smaller groups or a larger --slots",
+                p.slots
+            ),
+        ));
+    }
+    // Same handshake-time frame-cap check as the env server: an
+    // ObsBatch this group will send must fit under MAX_FRAME.
+    let frame = codec::obs_batch_payload_len(b, p.obs_len);
+    if frame > codec::MAX_FRAME {
+        return Err(reject(
+            &mut writer,
+            format!(
+                "group of {b} slots x {} f32 obs needs {frame}-byte frames \
+                 (cap {}); use smaller groups",
+                p.obs_len,
+                codec::MAX_FRAME
+            ),
+        ));
+    }
+    write_msg(
+        &mut writer,
+        &Msg::Spec {
+            channels: p.channels,
+            height: p.height,
+            width: p.width,
+            num_actions: p.num_actions as u32,
+        },
+    )?;
+
+    let mut st = StreamState {
+        obs_block: vec![0.0; b * p.obs_len],
+        headers: vec![ObsHeader::default(); b],
+        logits: vec![0.0; b * p.num_actions],
+        baselines: vec![0.0; b],
+        actions_u32: vec![0; b],
+        scratch: vec![0.0; p.num_actions],
+        rngs: seeds.iter().map(|&s| Rng::new(s)).collect(),
+        frame_buf: Vec::new(),
+        write_buf: Vec::new(),
+    };
+
+    loop {
+        // next request frame, polling stop on idle read timeouts
+        loop {
+            match codec::read_frame(&mut reader, &mut st.frame_buf) {
+                Ok(_) => break,
+                Err(e) if is_timeout(&e) => {
+                    if stop.load(Ordering::Relaxed) {
+                        let _ = write_msg(&mut writer, &Msg::Bye);
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        match codec::frame_tag(&st.frame_buf) {
+            Some(TAG_OBS_BATCH) => {
+                match serve_round(&mut writer, &mut submitter, &p, gauges, &mut st) {
+                    Ok(RoundOutcome::Responded) => {
+                        served.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok(RoundOutcome::Busy) => {}
+                    Ok(RoundOutcome::Shutdown) => {
+                        let _ = write_msg(&mut writer, &Msg::Bye);
+                        return Ok(());
+                    }
+                    // decode errors are typed on both ends, like the
+                    // env server's (write errors reject best-effort
+                    // into a dead socket, which is harmless)
+                    Err(e) => return Err(reject(&mut writer, e.to_string())),
+                }
+            }
+            Some(TAG_BYE) => return Ok(()),
+            tag => {
+                let got = match Msg::decode(&st.frame_buf) {
+                    Ok(m) => format!("{m:?}"),
+                    Err(_) => format!("undecodable frame (tag {tag:?})"),
+                };
+                return Err(reject(&mut writer, format!("expected ObsBatch, got {got}")));
+            }
+        }
+    }
+}
+
+/// One served round: decode the ObsBatch in place, submit the slice
+/// with bounded admission, sample one action per slot, respond (or
+/// answer a typed `Busy`), record the latency histogram.  Steady-state
+/// zero-alloc: pooled codec buffers, preallocated slice/result/scratch
+/// buffers, wait-free ring record.
+// tb-lint: no-alloc
+fn serve_round(
+    writer: &mut TcpStream,
+    submitter: &mut SliceSubmitter,
+    p: &ServeParams,
+    gauges: &PipelineGauges,
+    st: &mut StreamState,
+) -> anyhow::Result<RoundOutcome> {
+    codec::decode_obs_batch_into(&st.frame_buf, &mut st.headers, &mut st.obs_block)?;
+    let t0 = Instant::now();
+    match submitter.submit_slice_bounded(
+        &st.obs_block,
+        &mut st.logits,
+        &mut st.baselines,
+        Some(p.admission),
+    ) {
+        SliceOutcome::Served => {
+            for (s, rng) in st.rngs.iter_mut().enumerate() {
+                let row = &st.logits[s * p.num_actions..(s + 1) * p.num_actions];
+                st.actions_u32[s] = agent::sample_action_scratch(row, &mut st.scratch, rng) as u32;
+            }
+            codec::write_action_batch(writer, &mut st.write_buf, &st.actions_u32)?;
+            gauges.serve_latency.record(t0.elapsed());
+            gauges.serve_requests.inc();
+            Ok(RoundOutcome::Responded)
+        }
+        SliceOutcome::Busy => {
+            codec::write_msg_into(
+                writer,
+                &mut st.write_buf,
+                &Msg::Busy {
+                    retry_after_ms: p.retry_after_ms,
+                },
+            )?;
+            gauges.serve_busy.inc();
+            Ok(RoundOutcome::Busy)
+        }
+        SliceOutcome::Closed => Ok(RoundOutcome::Shutdown),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Inference backends
+// ---------------------------------------------------------------------------
+
+/// Drive a policy server's [`BatchStream`] with an arbitrary inference
+/// backend: `infer(obs, n, logits, baselines)` fills `logits` with
+/// `n * num_actions` f32s and `baselines` with `n` f32s for the
+/// `n`-row flat obs block.  Returns when the batcher closes (server
+/// shutdown) or the backend errors.
+///
+/// This is the testable core — the fault-injection suite serves stub
+/// policies through it without AOT artifacts — and the template the
+/// real engine wrapper [`run_engine_loop`] runs on.
+pub fn run_inference_loop<F>(
+    stream: &BatchStream,
+    num_actions: usize,
+    mut infer: F,
+) -> anyhow::Result<()>
+where
+    F: FnMut(&[f32], usize, &mut Vec<f32>, &mut Vec<f32>) -> anyhow::Result<()>,
+{
+    let mut logits: Vec<f32> = Vec::new();
+    let mut baselines: Vec<f32> = Vec::new();
+    while let Some(batch) = stream.next_batch() {
+        let n = batch.len();
+        infer(batch.obs_flat(), n, &mut logits, &mut baselines)?;
+        batch.respond(&logits, &baselines, num_actions)?;
+    }
+    Ok(())
+}
+
+/// Serve batches with the real AOT inference engine: load the
+/// artifact, adopt initial parameters (a checkpoint when given, else a
+/// seeded init), then — when subscribed to a [`WeightsStore`] — adopt
+/// any newer published version before each batch, the same refresh
+/// discipline as the training driver's inference thread.
+///
+/// XLA engines are not `Send`: call this on the thread that should own
+/// the engine (the standalone binary uses its main thread).
+pub fn run_engine_loop(
+    stream: &BatchStream,
+    artifact_dir: &Path,
+    init_checkpoint: Option<&Path>,
+    seed: u64,
+    weights: Option<&WeightsStore>,
+) -> anyhow::Result<()> {
+    let mut engine = InferenceEngine::load(artifact_dir)?;
+    let num_actions = engine.manifest.num_actions;
+    match init_checkpoint {
+        Some(path) => {
+            let (params, version) = crate::runtime::checkpoint::load(path, &engine.manifest)?;
+            engine.set_params(&params, version)?;
+            crate::tb_info!(
+                "policy-server",
+                "serving checkpoint {} (weight version {version})",
+                path.display()
+            );
+        }
+        None => {
+            engine.init_params(crate::coordinator::fold_seed(seed))?;
+            crate::tb_info!("policy-server", "serving fresh seeded params (seed {seed})");
+        }
+    }
+    let mut host_params = ParamVecs::new();
+    run_inference_loop(stream, num_actions, |obs, n, logits, baselines| {
+        if let Some(w) = weights {
+            if let Some(v) = w.copy_newer_into(engine.param_version, &mut host_params) {
+                engine.set_params(&host_params, v)?;
+            }
+        }
+        let (l, bl) = engine.infer(obs, n)?;
+        logits.clear();
+        logits.extend_from_slice(&l);
+        baselines.clear();
+        baselines.extend_from_slice(&bl);
+        Ok(())
+    })
+}
+
+// ---------------------------------------------------------------------------
+// PolicyClient: the actor-fleet side
+// ---------------------------------------------------------------------------
+
+/// Remote-inference client for one env group: B observations per
+/// request over one TCP stream, with transparent retry on typed
+/// [`Msg::Busy`] backpressure and bounded failover across replicas
+/// when a stream dies (the `--policy_addresses` list).
+///
+/// Failure semantics mirror `RemoteVecEnv`: a dead stream spends the
+/// reconnect budget rotating through the replica list (fresh
+/// `HelloBatch` handshake — server-side sampling rngs restart from the
+/// seeds); with the budget exhausted the client latches failed and
+/// every later [`act`](PolicyClient::act) errors immediately.
+pub struct PolicyClient {
+    addrs: Vec<String>,
+    /// Replica index currently serving this stream.
+    current: usize,
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    obs_len: usize,
+    num_actions: usize,
+    b: usize,
+    seeds: Vec<u64>,
+    /// Default headers for outgoing ObsBatch frames (the policy tier
+    /// carries no per-slot episode state; reused every round).
+    headers: Vec<ObsHeader>,
+    actions_u32: Vec<u32>,
+    frame_buf: Vec<u8>,
+    write_buf: Vec<u8>,
+    /// Remaining failover budget (total over the client's lifetime).
+    reconnect_budget: u32,
+    reconnects: u32,
+    /// Max transparent `Busy` retries within one `act` call before the
+    /// round fails over to another replica.
+    busy_retry_limit: u32,
+    busy_backoffs: u64,
+    last_error: Option<String>,
+}
+
+impl PolicyClient {
+    /// Connect to the first reachable replica in `addrs`, opening a
+    /// stream of `seeds.len()` slots (slot `s` samples with seed
+    /// `seeds[s]` server-side).
+    pub fn connect(addrs: &[String], seeds: &[u64]) -> anyhow::Result<PolicyClient> {
+        anyhow::ensure!(!addrs.is_empty(), "need at least one policy address");
+        anyhow::ensure!(!seeds.is_empty(), "a policy stream needs at least one slot");
+        let mut last_err: Option<anyhow::Error> = None;
+        for (i, addr) in addrs.iter().enumerate() {
+            match PolicyClient::handshake(addr, seeds) {
+                Ok((writer, reader, obs_len, num_actions)) => {
+                    let b = seeds.len();
+                    return Ok(PolicyClient {
+                        addrs: addrs.to_vec(),
+                        current: i,
+                        writer,
+                        reader,
+                        obs_len,
+                        num_actions,
+                        b,
+                        seeds: seeds.to_vec(),
+                        headers: vec![ObsHeader::default(); b],
+                        actions_u32: vec![0; b],
+                        frame_buf: Vec::new(),
+                        write_buf: Vec::new(),
+                        reconnect_budget: 0,
+                        reconnects: 0,
+                        busy_retry_limit: 20,
+                        busy_backoffs: 0,
+                        last_error: None,
+                    });
+                }
+                Err(e) => {
+                    crate::tb_warn!("policy-client", "replica {addr} unreachable: {e}");
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow::anyhow!("no policy replica reachable")))
+    }
+
+    /// [`connect`](PolicyClient::connect) wired from a run config: the
+    /// `--policy_addresses` replica list with the
+    /// `--env_reconnect_attempts` failover budget.
+    pub fn from_config(
+        cfg: &crate::config::TrainConfig,
+        seeds: &[u64],
+    ) -> anyhow::Result<PolicyClient> {
+        let mut c = PolicyClient::connect(&cfg.policy_addresses, seeds)?;
+        c.set_reconnect(cfg.env_reconnect_attempts);
+        Ok(c)
+    }
+
+    fn handshake(
+        addr: &str,
+        seeds: &[u64],
+    ) -> anyhow::Result<(TcpStream, BufReader<TcpStream>, usize, usize)> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        write_msg(
+            &mut writer,
+            &Msg::HelloBatch {
+                env: "policy".to_string(),
+                seeds: seeds.to_vec(),
+                wrappers: WrapperCfg::default(),
+            },
+        )?;
+        match read_msg(&mut reader)? {
+            Msg::Spec {
+                channels,
+                height,
+                width,
+                num_actions,
+            } => Ok((
+                writer,
+                reader,
+                (channels * height * width) as usize,
+                num_actions as usize,
+            )),
+            Msg::Error { message } => anyhow::bail!("server error: {message}"),
+            other => anyhow::bail!("expected Spec, got {other:?}"),
+        }
+    }
+
+    /// Arm a bounded failover budget (total over the client's
+    /// lifetime): on stream death, up to `attempts` fresh handshakes —
+    /// rotating through the replica list — are tried before the client
+    /// latches failed.
+    pub fn set_reconnect(&mut self, attempts: u32) {
+        self.reconnect_budget = attempts;
+    }
+
+    /// Cap on transparent `Busy` retries within one `act` call (the
+    /// round fails over to the next replica past it).
+    pub fn set_busy_retry_limit(&mut self, limit: u32) {
+        self.busy_retry_limit = limit;
+    }
+
+    /// Successful failovers so far.
+    pub fn reconnects(&self) -> u32 {
+        self.reconnects
+    }
+
+    /// Index (into the address list) of the replica currently serving.
+    pub fn replica(&self) -> usize {
+        self.current
+    }
+
+    /// Total `Busy` backoffs absorbed transparently.
+    pub fn busy_backoffs(&self) -> u64 {
+        self.busy_backoffs
+    }
+
+    /// Why the client latched failed, if it has.
+    pub fn last_error(&self) -> Option<&str> {
+        self.last_error.as_deref()
+    }
+
+    /// Slots per request.
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    /// Logits per slot on the serving side.
+    pub fn num_actions(&self) -> usize {
+        self.num_actions
+    }
+
+    /// Flat f32 count of one observation row.
+    pub fn obs_len(&self) -> usize {
+        self.obs_len
+    }
+
+    /// Orderly stream shutdown.
+    pub fn close(&mut self) {
+        let _ = write_msg(&mut self.writer, &Msg::Bye);
+    }
+
+    /// Request one action per slot for the `b * obs_len` observation
+    /// block.  Retries transparently on `Busy` (bounded, sleeping the
+    /// server's `retry_after_ms` hint) and fails over across replicas
+    /// on stream death (bounded by the reconnect budget).  Zero heap
+    /// allocation per round at steady state.
+    pub fn act(&mut self, obs: &[f32], actions_out: &mut [usize]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            obs.len() == self.b * self.obs_len,
+            "obs block of {} f32s != {} slots x {}",
+            obs.len(),
+            self.b,
+            self.obs_len
+        );
+        anyhow::ensure!(
+            actions_out.len() == self.b,
+            "need one action slot per stream slot ({}), got {}",
+            self.b,
+            actions_out.len()
+        );
+        if let Some(why) = &self.last_error {
+            // latched: once the budget is spent, never touch a socket
+            // again (mirrors RemoteVecEnv's latch)
+            anyhow::bail!("policy client latched failed: {why}");
+        }
+        let mut busy_left = self.busy_retry_limit;
+        loop {
+            match self.try_round(obs, actions_out) {
+                RoundResult::Done => return Ok(()),
+                RoundResult::Busy(retry_after_ms) => {
+                    if busy_left == 0 {
+                        // this replica stayed saturated through every
+                        // backoff: treat it as dead for this stream and
+                        // move on (capacity may exist elsewhere)
+                        self.failover("replica stayed busy past the retry budget")?;
+                    } else {
+                        busy_left -= 1;
+                        self.busy_backoffs += 1;
+                        std::thread::sleep(Duration::from_millis(
+                            (retry_after_ms as u64).min(1000),
+                        ));
+                    }
+                }
+                RoundResult::Failed(why) => {
+                    self.failover(&why)?;
+                }
+            }
+        }
+    }
+
+    /// One request/response exchange on the current stream.
+    fn try_round(&mut self, obs: &[f32], actions_out: &mut [usize]) -> RoundResult {
+        if let Err(e) =
+            codec::write_obs_batch(&mut self.writer, &mut self.write_buf, &self.headers, obs)
+        {
+            return RoundResult::Failed(e.to_string());
+        }
+        // .err() consumes the Result (whose Ok borrows frame_buf)
+        if let Some(e) = codec::read_frame(&mut self.reader, &mut self.frame_buf).err() {
+            return RoundResult::Failed(e.to_string());
+        }
+        match codec::frame_tag(&self.frame_buf) {
+            Some(TAG_ACTION_BATCH) => {
+                if let Err(e) =
+                    codec::decode_action_batch_into(&self.frame_buf, &mut self.actions_u32)
+                {
+                    return RoundResult::Failed(e.to_string());
+                }
+                for (dst, &a) in actions_out.iter_mut().zip(&self.actions_u32) {
+                    *dst = a as usize;
+                }
+                RoundResult::Done
+            }
+            Some(TAG_BUSY) => match Msg::decode(&self.frame_buf) {
+                Ok(Msg::Busy { retry_after_ms }) => RoundResult::Busy(retry_after_ms),
+                _ => RoundResult::Failed("undecodable Busy frame".to_string()),
+            },
+            _ => {
+                // an Error frame (typed server-side rejection), Bye, or
+                // garbage: all stream-fatal
+                let why = match Msg::decode(&self.frame_buf) {
+                    Ok(Msg::Error { message }) => format!("server error: {message}"),
+                    Ok(other) => format!("expected ActionBatch, got {other:?}"),
+                    Err(_) => "expected ActionBatch, got undecodable frame".to_string(),
+                };
+                RoundResult::Failed(why)
+            }
+        }
+    }
+
+    /// Spend the failover budget rotating through the replica list; on
+    /// success the stream is replaced (fresh handshake), on exhaustion
+    /// the client latches failed and errors.
+    fn failover(&mut self, why: &str) -> anyhow::Result<()> {
+        crate::tb_warn!(
+            "policy-client",
+            "stream to {} failed: {why}",
+            self.addrs[self.current]
+        );
+        while self.reconnect_budget > 0 {
+            self.reconnect_budget -= 1;
+            self.current = (self.current + 1) % self.addrs.len();
+            let addr = &self.addrs[self.current];
+            match PolicyClient::handshake(addr, &self.seeds) {
+                // the fresh stream must serve the same policy shape: a
+                // replica with a different artifact would silently swap
+                // the action space mid-run
+                Ok((w, r, obs_len, num_actions))
+                    if obs_len == self.obs_len && num_actions == self.num_actions =>
+                {
+                    self.writer = w;
+                    self.reader = r;
+                    self.reconnects += 1;
+                    crate::tb_warn!(
+                        "policy-client",
+                        "failed over to {addr} ({} attempts left)",
+                        self.reconnect_budget
+                    );
+                    return Ok(());
+                }
+                Ok((_, _, obs_len, num_actions)) => {
+                    crate::tb_warn!(
+                        "policy-client",
+                        "replica {addr} serves a different spec ({obs_len} obs f32s, \
+                         {num_actions} actions != {} x {}); discarding it ({} attempts left)",
+                        self.obs_len,
+                        self.num_actions,
+                        self.reconnect_budget
+                    );
+                }
+                Err(e) => {
+                    crate::tb_warn!(
+                        "policy-client",
+                        "failover to {addr} failed: {e} ({} attempts left)",
+                        self.reconnect_budget
+                    );
+                }
+            }
+        }
+        self.last_error = Some(why.to_string());
+        anyhow::bail!("policy stream failed with the reconnect budget exhausted: {why}")
+    }
+}
+
+impl Drop for PolicyClient {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+enum RoundResult {
+    Done,
+    Busy(u32),
+    Failed(String),
+}
+
+// ---------------------------------------------------------------------------
+// Standalone entry point
+// ---------------------------------------------------------------------------
+
+/// The `policy-server` entry point, shared by `torchbeast
+/// policy-server` and the standalone `policy_server` binary.
+///
+/// Serving-only flags (`--listen`, `--server_cpus`, `--max_batch`,
+/// `--slots`, `--retry_after_ms`) are parsed here; everything else
+/// (`--artifact_dir`, `--init_checkpoint`, `--seed`,
+/// `--inference_timeout_us`, `--policy_admission_ms`,
+/// `--gauge_log_path`, `--gauge_sample_ms`, `--log_level`, `--config`)
+/// goes through [`TrainConfig`](crate::config::TrainConfig).
+pub fn policy_server_main(args: &[String]) -> anyhow::Result<()> {
+    let mut listen = "0.0.0.0:7002".to_string();
+    let mut server_cpus = 0usize;
+    let mut max_batch: Option<usize> = None;
+    let mut slots: Option<usize> = None;
+    let mut retry_after_ms = 10u32;
+    let mut passthrough: Vec<String> = Vec::new();
+    let parse_num = |flag: &str, v: Option<&String>| -> anyhow::Result<usize> {
+        let v = v.ok_or_else(|| anyhow::anyhow!("{flag} needs a value"))?;
+        v.parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("{flag} expects a number, got {v:?}"))
+    };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--listen" => {
+                i += 1;
+                listen = args
+                    .get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--listen needs a value"))?
+                    .clone();
+            }
+            "--server_cpus" => {
+                i += 1;
+                server_cpus = parse_num("--server_cpus", args.get(i))?;
+            }
+            "--max_batch" => {
+                i += 1;
+                max_batch = Some(parse_num("--max_batch", args.get(i))?);
+            }
+            "--slots" => {
+                i += 1;
+                slots = Some(parse_num("--slots", args.get(i))?);
+            }
+            "--retry_after_ms" => {
+                i += 1;
+                retry_after_ms = parse_num("--retry_after_ms", args.get(i))? as u32;
+            }
+            other => passthrough.push(other.to_string()),
+        }
+        i += 1;
+    }
+    let mut cfg = crate::config::TrainConfig::default();
+    cfg.apply_args(&passthrough)?;
+    crate::telemetry::log::set_max_level(cfg.log_level);
+
+    let manifest = Manifest::load(&cfg.artifact_dir)?;
+    let max_batch = max_batch.unwrap_or(manifest.inference_batch);
+    let mut scfg = PolicyServerConfig::new(manifest.obs_shape, manifest.num_actions, max_batch)
+        .with_batch_timeout(Duration::from_micros(cfg.inference_timeout_us))
+        .with_admission(Duration::from_millis(cfg.policy_admission_ms))
+        .with_retry_after_ms(retry_after_ms)
+        .with_max_streams(server_cpus);
+    if let Some(s) = slots {
+        scfg = scfg.with_slots(s);
+    }
+
+    let gauges = PipelineGauges::shared();
+    let mut server = PolicyServer::start_with_gauges(&listen, scfg.clone(), gauges.clone())?;
+    crate::tb_info!(
+        "policy-server",
+        "listening on {} (batch {max_batch} x {} obs f32s, {} slots, \
+         admission {}ms, stream threads {})",
+        server.addr,
+        scfg.obs_len(),
+        scfg.slots,
+        cfg.policy_admission_ms,
+        if server_cpus == 0 {
+            "unlimited".to_string()
+        } else {
+            server_cpus.to_string()
+        }
+    );
+    // gauge CSV time series, same knobs as the training driver
+    let _sampler = match &cfg.gauge_log_path {
+        Some(path) => Some(crate::telemetry::sampler::GaugeSampler::start(
+            gauges.clone(),
+            path,
+            Duration::from_millis(cfg.gauge_sample_ms),
+        )?),
+        None => None,
+    };
+    // periodic report line (the served/busy/p50/p99 section)
+    let g2 = gauges.clone();
+    std::thread::Builder::new()
+        .name("policy-server-report".into())
+        .spawn(move || loop {
+            std::thread::sleep(Duration::from_secs(5));
+            crate::tb_info!("policy-server", "{}", g2.snapshot());
+        })?;
+
+    let stream = server
+        .take_batch_stream()
+        .ok_or_else(|| anyhow::anyhow!("batch stream already taken"))?;
+    // the engine owns the main thread; serves until the process dies
+    run_engine_loop(
+        &stream,
+        &cfg.artifact_dir,
+        cfg.init_checkpoint.as_deref(),
+        cfg.seed,
+        None,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_and_builders() {
+        let c = PolicyServerConfig::new([4, 10, 5], 6, 8);
+        assert_eq!(c.obs_len(), 200);
+        assert_eq!(c.slots, 16, "default pool is 2x max_batch");
+        assert_eq!(c.max_streams, 0, "unlimited streams by default");
+        let c = c
+            .with_slots(4)
+            .with_admission(Duration::from_millis(5))
+            .with_retry_after_ms(3)
+            .with_max_streams(2)
+            .with_batch_timeout(Duration::from_micros(500));
+        assert_eq!(c.slots, 4);
+        assert_eq!(c.admission, Duration::from_millis(5));
+        assert_eq!(c.retry_after_ms, 3);
+        assert_eq!(c.max_streams, 2);
+        assert_eq!(c.batch_timeout, Duration::from_micros(500));
+    }
+
+    #[test]
+    fn start_rejects_degenerate_sizing() {
+        // a pool smaller than max_batch can never close a full batch
+        let cfg = PolicyServerConfig::new([1, 2, 2], 3, 8).with_slots(4);
+        assert!(PolicyServer::start("127.0.0.1:0", cfg).is_err());
+        let cfg = PolicyServerConfig::new([0, 0, 0], 3, 8);
+        assert!(PolicyServer::start("127.0.0.1:0", cfg).is_err());
+    }
+
+    #[test]
+    fn connect_requires_addresses_and_slots() {
+        assert!(PolicyClient::connect(&[], &[1]).is_err());
+        assert!(PolicyClient::connect(&["127.0.0.1:1".to_string()], &[]).is_err());
+    }
+
+    /// Smoke round-trip with a stub backend: handshake, a few served
+    /// rounds, orderly Bye, server counters advance.
+    #[test]
+    fn serves_actions_through_a_stub_backend() {
+        let cfg = PolicyServerConfig::new([1, 2, 2], 3, 4);
+        let gauges = PipelineGauges::shared();
+        let mut server =
+            PolicyServer::start_with_gauges("127.0.0.1:0", cfg, gauges.clone()).unwrap();
+        let stream = server.take_batch_stream().unwrap();
+        let backend = std::thread::spawn(move || {
+            run_inference_loop(&stream, 3, |obs, n, logits, baselines| {
+                logits.clear();
+                baselines.clear();
+                for k in 0..n {
+                    let row = &obs[k * 4..(k + 1) * 4];
+                    for a in 0..3 {
+                        logits.push(row[a % 4] * 0.1 + a as f32);
+                    }
+                    baselines.push(0.0);
+                }
+                Ok(())
+            })
+            .unwrap();
+        });
+
+        let addr = server.addr.to_string();
+        let seeds = [7u64, 8];
+        let mut client = PolicyClient::connect(&[addr], &seeds).unwrap();
+        assert_eq!(client.batch(), 2);
+        assert_eq!(client.num_actions(), 3);
+        assert_eq!(client.obs_len(), 4);
+        let mut actions = [0usize; 2];
+        for round in 0..10 {
+            let obs: Vec<f32> = (0..8).map(|i| (round * 8 + i) as f32 * 0.01).collect();
+            client.act(&obs, &mut actions).unwrap();
+            assert!(actions.iter().all(|&a| a < 3), "round {round}: {actions:?}");
+        }
+        client.close();
+        drop(client);
+        // shutdown joins the stream threads, so the counters below are
+        // final (the client's last read can race a counter increment)
+        server.shutdown();
+        backend.join().unwrap();
+        assert_eq!(server.requests_served.load(Ordering::Relaxed), 10);
+        assert_eq!(server.connections.load(Ordering::Relaxed), 1);
+        let snap = gauges.snapshot();
+        assert_eq!(snap.serve_requests, 10);
+        assert_eq!(snap.serve_busy, 0);
+        assert!(snap.serve_p50_us > 0, "latency ring recorded the rounds");
+        assert!(snap.to_string().contains("served 10 (busy 0)"), "{snap}");
+    }
+}

@@ -33,6 +33,8 @@ use std::fmt;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::util::stats::LatencyRing;
+
 /// Monotonic event counter (relaxed atomic add; hot-path safe).
 /// Clones share the same underlying counter.
 #[derive(Clone, Default)]
@@ -213,6 +215,18 @@ pub struct PipelineGauges {
     /// each batch to the learner.  All-zero while version stamping is
     /// inactive (eval, detached test pipelines).
     pub policy_lag: LagHist,
+    /// `PolicyServer`: inference requests answered with an
+    /// `ActionBatch` (one per served `ObsBatch` frame).
+    pub serve_requests: Counter,
+    /// `PolicyServer`: requests rejected with a typed `Busy` frame
+    /// because the slot pool stayed saturated past the admission bound
+    /// (DESIGN.md §Policy-Server).
+    pub serve_busy: Counter,
+    /// `PolicyServer`: per-request submit→respond latency ring
+    /// (bounded window; p50/p99 read out in
+    /// [`snapshot`](PipelineGauges::snapshot)).  Zero-sample while no
+    /// policy server runs, so classic report lines stay unchanged.
+    pub serve_latency: LatencyRing,
 }
 
 impl PipelineGauges {
@@ -231,6 +245,7 @@ impl PipelineGauges {
     /// gauges are otherwise independent relaxed reads.
     pub fn snapshot(&self) -> GaugesSnapshot {
         let pool_free = self.pool_free.get();
+        let latency = self.serve_latency.quantiles();
         GaugesSnapshot {
             pool_free,
             pool_rented: self.pool_capacity.get().saturating_sub(pool_free),
@@ -249,6 +264,10 @@ impl PipelineGauges {
             lag_sum: self.policy_lag.sum(),
             lag_max: self.policy_lag.max(),
             lag_buckets: self.policy_lag.buckets(),
+            serve_requests: self.serve_requests.get(),
+            serve_busy: self.serve_busy.get(),
+            serve_p50_us: latency.p50_us,
+            serve_p99_us: latency.p99_us,
         }
     }
 }
@@ -278,6 +297,14 @@ pub struct GaugesSnapshot {
     pub lag_max: u64,
     /// Histogram counts: lags 0, 1, 2, 3, 4–7, 8–15, 16–31, 32+.
     pub lag_buckets: [u64; LAG_BUCKETS],
+    /// `PolicyServer` requests served (`ActionBatch` frames written).
+    pub serve_requests: u64,
+    /// `PolicyServer` requests rejected with a typed `Busy` frame.
+    pub serve_busy: u64,
+    /// Served-request latency p50 over the ring window, microseconds.
+    pub serve_p50_us: u64,
+    /// Served-request latency p99 over the ring window, microseconds.
+    pub serve_p99_us: u64,
 }
 
 impl fmt::Display for GaugesSnapshot {
@@ -325,6 +352,15 @@ impl fmt::Display for GaugesSnapshot {
                 " lag mean {:.2} max {}",
                 self.lag_sum as f64 / self.lag_count as f64,
                 self.lag_max
+            )?;
+        }
+        // served-inference tier: only processes running a PolicyServer
+        // record these, so train/eval report lines stay unchanged
+        if self.serve_requests > 0 || self.serve_busy > 0 {
+            write!(
+                f,
+                " served {} (busy {}) p50 {}µs p99 {}µs",
+                self.serve_requests, self.serve_busy, self.serve_p50_us, self.serve_p99_us
             )?;
         }
         Ok(())
@@ -438,5 +474,28 @@ mod tests {
         s.lag_max = 3;
         let line = s.to_string();
         assert!(line.contains("lag mean 1.50 max 3"), "{line}");
+        // the serving tier stays quiet until a PolicyServer records it
+        assert!(!line.contains("served"), "{line}");
+        s.serve_requests = 100;
+        s.serve_busy = 4;
+        s.serve_p50_us = 250;
+        s.serve_p99_us = 900;
+        let line = s.to_string();
+        assert!(line.contains("served 100 (busy 4) p50 250µs p99 900µs"), "{line}");
+    }
+
+    #[test]
+    fn serve_latency_quantiles_flow_into_the_snapshot() {
+        let p = PipelineGauges::new();
+        for us in 1..=100u64 {
+            p.serve_latency.record_us(us);
+        }
+        p.serve_requests.add(100);
+        p.serve_busy.add(2);
+        let s = p.snapshot();
+        assert_eq!(s.serve_requests, 100);
+        assert_eq!(s.serve_busy, 2);
+        assert_eq!(s.serve_p50_us, 50, "nearest-rank p50 of 1..=100");
+        assert_eq!(s.serve_p99_us, 99, "nearest-rank p99 of 1..=100");
     }
 }

@@ -21,7 +21,8 @@ use crate::telemetry::gauges::PipelineGauges;
 /// [`crate::telemetry::gauges::GaugesSnapshot`] field by field).
 pub const GAUGE_CURVE_HEADER: &str = "elapsed_s,pool_free,pool_rented,pool_rent_waits,\
 queue_depth,batches_ready,slots_in_use,slot_waits,env_streams,env_steps,env_reconnects,\
-replay_size,replay_sampled,replay_evicted,lag_count,lag_sum,lag_max";
+replay_size,replay_sampled,replay_evicted,lag_count,lag_sum,lag_max,\
+serve_requests,serve_busy,serve_p50_us,serve_p99_us";
 
 /// Handle to a running gauge sampler; [`stop`](GaugeSampler::stop) (or
 /// drop) joins the thread and flushes the file.
@@ -79,7 +80,7 @@ impl GaugeSampler {
                     let s = gauges.snapshot();
                     let ok = writeln!(
                         file,
-                        "{:.3},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                        "{:.3},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                         t0.elapsed().as_secs_f64(),
                         s.pool_free,
                         s.pool_rented,
@@ -97,6 +98,10 @@ impl GaugeSampler {
                         s.lag_count,
                         s.lag_sum,
                         s.lag_max,
+                        s.serve_requests,
+                        s.serve_busy,
+                        s.serve_p50_us,
+                        s.serve_p99_us,
                     )
                     .is_ok();
                     if !ok {

@@ -2,7 +2,11 @@
 //! bench harness (criterion is unavailable offline; `bench::Bench`
 //! below is the in-tree replacement the `rust/benches/*` binaries use).
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::util::sync::{CheckedMutex, LockOrder};
 
 /// Streaming summary of a series of f64 samples.
 #[derive(Debug, Clone, Default)]
@@ -70,6 +74,129 @@ impl Summary {
     pub fn p99(&self) -> f64 {
         self.percentile(99.0)
     }
+}
+
+/// Quantile snapshot read out of a [`LatencyRing`].
+///
+/// All fields are integers so the snapshot stays `Copy + Eq` (the
+/// gauges snapshot embeds these — DESIGN.md §Telemetry).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LatencyQuantiles {
+    /// Total samples ever recorded (not capped at ring capacity).
+    pub count: u64,
+    /// Nearest-rank p50 over the last `capacity` samples, microseconds.
+    pub p50_us: u64,
+    /// Nearest-rank p99 over the last `capacity` samples, microseconds.
+    pub p99_us: u64,
+}
+
+/// Bounded lock-free latency ring: per-request durations (µs) recorded
+/// on the serve hot path, p50/p99 read out by the telemetry reporter
+/// (DESIGN.md §Policy-Server, gauge inventory).
+///
+/// The record path is wait-free and allocation-free: a monotone cursor
+/// picks a slot (`fetch_add % capacity`) and the duration is stored
+/// with relaxed ordering — quantiles are statistics over *roughly* the
+/// last `capacity` samples, so a torn read of an in-flight slot only
+/// perturbs one sample.  Quantile reads copy live slots into a
+/// preallocated scratch vector guarded by a [`CheckedMutex`] (rank 60,
+/// `stats.latency_ring`), sort unstable, and take nearest-rank
+/// (`rank = ceil(q·n)`, index `rank − 1`): p50 of 1..=100 is exactly
+/// 50, p99 exactly 99.  An empty ring reports all-zero quantiles.
+///
+/// Clones share the ring (the [`Counter`](crate::telemetry::gauges)
+/// pattern): every tier of the pipeline records into the same slots.
+#[derive(Debug, Clone)]
+pub struct LatencyRing {
+    inner: Arc<RingInner>,
+}
+
+#[derive(Debug)]
+struct RingInner {
+    slots: Box<[AtomicU64]>,
+    /// Monotone sample counter; `cursor % slots.len()` is the next slot.
+    cursor: AtomicUsize,
+    /// Preallocated sort scratch so even quantile reads are alloc-free.
+    scratch: CheckedMutex<Vec<u64>>,
+}
+
+const LATENCY_RING_ORDER: LockOrder = LockOrder::new(60, "stats.latency_ring");
+
+impl Default for LatencyRing {
+    fn default() -> Self {
+        // Default window: enough for several seconds of serving at
+        // high request rates without drowning the sort on read.
+        LatencyRing::with_capacity(4096)
+    }
+}
+
+impl LatencyRing {
+    pub fn with_capacity(capacity: usize) -> LatencyRing {
+        let capacity = capacity.max(1);
+        let mut slots = Vec::with_capacity(capacity);
+        slots.resize_with(capacity, || AtomicU64::new(0));
+        LatencyRing {
+            inner: Arc::new(RingInner {
+                slots: slots.into_boxed_slice(),
+                cursor: AtomicUsize::new(0),
+                scratch: CheckedMutex::new(LATENCY_RING_ORDER, vec![0u64; capacity]),
+            }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.slots.len()
+    }
+
+    /// Record one duration in microseconds.  Hot-path safe: wait-free,
+    /// two relaxed atomic ops, no branches beyond the modulo.
+    // tb-lint: no-alloc
+    #[inline]
+    pub fn record_us(&self, us: u64) {
+        let i = self.inner.cursor.fetch_add(1, Ordering::Relaxed) % self.inner.slots.len();
+        self.inner.slots[i].store(us, Ordering::Relaxed);
+    }
+
+    /// Record a [`Duration`], saturating to `u64::MAX` microseconds.
+    // tb-lint: no-alloc
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        self.record_us(u64::try_from(d.as_micros()).unwrap_or(u64::MAX));
+    }
+
+    /// Total samples ever recorded.
+    pub fn count(&self) -> u64 {
+        self.inner.cursor.load(Ordering::Relaxed) as u64
+    }
+
+    /// Nearest-rank p50/p99 over the live window (last
+    /// `min(count, capacity)` samples); all zeros when empty.
+    pub fn quantiles(&self) -> LatencyQuantiles {
+        let count = self.count();
+        let live = (count as usize).min(self.inner.slots.len());
+        if live == 0 {
+            return LatencyQuantiles::default();
+        }
+        let mut scratch = self.inner.scratch.lock();
+        for (dst, src) in scratch[..live].iter_mut().zip(self.inner.slots[..live].iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        let window = &mut scratch[..live];
+        window.sort_unstable();
+        LatencyQuantiles {
+            count,
+            p50_us: nearest_rank(window, 50),
+            p99_us: nearest_rank(window, 99),
+        }
+    }
+}
+
+/// Nearest-rank quantile on a sorted window: `rank = ceil(q·n/100)`,
+/// clamped to at least 1; the sample at index `rank − 1`.
+fn nearest_rank(sorted: &[u64], q: u64) -> u64 {
+    let n = sorted.len() as u64;
+    let rank = (q * n).div_ceil(100).max(1);
+    sorted[(rank - 1) as usize]
 }
 
 /// Exponential moving average (for returns / loss curves).
@@ -314,5 +441,66 @@ mod tests {
         let s = Summary::new();
         assert!(s.mean().is_nan());
         assert!(s.p50().is_nan());
+    }
+
+    #[test]
+    fn latency_ring_pins_nearest_rank_quantiles_exactly() {
+        // A known distribution: 1..=100 µs, recorded out of order so
+        // the test exercises the sort, pins nearest-rank exactly.
+        let ring = LatencyRing::with_capacity(128);
+        for us in (1..=100u64).rev() {
+            ring.record_us(us);
+        }
+        let q = ring.quantiles();
+        assert_eq!(q.count, 100);
+        assert_eq!(q.p50_us, 50, "nearest-rank p50 of 1..=100 is exactly 50");
+        assert_eq!(q.p99_us, 99, "nearest-rank p99 of 1..=100 is exactly 99");
+    }
+
+    #[test]
+    fn latency_ring_empty_reports_zeros() {
+        let ring = LatencyRing::with_capacity(16);
+        assert_eq!(ring.quantiles(), LatencyQuantiles::default());
+        assert_eq!(ring.quantiles().count, 0);
+        assert_eq!(ring.quantiles().p99_us, 0);
+    }
+
+    #[test]
+    fn latency_ring_single_sample() {
+        let ring = LatencyRing::with_capacity(16);
+        ring.record_us(7);
+        let q = ring.quantiles();
+        assert_eq!((q.count, q.p50_us, q.p99_us), (1, 7, 7));
+    }
+
+    #[test]
+    fn latency_ring_wraps_and_keeps_only_the_window() {
+        // Capacity 4: after recording 1..=8 only {5,6,7,8} survive.
+        let ring = LatencyRing::with_capacity(4);
+        for us in 1..=8u64 {
+            ring.record_us(us);
+        }
+        let q = ring.quantiles();
+        assert_eq!(q.count, 8, "count is total recorded, not window size");
+        assert_eq!(q.p50_us, 6, "nearest-rank p50 of {{5,6,7,8}}");
+        assert_eq!(q.p99_us, 8);
+    }
+
+    #[test]
+    fn latency_ring_clones_share_the_ring() {
+        let ring = LatencyRing::with_capacity(8);
+        let other = ring.clone();
+        ring.record_us(10);
+        other.record_us(20);
+        let q = ring.quantiles();
+        assert_eq!(q.count, 2);
+        assert_eq!(q.p99_us, 20);
+    }
+
+    #[test]
+    fn latency_ring_record_duration_saturates_to_micros() {
+        let ring = LatencyRing::with_capacity(8);
+        ring.record(Duration::from_millis(3));
+        assert_eq!(ring.quantiles().p50_us, 3000);
     }
 }

@@ -26,9 +26,11 @@
 //! | 30   | `dynamic_batcher` `stats`         |
 //! | 40   | `batching_queue` `state`          |
 //! | 50   | `learner_pool` `sync`             |
+//! | 60   | `stats.latency_ring` scratch      |
 
 use std::ops::{Deref, DerefMut};
 use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
 
 /// A lock's place in the global acquisition order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -202,6 +204,25 @@ impl<'a, T> CheckedGuard<'a, T> {
         self.guard = Some(raw);
         self
     }
+
+    /// Block on `cv` for at most `dur` — the checked-lock equivalent of
+    /// `Condvar::wait_timeout`.  Returns the re-acquired guard plus
+    /// whether the wait timed out (same contract as the std API: a
+    /// `true` timeout flag does not preclude the condition also having
+    /// become true; callers re-check under the returned guard).
+    // tb-lint: allow(unwrap, guard is always Some outside wait; see CheckedGuard docs)
+    pub fn wait_timeout(mut self, cv: &Condvar, dur: Duration) -> (CheckedGuard<'a, T>, bool) {
+        let raw = self.guard.take().expect("guard present outside wait");
+        let (raw, timeout) = match cv.wait_timeout(raw, dur) {
+            Ok(pair) => pair,
+            Err(poisoned) => panic!(
+                "lock `{}` poisoned during condvar wait ({poisoned})",
+                self.order.name
+            ),
+        };
+        self.guard = Some(raw);
+        (self, timeout.timed_out())
+    }
 }
 
 impl<T> Deref for CheckedGuard<'_, T> {
@@ -293,6 +314,45 @@ mod tests {
             let mut g = m.lock();
             while !*g {
                 g = g.wait(cv);
+            }
+            *g
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        {
+            let (m, cv) = &*pair;
+            *m.lock() = true;
+            cv.notify_all();
+        }
+        assert!(waiter.join().unwrap());
+    }
+
+    #[test]
+    fn wait_timeout_times_out_and_reacquires() {
+        let m = CheckedMutex::new(LOW, 7);
+        let cv = Condvar::new();
+        let g = m.lock();
+        let (g, timed_out) = g.wait_timeout(&cv, Duration::from_millis(5));
+        assert!(timed_out);
+        assert_eq!(*g, 7);
+        drop(g);
+        // rank was held across the timed wait and released after: a
+        // fresh acquisition must still work.
+        let _ = m.lock();
+    }
+
+    #[test]
+    fn wait_timeout_wakes_on_notify() {
+        let pair = Arc::new((CheckedMutex::new(LOW, false), Condvar::new()));
+        let pair2 = pair.clone();
+        let waiter = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            let mut g = m.lock();
+            while !*g {
+                let (g2, timed_out) = g.wait_timeout(cv, Duration::from_secs(5));
+                g = g2;
+                if timed_out {
+                    break;
+                }
             }
             *g
         });

@@ -477,6 +477,86 @@ fn replay_insert_sample_stack_path_is_allocation_free_at_steady_state() {
     assert_eq!(replay.fresh_len(), s.len, "no stale slot survives eviction");
 }
 
+/// The policy-serving tentpole's zero-alloc claim (DESIGN.md
+/// §Policy-Server): at steady state one served round — ObsBatch decode
+/// → bounded slice submit → stub inference → per-slot action sampling
+/// → ActionBatch respond → latency-histogram record — must not touch
+/// the heap on either end of the socket.
+#[test]
+fn served_inference_round_is_allocation_free_at_steady_state() {
+    use torchbeast::serving::{
+        run_inference_loop, PolicyClient, PolicyServer, PolicyServerConfig,
+    };
+    use torchbeast::telemetry::gauges::PipelineGauges;
+
+    let _serial = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    const B: usize = 4;
+    let obs_len = 6usize;
+    let num_actions = 4usize;
+
+    let gauges = PipelineGauges::shared();
+    let cfg = PolicyServerConfig::new([1, 2, 3], num_actions, B)
+        .with_batch_timeout(Duration::from_micros(100));
+    let mut server =
+        PolicyServer::start_with_gauges("127.0.0.1:0", cfg, gauges.clone()).unwrap();
+    let stream = server.take_batch_stream().unwrap();
+    // stub backend: logits derived from the obs, buffers reused every
+    // batch (clear + push within warmed capacity)
+    let backend = std::thread::spawn(move || {
+        run_inference_loop(&stream, num_actions, move |obs, n, logits, baselines| {
+            logits.clear();
+            baselines.clear();
+            for k in 0..n {
+                for a in 0..num_actions {
+                    logits.push(obs[k * obs_len] * 0.01 + a as f32 * 0.1);
+                }
+                baselines.push(0.0);
+            }
+            Ok(())
+        })
+        .unwrap();
+    });
+
+    let addr = server.addr.to_string();
+    let seeds: Vec<u64> = (0..B as u64).collect();
+    let mut client = PolicyClient::connect(&[addr], &seeds).unwrap();
+    let mut obs = vec![0.0f32; B * obs_len];
+    let mut actions = vec![0usize; B];
+
+    let warmup = 300;
+    let measure = 500;
+    for round in 0..warmup {
+        for (i, x) in obs.iter_mut().enumerate() {
+            *x = ((round + i) % 17) as f32 * 0.05;
+        }
+        client.act(&obs, &mut actions).unwrap();
+    }
+    let a0 = allocations();
+    for round in 0..measure {
+        for (i, x) in obs.iter_mut().enumerate() {
+            *x = ((round + i) % 17) as f32 * 0.05;
+        }
+        client.act(&obs, &mut actions).unwrap();
+    }
+    let allocs = allocations() - a0;
+    let per_round = allocs as f64 / measure as f64;
+    eprintln!(
+        "serve loop steady state: {allocs} heap allocations over {measure} served rounds \
+         of {B} slots ({per_round:.4}/round, both socket ends + histogram record)"
+    );
+    assert!(
+        per_round < 0.02,
+        "policy serve loop is allocating again: {per_round:.4} allocs per served round"
+    );
+
+    drop(client);
+    server.shutdown();
+    backend.join().unwrap();
+    let snap = gauges.snapshot();
+    assert_eq!(snap.serve_requests, (warmup + measure) as u64);
+    assert_eq!(snap.serve_busy, 0, "a lone stream must never draw Busy");
+}
+
 /// Rollout handoff ships the pooled buffer itself: the backing
 /// allocation the learner side receives is the very allocation the
 /// actor filled (no clone anywhere in between).

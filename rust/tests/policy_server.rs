@@ -1,0 +1,693 @@
+//! Fault-injection suite for the policy-serving tier (DESIGN.md
+//! §Policy-Server): replica death mid-stream must fail over, a
+//! saturated slot pool must answer typed `Busy` frames (never deadlock,
+//! never queue unboundedly), protocol violations must surface typed
+//! `Error` frames on both ends, and — the determinism contract — a
+//! fixed checkpoint + fixed seeds must yield bit-identical actions
+//! whether observations are served over TCP through `policy-server` or
+//! submitted to an in-process batcher.
+//!
+//! Everything runs on stub linear policies through
+//! `serving::run_inference_loop`, so the suite needs no AOT artifacts
+//! (mirrors the alloc-regression/throughput-bench approach).
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use torchbeast::agent::sample_action_scratch;
+use torchbeast::coordinator::dynamic_batcher::{dynamic_batcher, BatcherConfig};
+use torchbeast::env::wrappers::WrapperCfg;
+use torchbeast::rpc::codec::{read_msg, write_frame, write_msg, Msg, ObsHeader};
+use torchbeast::runtime::checkpoint;
+use torchbeast::runtime::manifest::DType;
+use torchbeast::runtime::{LeafSpec, Manifest, ParamVecs};
+use torchbeast::serving::{run_inference_loop, PolicyClient, PolicyServer, PolicyServerConfig};
+use torchbeast::telemetry::gauges::PipelineGauges;
+use torchbeast::util::json::Json;
+use torchbeast::util::rng::Rng;
+
+const OBS_SHAPE: [usize; 3] = [1, 2, 3];
+const OBS_LEN: usize = 6;
+const NUM_ACTIONS: usize = 4;
+
+/// Deterministic linear policy weights: `logits = W · obs + b`.
+fn stub_params() -> ParamVecs {
+    let mut w = vec![0.0f32; NUM_ACTIONS * OBS_LEN];
+    for (k, v) in w.iter_mut().enumerate() {
+        let (a, i) = (k / OBS_LEN, k % OBS_LEN);
+        *v = ((a * 31 + i * 7) % 13) as f32 * 0.17 - 0.6;
+    }
+    let b = (0..NUM_ACTIONS).map(|a| a as f32 * 0.05 - 0.1).collect();
+    vec![w, b]
+}
+
+/// A manifest matching `stub_params` so the weights can round-trip
+/// through the TBCK checkpoint format (the "fixed checkpoint" half of
+/// the determinism contract).
+fn stub_manifest() -> Manifest {
+    Manifest {
+        dir: PathBuf::new(),
+        env: "catch".into(),
+        model: "linear-stub".into(),
+        obs_shape: OBS_SHAPE,
+        num_actions: NUM_ACTIONS,
+        unroll_length: 4,
+        batch_size: 2,
+        inference_batch: 4,
+        inference_sizes: vec![4],
+        param_count: NUM_ACTIONS * OBS_LEN + NUM_ACTIONS,
+        params: vec![
+            LeafSpec {
+                name: "linear/w".into(),
+                shape: vec![NUM_ACTIONS, OBS_LEN],
+                dtype: DType::F32,
+            },
+            LeafSpec {
+                name: "linear/b".into(),
+                shape: vec![NUM_ACTIONS],
+                dtype: DType::F32,
+            },
+        ],
+        opt_state: vec![],
+        stats_names: vec![],
+        hyperparams: Json::Obj(vec![]),
+        hlo_sha256: String::new(),
+    }
+}
+
+/// The stub forward pass, shared by the served and in-process paths
+/// (identical arithmetic order, so results are bit-comparable).
+fn linear_forward(
+    params: &ParamVecs,
+    obs: &[f32],
+    n: usize,
+    logits: &mut Vec<f32>,
+    baselines: &mut Vec<f32>,
+) {
+    let (w, b) = (&params[0], &params[1]);
+    logits.clear();
+    baselines.clear();
+    for k in 0..n {
+        let row = &obs[k * OBS_LEN..(k + 1) * OBS_LEN];
+        for a in 0..NUM_ACTIONS {
+            let mut acc = b[a];
+            for (i, x) in row.iter().enumerate() {
+                acc += w[a * OBS_LEN + i] * x;
+            }
+            logits.push(acc);
+        }
+        baselines.push(0.0);
+    }
+}
+
+/// Start a policy server backed by the stub policy.  `delay` emulates
+/// inference cost (holds slots checked out, for saturation tests);
+/// `gate` (when given) blocks the backend before its first response
+/// until the flag goes true, setting `started` on batch pickup — the
+/// deterministic way to pin the pool saturated.
+#[allow(clippy::type_complexity)]
+fn start_stub_server(
+    cfg: PolicyServerConfig,
+    params: ParamVecs,
+    gauges: Arc<PipelineGauges>,
+    delay: Duration,
+    gate: Option<(Arc<AtomicBool>, Arc<AtomicBool>)>,
+) -> (PolicyServer, JoinHandle<()>) {
+    let mut server = PolicyServer::start_with_gauges("127.0.0.1:0", cfg, gauges).unwrap();
+    let stream = server.take_batch_stream().unwrap();
+    let backend = std::thread::spawn(move || {
+        run_inference_loop(&stream, NUM_ACTIONS, move |obs, n, logits, baselines| {
+            if let Some((started, open)) = &gate {
+                started.store(true, Ordering::SeqCst); // test-only handshake flag
+                while !open.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            if !delay.is_zero() {
+                std::thread::sleep(delay);
+            }
+            linear_forward(&params, obs, n, logits, baselines);
+            Ok(())
+        })
+        .unwrap();
+    });
+    (server, backend)
+}
+
+/// Raw policy-protocol client: HelloBatch → Spec handshake, returning
+/// (writer, reader) ready for misbehavior (or manual rounds, where
+/// `Busy` frames are observable — `PolicyClient` absorbs them).
+fn raw_policy_handshake(addr: &str, seeds: &[u64]) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    write_msg(
+        &mut writer,
+        &Msg::HelloBatch {
+            env: "policy".into(),
+            seeds: seeds.to_vec(),
+            wrappers: WrapperCfg::default(),
+        },
+    )
+    .unwrap();
+    match read_msg(&mut reader).unwrap() {
+        Msg::Spec {
+            channels,
+            height,
+            width,
+            num_actions,
+        } => {
+            assert_eq!(
+                (channels as usize * height as usize * width as usize),
+                OBS_LEN
+            );
+            assert_eq!(num_actions as usize, NUM_ACTIONS);
+        }
+        other => panic!("expected Spec, got {other:?}"),
+    }
+    (writer, reader)
+}
+
+fn obs_batch_msg(b: usize, fill: f32) -> Msg {
+    Msg::ObsBatch {
+        headers: vec![ObsHeader::default(); b],
+        obs: vec![fill; b * OBS_LEN],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Determinism: served == in-process, for a fixed checkpoint and seeds
+// ---------------------------------------------------------------------------
+
+#[test]
+fn served_actions_match_in_process_batcher() {
+    // the "fixed checkpoint": round-trip the stub weights through the
+    // TBCK format and serve what `load` returns
+    let manifest = stub_manifest();
+    let dir = std::env::temp_dir().join("tb_policy_server_test");
+    let path = dir.join("det.ckpt");
+    checkpoint::save(&path, &manifest, &stub_params(), 3).unwrap();
+    let (params, version) = checkpoint::load(&path, &manifest).unwrap();
+    assert_eq!(version, 3, "weight version survives the round trip");
+    assert_eq!(params, stub_params());
+
+    const B: usize = 4;
+    const ROUNDS: usize = 40;
+    let seeds: Vec<u64> = (0..B as u64).map(|s| 1000 + s).collect();
+    // deterministic observation stream, same for both paths
+    let mut obs_rng = Rng::new(7);
+    let obs_stream: Vec<Vec<f32>> = (0..ROUNDS)
+        .map(|_| {
+            (0..B * OBS_LEN)
+                .map(|_| obs_rng.next_f32() * 3.0 - 1.5)
+                .collect()
+        })
+        .collect();
+
+    // path 1: served over TCP through the policy server
+    let served: Vec<Vec<usize>> = {
+        let cfg = PolicyServerConfig::new(OBS_SHAPE, NUM_ACTIONS, B)
+            .with_batch_timeout(Duration::from_micros(200));
+        let (mut server, backend) = start_stub_server(
+            cfg,
+            params.clone(),
+            PipelineGauges::shared(),
+            Duration::ZERO,
+            None,
+        );
+        let addr = server.addr.to_string();
+        let mut client = PolicyClient::connect(&[addr], &seeds).unwrap();
+        let mut actions = [0usize; B];
+        let out = obs_stream
+            .iter()
+            .map(|obs| {
+                client.act(obs, &mut actions).unwrap();
+                actions.to_vec()
+            })
+            .collect();
+        drop(client);
+        server.shutdown();
+        backend.join().unwrap();
+        out
+    };
+
+    // path 2: the same obs through an in-process batcher, sampling
+    // with the same per-slot seeds exactly as serve_round does
+    let in_process: Vec<Vec<usize>> = {
+        let bcfg = BatcherConfig::new(B, Duration::from_micros(200), OBS_LEN, NUM_ACTIONS);
+        let (client, stream) = dynamic_batcher(bcfg);
+        let params2 = params.clone();
+        let backend = std::thread::spawn(move || {
+            run_inference_loop(&stream, NUM_ACTIONS, move |obs, n, logits, baselines| {
+                linear_forward(&params2, obs, n, logits, baselines);
+                Ok(())
+            })
+            .unwrap();
+        });
+        let mut submitter = client.slice_submitter();
+        let mut rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
+        let mut scratch = vec![0.0f32; NUM_ACTIONS];
+        let mut logits = vec![0.0f32; B * NUM_ACTIONS];
+        let mut baselines = vec![0.0f32; B];
+        let out = obs_stream
+            .iter()
+            .map(|obs| {
+                submitter
+                    .submit_slice(obs, &mut logits, &mut baselines)
+                    .unwrap();
+                rngs.iter_mut()
+                    .enumerate()
+                    .map(|(s, rng)| {
+                        let row = &logits[s * NUM_ACTIONS..(s + 1) * NUM_ACTIONS];
+                        sample_action_scratch(row, &mut scratch, rng)
+                    })
+                    .collect()
+            })
+            .collect();
+        client.close();
+        backend.join().unwrap();
+        out
+    };
+
+    assert_eq!(
+        served, in_process,
+        "served actions must be bit-identical to the in-process batcher's"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Failover: kill a replica mid-stream, the client resumes on the survivor
+// ---------------------------------------------------------------------------
+
+#[test]
+fn client_fails_over_to_surviving_replica_mid_stream() {
+    let mk = || {
+        start_stub_server(
+            PolicyServerConfig::new(OBS_SHAPE, NUM_ACTIONS, 4)
+                .with_batch_timeout(Duration::from_micros(200)),
+            stub_params(),
+            PipelineGauges::shared(),
+            Duration::ZERO,
+            None,
+        )
+    };
+    let (mut server_a, backend_a) = mk();
+    let (mut server_b, backend_b) = mk();
+    let addrs = vec![server_a.addr.to_string(), server_b.addr.to_string()];
+
+    let seeds = [5u64, 6];
+    let mut client = PolicyClient::connect(&addrs, &seeds).unwrap();
+    client.set_reconnect(4);
+    assert_eq!(client.replica(), 0, "connects to the first reachable replica");
+
+    let obs = vec![0.25f32; 2 * OBS_LEN];
+    let mut actions = [0usize; 2];
+    for _ in 0..5 {
+        client.act(&obs, &mut actions).unwrap();
+    }
+    assert_eq!(server_a.requests_served.load(Ordering::Relaxed), 5);
+
+    // kill replica A mid-stream; the next rounds must transparently
+    // resume on B (fresh handshake, same seeds)
+    server_a.shutdown();
+    backend_a.join().unwrap();
+    for _ in 0..5 {
+        client.act(&obs, &mut actions).unwrap();
+        assert!(actions.iter().all(|&a| a < NUM_ACTIONS), "{actions:?}");
+    }
+    assert!(client.reconnects() >= 1, "failover must be recorded");
+    assert_eq!(client.replica(), 1, "the survivor serves the stream");
+    assert!(client.last_error().is_none(), "client is healthy, not latched");
+    drop(client);
+    server_b.shutdown();
+    backend_b.join().unwrap();
+    assert_eq!(server_b.requests_served.load(Ordering::Relaxed), 5);
+}
+
+#[test]
+fn exhausted_reconnect_budget_latches_the_client() {
+    let (mut server, backend) = start_stub_server(
+        PolicyServerConfig::new(OBS_SHAPE, NUM_ACTIONS, 4)
+            .with_batch_timeout(Duration::from_micros(200)),
+        stub_params(),
+        PipelineGauges::shared(),
+        Duration::ZERO,
+        None,
+    );
+    let addrs = vec![server.addr.to_string()];
+    let seeds = [1u64];
+    let mut client = PolicyClient::connect(&addrs, &seeds).unwrap();
+    client.set_reconnect(2);
+
+    let obs = vec![0.5f32; OBS_LEN];
+    let mut actions = [0usize; 1];
+    client.act(&obs, &mut actions).unwrap();
+
+    // no replica left: the budget drains against a dead address
+    server.shutdown();
+    backend.join().unwrap();
+    let err = client.act(&obs, &mut actions).unwrap_err().to_string();
+    assert!(
+        err.contains("reconnect budget exhausted"),
+        "budget exhaustion must be the typed cause: {err}"
+    );
+    // latched: later calls fail immediately without touching a socket
+    let err = client.act(&obs, &mut actions).unwrap_err().to_string();
+    assert!(err.contains("latched"), "{err}");
+    assert!(client.last_error().is_some());
+}
+
+// ---------------------------------------------------------------------------
+// Admission control: saturation answers typed Busy, never deadlocks
+// ---------------------------------------------------------------------------
+
+/// Deterministic saturation: a gated backend pins one full batch (the
+/// whole 2-slot pool) checked out, so the next stream's submission
+/// *must* exhaust its admission wait and draw a typed `Busy`.
+#[test]
+fn saturated_pool_answers_typed_busy() {
+    let started = Arc::new(AtomicBool::new(false));
+    let open = Arc::new(AtomicBool::new(false));
+    let gauges = PipelineGauges::shared();
+    let (mut server, backend) = start_stub_server(
+        PolicyServerConfig::new(OBS_SHAPE, NUM_ACTIONS, 2)
+            .with_slots(2)
+            .with_admission(Duration::from_millis(2))
+            .with_retry_after_ms(3)
+            .with_batch_timeout(Duration::from_micros(100)),
+        stub_params(),
+        gauges.clone(),
+        Duration::ZERO,
+        Some((started.clone(), open.clone())),
+    );
+    let addr = server.addr.to_string();
+
+    // stream A checks out the whole pool; its batch blocks on the gate
+    let (mut wa, mut ra) = raw_policy_handshake(&addr, &[10, 11]);
+    write_msg(&mut wa, &obs_batch_msg(2, 0.1)).unwrap();
+    while !started.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // stream B now cannot be admitted within the bound: typed Busy,
+    // stream stays open
+    let (mut wb, mut rb) = raw_policy_handshake(&addr, &[12]);
+    write_msg(&mut wb, &obs_batch_msg(1, 0.2)).unwrap();
+    match read_msg(&mut rb).unwrap() {
+        Msg::Busy { retry_after_ms } => assert_eq!(retry_after_ms, 3),
+        other => panic!("expected Busy, got {other:?}"),
+    }
+
+    // open the gate: A's batch completes, the pool frees, B's retry on
+    // the SAME stream is served
+    open.store(true, Ordering::SeqCst);
+    match read_msg(&mut ra).unwrap() {
+        Msg::ActionBatch { actions } => assert_eq!(actions.len(), 2),
+        other => panic!("expected ActionBatch, got {other:?}"),
+    }
+    write_msg(&mut wb, &obs_batch_msg(1, 0.2)).unwrap();
+    match read_msg(&mut rb).unwrap() {
+        Msg::ActionBatch { actions } => assert_eq!(actions.len(), 1),
+        other => panic!("expected ActionBatch after retry, got {other:?}"),
+    }
+
+    write_msg(&mut wa, &Msg::Bye).unwrap();
+    write_msg(&mut wb, &Msg::Bye).unwrap();
+    server.shutdown();
+    backend.join().unwrap();
+    let snap = gauges.snapshot();
+    assert_eq!(snap.serve_busy, 1, "exactly one Busy rejection");
+    assert_eq!(snap.serve_requests, 2, "both streams eventually served");
+    assert!(
+        snap.to_string().contains("served 2 (busy 1)"),
+        "report line carries the serving section: {snap}"
+    );
+}
+
+/// Stress: more single-slot streams than slots, all pounding a slow
+/// backend.  Every stream must finish its quota (Busy rounds retried),
+/// every thread must join — saturation can reject, never deadlock.
+#[test]
+fn oversubscribed_streams_all_complete_without_deadlock() {
+    const STREAMS: usize = 6;
+    const QUOTA: u64 = 15;
+    let gauges = PipelineGauges::shared();
+    let (mut server, backend) = start_stub_server(
+        PolicyServerConfig::new(OBS_SHAPE, NUM_ACTIONS, 2)
+            .with_slots(2)
+            .with_admission(Duration::from_millis(1))
+            .with_retry_after_ms(1)
+            .with_batch_timeout(Duration::from_micros(100)),
+        stub_params(),
+        gauges.clone(),
+        Duration::from_millis(3),
+        None,
+    );
+    let addr = server.addr.to_string();
+    let busy_seen = Arc::new(AtomicU64::new(0));
+
+    let clients: Vec<JoinHandle<()>> = (0..STREAMS)
+        .map(|t| {
+            let addr = addr.clone();
+            let busy_seen = busy_seen.clone();
+            std::thread::spawn(move || {
+                let (mut w, mut r) = raw_policy_handshake(&addr, &[t as u64]);
+                let msg = obs_batch_msg(1, t as f32 * 0.01);
+                let mut served = 0u64;
+                let mut rounds = 0u64;
+                while served < QUOTA {
+                    write_msg(&mut w, &msg).unwrap();
+                    match read_msg(&mut r).unwrap() {
+                        Msg::ActionBatch { actions } => {
+                            assert_eq!(actions.len(), 1);
+                            served += 1;
+                        }
+                        Msg::Busy { retry_after_ms } => {
+                            busy_seen.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(Duration::from_millis(retry_after_ms as u64));
+                        }
+                        other => panic!("expected ActionBatch/Busy, got {other:?}"),
+                    }
+                    rounds += 1;
+                    assert!(rounds < 100_000, "stream {t} livelocked");
+                }
+                write_msg(&mut w, &Msg::Bye).unwrap();
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap(); // a deadlock shows up here as a hang/panic
+    }
+    server.shutdown();
+    backend.join().unwrap();
+
+    let snap = gauges.snapshot();
+    assert_eq!(
+        snap.serve_requests,
+        STREAMS as u64 * QUOTA,
+        "every stream finished its quota"
+    );
+    assert_eq!(
+        snap.serve_busy,
+        busy_seen.load(Ordering::Relaxed),
+        "server-side Busy count matches the frames clients saw"
+    );
+    assert!(
+        snap.serve_p99_us > 0,
+        "latency histogram recorded the served rounds"
+    );
+}
+
+/// `PolicyClient` absorbs Busy backpressure transparently: two
+/// 2-slot clients share a 2-slot pool with a slow backend — rounds
+/// interleave through Busy/retry and both complete with no deadlock.
+#[test]
+fn policy_client_retries_busy_transparently() {
+    let gauges = PipelineGauges::shared();
+    let (mut server, backend) = start_stub_server(
+        PolicyServerConfig::new(OBS_SHAPE, NUM_ACTIONS, 2)
+            .with_slots(2)
+            .with_admission(Duration::from_millis(1))
+            .with_retry_after_ms(1)
+            .with_batch_timeout(Duration::from_micros(100)),
+        stub_params(),
+        gauges.clone(),
+        Duration::from_millis(2),
+        None,
+    );
+    let addr = server.addr.to_string();
+
+    const ROUNDS: usize = 20;
+    let workers: Vec<JoinHandle<u64>> = (0..2u64)
+        .map(|t| {
+            let addrs = vec![addr.clone()];
+            std::thread::spawn(move || {
+                let seeds = [2 * t, 2 * t + 1];
+                let mut client = PolicyClient::connect(&addrs, &seeds).unwrap();
+                // generous Busy patience; NO reconnect budget — any
+                // failover attempt would error loudly here
+                client.set_busy_retry_limit(10_000);
+                let obs = vec![t as f32 * 0.1; 2 * OBS_LEN];
+                let mut actions = [0usize; 2];
+                for _ in 0..ROUNDS {
+                    client.act(&obs, &mut actions).unwrap();
+                }
+                client.busy_backoffs()
+            })
+        })
+        .collect();
+    let backoffs: u64 = workers.into_iter().map(|w| w.join().unwrap()).sum();
+    server.shutdown();
+    backend.join().unwrap();
+
+    let snap = gauges.snapshot();
+    assert_eq!(snap.serve_requests, 2 * ROUNDS as u64);
+    assert_eq!(
+        snap.serve_busy, backoffs,
+        "every server-side Busy was absorbed by a client backoff, \
+         invisibly to the caller"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Typed protocol errors (mirrors rpc_errors.rs for the serving tier)
+// ---------------------------------------------------------------------------
+
+fn start_plain_server() -> (PolicyServer, JoinHandle<()>) {
+    start_stub_server(
+        PolicyServerConfig::new(OBS_SHAPE, NUM_ACTIONS, 2)
+            .with_slots(4)
+            .with_batch_timeout(Duration::from_micros(100)),
+        stub_params(),
+        PipelineGauges::shared(),
+        Duration::ZERO,
+        None,
+    )
+}
+
+#[test]
+fn mono_hello_handshake_returns_typed_error() {
+    let (mut server, backend) = start_plain_server();
+    let stream = TcpStream::connect(server.addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    write_msg(
+        &mut writer,
+        &Msg::Hello {
+            env: "catch".into(),
+            seed: 0,
+            wrappers: WrapperCfg::default(),
+        },
+    )
+    .unwrap();
+    match read_msg(&mut reader).unwrap() {
+        Msg::Error { message } => {
+            assert!(message.contains("expected HelloBatch"), "{message}")
+        }
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+    server.shutdown();
+    backend.join().unwrap();
+}
+
+#[test]
+fn group_larger_than_slot_pool_rejected_at_handshake() {
+    let (mut server, backend) = start_plain_server();
+    let stream = TcpStream::connect(server.addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    // 9 slots > the 4-slot pool: must be a typed handshake error, not
+    // a submit-time panic deep in the batcher
+    write_msg(
+        &mut writer,
+        &Msg::HelloBatch {
+            env: "policy".into(),
+            seeds: (0..9).collect(),
+            wrappers: WrapperCfg::default(),
+        },
+    )
+    .unwrap();
+    match read_msg(&mut reader).unwrap() {
+        Msg::Error { message } => {
+            assert!(
+                message.contains("exceeds the inference slot pool"),
+                "{message}"
+            )
+        }
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+    server.shutdown();
+    backend.join().unwrap();
+}
+
+#[test]
+fn undecodable_frame_returns_typed_error() {
+    let (mut server, backend) = start_plain_server();
+    let (mut w, mut r) = raw_policy_handshake(&server.addr.to_string(), &[1, 2]);
+    // tag 250 is no known message
+    write_frame(&mut w, &[250u8, 1, 2, 3]).unwrap();
+    match read_msg(&mut r).unwrap() {
+        Msg::Error { message } => {
+            assert!(
+                message.contains("expected ObsBatch") && message.contains("undecodable"),
+                "{message}"
+            )
+        }
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+    server.shutdown();
+    backend.join().unwrap();
+}
+
+#[test]
+fn group_size_mismatch_returns_typed_error() {
+    let (mut server, backend) = start_plain_server();
+    // handshook for 2 slots, then a 3-slot ObsBatch arrives
+    let (mut w, mut r) = raw_policy_handshake(&server.addr.to_string(), &[1, 2]);
+    write_msg(&mut w, &obs_batch_msg(3, 0.0)).unwrap();
+    match read_msg(&mut r).unwrap() {
+        Msg::Error { message } => {
+            assert!(
+                message.contains("obs batch of 3 slots != expected 2"),
+                "{message}"
+            )
+        }
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+    server.shutdown();
+    backend.join().unwrap();
+}
+
+#[test]
+fn wrong_frame_type_mid_stream_returns_typed_error() {
+    let (mut server, backend) = start_plain_server();
+    let (mut w, mut r) = raw_policy_handshake(&server.addr.to_string(), &[1]);
+    // a decodable frame of the wrong kind: the error names it
+    write_msg(&mut w, &Msg::ActionBatch { actions: vec![1] }).unwrap();
+    match read_msg(&mut r).unwrap() {
+        Msg::Error { message } => {
+            assert!(
+                message.contains("expected ObsBatch") && message.contains("ActionBatch"),
+                "{message}"
+            )
+        }
+        other => panic!("expected Error frame, got {other:?}"),
+    }
+    server.shutdown();
+    backend.join().unwrap();
+}

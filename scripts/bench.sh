@@ -2,7 +2,7 @@
 # Bench artifact harness:  scripts/bench.sh [out.json]
 #
 # Runs the stub-policy benches (no AOT artifacts needed) and writes a
-# machine-readable summary — default BENCH_7.json at the repo root —
+# machine-readable summary — default BENCH_8.json at the repo root —
 # so the repo's perf trajectory is diffable from PR 5 on:
 #
 #   * benches/replay.rs   -> replay insert/sample ns + end-to-end fps
@@ -11,15 +11,18 @@
 #   * benches/shards.rs   -> sharded-learner round throughput,
 #                            num_learners 1 vs 2 (barrier + averaging
 #                            cost against an emulated engine step)
+#   * benches/rpc.rs      -> env-serving round-trip latency plus the
+#                            served-inference sweep (policy-server
+#                            tier: streams x group_B, actions/s + p99)
 #   * benches/throughput.rs (grouped-actor section; the artifact-bound
 #                            E2 section self-skips without artifacts)
 #
 # Human-readable tables go to stdout; the JSON sections come from the
-# replay/shards benches' --json flags and are merged into one object.
+# replay/shards/rpc benches' --json flags and are merged into one object.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
-out="${1:-BENCH_7.json}"
+out="${1:-BENCH_8.json}"
 case "$out" in
     /*) ;;
     *) out="$(pwd)/$out" ;;
@@ -29,13 +32,17 @@ cd rust
 
 tmp_replay="$(mktemp)"
 tmp_shards="$(mktemp)"
-trap 'rm -f "$tmp_replay" "$tmp_shards"' EXIT
+tmp_rpc="$(mktemp)"
+trap 'rm -f "$tmp_replay" "$tmp_shards" "$tmp_rpc"' EXIT
 
 echo "== cargo bench --bench replay =="
 cargo bench --bench replay -- --json "$tmp_replay"
 
 echo "== cargo bench --bench shards =="
 cargo bench --bench shards -- --json "$tmp_shards"
+
+echo "== cargo bench --bench rpc (env serving + served inference) =="
+cargo bench --bench rpc -- --json "$tmp_rpc"
 
 echo "== cargo bench --bench throughput (stub grouped-actor section) =="
 cargo bench --bench throughput
@@ -48,6 +55,9 @@ cargo bench --bench throughput
     echo '  ,'
     echo '  "shards":'
     sed 's/^/  /' "$tmp_shards"
+    echo '  ,'
+    echo '  "rpc":'
+    sed 's/^/  /' "$tmp_rpc"
     echo '}'
 } > "$out"
 

@@ -39,6 +39,14 @@ cargo test --release --test fuzz_codec -- --nocapture
 echo "== cargo test --release --test alloc_regression =="
 cargo test --release --test alloc_regression -- --nocapture
 
+# The policy-server fault-injection suite (DESIGN.md §Policy-Server):
+# mid-stream failover, typed Busy under a saturated slot pool, typed
+# Error frames for every malformed input, and the bit-identical
+# served-vs-in-process determinism contract must hold in release mode
+# (timing-sensitive admission paths behave differently under -O).
+echo "== cargo test --release --test policy_server =="
+cargo test --release --test policy_server
+
 # The replay subsystem's contracts (ratio-0 bit-identity, seeded
 # sampling determinism, FIFO/staleness eviction, the warmup gate) must
 # hold under the optimized build that ships, not just dev profile.
