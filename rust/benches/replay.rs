@@ -140,6 +140,7 @@ fn mixed_run(ratio: f64, batches: usize) -> MixRun {
             seed: 1,
             first_id: 0,
             policy_version: VersionHandle::default(),
+            heartbeat: torchbeast::telemetry::gauges::Counter::default(),
         },
     );
 

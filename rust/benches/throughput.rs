@@ -86,6 +86,7 @@ fn grouped_run(envs: usize, envs_per_actor: usize, rollout_rounds: usize) -> Gro
         seed: 1,
         first_id: 0,
         policy_version: torchbeast::coordinator::weights::VersionHandle::default(),
+        heartbeat: torchbeast::telemetry::gauges::Counter::default(),
     };
     let n_threads;
     let pool = if envs_per_actor == 1 {

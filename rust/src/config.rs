@@ -119,6 +119,27 @@ pub struct TrainConfig {
     pub gauge_log_path: Option<PathBuf>,
     /// Sampling period of the gauge time series, in milliseconds.
     pub gauge_sample_ms: u64,
+    /// Restarts allowed per actor after a panic (DESIGN.md
+    /// §Supervision): the supervisor respawns a crashed actor with the
+    /// same env id, seed, and version handle, up to this budget.
+    /// 0 = the classic unsupervised pool, byte for byte.
+    pub actor_restarts: u32,
+    /// Base backoff before the first actor respawn, in milliseconds;
+    /// doubles per consecutive restart of the same actor (capped at
+    /// 30 s).
+    pub actor_backoff_ms: u64,
+    /// Pipeline watchdog: a stage (actors, stacker, learner,
+    /// inference, gauge sampler) silent for this long is flagged with
+    /// a diagnosis, and at 2× this bound the run is stopped through
+    /// the emergency-checkpoint path instead of hanging.  0 disables
+    /// the watchdog thread entirely.
+    pub stall_timeout_ms: u64,
+    /// Retained checkpoint generations: each save rotates the previous
+    /// file to `<path>.1`, `.1` to `.2`, ... keeping this many
+    /// siblings, and resume falls back to the newest intact generation
+    /// when the primary fails its hash verification.  0 = plain
+    /// overwrite-in-place (still atomic), no retention.
+    pub keep_checkpoints: usize,
 }
 
 impl Default for TrainConfig {
@@ -149,6 +170,10 @@ impl Default for TrainConfig {
             eval_batch: 0,
             gauge_log_path: None,
             gauge_sample_ms: 100,
+            actor_restarts: 0,
+            actor_backoff_ms: 100,
+            stall_timeout_ms: 0,
+            keep_checkpoints: 0,
         }
     }
 }
@@ -253,6 +278,10 @@ impl TrainConfig {
             "eval_batch" => self.eval_batch = num(v)? as usize,
             "gauge_log_path" => self.gauge_log_path = Some(PathBuf::from(st(v)?)),
             "gauge_sample_ms" => self.gauge_sample_ms = num(v)? as u64,
+            "actor_restarts" => self.actor_restarts = num(v)? as u32,
+            "actor_backoff_ms" => self.actor_backoff_ms = num(v)? as u64,
+            "stall_timeout_ms" => self.stall_timeout_ms = num(v)? as u64,
+            "keep_checkpoints" => self.keep_checkpoints = num(v)? as usize,
             // wrapper knobs
             "action_repeat" => self.wrappers.action_repeat = num(v)? as usize,
             "frame_stack" => self.wrappers.frame_stack = num(v)? as usize,
@@ -504,6 +533,29 @@ mod tests {
         let bad = Json::parse(r#"{"num_learners": 0}"#).unwrap();
         assert!(c.apply_json(&bad).is_err());
         assert_eq!(c.num_learners, 4, "rejected values must not stick");
+    }
+
+    #[test]
+    fn supervision_knobs_parse() {
+        let mut c = TrainConfig::default();
+        // the defaults preserve the classic unsupervised path exactly
+        assert_eq!(c.actor_restarts, 0);
+        assert_eq!(c.actor_backoff_ms, 100);
+        assert_eq!(c.stall_timeout_ms, 0, "watchdog off by default");
+        assert_eq!(c.keep_checkpoints, 0, "no retention by default");
+        let j = Json::parse(
+            r#"{"actor_restarts": 3, "actor_backoff_ms": 250,
+                "stall_timeout_ms": 30000, "keep_checkpoints": 2}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.actor_restarts, 3);
+        assert_eq!(c.actor_backoff_ms, 250);
+        assert_eq!(c.stall_timeout_ms, 30000);
+        assert_eq!(c.keep_checkpoints, 2);
+        // CLI spelling too
+        c.apply_args(&["--actor_restarts=1".to_string()]).unwrap();
+        assert_eq!(c.actor_restarts, 1);
     }
 
     #[test]

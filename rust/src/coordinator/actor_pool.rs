@@ -26,10 +26,11 @@ use crate::coordinator::rollout::{Rollout, RolloutPool};
 use crate::coordinator::weights::VersionHandle;
 use crate::env::{Environment, SlotStep, VecEnvironment};
 use crate::metrics::Metrics;
+use crate::telemetry::gauges::Counter;
 use crate::util::rng::Rng;
 
 pub struct ActorPool {
-    handles: Vec<JoinHandle<ActorReport>>,
+    handles: Vec<(usize, JoinHandle<ActorReport>)>,
 }
 
 /// Per-actor-thread termination summary (one per env in the ungrouped
@@ -42,11 +43,131 @@ pub struct ActorReport {
     pub episodes: u64,
 }
 
+/// Typed actor-thread exit: how each actor ended, panics included.
+/// `join` used to propagate the first actor panic and abort the whole
+/// shutdown; now every exit is reported and the caller decides
+/// (DESIGN.md §Supervision).
+#[derive(Debug)]
+pub enum ActorExit {
+    /// The actor ran to orderly shutdown and returned its report.
+    Completed(ActorReport),
+    /// The actor thread panicked; its rented rollout buffers were
+    /// recycled into the pool by the RAII guards during unwind.
+    Panicked { actor_id: usize, message: String },
+}
+
+impl ActorExit {
+    pub fn actor_id(&self) -> usize {
+        match self {
+            ActorExit::Completed(r) => r.actor_id,
+            ActorExit::Panicked { actor_id, .. } => *actor_id,
+        }
+    }
+
+    /// The termination report, if the actor completed.
+    pub fn report(&self) -> Option<&ActorReport> {
+        match self {
+            ActorExit::Completed(r) => Some(r),
+            ActorExit::Panicked { .. } => None,
+        }
+    }
+
+    pub fn panic_message(&self) -> Option<&str> {
+        match self {
+            ActorExit::Completed(_) => None,
+            ActorExit::Panicked { message, .. } => Some(message),
+        }
+    }
+}
+
+/// Render a panic payload (almost always a `&str` or `String` from
+/// `panic!`) into something loggable.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// RAII rent of one rollout buffer: recycles back into the pool on
+/// drop, so a panicking actor thread returns its buffer during unwind
+/// instead of leaking pool capacity (the pool is bounded; a leaked
+/// buffer eventually starves every surviving actor).
+struct Held {
+    pool: RolloutPool,
+    r: Option<Rollout>,
+}
+
+impl Held {
+    fn new(pool: &RolloutPool, r: Rollout) -> Held {
+        Held {
+            pool: pool.clone(),
+            r: Some(r),
+        }
+    }
+
+    fn get(&mut self) -> &mut Rollout {
+        self.r.as_mut().expect("rollout held") // tb-lint: allow(unwrap, refilled immediately after every take)
+    }
+
+    /// Hand the buffer out for shipping (ownership moves to the queue;
+    /// nothing left to recycle until the next rent refills the guard).
+    fn take(&mut self) -> Rollout {
+        self.r.take().expect("rollout held") // tb-lint: allow(unwrap, refilled immediately after every take)
+    }
+
+    fn put(&mut self, r: Rollout) {
+        debug_assert!(self.r.is_none(), "guard already holds a buffer");
+        self.r = Some(r);
+    }
+}
+
+impl Drop for Held {
+    fn drop(&mut self) {
+        if let Some(r) = self.r.take() {
+            self.pool.recycle(r);
+        }
+    }
+}
+
+/// Group analog of [`Held`]: the B buffers a grouped actor has rented,
+/// recycled on drop.  Also closes a pre-existing leak: the grouped
+/// ship loop used to `drain` the vector and early-return on a closed
+/// queue, dropping the un-shipped remainder on the floor.
+struct HeldGroup {
+    pool: RolloutPool,
+    rs: Vec<Rollout>,
+}
+
+impl HeldGroup {
+    fn new(pool: &RolloutPool, cap: usize) -> HeldGroup {
+        HeldGroup {
+            pool: pool.clone(),
+            rs: Vec::with_capacity(cap),
+        }
+    }
+}
+
+impl Drop for HeldGroup {
+    fn drop(&mut self) {
+        for r in self.rs.drain(..) {
+            self.pool.recycle(r);
+        }
+    }
+}
+
 pub struct ActorConfig {
     pub unroll_length: usize,
     pub num_actions: usize,
     pub obs_len: usize,
     pub seed: u64,
+    /// Stage heartbeat for the watchdog: bumped once per env step by
+    /// every actor the pool spawns (one relaxed atomic; the default
+    /// detached counter costs the same and is simply never read).
+    pub heartbeat: Counter,
     /// Global id of the first env driven by this pool.  Per-env RNG
     /// streams derive from `seed` and the env's *global* id, so a
     /// grouped pool ([`ActorPool::spawn_grouped`]) and an ungrouped
@@ -64,8 +185,10 @@ pub struct ActorConfig {
 }
 
 /// The per-env action-sampling RNG stream (global env id, not thread
-/// id — shared by the grouped and ungrouped loops).
-fn env_rng_seed(root: u64, env_id: usize) -> u64 {
+/// id — shared by the grouped and ungrouped loops, and by the
+/// supervisor's respawn path, which must hand a restarted actor
+/// exactly the stream its dead predecessor used).
+pub(crate) fn env_rng_seed(root: u64, env_id: usize) -> u64 {
     root ^ (env_id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
@@ -92,14 +215,18 @@ impl ActorPool {
                 let seed = env_rng_seed(cfg.seed, cfg.first_id + id);
                 let (t, a, obs_len) = (cfg.unroll_length, cfg.num_actions, cfg.obs_len);
                 let version = cfg.policy_version.clone();
-                std::thread::Builder::new()
+                let heartbeat = cfg.heartbeat.clone();
+                let handle = std::thread::Builder::new()
                     .name(format!("actor-{id}"))
                     .spawn(move || {
                         actor_loop(
                             id, env, client, queue, pool, metrics, seed, t, a, obs_len, version,
+                            heartbeat,
                         )
                     })
                     .expect("spawn actor") // tb-lint: allow(unwrap, thread spawn fails only on OS resource exhaustion)
+                    ;
+                (id, handle)
             })
             .collect();
         ActorPool { handles }
@@ -135,25 +262,38 @@ impl ActorPool {
                 let root = cfg.seed;
                 let (t, a, obs_len) = (cfg.unroll_length, cfg.num_actions, cfg.obs_len);
                 let version = cfg.policy_version.clone();
-                std::thread::Builder::new()
+                let heartbeat = cfg.heartbeat.clone();
+                let handle = std::thread::Builder::new()
                     .name(format!("actor-group-{g}"))
                     .spawn(move || {
                         grouped_actor_loop(
                             g, group_base, venv, client, queue, pool, metrics, root, t, a,
-                            obs_len, version,
+                            obs_len, version, heartbeat,
                         )
                     })
                     .expect("spawn actor group") // tb-lint: allow(unwrap, thread spawn fails only on OS resource exhaustion)
+                    ;
+                (g, handle)
             })
             .collect();
         ActorPool { handles }
     }
 
-    /// Join all actors (call after closing the queue/batcher).
-    pub fn join(self) -> Vec<ActorReport> {
+    /// Join all actors (call after closing the queue/batcher),
+    /// collecting one typed [`ActorExit`] per thread.  A panicked
+    /// actor no longer aborts the join: its exit carries the panic
+    /// message, and the remaining threads still get joined so shutdown
+    /// completes.
+    pub fn join(self) -> Vec<ActorExit> {
         self.handles
             .into_iter()
-            .map(|h| h.join().expect("actor panicked")) // tb-lint: allow(unwrap, join deliberately propagates actor panics)
+            .map(|(id, h)| match h.join() {
+                Ok(report) => ActorExit::Completed(report),
+                Err(payload) => ActorExit::Panicked {
+                    actor_id: id,
+                    message: panic_message(payload.as_ref()),
+                },
+            })
             .collect()
     }
 
@@ -167,7 +307,7 @@ impl ActorPool {
 }
 
 #[allow(clippy::too_many_arguments)]
-fn actor_loop(
+pub(crate) fn actor_loop(
     actor_id: usize,
     mut env: Box<dyn Environment>,
     client: InferenceClient,
@@ -179,6 +319,7 @@ fn actor_loop(
     num_actions: usize,
     obs_len: usize,
     version: VersionHandle,
+    heartbeat: Counter,
 ) -> ActorReport {
     let mut report = ActorReport {
         actor_id,
@@ -192,19 +333,26 @@ fn actor_loop(
     // runs through `probs`) — measured by tests/alloc_regression.rs.
     let mut logits = vec![0.0f32; num_actions];
     let mut probs = vec![0.0f32; num_actions];
-    let Some(mut rollout) = pool.rent() else {
+    let Some(first) = pool.rent() else {
         // Pool closed before we produced anything: shutdown race.
         queue.close();
         return report;
     };
+    // RAII rent: if anything below panics (env step, inference), the
+    // guard recycles the buffer during unwind — pool capacity is
+    // conserved no matter how this thread dies.
+    let mut held = Held::new(&pool, first);
     debug_assert_eq!(
-        (rollout.t, rollout.obs_len, rollout.num_actions),
+        {
+            let r = held.get();
+            (r.t, r.obs_len, r.num_actions)
+        },
         (unroll_length, obs_len, num_actions),
         "pool buffer shape mismatch"
     );
     env.reset(&mut obs);
-    rollout.set_obs(0, &obs);
-    rollout.policy_version = version.get();
+    held.get().set_obs(0, &obs);
+    held.get().policy_version = version.get();
     let mut ep_return = 0.0f32;
     let mut ep_steps = 0u32;
 
@@ -216,16 +364,18 @@ fn actor_loop(
                 // inference thread died): either way no rollout will
                 // ever complete again — close the learner queue so
                 // the learner unblocks instead of waiting forever.
-                pool.recycle(rollout);
+                // (`held` recycles the rented buffer on drop.)
                 queue.close();
                 return report;
             };
             let action = sample_action_scratch(&logits, &mut probs, &mut rng);
             let step = env.step(action, &mut obs);
+            heartbeat.inc();
             report.frames += 1;
             metrics.add_frames(1);
             ep_return += step.reward;
             ep_steps += 1;
+            let rollout = held.get();
             rollout.set_transition(i, action, &logits, step.reward, step.done);
             if step.done {
                 metrics.record_episode(ep_return, ep_steps);
@@ -238,7 +388,7 @@ fn actor_loop(
         }
         // Ship the filled buffer itself — no clone; the learner side
         // recycles it into the pool after stacking.
-        if queue.send(rollout).is_err() {
+        if queue.send(held.take()).is_err() {
             return report; // learner queue closed
         }
         metrics.record_rollout();
@@ -249,7 +399,8 @@ fn actor_loop(
         let Some(next) = pool.rent() else {
             return report; // pool closed: shutdown
         };
-        rollout = next;
+        held.put(next);
+        let rollout = held.get();
         rollout.set_obs(0, &obs);
         rollout.policy_version = version.get();
     }
@@ -274,6 +425,7 @@ fn grouped_actor_loop(
     num_actions: usize,
     obs_len: usize,
     version: VersionHandle,
+    heartbeat: Counter,
 ) -> ActorReport {
     let b = venv.batch();
     let mut report = ActorReport {
@@ -293,11 +445,13 @@ fn grouped_actor_loop(
     let mut steps = vec![SlotStep::default(); b];
     let mut submitter = client.slice_submitter();
 
-    // Rent the group's B rollout buffers (give everything back and
-    // unblock the learner if the pool closes mid-rent: shutdown race).
-    let mut rollouts: Vec<Rollout> = Vec::with_capacity(b);
-    let rent_all = |rollouts: &mut Vec<Rollout>| -> bool {
-        debug_assert!(rollouts.is_empty());
+    // Rent the group's B rollout buffers into an RAII guard: whether
+    // the pool closes mid-rent (shutdown race), the queue closes
+    // mid-ship, or the thread panics outright, every rented buffer
+    // flows back into the pool via the guard's drop.
+    let mut held = HeldGroup::new(&pool, b);
+    let rent_all = |held: &mut HeldGroup| -> bool {
+        debug_assert!(held.rs.is_empty());
         for _ in 0..b {
             match pool.rent() {
                 Some(r) => {
@@ -306,25 +460,20 @@ fn grouped_actor_loop(
                         (unroll_length, obs_len, num_actions),
                         "pool buffer shape mismatch"
                     );
-                    rollouts.push(r);
+                    held.rs.push(r);
                 }
-                None => {
-                    for r in rollouts.drain(..) {
-                        pool.recycle(r);
-                    }
-                    return false;
-                }
+                None => return false, // guard recycles the partial rent
             }
         }
         true
     };
-    if !rent_all(&mut rollouts) {
+    if !rent_all(&mut held) {
         queue.close();
         return report;
     }
     venv.reset_all(&mut obs_block);
     let v0 = version.get();
-    for (s, r) in rollouts.iter_mut().enumerate() {
+    for (s, r) in held.rs.iter_mut().enumerate() {
         r.set_obs(0, &obs_block[s * obs_len..(s + 1) * obs_len]);
         r.policy_version = v0;
     }
@@ -339,9 +488,7 @@ fn grouped_actor_loop(
                 // Batcher closed or failed: no rollout will ever
                 // complete again — close the learner queue so the
                 // learner unblocks instead of waiting forever.
-                for r in rollouts.drain(..) {
-                    pool.recycle(r);
-                }
+                // (`held` recycles the B rented buffers on drop.)
                 queue.close();
                 return report;
             }
@@ -353,6 +500,7 @@ fn grouped_actor_loop(
                 );
             }
             venv.step_batch(&actions, &mut obs_block, &mut steps);
+            heartbeat.inc();
             // A dead group (remote stream lost) synthesizes terminal
             // steps with replayed observations; keep the loop alive —
             // the same fault-tolerance shape as the mono path — but do
@@ -368,7 +516,7 @@ fn grouped_actor_loop(
                 report.frames += b as u64;
                 metrics.add_frames(b as u64);
             }
-            for (s, r) in rollouts.iter_mut().enumerate() {
+            for (s, r) in held.rs.iter_mut().enumerate() {
                 let st = steps[s];
                 r.set_transition(
                     i,
@@ -387,21 +535,25 @@ fn grouped_actor_loop(
             }
         }
         // Ship all B filled buffers (slot order, no clone), then rent
-        // the next B and carry each slot's bootstrap obs over.
-        for r in rollouts.drain(..) {
+        // the next B and carry each slot's bootstrap obs over.  Popped
+        // one at a time from the guard so a closed queue leaves the
+        // un-shipped remainder *in* the guard (recycled on drop)
+        // instead of leaking through an abandoned drain.
+        while !held.rs.is_empty() {
+            let r = held.rs.remove(0);
             if queue.send(r).is_err() {
                 return report; // learner queue closed
             }
             metrics.record_rollout();
             report.rollouts += 1;
         }
-        if !rent_all(&mut rollouts) {
+        if !rent_all(&mut held) {
             return report; // pool closed: shutdown
         }
         // one version read per unroll round: all B slots of a group
         // started this unroll under the same published weights
         let v = version.get();
-        for (s, r) in rollouts.iter_mut().enumerate() {
+        for (s, r) in held.rs.iter_mut().enumerate() {
             r.set_obs(0, &obs_block[s * obs_len..(s + 1) * obs_len]);
             r.policy_version = v;
         }
@@ -460,6 +612,7 @@ mod tests {
                 seed: 7,
                 first_id: 0,
                 policy_version: VersionHandle::default(),
+                heartbeat: Counter::default(),
             },
         );
 
@@ -499,9 +652,13 @@ mod tests {
         rx.close();
         client.shutdown_for_tests();
         buffers.close();
-        let reports = pool.join();
+        let exits = pool.join();
         infer_thread.join().unwrap();
-        assert_eq!(reports.len(), 3);
+        assert_eq!(exits.len(), 3);
+        let reports: Vec<&ActorReport> = exits
+            .iter()
+            .map(|e| e.report().expect("no actor panicked"))
+            .collect();
         let frames: u64 = reports.iter().map(|r| r.frames).sum();
         assert!(frames >= 4 * 2 * t as u64);
         assert_eq!(metrics.frames.load(std::sync::atomic::Ordering::Relaxed), frames);
@@ -542,6 +699,7 @@ mod tests {
                 seed: 1,
                 first_id: 0,
                 policy_version: VersionHandle::default(),
+                heartbeat: Counter::default(),
             },
         );
         let r1 = rx.recv_batch(1).unwrap().remove(0);
@@ -634,6 +792,7 @@ mod tests {
                     seed: root_seed,
                     first_id: 0,
                     policy_version: VersionHandle::default(),
+                    heartbeat: Counter::default(),
                 },
             );
             for round in 0..per_env {
@@ -675,6 +834,7 @@ mod tests {
                         seed: root_seed,
                         first_id: g,
                         policy_version: VersionHandle::default(),
+                        heartbeat: Counter::default(),
                     },
                 );
                 for _ in 0..per_env {
@@ -762,6 +922,7 @@ mod tests {
                 seed: 5,
                 first_id: 0,
                 policy_version: VersionHandle::default(),
+                heartbeat: Counter::default(),
             },
         );
         // two unrolls: slot-major shipping means batch k is
@@ -787,14 +948,15 @@ mod tests {
         rx.close();
         client.shutdown_for_tests();
         buffers.close();
-        let reports = pool.join();
+        let exits = pool.join();
         infer_thread.join().unwrap();
-        assert_eq!(reports.len(), 1, "one report per group");
-        assert_eq!(reports[0].rollouts % b as u64, 0);
-        assert!(reports[0].frames >= 2 * (b * t) as u64);
+        assert_eq!(exits.len(), 1, "one report per group");
+        let report = exits[0].report().expect("group completed");
+        assert_eq!(report.rollouts % b as u64, 0);
+        assert!(report.frames >= 2 * (b * t) as u64);
         assert_eq!(
             metrics.frames.load(std::sync::atomic::Ordering::Relaxed),
-            reports[0].frames
+            report.frames
         );
     }
 
@@ -835,6 +997,7 @@ mod tests {
                 seed: 2,
                 first_id: 0,
                 policy_version: VersionHandle::default(),
+                heartbeat: Counter::default(),
             },
         );
         let r = rx.recv_batch(1).unwrap().remove(0);
@@ -845,9 +1008,9 @@ mod tests {
         rx.close();
         buffers.close();
         client.shutdown_for_tests();
-        let reports = pool.join();
-        assert_eq!(reports.len(), 1);
-        assert_eq!(reports[0].rollouts, 1);
+        let exits = pool.join();
+        assert_eq!(exits.len(), 1);
+        assert_eq!(exits[0].report().expect("actor completed").rollouts, 1);
         infer_thread.join().unwrap();
     }
 }

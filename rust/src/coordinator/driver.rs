@@ -16,10 +16,13 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::config::{Mode, TrainConfig};
-use crate::coordinator::actor_pool::{ActorConfig, ActorPool};
+use crate::coordinator::actor_pool::{ActorConfig, ActorExit, ActorPool};
 use crate::coordinator::batching_queue::{batching_queue, batching_queue_gauged};
 use crate::coordinator::dynamic_batcher::{dynamic_batcher, BatcherConfig, BatcherStats};
 use crate::coordinator::learner_pool::ShardedLearner;
+use crate::coordinator::supervisor::{
+    EnvFactory, HeartbeatRegistry, SupervisedActors, SupervisorConfig, Watchdog,
+};
 use crate::coordinator::replay::{replay_count, stack_mixed, ReplayBuffer, ReplayStats};
 use crate::coordinator::rollout::{stack_rollouts, Rollout, RolloutPool};
 use crate::coordinator::weights::WeightsStore;
@@ -28,7 +31,7 @@ use crate::env::{self, Environment, LocalVecEnv, VecEnvironment};
 use crate::metrics::{CurveLogger, Metrics, Snapshot};
 use crate::rpc::{EnvServer, RemoteEnv, RemoteVecEnv};
 use crate::runtime::{InferenceEngine, LearnerBatch, LearnerEngine, LearnerStats, ParamVecs};
-use crate::telemetry::gauges::{GaugesSnapshot, PipelineGauges};
+use crate::telemetry::gauges::{Counter, GaugesSnapshot, PipelineGauges};
 use crate::telemetry::sampler::GaugeSampler;
 use crate::{tb_info, tb_warn};
 
@@ -149,14 +152,32 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     // One gauge registry threaded through every pipeline stage; the
     // periodic report below prints its snapshot (DESIGN.md §Telemetry).
     let gauges = PipelineGauges::shared();
+    // Per-stage heartbeat registry (DESIGN.md §Supervision): every
+    // pipeline stage bumps its counter once per unit of work, and the
+    // watchdog below (opt-in via --stall_timeout_ms) flags silence.
+    let heartbeats = HeartbeatRegistry::shared();
     // Background occupancy time series (started before the pipeline
     // spins up so warm-up starvation is captured too).
     let sampler = match &cfg.gauge_log_path {
-        Some(p) => Some(GaugeSampler::start(
-            gauges.clone(),
-            p,
-            Duration::from_millis(cfg.gauge_sample_ms.max(1)),
-        )?),
+        Some(p) => {
+            // The sampler beats once per recorded row — only hold it to
+            // the watchdog's cadence when its period fits well inside
+            // the stall window, or a deliberately slow sampling rate
+            // would read as a stalled pipeline.
+            let hb = if cfg.stall_timeout_ms == 0
+                || cfg.gauge_sample_ms.max(1).saturating_mul(2) < cfg.stall_timeout_ms
+            {
+                heartbeats.register("sampler")
+            } else {
+                Counter::new()
+            };
+            Some(GaugeSampler::start(
+                gauges.clone(),
+                p,
+                Duration::from_millis(cfg.gauge_sample_ms.max(1)),
+                hb,
+            )?)
+        }
         None => None,
     };
 
@@ -176,13 +197,26 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     let mut resume_version = 0u64;
     let initial = match &cfg.init_checkpoint {
         Some(path) => {
-            let (params, version) = crate::runtime::checkpoint::load(path, &manifest)?;
+            // Verified load: a hash mismatch names the corrupt blob,
+            // and the newest intact retained generation (`path.1`,
+            // `path.2`, …) is tried before giving up (DESIGN.md
+            // §Supervision).
+            let (params, version, loaded_from) =
+                crate::runtime::checkpoint::load_with_fallback(path, &manifest)?;
             learner.set_params(&params)?;
             resume_version = version;
+            if &loaded_from != path {
+                tb_warn!(
+                    "train",
+                    "checkpoint {} failed verification; fell back to retained {}",
+                    path.display(),
+                    loaded_from.display()
+                );
+            }
             tb_info!(
                 "train",
                 "resumed params from {} (weight version {version})",
-                path.display()
+                loaded_from.display()
             );
             params
         }
@@ -247,6 +281,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     // -- inference thread (constructs its own engine: xla is !Send)
     let weights_for_inference = weights.clone();
     let artifact_dir = cfg.artifact_dir.clone();
+    let hb_inference = heartbeats.register("inference");
     let inference_thread = std::thread::Builder::new()
         .name("inference".into())
         .spawn(move || -> Result<()> {
@@ -268,6 +303,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 let n = batch.len();
                 let (logits, baselines) = engine.infer(batch.obs_flat(), n)?;
                 batch.respond(&logits, &baselines, num_actions)?;
+                hb_inference.inc();
             }
             Ok(())
         })?;
@@ -283,24 +319,49 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         // actors stamp each rollout with the weight version its unroll
         // started under — the learner measures exact policy lag from it
         policy_version: weights.handle(),
+        // all actors share one stage heartbeat: the watchdog flags
+        // whole-stage silence, not one slow env
+        heartbeat: heartbeats.register("actors"),
     };
     let pool = match envs {
-        BuiltEnvs::Singles(envs) => ActorPool::spawn(
+        BuiltEnvs::Singles(envs) => Actors::Classic(ActorPool::spawn(
             envs,
             infer_client.clone(),
             rollout_tx.clone(),
             buffer_pool.clone(),
             metrics.clone(),
             actor_cfg,
-        ),
-        BuiltEnvs::Groups(groups) => ActorPool::spawn_grouped(
+        )),
+        BuiltEnvs::Groups(groups) => Actors::Classic(ActorPool::spawn_grouped(
             groups,
             infer_client.clone(),
             rollout_tx.clone(),
             buffer_pool.clone(),
             metrics.clone(),
             actor_cfg,
-        ),
+        )),
+        BuiltEnvs::Factories(pairs) => {
+            let sup = SupervisorConfig {
+                max_restarts: cfg.actor_restarts,
+                backoff: Duration::from_millis(cfg.actor_backoff_ms.max(1)),
+            };
+            tb_info!(
+                "train",
+                "actor supervision on: up to {} restart(s) per actor, base backoff {:?}",
+                sup.max_restarts,
+                sup.backoff
+            );
+            Actors::Supervised(SupervisedActors::spawn(
+                pairs,
+                infer_client.clone(),
+                rollout_tx.clone(),
+                buffer_pool.clone(),
+                metrics.clone(),
+                actor_cfg,
+                sup,
+                gauges.clone(),
+            ))
+        }
     };
 
     // -- stacker thread: double-buffered batch prefetch.  The
@@ -329,6 +390,32 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             .send(LearnerBatch::zeros(&manifest))
             .expect("fresh return queue") // tb-lint: allow(unwrap, queue created two lines up; cannot be closed yet);
     }
+
+    // -- watchdog (opt-in via --stall_timeout_ms): flags any stage
+    // silent past the timeout with a gauge-backed diagnosis; a hard
+    // stall (2× the timeout) closes the pipeline queues, so the
+    // stacker and learner loops break and train() resumes control at
+    // the orderly-shutdown + emergency-checkpoint path below instead
+    // of hanging forever.
+    let watchdog = if cfg.stall_timeout_ms > 0 {
+        let wd_rollout_tx = rollout_tx.clone();
+        let wd_batch_tx = batch_tx.clone();
+        Some(Watchdog::start(
+            heartbeats.clone(),
+            gauges.clone(),
+            Duration::from_millis(cfg.stall_timeout_ms),
+            move |_report| {
+                // close() is queue-global: every sender/receiver clone
+                // of these queues unblocks at once
+                wd_rollout_tx.close();
+                wd_batch_tx.close();
+            },
+        ))
+    } else {
+        None
+    };
+
+    let hb_stacker = heartbeats.register("stacker");
     let stacker_manifest = manifest.clone();
     let stacker_pool = buffer_pool.clone();
     let replay_ratio = cfg.replay_ratio;
@@ -423,6 +510,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 if batch_tx.send(batch).is_err() {
                     break;
                 }
+                hb_stacker.inc();
             }
             // unblock the learner whichever way this loop ended
             batch_tx.close();
@@ -472,6 +560,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
         }
         Ok(())
     };
+    let hb_learner = heartbeats.register("learner");
     if cfg.num_learners > 1 {
         // Sharded path: N workers each load their own engine (xla is
         // !Send, so construction happens inside the worker threads),
@@ -511,6 +600,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             };
             final_params = result.params;
             record_step(step, &result.stats)?;
+            hb_learner.inc();
         }
         sharded.shutdown();
         if let Err(e) = sharded.join() {
@@ -535,9 +625,16 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             weights.publish(snapshot.clone());
             final_params = snapshot;
             record_step(step, &stats)?;
+            hb_learner.inc();
         }
     }
 
+    // Stop the watchdog first: teardown legitimately silences every
+    // stage, which must not read as a stall.  A hard stall it already
+    // escalated on (that is what broke the learner loop) is collected
+    // here and surfaces as the run's error after the emergency
+    // checkpoint below.
+    let stall = watchdog.and_then(|wd| wd.stop());
     // Steady-state occupancy, captured before shutdown drains the
     // pipeline (afterwards the buffers actors hold are simply dropped).
     let gauges_final = gauges.snapshot();
@@ -559,7 +656,11 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     buffer_pool.close(); // actors blocked on rent unblock
     infer_client.close();
     weights.close();
-    pool.join();
+    for exit in pool.join() {
+        if let ActorExit::Panicked { actor_id, message } = exit {
+            tb_warn!("train", "actor {actor_id} did not complete: {message}");
+        }
+    }
     let (stack_time, replay_stats) = stacker_thread
         .join()
         .map_err(|_| anyhow::anyhow!("stacker thread panicked"))?;
@@ -573,14 +674,40 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     for server in &mut local_servers {
         server.shutdown();
     }
-    if let Some(e) = shard_error {
-        return Err(e);
+    // Abnormal end (a failed learner shard, or a hard pipeline stall
+    // the watchdog escalated on): write an emergency checkpoint of the
+    // params the run did reach, then surface the error.  Same verified
+    // format and rotation as the normal end-of-run save below.
+    if shard_error.is_some() || stall.is_some() {
+        if let Some(path) = &cfg.checkpoint_path {
+            crate::runtime::checkpoint::save_retained(
+                path,
+                &manifest,
+                &final_params,
+                weights.version(),
+                cfg.keep_checkpoints,
+            )?;
+            tb_warn!("train", "emergency checkpoint written to {}", path.display());
+        }
+        if let Some(e) = shard_error {
+            return Err(e);
+        }
+        if let Some(report) = stall {
+            return Err(anyhow::Error::msg(report.to_string()));
+        }
     }
 
     if let Some(path) = &cfg.checkpoint_path {
         // stamped with the published weight version, so a resumed run
-        // continues the version sequence instead of restarting it
-        crate::runtime::checkpoint::save(path, &manifest, &final_params, weights.version())?;
+        // continues the version sequence instead of restarting it;
+        // --keep_checkpoints N rotates previous generations aside
+        crate::runtime::checkpoint::save_retained(
+            path,
+            &manifest,
+            &final_params,
+            weights.version(),
+            cfg.keep_checkpoints,
+        )?;
         tb_info!("train", "checkpoint written to {}", path.display());
     }
 
@@ -609,6 +736,26 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
 enum BuiltEnvs {
     Singles(Vec<Box<dyn Environment>>),
     Groups(Vec<Box<dyn VecEnvironment>>),
+    /// Singles paired with rebuild factories, produced when
+    /// `--actor_restarts` > 0: the supervised pool respawns a crashed
+    /// actor's env from its factory (same name, seed, wrapper stack).
+    Factories(Vec<(Box<dyn Environment>, EnvFactory)>),
+}
+
+/// The spawned actor substrate: the classic pool, or the supervised
+/// one (`--actor_restarts` > 0).  Both join into typed [`ActorExit`]s.
+enum Actors {
+    Classic(ActorPool),
+    Supervised(SupervisedActors),
+}
+
+impl Actors {
+    fn join(self) -> Vec<ActorExit> {
+        match self {
+            Actors::Classic(p) => p.join(),
+            Actors::Supervised(s) => s.join(),
+        }
+    }
 }
 
 /// Build the actor environments for the configured mode.  Env `id`
@@ -622,6 +769,18 @@ fn build_envs(
     gauges: &Arc<PipelineGauges>,
 ) -> Result<BuiltEnvs> {
     let group = cfg.envs_per_actor.max(1);
+    // Supervision (restart-with-backoff) covers single-env actors; a
+    // grouped actor would need per-slot env rebuild to respawn, so
+    // grouped runs stay on the classic pool and only get containment.
+    if cfg.actor_restarts > 0 && group > 1 {
+        tb_warn!(
+            "train",
+            "actor_restarts {} supervises single-env actors only; grouped \
+             actors (--envs_per_actor {}) run on the classic pool",
+            cfg.actor_restarts,
+            cfg.envs_per_actor
+        );
+    }
     // contiguous global-id chunks of size `group` (last may be short)
     let chunks: Vec<std::ops::Range<usize>> = (0..cfg.num_actors)
         .step_by(group)
@@ -629,7 +788,20 @@ fn build_envs(
         .collect();
     match cfg.mode {
         Mode::Mono => {
-            if group == 1 {
+            if group == 1 && cfg.actor_restarts > 0 {
+                let pairs = (0..cfg.num_actors)
+                    .map(|id| {
+                        let seed = env::actor_seed(cfg.seed, id);
+                        let env = env::make_wrapped(env_name, seed, &cfg.wrappers)?;
+                        let name = env_name.to_string();
+                        let wrappers = cfg.wrappers.clone();
+                        let factory: EnvFactory =
+                            Box::new(move || env::make_wrapped(&name, seed, &wrappers));
+                        Ok((env, factory))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(BuiltEnvs::Factories(pairs))
+            } else if group == 1 {
                 let envs = (0..cfg.num_actors)
                     .map(|id| {
                         env::make_wrapped(env_name, env::actor_seed(cfg.seed, id), &cfg.wrappers)
@@ -669,7 +841,27 @@ fn build_envs(
             } else {
                 cfg.server_addresses.clone()
             };
-            if group == 1 {
+            if group == 1 && cfg.actor_restarts > 0 {
+                let pairs = (0..cfg.num_actors)
+                    .map(|id| {
+                        let addr = addresses[id % addresses.len()].clone();
+                        let seed = env::actor_seed(cfg.seed, id);
+                        let env = RemoteEnv::connect(&addr, env_name, seed, &cfg.wrappers)
+                            .with_context(|| format!("connecting actor {id} to {addr}"))?;
+                        let name = env_name.to_string();
+                        let wrappers = cfg.wrappers.clone();
+                        let factory: EnvFactory = Box::new(move || {
+                            let env = RemoteEnv::connect(&addr, &name, seed, &wrappers)
+                                .with_context(|| {
+                                    format!("reconnecting actor {id} to {addr}")
+                                })?;
+                            Ok(Box::new(env) as Box<dyn Environment>)
+                        });
+                        Ok((Box::new(env) as Box<dyn Environment>, factory))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(BuiltEnvs::Factories(pairs))
+            } else if group == 1 {
                 let envs = (0..cfg.num_actors)
                     .map(|id| {
                         let addr = &addresses[id % addresses.len()];

@@ -7,6 +7,8 @@
 //! * [`actor_pool`] — actor threads (local or remote envs);
 //! * [`weights`] — versioned learner→inference parameter store;
 //! * [`learner_pool`] — sharded learner: N workers, barrier-averaged;
+//! * [`supervisor`] — run supervision: actor restart with backoff,
+//!   per-stage heartbeats, pipeline stall watchdog;
 //! * [`driver`] — `train()`: wires everything, runs the learner loop.
 
 pub mod actor_pool;
@@ -16,8 +18,10 @@ pub mod dynamic_batcher;
 pub mod learner_pool;
 pub mod replay;
 pub mod rollout;
+pub mod supervisor;
 pub mod weights;
 
 pub use driver::{evaluate, evaluate_batched, fold_seed, train, EvalReport, TrainReport};
 pub use replay::{ReplayBuffer, ReplayStats};
 pub use rollout::RolloutPool;
+pub use supervisor::{HeartbeatRegistry, StallReport, SupervisedActors, Watchdog};

@@ -1,0 +1,629 @@
+//! Run supervision: actor restart with backoff, and the pipeline
+//! watchdog (DESIGN.md §Supervision).
+//!
+//! TorchBeast's headline is asynchronous, parallel training — which
+//! means a run is a fleet of threads that can individually fail.  This
+//! module makes a training run survive its own components:
+//!
+//! * [`SupervisedActors`] — actor threads run under `catch_unwind`.
+//!   A panicked actor's rented rollout buffer is recycled by the RAII
+//!   guard inside the actor loop (never leaked from the
+//!   [`RolloutPool`]), and the supervisor respawns the actor with the
+//!   same env id, seed, and version handle under a bounded restart
+//!   budget with exponential backoff (`--actor_restarts`,
+//!   `--actor_backoff_ms`).  Budget exhaustion degrades gracefully:
+//!   the run continues on the surviving actors (loudly gauged via
+//!   `actors_lost`), and only when the *last* actor dies is the
+//!   learner queue closed so the learner ends instead of hanging.
+//! * [`HeartbeatRegistry`] + [`Watchdog`] — every pipeline stage
+//!   (actors, stacker, learner, inference, gauge sampler) bumps a
+//!   relaxed-atomic heartbeat counter per unit of work.  The watchdog
+//!   thread flags any stage silent past `--stall_timeout_ms` with a
+//!   diagnosis assembled from the shared [`PipelineGauges`], and on
+//!   hard stall (2× the timeout) escalates: it records a
+//!   [`StallReport`], bumps `watchdog_stalls`, and fires the driver's
+//!   escalation closure, which unblocks the learner loop so the run
+//!   shuts down orderly and writes an **emergency checkpoint** instead
+//!   of hanging forever.  A learner-shard fail-latch escalates to the
+//!   same emergency-checkpoint path in the driver.
+//!
+//! Defaults are zero-cost: with `--actor_restarts 0` the classic
+//! (unsupervised) actor pool runs byte-for-byte, and without
+//! `--stall_timeout_ms` no watchdog thread exists — heartbeat bumps
+//! are one relaxed atomic either way.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::actor_pool::{
+    actor_loop, env_rng_seed, panic_message, ActorConfig, ActorExit,
+};
+use crate::coordinator::batching_queue::QueueSender;
+use crate::coordinator::dynamic_batcher::InferenceClient;
+use crate::coordinator::rollout::{Rollout, RolloutPool};
+use crate::env::Environment;
+use crate::metrics::Metrics;
+use crate::tb_warn;
+use crate::telemetry::gauges::{Counter, PipelineGauges};
+use crate::util::sync::{CheckedMutex, LockOrder};
+
+/// Rebuilds one actor's environment for a respawn: same env name,
+/// same per-env seed, same wrapper stack — the driver captures those
+/// when it builds the factory, so a restarted actor replays exactly
+/// the env the dead one was driving.
+pub type EnvFactory = Box<dyn FnMut() -> anyhow::Result<Box<dyn Environment>> + Send>;
+
+/// Restart policy for [`SupervisedActors`].
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Respawns allowed per actor over the run (`--actor_restarts`).
+    pub max_restarts: u32,
+    /// Base backoff before the first respawn (`--actor_backoff_ms`);
+    /// doubles per consecutive restart of the same actor, capped at
+    /// [`SupervisorConfig::MAX_BACKOFF`].
+    pub backoff: Duration,
+}
+
+impl SupervisorConfig {
+    /// Upper bound on the exponential backoff delay.
+    pub const MAX_BACKOFF: Duration = Duration::from_secs(30);
+
+    /// Backoff before restart attempt `attempt` (1-based).
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let shift = attempt.saturating_sub(1).min(16);
+        self.backoff
+            .saturating_mul(1u32 << shift)
+            .min(Self::MAX_BACKOFF)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Heartbeats + watchdog
+// ---------------------------------------------------------------------------
+
+/// One registered pipeline stage: a name and its shared heartbeat.
+struct Stage {
+    name: &'static str,
+    beat: Counter,
+}
+
+/// Registry of per-stage heartbeat counters.  Stages register once at
+/// pipeline construction (allocating, lock-guarded — rank 70 in the
+/// `util::sync` table) and then bump their [`Counter`] per unit of
+/// work: one relaxed atomic add, safe inside the allocation-free hot
+/// loops.  The [`Watchdog`] snapshots the registry to find silence.
+pub struct HeartbeatRegistry {
+    stages: CheckedMutex<Vec<Stage>>,
+}
+
+const REGISTRY_ORDER: LockOrder = LockOrder::new(70, "supervisor.heartbeats");
+
+impl Default for HeartbeatRegistry {
+    fn default() -> Self {
+        HeartbeatRegistry::new()
+    }
+}
+
+impl HeartbeatRegistry {
+    pub fn new() -> HeartbeatRegistry {
+        HeartbeatRegistry {
+            stages: CheckedMutex::new(REGISTRY_ORDER, Vec::new()),
+        }
+    }
+
+    pub fn shared() -> Arc<HeartbeatRegistry> {
+        Arc::new(HeartbeatRegistry::new())
+    }
+
+    /// Register a stage; the returned counter is the stage's heartbeat
+    /// (bump it once per unit of work — rollout step, batch stacked,
+    /// learner step, inference batch, sampler row).
+    pub fn register(&self, name: &'static str) -> Counter {
+        let beat = Counter::new();
+        self.stages.lock().push(Stage {
+            name,
+            beat: beat.clone(),
+        });
+        beat
+    }
+
+    /// Names + current counts of every registered stage.
+    pub fn snapshot(&self) -> Vec<(&'static str, Counter)> {
+        self.stages
+            .lock()
+            .iter()
+            .map(|s| (s.name, s.beat.clone()))
+            .collect()
+    }
+}
+
+/// What the watchdog found when it escalated: the longest-silent
+/// stage, how long it was silent, and a diagnosis line assembled from
+/// every silent stage plus the pipeline gauges (queue depth, pool
+/// occupancy, slot starvation) at that instant.
+#[derive(Debug, Clone)]
+pub struct StallReport {
+    pub stage: &'static str,
+    pub silent: Duration,
+    pub diagnosis: String,
+}
+
+impl std::fmt::Display for StallReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "pipeline stalled: stage `{}` silent for {:.1}s — {}",
+            self.stage,
+            self.silent.as_secs_f64(),
+            self.diagnosis
+        )
+    }
+}
+
+/// Background stall detector over a [`HeartbeatRegistry`].
+///
+/// A stage silent past `timeout` is *flagged* (one warn-level
+/// diagnosis per silence episode); a stage silent past `2 × timeout`
+/// is a **hard stall**: the watchdog records a [`StallReport`], bumps
+/// the `watchdog_stalls` gauge, fires the escalation closure exactly
+/// once, and exits.  The driver's escalation closure closes the
+/// pipeline queues, which unwinds the learner loop into the orderly
+/// shutdown + emergency-checkpoint path.
+pub struct Watchdog {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    stalled: Arc<OnceLock<StallReport>>,
+}
+
+impl Watchdog {
+    pub fn start(
+        registry: Arc<HeartbeatRegistry>,
+        gauges: Arc<PipelineGauges>,
+        timeout: Duration,
+        on_stall: impl FnOnce(&StallReport) + Send + 'static,
+    ) -> Watchdog {
+        let timeout = timeout.max(Duration::from_millis(1));
+        let stop = Arc::new(AtomicBool::new(false));
+        let stalled: Arc<OnceLock<StallReport>> = Arc::new(OnceLock::new());
+        let stop2 = stop.clone();
+        let stalled2 = stalled.clone();
+        let handle = std::thread::Builder::new()
+            .name("watchdog".into())
+            .spawn(move || {
+                watchdog_loop(registry, gauges, timeout, stop2, stalled2, on_stall)
+            })
+            .expect("spawn watchdog") // tb-lint: allow(unwrap, thread spawn fails only on OS resource exhaustion)
+            ;
+        Watchdog {
+            stop,
+            handle: Some(handle),
+            stalled: stalled.clone(),
+        }
+    }
+
+    /// A hard stall the watchdog already escalated on, if any.
+    pub fn stall(&self) -> Option<StallReport> {
+        self.stalled.get().cloned()
+    }
+
+    /// Stop the watchdog and return the hard stall it escalated on, if
+    /// any.
+    pub fn stop(mut self) -> Option<StallReport> {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.stalled.get().cloned()
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Watched {
+    name: &'static str,
+    beat: Counter,
+    last: u64,
+    changed: Instant,
+    warned: bool,
+}
+
+fn watchdog_loop(
+    registry: Arc<HeartbeatRegistry>,
+    gauges: Arc<PipelineGauges>,
+    timeout: Duration,
+    stop: Arc<AtomicBool>,
+    stalled: Arc<OnceLock<StallReport>>,
+    on_stall: impl FnOnce(&StallReport),
+) {
+    let hard = timeout * 2;
+    let poll = (timeout / 8).clamp(Duration::from_millis(2), Duration::from_millis(200));
+    let mut watched: Vec<Watched> = Vec::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        std::thread::sleep(poll);
+        let now = Instant::now();
+        // adopt stages registered after the watchdog started (the
+        // registry only ever appends)
+        let stages = registry.snapshot();
+        for (name, beat) in stages.into_iter().skip(watched.len()) {
+            watched.push(Watched {
+                name,
+                beat: beat.clone(),
+                last: beat.get(),
+                changed: now,
+                warned: false,
+            });
+        }
+        for w in watched.iter_mut() {
+            let c = w.beat.get();
+            if c != w.last {
+                w.last = c;
+                w.changed = now;
+                w.warned = false;
+            }
+        }
+        for i in 0..watched.len() {
+            let silent = now.duration_since(watched[i].changed);
+            if silent >= timeout && !watched[i].warned {
+                watched[i].warned = true;
+                tb_warn!(
+                    "watchdog",
+                    "stage `{}` silent for {:.1}s (stall threshold {:.1}s) | {}",
+                    watched[i].name,
+                    silent.as_secs_f64(),
+                    timeout.as_secs_f64(),
+                    gauges.snapshot()
+                );
+            }
+        }
+        // hard stall: escalate on the longest-silent stage, once
+        let worst = watched
+            .iter()
+            .map(|w| (now.duration_since(w.changed), w.name))
+            .filter(|(silent, _)| *silent >= hard)
+            .max();
+        if let Some((silent, stage)) = worst {
+            let silent_stages: Vec<String> = watched
+                .iter()
+                .filter(|w| now.duration_since(w.changed) >= timeout)
+                .map(|w| {
+                    format!(
+                        "{} ({:.1}s)",
+                        w.name,
+                        now.duration_since(w.changed).as_secs_f64()
+                    )
+                })
+                .collect();
+            let report = StallReport {
+                stage,
+                silent,
+                diagnosis: format!(
+                    "silent stages: [{}]; gauges: {}",
+                    silent_stages.join(", "),
+                    gauges.snapshot()
+                ),
+            };
+            gauges.watchdog_stalls.inc();
+            tb_warn!("watchdog", "HARD STALL — {report}; escalating to emergency shutdown");
+            let _ = stalled.set(report.clone());
+            on_stall(&report);
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Supervised actors
+// ---------------------------------------------------------------------------
+
+/// The supervised counterpart of [`crate::coordinator::actor_pool::ActorPool`]:
+/// each actor thread runs [`actor_loop`] lives under `catch_unwind`,
+/// respawning a fresh environment from its [`EnvFactory`] after a
+/// panic — same env id, same sampling-RNG seed, same version handle —
+/// until the restart budget is exhausted.
+///
+/// A panicked life's rented rollout buffer is recycled by the RAII
+/// guard inside the actor loop, so pool capacity is conserved across
+/// any number of crashes.  Frames/episodes counted into the shared
+/// [`Metrics`] before a panic stay counted; the per-actor
+/// [`ActorExit`] report sums the *completed* lives.
+pub struct SupervisedActors {
+    handles: Vec<(usize, JoinHandle<ActorExit>)>,
+}
+
+impl SupervisedActors {
+    /// Spawn one supervised thread per `(env, factory)` pair.  The
+    /// pre-built env drives the first life (so construction errors
+    /// surface at spawn time, exactly like the classic pool); the
+    /// factory rebuilds it for each respawn.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        actors: Vec<(Box<dyn Environment>, EnvFactory)>,
+        client: InferenceClient,
+        learner_queue: QueueSender<Rollout>,
+        pool: RolloutPool,
+        metrics: Arc<Metrics>,
+        cfg: ActorConfig,
+        sup: SupervisorConfig,
+        gauges: Arc<PipelineGauges>,
+    ) -> SupervisedActors {
+        let live = Arc::new(AtomicUsize::new(actors.len()));
+        let handles = actors
+            .into_iter()
+            .enumerate()
+            .map(|(id, (env, factory))| {
+                let client = client.clone();
+                let queue = learner_queue.clone();
+                let pool = pool.clone();
+                let metrics = metrics.clone();
+                let seed = env_rng_seed(cfg.seed, cfg.first_id + id);
+                let (t, a, obs_len) = (cfg.unroll_length, cfg.num_actions, cfg.obs_len);
+                let version = cfg.policy_version.clone();
+                let heartbeat = cfg.heartbeat.clone();
+                let sup = sup.clone();
+                let gauges = gauges.clone();
+                let live = live.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("actor-{id}"))
+                    .spawn(move || {
+                        supervised_actor(
+                            id, env, factory, client, queue, pool, metrics, seed, t, a,
+                            obs_len, version, heartbeat, sup, gauges, live,
+                        )
+                    })
+                    .expect("spawn supervised actor") // tb-lint: allow(unwrap, thread spawn fails only on OS resource exhaustion)
+                    ;
+                (id, handle)
+            })
+            .collect();
+        SupervisedActors { handles }
+    }
+
+    /// Join all supervised actors (call after closing the
+    /// queue/batcher), collecting every typed exit.  A panic of the
+    /// supervisor thread itself (never the supervised actor loop,
+    /// which is caught) is reported as a panicked exit rather than
+    /// propagated, so it cannot abort shutdown of the other threads.
+    pub fn join(self) -> Vec<ActorExit> {
+        self.handles
+            .into_iter()
+            .map(|(id, h)| match h.join() {
+                Ok(exit) => exit,
+                Err(p) => ActorExit::Panicked {
+                    actor_id: id,
+                    message: panic_message(p.as_ref()),
+                },
+            })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn supervised_actor(
+    id: usize,
+    first_env: Box<dyn Environment>,
+    mut factory: EnvFactory,
+    client: InferenceClient,
+    queue: QueueSender<Rollout>,
+    pool: RolloutPool,
+    metrics: Arc<Metrics>,
+    seed: u64,
+    unroll_length: usize,
+    num_actions: usize,
+    obs_len: usize,
+    version: crate::coordinator::weights::VersionHandle,
+    heartbeat: Counter,
+    sup: SupervisorConfig,
+    gauges: Arc<PipelineGauges>,
+    live: Arc<AtomicUsize>,
+) -> ActorExit {
+    let mut env_slot = Some(first_env);
+    let mut attempts = 0u32;
+    let mut total = crate::coordinator::actor_pool::ActorReport {
+        actor_id: id,
+        ..Default::default()
+    };
+    loop {
+        let env = match env_slot.take() {
+            Some(e) => e,
+            None => match factory() {
+                Ok(e) => e,
+                Err(err) => {
+                    // a respawn that cannot even rebuild its env is a
+                    // permanent loss, budget or not
+                    return actor_lost(
+                        id,
+                        format!("env rebuild failed: {err:#}"),
+                        attempts,
+                        &queue,
+                        &gauges,
+                        &live,
+                    );
+                }
+            },
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            actor_loop(
+                id,
+                env,
+                client.clone(),
+                queue.clone(),
+                pool.clone(),
+                metrics.clone(),
+                seed,
+                unroll_length,
+                num_actions,
+                obs_len,
+                version.clone(),
+                heartbeat.clone(),
+            )
+        }));
+        match result {
+            Ok(report) => {
+                total.frames += report.frames;
+                total.rollouts += report.rollouts;
+                total.episodes += report.episodes;
+                return ActorExit::Completed(total);
+            }
+            Err(payload) => {
+                gauges.actor_panics.inc();
+                let msg = panic_message(payload.as_ref());
+                if attempts >= sup.max_restarts {
+                    return actor_lost(id, msg, attempts, &queue, &gauges, &live);
+                }
+                attempts += 1;
+                let delay = sup.delay(attempts);
+                gauges.actor_restarts.inc();
+                tb_warn!(
+                    "supervisor",
+                    "actor {id} panicked: {msg}; restart {attempts}/{} after {:?} \
+                     (same env id, seed, and version handle)",
+                    sup.max_restarts,
+                    delay
+                );
+                std::thread::sleep(delay);
+            }
+        }
+    }
+}
+
+/// Permanent loss of one supervised actor: gauge it loudly, and if it
+/// was the *last* live actor, close the learner queue so the learner
+/// ends the run instead of waiting on rollouts that can never come.
+fn actor_lost(
+    id: usize,
+    message: String,
+    restarts_used: u32,
+    queue: &QueueSender<Rollout>,
+    gauges: &PipelineGauges,
+    live: &AtomicUsize,
+) -> ActorExit {
+    gauges.actors_lost.inc();
+    let remaining = live.fetch_sub(1, Ordering::AcqRel) - 1;
+    tb_warn!(
+        "supervisor",
+        "actor {id} lost after {restarts_used} restart(s): {message}; \
+         {remaining} live actor(s) remain"
+    );
+    if remaining == 0 {
+        tb_warn!(
+            "supervisor",
+            "no live actors remain; closing the learner queue so the run \
+             ends instead of hanging"
+        );
+        queue.close();
+    }
+    ActorExit::Panicked {
+        actor_id: id,
+        message,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let sup = SupervisorConfig {
+            max_restarts: 5,
+            backoff: Duration::from_millis(100),
+        };
+        assert_eq!(sup.delay(1), Duration::from_millis(100));
+        assert_eq!(sup.delay(2), Duration::from_millis(200));
+        assert_eq!(sup.delay(3), Duration::from_millis(400));
+        assert_eq!(sup.delay(40), SupervisorConfig::MAX_BACKOFF, "capped");
+    }
+
+    #[test]
+    fn registry_registers_and_snapshots() {
+        let reg = HeartbeatRegistry::new();
+        let a = reg.register("actors");
+        let b = reg.register("stacker");
+        a.inc();
+        a.inc();
+        b.inc();
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0, "actors");
+        assert_eq!(snap[0].1.get(), 2);
+        assert_eq!(snap[1].1.get(), 1);
+    }
+
+    #[test]
+    fn watchdog_stays_quiet_while_stages_beat() {
+        let reg = HeartbeatRegistry::shared();
+        let beat = reg.register("busy");
+        let gauges = PipelineGauges::shared();
+        let fired = Arc::new(AtomicBool::new(false));
+        let fired2 = fired.clone();
+        let wd = Watchdog::start(
+            reg,
+            gauges.clone(),
+            Duration::from_millis(40),
+            move |_| fired2.store(true, Ordering::SeqCst),
+        );
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_millis(250) {
+            beat.inc();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(wd.stall().is_none(), "no stall while the stage beats");
+        assert!(wd.stop().is_none());
+        assert!(!fired.load(Ordering::SeqCst));
+        assert_eq!(gauges.watchdog_stalls.get(), 0);
+    }
+
+    #[test]
+    fn watchdog_escalates_on_wedged_stage() {
+        let reg = HeartbeatRegistry::shared();
+        let busy = reg.register("learner");
+        let _wedged = reg.register("stacker"); // never bumped
+        let gauges = PipelineGauges::shared();
+        gauges.queue_depth.set(3);
+        let fired = Arc::new(AtomicBool::new(false));
+        let fired2 = fired.clone();
+        let wd = Watchdog::start(
+            reg,
+            gauges.clone(),
+            Duration::from_millis(30),
+            move |report| {
+                assert_eq!(report.stage, "stacker");
+                fired2.store(true, Ordering::SeqCst);
+            },
+        );
+        // keep one stage alive so silence is attributed to the other
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_secs(5) && !fired.load(Ordering::SeqCst) {
+            busy.inc();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(fired.load(Ordering::SeqCst), "escalation closure must fire");
+        let report = wd.stop().expect("stall recorded");
+        assert_eq!(report.stage, "stacker");
+        assert!(report.silent >= Duration::from_millis(60), "{report}");
+        assert!(report.diagnosis.contains("stacker"), "{report}");
+        assert!(report.diagnosis.contains("queue 3"), "gauges in diagnosis: {report}");
+        assert_eq!(gauges.watchdog_stalls.get(), 1);
+    }
+}

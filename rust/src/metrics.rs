@@ -133,8 +133,14 @@ impl Metrics {
 }
 
 /// CSV logger: one row per learner step (or per logging interval).
+///
+/// Rows stream into `<path>.tmp`; the final file appears atomically
+/// when the logger is dropped at end of run (temp + fsync + rename,
+/// DESIGN.md §Supervision).  A killed run leaves the honestly-named
+/// `.tmp` instead of a truncated curve at the final path; tail the
+/// `.tmp` to watch a live run.
 pub struct CurveLogger {
-    file: std::fs::File,
+    file: crate::util::fsio::AtomicFile,
 }
 
 pub const CURVE_HEADER: &str =
@@ -142,11 +148,9 @@ pub const CURVE_HEADER: &str =
 
 impl CurveLogger {
     pub fn create(path: &Path) -> anyhow::Result<CurveLogger> {
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        let mut file = std::fs::File::create(path)?;
+        let mut file = crate::util::fsio::AtomicFile::create(path)?;
         writeln!(file, "{CURVE_HEADER}")?;
+        file.flush()?;
         Ok(CurveLogger { file })
     }
 
@@ -245,6 +249,7 @@ mod tests {
         let dir = std::env::temp_dir().join("tb_metrics_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("curve.csv");
+        let _ = std::fs::remove_file(&path);
         let mut log = CurveLogger::create(&path).unwrap();
         let m = Metrics::new();
         m.add_frames(10);
@@ -252,6 +257,10 @@ mod tests {
             values: vec![1.0, 2.0, 3.0, 4.0, 0.9, 5.0],
         };
         log.log(1, &m.snapshot(), &stats).unwrap();
+        // rows stream into the .tmp sibling; the final path appears
+        // atomically when the logger is dropped
+        assert!(!path.exists(), "final path stays absent while logging");
+        drop(log);
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines.len(), 2);

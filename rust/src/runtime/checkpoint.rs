@@ -1,4 +1,4 @@
-//! Checkpointing: parameter snapshots to/from disk.
+//! Checkpointing: verified, crash-safe parameter snapshots.
 //!
 //! TorchBeast checkpoints `model.state_dict()` via torch.save; the
 //! analog here is the manifest-ordered leaf list in a simple binary
@@ -6,34 +6,94 @@
 //! cross-language contract — it is trivially readable from Python):
 //!
 //! ```text
-//! magic  "TBCK2\n"
+//! magic  "TBCK3\n"
 //! u32le  leaf count
 //! u64le  weight version (the monotone Weights counter at save time)
 //! per leaf:
 //!   u32le name_len ++ name utf8
 //!   u32le rank ++ rank * u64le dims
 //!   u32le elem_count ++ elem_count * f32le data
+//!   u64le blob hash   (FNV-1a-64/splitmix over name ++ dims ++ data)
+//! u64le file hash     (over count ++ version ++ every blob hash)
 //! ```
+//!
+//! The hash manifest makes corruption *detectable*: `load` recomputes
+//! every blob hash and fails with a typed [`CheckpointError`] naming
+//! the bad leaf; [`load_with_fallback`] then walks the retained
+//! generations (`<path>.1`, `<path>.2`, …, written by
+//! [`save_retained`]) to the newest intact snapshot.  Writes are
+//! crash-safe: temp file + fsync + atomic rename
+//! ([`crate::util::fsio::AtomicFile`]), so a crash mid-save leaves the
+//! previous checkpoint untouched (DESIGN.md §Supervision).
 //!
 //! `save`/`load` validate against the manifest (names, shapes, order),
 //! so loading a checkpoint into a mismatched artifact fails loudly.
-//! Legacy `TBCK1` files (no version field) still load, reporting
+//! Legacy files still load: `TBCK2` (version stamp, no hashes) loads
+//! unverified, and `TBCK1` (no version field) additionally reports
 //! weight version 0 — resume then restarts the version sequence, which
 //! is exactly what those checkpoints recorded.
 
-use std::io::{Read, Write};
-use std::path::Path;
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
 use super::manifest::Manifest;
 use super::ParamVecs;
+use crate::tb_warn;
+use crate::util::fsio::AtomicFile;
+use crate::util::hash::Fnv64;
 
 const MAGIC_V1: &[u8; 6] = b"TBCK1\n";
-const MAGIC: &[u8; 6] = b"TBCK2\n";
+const MAGIC_V2: &[u8; 6] = b"TBCK2\n";
+const MAGIC: &[u8; 6] = b"TBCK3\n";
+
+/// Typed corruption verdicts from the TBCK3 hash manifest; carried
+/// inside the `anyhow` chain so callers (and the fallback scan) can
+/// `downcast_ref::<CheckpointError>()` to tell *corruption* apart from
+/// e.g. a manifest mismatch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// A weight blob's stored hash does not match its bytes — the
+    /// error names the bad leaf.
+    CorruptBlob {
+        path: PathBuf,
+        leaf: String,
+        stored: u64,
+        computed: u64,
+    },
+    /// The file-level hash (header + blob-hash list) fails: header
+    /// corruption or truncation inside the trailing manifest.
+    CorruptFile { path: PathBuf, detail: String },
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::CorruptBlob {
+                path,
+                leaf,
+                stored,
+                computed,
+            } => write!(
+                f,
+                "checkpoint {} is corrupt: blob {leaf:?} hash mismatch \
+                 (stored {stored:#018x}, computed {computed:#018x})",
+                path.display()
+            ),
+            CheckpointError::CorruptFile { path, detail } => {
+                write!(f, "checkpoint {} is corrupt: {detail}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
 
 /// Write a parameter snapshot (manifest leaf order) stamped with the
-/// weight version it was published as.
+/// weight version it was published as.  The write is atomic: bytes go
+/// to `<path>.tmp` and are fsync'd + renamed over `path`, so a crash
+/// mid-save can never truncate an existing checkpoint.
 pub fn save(path: &Path, manifest: &Manifest, params: &ParamVecs, version: u64) -> Result<()> {
     anyhow::ensure!(
         params.len() == manifest.params.len(),
@@ -41,13 +101,13 @@ pub fn save(path: &Path, manifest: &Manifest, params: &ParamVecs, version: u64) 
         params.len(),
         manifest.params.len()
     );
-    if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let mut w = BufWriter::new(AtomicFile::create(path)?);
+    let mut file_hash = Fnv64::new();
     w.write_all(MAGIC)?;
     w.write_all(&(params.len() as u32).to_le_bytes())?;
     w.write_all(&version.to_le_bytes())?;
+    file_hash.update(&(params.len() as u32).to_le_bytes());
+    file_hash.update(&version.to_le_bytes());
     for (leaf, data) in manifest.params.iter().zip(params) {
         anyhow::ensure!(
             data.len() == leaf.elems(),
@@ -56,19 +116,64 @@ pub fn save(path: &Path, manifest: &Manifest, params: &ParamVecs, version: u64) 
             data.len(),
             leaf.elems()
         );
+        let mut blob_hash = Fnv64::new();
         w.write_all(&(leaf.name.len() as u32).to_le_bytes())?;
         w.write_all(leaf.name.as_bytes())?;
+        blob_hash.update(leaf.name.as_bytes());
         w.write_all(&(leaf.shape.len() as u32).to_le_bytes())?;
         for &d in &leaf.shape {
             w.write_all(&(d as u64).to_le_bytes())?;
+            blob_hash.update(&(d as u64).to_le_bytes());
         }
         w.write_all(&(data.len() as u32).to_le_bytes())?;
         for &x in data {
             w.write_all(&x.to_le_bytes())?;
+            blob_hash.update(&x.to_le_bytes());
         }
+        let digest = blob_hash.finish();
+        w.write_all(&digest.to_le_bytes())?;
+        file_hash.update(&digest.to_le_bytes());
     }
-    w.flush()?;
+    w.write_all(&file_hash.finish().to_le_bytes())?;
+    w.into_inner()
+        .map_err(|e| anyhow::anyhow!("flushing checkpoint: {e}"))?
+        .commit()
+        .with_context(|| format!("committing checkpoint {}", path.display()))?;
     Ok(())
+}
+
+/// Retained-generation path: `<path>.1` is the previous checkpoint,
+/// `<path>.2` the one before it, up to `--keep_checkpoints`.
+pub fn retained_path(path: &Path, generation: usize) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(format!(".{generation}"));
+    PathBuf::from(os)
+}
+
+/// [`save`], rotating up to `keep` previous checkpoints aside first
+/// (`path` → `path.1` → … → `path.keep`; the oldest generation is
+/// dropped).  `keep` 0 is plain `save` — no rotation, no extra I/O.
+///
+/// The rotation is plain renames, so at every instant each generation
+/// file is either absent or a complete checkpoint — combined with the
+/// atomic write of the new snapshot, a crash anywhere in this function
+/// loses at most the rotation's oldest generation.
+pub fn save_retained(
+    path: &Path,
+    manifest: &Manifest,
+    params: &ParamVecs,
+    version: u64,
+    keep: usize,
+) -> Result<()> {
+    if keep > 0 && path.exists() {
+        let _ = std::fs::remove_file(retained_path(path, keep));
+        for g in (1..keep).rev() {
+            let _ = std::fs::rename(retained_path(path, g), retained_path(path, g + 1));
+        }
+        std::fs::rename(path, retained_path(path, 1))
+            .with_context(|| format!("rotating {} aside", path.display()))?;
+    }
+    save(path, manifest, params, version)
 }
 
 fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
@@ -86,6 +191,12 @@ fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
 /// Load a snapshot and validate it against the manifest.  Returns the
 /// leaves plus the weight version recorded at save time (0 for legacy
 /// TBCK1 files, which predate the version stamp).
+///
+/// TBCK3 files are verified against their hash manifest: every blob
+/// hash is recomputed, and a mismatch fails with
+/// [`CheckpointError::CorruptBlob`] naming the bad leaf (downcastable
+/// from the returned error).  TBCK1/TBCK2 files predate the hashes
+/// and load unverified.
 pub fn load(path: &Path, manifest: &Manifest) -> Result<(ParamVecs, u64)> {
     let mut r = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
@@ -93,17 +204,21 @@ pub fn load(path: &Path, manifest: &Manifest) -> Result<(ParamVecs, u64)> {
     let mut magic = [0u8; 6];
     r.read_exact(&mut magic)?;
     anyhow::ensure!(
-        &magic == MAGIC || &magic == MAGIC_V1,
-        "not a TBCK1/TBCK2 checkpoint: {}",
+        &magic == MAGIC || &magic == MAGIC_V2 || &magic == MAGIC_V1,
+        "not a TBCK1/TBCK2/TBCK3 checkpoint: {}",
         path.display()
     );
+    let hashed = &magic == MAGIC;
     let count = read_u32(&mut r)? as usize;
     anyhow::ensure!(
         count == manifest.params.len(),
         "checkpoint has {count} leaves, manifest {}",
         manifest.params.len()
     );
-    let version = if &magic == MAGIC { read_u64(&mut r)? } else { 0 };
+    let version = if &magic == MAGIC_V1 { 0 } else { read_u64(&mut r)? };
+    let mut file_hash = Fnv64::new();
+    file_hash.update(&(count as u32).to_le_bytes());
+    file_hash.update(&version.to_le_bytes());
     let mut out = Vec::with_capacity(count);
     for leaf in &manifest.params {
         let name_len = read_u32(&mut r)? as usize;
@@ -133,9 +248,92 @@ pub fn load(path: &Path, manifest: &Manifest) -> Result<(ParamVecs, u64)> {
         for (i, chunk) in buf.chunks_exact(4).enumerate() {
             data[i] = f32::from_le_bytes(chunk.try_into().unwrap()); // tb-lint: allow(unwrap, chunks_exact(4) yields exactly 4-byte chunks)
         }
+        if hashed {
+            let mut blob_hash = Fnv64::new();
+            blob_hash.update(name.as_bytes());
+            for &d in &shape {
+                blob_hash.update(&(d as u64).to_le_bytes());
+            }
+            blob_hash.update(&buf);
+            let stored = read_u64(&mut r)
+                .with_context(|| format!("leaf {name}: blob hash truncated"))?;
+            let computed = blob_hash.finish();
+            if stored != computed {
+                return Err(anyhow::Error::new(CheckpointError::CorruptBlob {
+                    path: path.to_path_buf(),
+                    leaf: name,
+                    stored,
+                    computed,
+                }));
+            }
+            file_hash.update(&stored.to_le_bytes());
+        }
         out.push(data);
     }
+    if hashed {
+        let stored = read_u64(&mut r).context("file hash truncated")?;
+        let computed = file_hash.finish();
+        if stored != computed {
+            return Err(anyhow::Error::new(CheckpointError::CorruptFile {
+                path: path.to_path_buf(),
+                detail: format!(
+                    "file hash mismatch (stored {stored:#018x}, computed {computed:#018x})"
+                ),
+            }));
+        }
+    }
     Ok((out, version))
+}
+
+/// [`load`], falling back through the retained generations on failure:
+/// `path`, then `path.1`, `path.2`, … as long as generation files
+/// exist.  Returns the loaded snapshot plus the path it actually came
+/// from; every skipped (corrupt/unreadable) generation is logged.
+/// Errors only when no intact generation remains — with the *newest*
+/// generation's error as the cause, since that is the file the caller
+/// asked for.
+pub fn load_with_fallback(
+    path: &Path,
+    manifest: &Manifest,
+) -> Result<(ParamVecs, u64, PathBuf)> {
+    let mut first_err: Option<anyhow::Error> = None;
+    let mut candidate = path.to_path_buf();
+    let mut generation = 0usize;
+    loop {
+        match load(&candidate, manifest) {
+            Ok((params, version)) => {
+                if generation > 0 {
+                    tb_warn!(
+                        "checkpoint",
+                        "resumed from retained generation {} ({})",
+                        generation,
+                        candidate.display()
+                    );
+                }
+                return Ok((params, version, candidate));
+            }
+            Err(e) => {
+                tb_warn!(
+                    "checkpoint",
+                    "skipping {}: {e:#}",
+                    candidate.display()
+                );
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        generation += 1;
+        candidate = retained_path(path, generation);
+        if !candidate.exists() {
+            let e = first_err.unwrap(); // tb-lint: allow(unwrap, set on the first loop iteration, which always runs)
+            return Err(e.context(format!(
+                "no intact checkpoint among {} and {} retained generation(s)",
+                path.display(),
+                generation - 1
+            )));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -176,16 +374,24 @@ mod tests {
         }
     }
 
+    fn tiny_params() -> ParamVecs {
+        vec![vec![1.0, -2.0, 3.5], vec![0.0, 0.25, -0.5, 9.0]]
+    }
+
     #[test]
     fn roundtrip() {
         let m = tiny_manifest();
-        let params = vec![vec![1.0, -2.0, 3.5], vec![0.0, 0.25, -0.5, 9.0]];
+        let params = tiny_params();
         let dir = std::env::temp_dir().join("tb_ckpt_test");
         let path = dir.join("a.ckpt");
         save(&path, &m, &params, 17).unwrap();
         let (loaded, version) = load(&path, &m).unwrap();
         assert_eq!(loaded, params);
         assert_eq!(version, 17, "weight version survives the round trip");
+        assert!(
+            !crate::util::fsio::AtomicFile::tmp_path(&path).exists(),
+            "atomic save leaves no temp file behind"
+        );
     }
 
     #[test]
@@ -193,7 +399,7 @@ mod tests {
         // hand-write a TBCK1 file (the pre-version format) and check
         // it still loads, reporting version 0
         let m = tiny_manifest();
-        let params = vec![vec![1.0, -2.0, 3.5], vec![0.0, 0.25, -0.5, 9.0]];
+        let params = tiny_params();
         let dir = std::env::temp_dir().join("tb_ckpt_test_v1");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("legacy.ckpt");
@@ -216,6 +422,36 @@ mod tests {
         let (loaded, version) = load(&path, &m).unwrap();
         assert_eq!(loaded, params);
         assert_eq!(version, 0, "legacy files predate the version stamp");
+    }
+
+    #[test]
+    fn legacy_tbck2_loads_unverified() {
+        // hand-write a TBCK2 file (version stamp, no hash manifest)
+        let m = tiny_manifest();
+        let params = tiny_params();
+        let dir = std::env::temp_dir().join("tb_ckpt_test_v2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy2.ckpt");
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC_V2);
+        bytes.extend_from_slice(&(params.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&42u64.to_le_bytes());
+        for (leaf, data) in m.params.iter().zip(&params) {
+            bytes.extend_from_slice(&(leaf.name.len() as u32).to_le_bytes());
+            bytes.extend_from_slice(leaf.name.as_bytes());
+            bytes.extend_from_slice(&(leaf.shape.len() as u32).to_le_bytes());
+            for &d in &leaf.shape {
+                bytes.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            bytes.extend_from_slice(&(data.len() as u32).to_le_bytes());
+            for &x in data {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        std::fs::write(&path, bytes).unwrap();
+        let (loaded, version) = load(&path, &m).unwrap();
+        assert_eq!(loaded, params);
+        assert_eq!(version, 42, "TBCK2 version stamp still honored");
     }
 
     #[test]
@@ -255,5 +491,95 @@ mod tests {
     #[test]
     fn missing_file_errors() {
         assert!(load(Path::new("/nonexistent/x.ckpt"), &tiny_manifest()).is_err());
+    }
+
+    #[test]
+    fn bit_flip_in_blob_is_detected_and_named() {
+        let m = tiny_manifest();
+        let params = tiny_params();
+        let dir = std::env::temp_dir().join("tb_ckpt_test_flip");
+        let path = dir.join("flip.ckpt");
+        save(&path, &m, &params, 3).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // layout from the end: file hash (8) ++ leaf1 blob hash (8) ++
+        // leaf1 data (4 f32 = 16) just before it — flip a data bit
+        let n = bytes.len();
+        bytes[n - 8 - 8 - 4] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path, &m).unwrap_err();
+        match err.downcast_ref::<CheckpointError>() {
+            Some(CheckpointError::CorruptBlob { leaf, .. }) => {
+                assert_eq!(leaf, "conv/w", "the bad blob is named");
+            }
+            other => panic!("expected CorruptBlob, got {other:?}: {err:#}"),
+        }
+    }
+
+    #[test]
+    fn truncated_hash_manifest_is_detected() {
+        let m = tiny_manifest();
+        let params = tiny_params();
+        let dir = std::env::temp_dir().join("tb_ckpt_test_trunc");
+        let path = dir.join("trunc.ckpt");
+        save(&path, &m, &params, 3).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(load(&path, &m).is_err(), "truncated file must not load");
+    }
+
+    #[test]
+    fn retention_rotates_and_fallback_recovers() {
+        let m = tiny_manifest();
+        let dir = std::env::temp_dir().join("tb_ckpt_test_retain");
+        let path = dir.join("r.ckpt");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(retained_path(&path, 1));
+        let _ = std::fs::remove_file(retained_path(&path, 2));
+        let gen = |v: f32| vec![vec![v; 3], vec![v; 4]];
+        save_retained(&path, &m, &gen(1.0), 1, 2).unwrap();
+        save_retained(&path, &m, &gen(2.0), 2, 2).unwrap();
+        save_retained(&path, &m, &gen(3.0), 3, 2).unwrap();
+        // generations: path = v3, path.1 = v2, path.2 = v1
+        assert_eq!(load(&path, &m).unwrap().1, 3);
+        assert_eq!(load(&retained_path(&path, 1), &m).unwrap().1, 2);
+        assert_eq!(load(&retained_path(&path, 2), &m).unwrap().1, 1);
+        save_retained(&path, &m, &gen(4.0), 4, 2).unwrap();
+        assert_eq!(load(&retained_path(&path, 2), &m).unwrap().1, 2, "oldest dropped");
+
+        // corrupt the newest: fallback lands on generation 1
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 8 - 8 - 4] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let (params, version, used) = load_with_fallback(&path, &m).unwrap();
+        assert_eq!(version, 3);
+        assert_eq!(params, gen(3.0));
+        assert_eq!(used, retained_path(&path, 1));
+
+        // corrupt every generation: the newest generation's typed
+        // error surfaces as the cause
+        for p in [&path, &retained_path(&path, 1), &retained_path(&path, 2)] {
+            let mut b = std::fs::read(p).unwrap();
+            let n = b.len();
+            b[n - 8 - 8 - 4] ^= 0x01;
+            std::fs::write(p, &b).unwrap();
+        }
+        let err = load_with_fallback(&path, &m).unwrap_err();
+        assert!(
+            err.chain().any(|c| c.downcast_ref::<CheckpointError>().is_some()),
+            "typed corruption error must survive the fallback scan: {err:#}"
+        );
+    }
+
+    #[test]
+    fn keep_zero_is_plain_save() {
+        let m = tiny_manifest();
+        let dir = std::env::temp_dir().join("tb_ckpt_test_keep0");
+        let path = dir.join("k0.ckpt");
+        let _ = std::fs::remove_file(retained_path(&path, 1));
+        save_retained(&path, &m, &tiny_params(), 1, 0).unwrap();
+        save_retained(&path, &m, &tiny_params(), 2, 0).unwrap();
+        assert!(!retained_path(&path, 1).exists(), "keep 0 rotates nothing");
+        assert_eq!(load(&path, &m).unwrap().1, 2);
     }
 }

@@ -1037,6 +1037,7 @@ pub fn policy_server_main(args: &[String]) -> anyhow::Result<()> {
             gauges.clone(),
             path,
             Duration::from_millis(cfg.gauge_sample_ms),
+            crate::telemetry::gauges::Counter::new(),
         )?),
         None => None,
     };

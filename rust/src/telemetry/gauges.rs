@@ -45,12 +45,16 @@ impl Counter {
         Counter::default()
     }
 
+    /// One relaxed atomic add — doubles as the watchdog heartbeat
+    /// bump inside the allocation-free actor/stacker/learner loops.
     #[inline]
+    // tb-lint: no-alloc
     pub fn inc(&self) {
         self.0.fetch_add(1, Ordering::Relaxed);
     }
 
     #[inline]
+    // tb-lint: no-alloc
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
@@ -227,6 +231,19 @@ pub struct PipelineGauges {
     /// [`snapshot`](PipelineGauges::snapshot)).  Zero-sample while no
     /// policy server runs, so classic report lines stay unchanged.
     pub serve_latency: LatencyRing,
+    /// Supervisor: actor-thread panics caught by the respawn loop
+    /// (every panic counts, whether or not a restart followed).
+    pub actor_panics: Counter,
+    /// Supervisor: actor respawns performed under the
+    /// `--actor_restarts` budget.
+    pub actor_restarts: Counter,
+    /// Supervisor: actors permanently lost (restart budget exhausted,
+    /// or env rebuild failed).  Nonzero means the run is degraded —
+    /// fewer actors feed the learner than the config asked for.
+    pub actors_lost: Counter,
+    /// Watchdog: hard pipeline stalls escalated to emergency shutdown
+    /// (0 or 1 in practice; the watchdog fires once and exits).
+    pub watchdog_stalls: Counter,
 }
 
 impl PipelineGauges {
@@ -268,6 +285,10 @@ impl PipelineGauges {
             serve_busy: self.serve_busy.get(),
             serve_p50_us: latency.p50_us,
             serve_p99_us: latency.p99_us,
+            actor_panics: self.actor_panics.get(),
+            actor_restarts: self.actor_restarts.get(),
+            actors_lost: self.actors_lost.get(),
+            watchdog_stalls: self.watchdog_stalls.get(),
         }
     }
 }
@@ -305,6 +326,14 @@ pub struct GaugesSnapshot {
     pub serve_p50_us: u64,
     /// Served-request latency p99 over the ring window, microseconds.
     pub serve_p99_us: u64,
+    /// Actor panics caught by the supervisor's respawn loop.
+    pub actor_panics: u64,
+    /// Actor respawns performed under the `--actor_restarts` budget.
+    pub actor_restarts: u64,
+    /// Actors permanently lost (restart budget exhausted).
+    pub actors_lost: u64,
+    /// Hard pipeline stalls the watchdog escalated on.
+    pub watchdog_stalls: u64,
 }
 
 impl fmt::Display for GaugesSnapshot {
@@ -362,6 +391,19 @@ impl fmt::Display for GaugesSnapshot {
                 " served {} (busy {}) p50 {}µs p99 {}µs",
                 self.serve_requests, self.serve_busy, self.serve_p50_us, self.serve_p99_us
             )?;
+        }
+        // supervision: quiet on healthy runs — these only print after
+        // an actor actually panicked or the watchdog escalated, so a
+        // degraded run is loud in every report line
+        if self.actor_panics > 0 || self.actor_restarts > 0 || self.actors_lost > 0 {
+            write!(
+                f,
+                " actor-panics {} (restarts {} lost {})",
+                self.actor_panics, self.actor_restarts, self.actors_lost
+            )?;
+        }
+        if self.watchdog_stalls > 0 {
+            write!(f, " stalls {}", self.watchdog_stalls)?;
         }
         Ok(())
     }
@@ -482,6 +524,18 @@ mod tests {
         s.serve_p99_us = 900;
         let line = s.to_string();
         assert!(line.contains("served 100 (busy 4) p50 250µs p99 900µs"), "{line}");
+        // supervision stays quiet until an actor panics or a stall fires
+        assert!(!line.contains("actor-panics"), "{line}");
+        assert!(!line.contains("stalls"), "{line}");
+        s.actor_panics = 2;
+        s.actor_restarts = 1;
+        s.actors_lost = 1;
+        let line = s.to_string();
+        assert!(line.contains("actor-panics 2 (restarts 1 lost 1)"), "{line}");
+        assert!(!line.contains("stalls"), "{line}");
+        s.watchdog_stalls = 1;
+        let line = s.to_string();
+        assert!(line.contains("stalls 1"), "{line}");
     }
 
     #[test]

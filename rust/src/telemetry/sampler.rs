@@ -8,6 +8,14 @@
 //! touches the hot path), and appends one CSV row.  The driver starts
 //! one when `--gauge_log_path` is set and stops it before shutdown
 //! tears the pipeline down.
+//!
+//! Rows stream into `<path>.tmp` and the final file appears atomically
+//! when the sampler stops (temp + fsync + rename, DESIGN.md
+//! §Supervision) — a killed run leaves the honestly-named `.tmp`, not
+//! a silently truncated CSV at the final path.  Tail the `.tmp` to
+//! watch a live run.  The driver's emergency-shutdown path (watchdog
+//! stall, learner-shard failure) runs `stop()` before it returns, so
+//! even an aborted run publishes the series it recorded.
 
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -15,17 +23,19 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::telemetry::gauges::PipelineGauges;
+use crate::telemetry::gauges::{Counter, PipelineGauges};
+use crate::util::fsio::AtomicFile;
 
 /// CSV header of the gauge time series (mirrors
 /// [`crate::telemetry::gauges::GaugesSnapshot`] field by field).
 pub const GAUGE_CURVE_HEADER: &str = "elapsed_s,pool_free,pool_rented,pool_rent_waits,\
 queue_depth,batches_ready,slots_in_use,slot_waits,env_streams,env_steps,env_reconnects,\
 replay_size,replay_sampled,replay_evicted,lag_count,lag_sum,lag_max,\
-serve_requests,serve_busy,serve_p50_us,serve_p99_us";
+serve_requests,serve_busy,serve_p50_us,serve_p99_us,\
+actor_panics,actor_restarts,actors_lost,watchdog_stalls";
 
 /// Handle to a running gauge sampler; [`stop`](GaugeSampler::stop) (or
-/// drop) joins the thread and flushes the file.
+/// drop) joins the thread and publishes the file at its final path.
 pub struct GaugeSampler {
     stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<u64>>,
@@ -33,23 +43,22 @@ pub struct GaugeSampler {
 
 impl GaugeSampler {
     /// Start sampling `gauges` into a CSV at `path` every `period`
-    /// (floored at 1 ms).  The file is created (parents included) and
-    /// the header written before this returns, so a sampler that never
-    /// fires still leaves a parseable log.
+    /// (floored at 1 ms), bumping `heartbeat` once per recorded row so
+    /// the watchdog sees the sampler itself as a live stage.  Rows
+    /// stream into `<path>.tmp`; the final file appears (atomically)
+    /// when the sampler stops.  A sampler that never fires still
+    /// publishes a parseable header-only log.
     pub fn start(
         gauges: Arc<PipelineGauges>,
         path: &Path,
         period: Duration,
+        heartbeat: Counter,
     ) -> anyhow::Result<GaugeSampler> {
         use std::io::Write;
 
-        if let Some(parent) = path.parent() {
-            if !parent.as_os_str().is_empty() {
-                std::fs::create_dir_all(parent)?;
-            }
-        }
-        let mut file = std::fs::File::create(path)?;
+        let mut file = AtomicFile::create(path)?;
         writeln!(file, "{GAUGE_CURVE_HEADER}")?;
+        file.flush()?;
         let period = period.max(Duration::from_millis(1));
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
@@ -80,7 +89,7 @@ impl GaugeSampler {
                     let s = gauges.snapshot();
                     let ok = writeln!(
                         file,
-                        "{:.3},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                        "{:.3},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                         t0.elapsed().as_secs_f64(),
                         s.pool_free,
                         s.pool_rented,
@@ -102,14 +111,22 @@ impl GaugeSampler {
                         s.serve_busy,
                         s.serve_p50_us,
                         s.serve_p99_us,
+                        s.actor_panics,
+                        s.actor_restarts,
+                        s.actors_lost,
+                        s.watchdog_stalls,
                     )
                     .is_ok();
                     if !ok {
                         break; // disk gone: stop sampling, keep training
                     }
+                    let _ = file.flush();
+                    heartbeat.inc();
                     rows += 1;
                 }
-                let _ = file.flush();
+                // publish the series at its final path (temp + fsync +
+                // rename); on error the .tmp stays behind with the rows
+                let _ = file.commit();
                 rows
             })?;
         Ok(GaugeSampler {
@@ -119,6 +136,7 @@ impl GaugeSampler {
     }
 
     /// Stop the sampler and return the number of rows it recorded.
+    /// The CSV is at its final path once this returns.
     pub fn stop(mut self) -> u64 {
         self.stop.store(true, Ordering::Relaxed);
         match self.handle.take() {
@@ -146,16 +164,22 @@ mod tests {
         let dir = std::env::temp_dir().join("tb_gauge_sampler_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("gauges.csv");
+        let _ = std::fs::remove_file(&path);
+        let live = AtomicFile::tmp_path(&path);
         let g = PipelineGauges::shared();
         g.pool_capacity.set(8);
         g.pool_free.set(5);
         g.queue_depth.set(2);
-        let sampler = GaugeSampler::start(g.clone(), &path, Duration::from_millis(5)).unwrap();
+        let beat = Counter::new();
+        let sampler =
+            GaugeSampler::start(g.clone(), &path, Duration::from_millis(5), beat.clone()).unwrap();
         // poll (don't fixed-sleep: the sampler thread may be scheduled
         // late on a loaded machine) until the first regime is on disk,
-        // then flip occupancy and wait for the second regime too
+        // then flip occupancy and wait for the second regime too.
+        // Mid-run the rows live in the `.tmp` sibling — the final path
+        // must stay absent until stop() publishes it.
         let rows_with = |col1: &str| {
-            std::fs::read_to_string(&path)
+            std::fs::read_to_string(&live)
                 .unwrap()
                 .lines()
                 .skip(1)
@@ -168,6 +192,7 @@ mod tests {
             }
             std::thread::sleep(Duration::from_millis(1));
         }
+        assert!(!path.exists(), "final path must stay absent mid-run");
         g.pool_free.set(1);
         for _ in 0..5000 {
             if rows_with("1") >= 1 {
@@ -177,7 +202,10 @@ mod tests {
         }
         let rows = sampler.stop();
         assert!(rows >= 2, "sampler recorded only {rows} rows");
+        assert_eq!(beat.get(), rows, "one heartbeat bump per recorded row");
 
+        // stop() published the series atomically at the final path
+        assert!(path.exists() && !live.exists(), "temp renamed into place");
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<&str> = text.lines().collect();
         assert_eq!(lines[0], GAUGE_CURVE_HEADER);
@@ -207,7 +235,8 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("gauges_empty.csv");
         let g = PipelineGauges::shared();
-        let sampler = GaugeSampler::start(g, &path, Duration::from_secs(3600)).unwrap();
+        let sampler =
+            GaugeSampler::start(g, &path, Duration::from_secs(3600), Counter::new()).unwrap();
         assert_eq!(sampler.stop(), 0);
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 1, "header only");

@@ -1,0 +1,174 @@
+//! Crash-safe file writes: temp file + fsync + atomic rename.
+//!
+//! Every run artifact the trainer leaves behind — checkpoints, the
+//! training curve CSV, the gauge time series — used to be written in
+//! place with `File::create`, so a crash mid-write left a truncated
+//! file *at the final path*, indistinguishable from a complete one.
+//! [`AtomicFile`] routes all of them through the standard recipe:
+//! write to `<path>.tmp`, fsync, rename over `<path>`, fsync the
+//! parent directory (best effort).  A killed run leaves either the
+//! previous intact file or an honestly-named `.tmp` — never a
+//! truncated artifact at the final path (DESIGN.md §Supervision).
+//!
+//! Streaming writers (CSV loggers) keep appending to the `.tmp` file
+//! for the whole run and commit on close; tail the `.tmp` to watch a
+//! live run.
+
+use std::fs::File;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+/// A file that only appears at its final path once fully written.
+///
+/// Write through the [`Write`] impl, then call
+/// [`commit`](AtomicFile::commit).  Dropping an uncommitted
+/// `AtomicFile` commits best-effort (so loggers that are simply
+/// dropped at end of run still publish), but the explicit call is the
+/// only way to observe rename errors.
+pub struct AtomicFile {
+    path: PathBuf,
+    tmp: PathBuf,
+    file: Option<File>,
+}
+
+impl AtomicFile {
+    /// The in-progress sibling `create` writes to: `<path>.tmp`
+    /// (suffix appended, not substituted, so `a.ckpt` → `a.ckpt.tmp`).
+    pub fn tmp_path(path: &Path) -> PathBuf {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(".tmp");
+        PathBuf::from(os)
+    }
+
+    /// Open `<path>.tmp` for writing (parent directories created).
+    /// Nothing appears at `path` until [`commit`](AtomicFile::commit).
+    pub fn create(path: &Path) -> io::Result<AtomicFile> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let tmp = AtomicFile::tmp_path(path);
+        let file = File::create(&tmp)?;
+        Ok(AtomicFile {
+            path: path.to_path_buf(),
+            tmp,
+            file: Some(file),
+        })
+    }
+
+    /// Final destination path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Flush + fsync the temp file, rename it over the final path, and
+    /// fsync the parent directory (best effort — the rename itself is
+    /// the atomicity guarantee; the directory sync only narrows the
+    /// window in which a power cut could lose the *rename*).
+    pub fn commit(mut self) -> io::Result<()> {
+        self.commit_inner()
+    }
+
+    fn commit_inner(&mut self) -> io::Result<()> {
+        let Some(mut file) = self.file.take() else {
+            return Ok(()); // already committed
+        };
+        file.flush()?;
+        file.sync_all()?;
+        drop(file);
+        std::fs::rename(&self.tmp, &self.path)?;
+        if let Some(parent) = self.path.parent() {
+            if !parent.as_os_str().is_empty() {
+                if let Ok(dir) = File::open(parent) {
+                    let _ = dir.sync_all();
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Write for AtomicFile {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self.file.as_mut() {
+            Some(f) => f.write(buf),
+            None => Err(io::Error::other("write after commit")),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self.file.as_mut() {
+            Some(f) => f.flush(),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for AtomicFile {
+    fn drop(&mut self) {
+        let _ = self.commit_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tb_fsio_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn nothing_at_final_path_until_commit() {
+        let dir = tmp_dir("commit");
+        let path = dir.join("out.csv");
+        let _ = std::fs::remove_file(&path);
+        let mut f = AtomicFile::create(&path).unwrap();
+        writeln!(f, "header").unwrap();
+        writeln!(f, "row").unwrap();
+        assert!(!path.exists(), "final path must stay absent mid-write");
+        assert!(AtomicFile::tmp_path(&path).exists(), "temp carries the bytes");
+        f.commit().unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "header\nrow\n");
+        assert!(!AtomicFile::tmp_path(&path).exists(), "temp renamed away");
+    }
+
+    #[test]
+    fn commit_replaces_previous_content_atomically() {
+        let dir = tmp_dir("replace");
+        let path = dir.join("out.bin");
+        std::fs::write(&path, b"old intact artifact").unwrap();
+        let mut f = AtomicFile::create(&path).unwrap();
+        f.write_all(b"new").unwrap();
+        // crash window: the old artifact is still fully intact
+        assert_eq!(std::fs::read(&path).unwrap(), b"old intact artifact");
+        f.commit().unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"new");
+    }
+
+    #[test]
+    fn drop_commits_best_effort() {
+        let dir = tmp_dir("drop");
+        let path = dir.join("dropped.csv");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut f = AtomicFile::create(&path).unwrap();
+            writeln!(f, "published by drop").unwrap();
+        }
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            "published by drop\n"
+        );
+    }
+
+    #[test]
+    fn tmp_path_appends_suffix() {
+        assert_eq!(
+            AtomicFile::tmp_path(Path::new("runs/a.ckpt")),
+            Path::new("runs/a.ckpt.tmp")
+        );
+    }
+}

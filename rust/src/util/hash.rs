@@ -1,0 +1,109 @@
+//! In-tree 64-bit content hashing (DESIGN.md §Substitutions).
+//!
+//! The offline build has no crypto/hashing crates, so checkpoint
+//! integrity (DESIGN.md §Supervision) uses FNV-1a-64 with a
+//! splitmix64 finalizer: FNV's byte mixing is cheap and streaming,
+//! the finalizer avalanches the state so single-bit blob corruption
+//! flips ~half the digest bits.  This is an *integrity* hash (detects
+//! disk/partial-write corruption), not a cryptographic one.
+
+use crate::util::rng::splitmix64;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Streaming FNV-1a-64 hasher with a splitmix64-avalanched digest.
+///
+/// # Examples
+///
+/// ```
+/// use torchbeast::util::hash::Fnv64;
+///
+/// let mut h = Fnv64::new();
+/// h.update(b"hello");
+/// let a = h.finish();
+/// let mut h2 = Fnv64::new();
+/// h2.update(b"hel");
+/// h2.update(b"lo");
+/// assert_eq!(a, h2.finish(), "streaming splits do not change the digest");
+/// ```
+#[derive(Debug, Clone)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64 { state: FNV_OFFSET }
+    }
+
+    /// Absorb bytes.  Runs on the checkpoint-write hot path (once per
+    /// weight blob chunk), so it must stay allocation-free.
+    #[inline]
+    // tb-lint: no-alloc
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.state;
+        for &b in bytes {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+        self.state = h;
+    }
+
+    /// Digest of everything absorbed so far (the hasher stays usable).
+    #[inline]
+    // tb-lint: no-alloc
+    pub fn finish(&self) -> u64 {
+        splitmix64(self.state)
+    }
+}
+
+/// One-shot convenience over [`Fnv64`].
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_is_stable_and_input_sensitive() {
+        let a = fnv64(b"TBCK3 blob");
+        assert_eq!(a, fnv64(b"TBCK3 blob"), "deterministic");
+        assert_ne!(a, fnv64(b"TBCK3 blob!"), "extra byte changes digest");
+        assert_ne!(a, fnv64(b"TBCK3 bloc"), "single-byte flip changes digest");
+        assert_ne!(fnv64(b""), fnv64(&[0]), "empty vs one zero byte differ");
+    }
+
+    #[test]
+    fn single_bit_flips_avalanche() {
+        // the finalizer must spread a 1-bit input difference over the
+        // digest: every flipped-bit digest differs in many bit positions
+        let base = fnv64(&[0u8; 32]);
+        for byte in 0..32 {
+            let mut buf = [0u8; 32];
+            buf[byte] = 1;
+            let flipped = fnv64(&buf);
+            let dist = (base ^ flipped).count_ones();
+            assert!(dist >= 16, "weak avalanche: byte {byte} distance {dist}");
+        }
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data: Vec<u8> = (0..=255u8).collect();
+        let mut h = Fnv64::new();
+        for chunk in data.chunks(7) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finish(), fnv64(&data));
+    }
+}

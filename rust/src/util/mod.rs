@@ -5,6 +5,8 @@
 //! §Substitutions).
 
 pub mod counting_alloc;
+pub mod fsio;
+pub mod hash;
 pub mod json;
 pub mod rng;
 pub mod stats;

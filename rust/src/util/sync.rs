@@ -27,6 +27,7 @@
 //! | 40   | `batching_queue` `state`          |
 //! | 50   | `learner_pool` `sync`             |
 //! | 60   | `stats.latency_ring` scratch      |
+//! | 70   | `supervisor` heartbeat registry   |
 
 use std::ops::{Deref, DerefMut};
 use std::sync::{Condvar, Mutex, MutexGuard};

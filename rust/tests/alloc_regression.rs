@@ -24,6 +24,7 @@ use torchbeast::env::wrappers::{wrapped_spec, WrapperCfg};
 use torchbeast::env::{self, Environment};
 use torchbeast::metrics::Metrics;
 use torchbeast::rpc::{EnvServer, RemoteEnv};
+use torchbeast::telemetry::gauges::Counter;
 use torchbeast::runtime::manifest::{DType, LeafSpec};
 use torchbeast::runtime::{LearnerBatch, Manifest};
 use torchbeast::util::counting_alloc::{allocations, CountingAllocator};
@@ -123,6 +124,7 @@ fn actor_to_learner_path_is_allocation_free_at_steady_state() {
             seed: 5,
             first_id: 0,
             policy_version: VersionHandle::default(),
+            heartbeat: Counter::default(),
         },
     );
 
@@ -163,10 +165,13 @@ fn actor_to_learner_path_is_allocation_free_at_steady_state() {
     rx.close();
     buffers.close();
     client.shutdown_for_tests();
-    let reports = pool.join();
+    let exits = pool.join();
     infer_thread.join().unwrap();
-    assert_eq!(reports.len(), ACTORS);
-    let produced: u64 = reports.iter().map(|r| r.rollouts).sum();
+    assert_eq!(exits.len(), ACTORS);
+    let produced: u64 = exits
+        .iter()
+        .map(|e| e.report().expect("actor completed").rollouts)
+        .sum();
     assert!(produced as usize >= WARMUP_BATCHES + MEASURE_BATCHES);
 }
 
@@ -227,6 +232,7 @@ fn poly_actor_path_is_allocation_free_at_steady_state() {
             seed: 11,
             first_id: 0,
             policy_version: VersionHandle::default(),
+            heartbeat: Counter::default(),
         },
     );
 
@@ -264,11 +270,14 @@ fn poly_actor_path_is_allocation_free_at_steady_state() {
     rx.close();
     buffers.close();
     client.shutdown_for_tests();
-    let reports = pool.join();
+    let exits = pool.join();
     infer_thread.join().unwrap();
     server.shutdown();
-    assert_eq!(reports.len(), ACTORS);
-    let produced: u64 = reports.iter().map(|r| r.rollouts).sum();
+    assert_eq!(exits.len(), ACTORS);
+    let produced: u64 = exits
+        .iter()
+        .map(|e| e.report().expect("actor completed").rollouts)
+        .sum();
     assert!(produced as usize >= WARMUP_BATCHES + MEASURE_BATCHES);
     assert!(
         server
@@ -600,6 +609,7 @@ fn rollout_handoff_moves_the_buffer_not_a_copy() {
             seed: 3,
             first_id: 0,
             policy_version: VersionHandle::default(),
+            heartbeat: Counter::default(),
         },
     );
     for _ in 0..4 {

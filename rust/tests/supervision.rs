@@ -1,0 +1,586 @@
+//! Fault-injection suite for the run-supervision layer (DESIGN.md
+//! §Supervision): actor restart with backoff, pipeline watchdog, and
+//! verified crash-safe checkpoints.
+//!
+//! All tests are component-level (dynamic batcher + stub inference
+//! thread + batching queue — no XLA artifacts), mirroring the
+//! actor-pool harness: faults are injected through `Environment`
+//! wrappers that panic on cue, and the assertions pin the supervision
+//! *contracts*:
+//!
+//! 1. a respawned actor (panic before its first shipped rollout)
+//!    reproduces the unsupervised run bit-for-bit — same env seed,
+//!    same sampling-RNG seed, same version handle;
+//! 2. budget exhaustion degrades gracefully: survivors keep producing,
+//!    every exit is typed, and the death of the *last* actor closes
+//!    the learner queue instead of deadlocking the run;
+//! 3. a wedged stage trips the watchdog, whose diagnosis names the
+//!    silent stage, and the escalation path writes a loadable
+//!    emergency checkpoint while unblocking the pipeline;
+//! 4. a bit-flipped checkpoint blob is rejected *by name* and resume
+//!    falls back to the newest intact retained generation.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use torchbeast::coordinator::actor_pool::{ActorConfig, ActorExit, ActorPool};
+use torchbeast::coordinator::batching_queue::batching_queue;
+use torchbeast::coordinator::dynamic_batcher::{dynamic_batcher, BatcherConfig, InferenceClient};
+use torchbeast::coordinator::rollout::{Rollout, RolloutPool};
+use torchbeast::coordinator::supervisor::{
+    EnvFactory, HeartbeatRegistry, SupervisedActors, SupervisorConfig, Watchdog,
+};
+use torchbeast::coordinator::weights::VersionHandle;
+use torchbeast::env::{self, Environment, EnvSpec, Step};
+use torchbeast::metrics::Metrics;
+use torchbeast::runtime::checkpoint::{self, CheckpointError};
+use torchbeast::runtime::manifest::{DType, LeafSpec};
+use torchbeast::runtime::{Manifest, ParamVecs};
+use torchbeast::telemetry::gauges::{Counter, PipelineGauges};
+
+const T: usize = 5;
+const ENV_SEED: u64 = 123;
+const RNG_SEED: u64 = 7;
+
+// ---------------------------------------------------------------------------
+// fault-injecting environments
+// ---------------------------------------------------------------------------
+
+/// Delegating wrapper that panics on its `panic_at`-th step while the
+/// shared fuse is armed (the panic disarms it, so the respawned env —
+/// rebuilt around the same fuse — runs clean).  With the fuse disarmed
+/// from the start it is a transparent pass-through, so the supervised
+/// run's trajectory is comparable to an unsupervised one.
+struct PanicOnce {
+    inner: Box<dyn Environment>,
+    fuse: Arc<AtomicBool>,
+    panic_at: u32,
+    steps: u32,
+}
+
+impl PanicOnce {
+    fn new(inner: Box<dyn Environment>, fuse: Arc<AtomicBool>, panic_at: u32) -> PanicOnce {
+        PanicOnce {
+            inner,
+            fuse,
+            panic_at,
+            steps: 0,
+        }
+    }
+}
+
+impl Environment for PanicOnce {
+    fn spec(&self) -> &EnvSpec {
+        self.inner.spec()
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.inner.reset(obs)
+    }
+
+    fn step(&mut self, action: usize, obs: &mut [f32]) -> Step {
+        self.steps += 1;
+        if self.steps >= self.panic_at && self.fuse.swap(false, Ordering::SeqCst) {
+            panic!("injected actor fault at step {}", self.steps);
+        }
+        self.inner.step(action, obs)
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.inner.reseed(seed)
+    }
+}
+
+/// An env that panics on every step of every life: exhausts any
+/// restart budget.
+struct AlwaysPanic {
+    inner: Box<dyn Environment>,
+}
+
+impl Environment for AlwaysPanic {
+    fn spec(&self) -> &EnvSpec {
+        self.inner.spec()
+    }
+
+    fn reset(&mut self, obs: &mut [f32]) {
+        self.inner.reset(obs)
+    }
+
+    fn step(&mut self, _action: usize, _obs: &mut [f32]) -> Step {
+        panic!("injected permanent fault");
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.inner.reseed(seed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// harness
+// ---------------------------------------------------------------------------
+
+/// Obs-keyed deterministic inference stub (position-weighted pixel
+/// sum → one-hot logits): the sampled action depends on the
+/// observation contents, so any divergence between a restarted actor
+/// and the reference run changes trajectories and trips the
+/// bit-identity assertions.
+fn obs_keyed_inference(
+    stream: torchbeast::coordinator::dynamic_batcher::BatchStream,
+    obs_len: usize,
+    num_actions: usize,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        while let Some(batch) = stream.next_batch() {
+            let n = batch.len();
+            let obs = batch.obs_flat();
+            let mut logits = vec![0.0f32; n * num_actions];
+            for j in 0..n {
+                let row = &obs[j * obs_len..(j + 1) * obs_len];
+                let hot = row
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| (i + 1) * (v as usize))
+                    .sum::<usize>()
+                    % num_actions;
+                logits[j * num_actions + hot] = 2.0;
+            }
+            batch
+                .respond(&logits, &vec![0.0; n], num_actions)
+                .unwrap();
+        }
+    })
+}
+
+/// Everything one pipeline run needs, pre-wired for `n_actors`.
+struct Rig {
+    client: InferenceClient,
+    tx: torchbeast::coordinator::batching_queue::QueueSender<Rollout>,
+    rx: torchbeast::coordinator::batching_queue::QueueReceiver<Rollout>,
+    buffers: RolloutPool,
+    metrics: Arc<Metrics>,
+    gauges: Arc<PipelineGauges>,
+    infer: std::thread::JoinHandle<()>,
+    spec: EnvSpec,
+}
+
+fn rig(n_actors: usize) -> Rig {
+    let spec = env::spec_of("catch").unwrap();
+    let (client, stream) = dynamic_batcher(BatcherConfig::new(
+        n_actors,
+        Duration::from_micros(500),
+        spec.obs_len(),
+        spec.num_actions,
+    ));
+    let infer = obs_keyed_inference(stream, spec.obs_len(), spec.num_actions);
+    let (tx, rx) = batching_queue::<Rollout>(8);
+    let gauges = PipelineGauges::shared();
+    let buffers = RolloutPool::with_gauges(
+        n_actors + 9,
+        T,
+        spec.obs_len(),
+        spec.num_actions,
+        gauges.clone(),
+    );
+    Rig {
+        client,
+        tx,
+        rx,
+        buffers,
+        metrics: Metrics::shared(),
+        gauges,
+        infer,
+        spec,
+    }
+}
+
+fn actor_cfg(spec: &EnvSpec) -> ActorConfig {
+    ActorConfig {
+        unroll_length: T,
+        num_actions: spec.num_actions,
+        obs_len: spec.obs_len(),
+        seed: RNG_SEED,
+        first_id: 0,
+        policy_version: VersionHandle::default(),
+        heartbeat: Counter::default(),
+    }
+}
+
+/// The bits of a rollout that define the trajectory.
+type Captured = (Vec<f32>, Vec<i32>, Vec<f32>, Vec<f32>);
+
+fn capture(r: &Rollout) -> Captured {
+    (
+        r.observations.clone(),
+        r.actions.clone(),
+        r.rewards.clone(),
+        r.dones.clone(),
+    )
+}
+
+/// Drain `n` rollouts (recycling buffers like the stacker does), then
+/// shut the rig down and return the captures plus the typed exits.
+fn collect_and_shutdown(
+    rig: Rig,
+    n: usize,
+    join: impl FnOnce() -> Vec<ActorExit>,
+) -> (Vec<Captured>, Vec<ActorExit>) {
+    let mut got = Vec::with_capacity(n);
+    while got.len() < n {
+        let rollouts = rig.rx.recv_batch(1).expect("pipeline died early");
+        for r in &rollouts {
+            got.push(capture(r));
+        }
+        for r in rollouts {
+            rig.buffers.recycle(r);
+        }
+    }
+    rig.rx.close();
+    rig.client.shutdown_for_tests();
+    rig.buffers.close();
+    let exits = join();
+    rig.infer.join().unwrap();
+    (got, exits)
+}
+
+// ---------------------------------------------------------------------------
+// 1. respawn determinism
+// ---------------------------------------------------------------------------
+
+/// A supervised actor that panics *before shipping its first rollout*
+/// and is respawned must reproduce the unsupervised run bit-for-bit:
+/// the factory rebuilds the same env (name, seed, wrappers), and the
+/// actor loop restarts its sampling RNG from the same derived seed.
+#[test]
+fn respawned_actor_is_bit_identical_to_unsupervised_run() {
+    const ROLLOUTS: usize = 4;
+
+    // reference: classic pool, no fault
+    let reference = {
+        let rg = rig(1);
+        let envs: Vec<Box<dyn Environment>> = vec![env::make_env("catch", ENV_SEED).unwrap()];
+        let pool = ActorPool::spawn(
+            envs,
+            rg.client.clone(),
+            rg.tx.clone(),
+            rg.buffers.clone(),
+            rg.metrics.clone(),
+            actor_cfg(&rg.spec),
+        );
+        let (got, exits) = collect_and_shutdown(rg, ROLLOUTS, move || pool.join());
+        assert!(exits[0].report().is_some(), "reference run must not panic");
+        got
+    };
+
+    // supervised: panic injected at step 3 of the first life (< T, so
+    // nothing has shipped), restart budget 1
+    let supervised = {
+        let rg = rig(1);
+        let fuse = Arc::new(AtomicBool::new(true));
+        let first = Box::new(PanicOnce::new(
+            env::make_env("catch", ENV_SEED).unwrap(),
+            fuse.clone(),
+            3,
+        )) as Box<dyn Environment>;
+        let factory_fuse = fuse.clone();
+        let factory: EnvFactory = Box::new(move || {
+            Ok(Box::new(PanicOnce::new(
+                env::make_env("catch", ENV_SEED)?,
+                factory_fuse.clone(),
+                3,
+            )) as Box<dyn Environment>)
+        });
+        let gauges = rg.gauges.clone();
+        let pool = SupervisedActors::spawn(
+            vec![(first, factory)],
+            rg.client.clone(),
+            rg.tx.clone(),
+            rg.buffers.clone(),
+            rg.metrics.clone(),
+            actor_cfg(&rg.spec),
+            SupervisorConfig {
+                max_restarts: 1,
+                backoff: Duration::from_millis(1),
+            },
+            gauges.clone(),
+        );
+        let (got, exits) = collect_and_shutdown(rg, ROLLOUTS, move || pool.join());
+        assert!(!fuse.load(Ordering::SeqCst), "the injected fault must fire");
+        assert_eq!(gauges.actor_panics.get(), 1);
+        assert_eq!(gauges.actor_restarts.get(), 1);
+        assert_eq!(gauges.actors_lost.get(), 0);
+        let report = exits[0].report().expect("restarted actor completes");
+        assert!(report.rollouts >= ROLLOUTS as u64);
+        got
+    };
+
+    assert_eq!(reference.len(), supervised.len());
+    for (k, (a, b)) in reference.iter().zip(&supervised).enumerate() {
+        assert_eq!(a, b, "rollout {k} must be bit-identical after respawn");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. budget exhaustion
+// ---------------------------------------------------------------------------
+
+/// A permanently-faulty actor exhausts its restart budget and is lost;
+/// the surviving actor keeps the run alive and every exit is typed.
+#[test]
+fn budget_exhaustion_keeps_survivors_flowing() {
+    let rg = rig(2);
+    let broken = Box::new(AlwaysPanic {
+        inner: env::make_env("catch", 1).unwrap(),
+    }) as Box<dyn Environment>;
+    let broken_factory: EnvFactory = Box::new(move || {
+        Ok(Box::new(AlwaysPanic {
+            inner: env::make_env("catch", 1)?,
+        }) as Box<dyn Environment>)
+    });
+    let healthy = env::make_env("catch", 2).unwrap();
+    let healthy_factory: EnvFactory = Box::new(move || env::make_env("catch", 2));
+    let gauges = rg.gauges.clone();
+    let pool = SupervisedActors::spawn(
+        vec![(broken, broken_factory), (healthy, healthy_factory)],
+        rg.client.clone(),
+        rg.tx.clone(),
+        rg.buffers.clone(),
+        rg.metrics.clone(),
+        actor_cfg(&rg.spec),
+        SupervisorConfig {
+            max_restarts: 2,
+            backoff: Duration::from_millis(1),
+        },
+        gauges.clone(),
+    );
+    // the survivor alone must keep rollouts coming
+    let (got, exits) = collect_and_shutdown(rg, 3, move || pool.join());
+    assert_eq!(got.len(), 3);
+    assert_eq!(exits.len(), 2);
+    let lost = &exits[0];
+    assert_eq!(lost.actor_id(), 0);
+    assert!(
+        lost.panic_message().expect("typed panic exit").contains("injected"),
+        "exit carries the panic message: {lost:?}"
+    );
+    assert!(exits[1].report().is_some(), "survivor completes normally");
+    // initial fault + 2 budgeted restarts that also faulted
+    assert_eq!(gauges.actor_panics.get(), 3);
+    assert_eq!(gauges.actor_restarts.get(), 2);
+    assert_eq!(gauges.actors_lost.get(), 1);
+}
+
+/// When the *last* live actor dies, the supervisor closes the learner
+/// queue: a blocked learner-side recv returns `None` promptly instead
+/// of the run hanging forever.  Pool buffers are conserved across all
+/// the panics (RAII recycle during unwind).
+#[test]
+fn last_actor_death_closes_learner_queue_without_deadlock() {
+    let rg = rig(1);
+    let broken = Box::new(AlwaysPanic {
+        inner: env::make_env("catch", 1).unwrap(),
+    }) as Box<dyn Environment>;
+    let factory: EnvFactory = Box::new(move || {
+        Ok(Box::new(AlwaysPanic {
+            inner: env::make_env("catch", 1)?,
+        }) as Box<dyn Environment>)
+    });
+    let gauges = rg.gauges.clone();
+    let pool = SupervisedActors::spawn(
+        vec![(broken, factory)],
+        rg.client.clone(),
+        rg.tx.clone(),
+        rg.buffers.clone(),
+        rg.metrics.clone(),
+        actor_cfg(&rg.spec),
+        SupervisorConfig {
+            max_restarts: 1,
+            backoff: Duration::from_millis(1),
+        },
+        gauges.clone(),
+    );
+    // the learner side: blocks until the supervisor closes the queue
+    let t0 = Instant::now();
+    assert!(
+        rg.rx.recv().is_none(),
+        "queue must be closed once no live actors remain"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "queue closure must be prompt, not a test-timeout race"
+    );
+    rg.client.shutdown_for_tests();
+    rg.buffers.close();
+    let exits = pool.join();
+    rg.infer.join().unwrap();
+    assert_eq!(exits.len(), 1);
+    assert!(exits[0].panic_message().is_some(), "typed panicked exit");
+    assert_eq!(gauges.actor_panics.get(), 2, "initial fault + 1 restart");
+    assert_eq!(gauges.actors_lost.get(), 1);
+    // every rented buffer came back through the RAII guards
+    assert_eq!(
+        gauges.snapshot().pool_rented,
+        0,
+        "no rollout buffer leaked across the panics"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3. watchdog + emergency checkpoint
+// ---------------------------------------------------------------------------
+
+fn tiny_manifest() -> Manifest {
+    Manifest {
+        dir: std::path::PathBuf::new(),
+        env: "catch".into(),
+        model: "stub".into(),
+        obs_shape: [1, 10, 5],
+        num_actions: 3,
+        unroll_length: T,
+        batch_size: 2,
+        inference_batch: 2,
+        inference_sizes: vec![2],
+        param_count: 7,
+        params: vec![
+            LeafSpec {
+                name: "conv/b".into(),
+                shape: vec![3],
+                dtype: DType::F32,
+            },
+            LeafSpec {
+                name: "conv/w".into(),
+                shape: vec![2, 2],
+                dtype: DType::F32,
+            },
+        ],
+        opt_state: vec![],
+        stats_names: vec![],
+        hyperparams: torchbeast::util::json::Json::Obj(vec![]),
+        hlo_sha256: String::new(),
+    }
+}
+
+fn tiny_params() -> ParamVecs {
+    vec![vec![1.0, -2.0, 3.5], vec![0.0, 0.25, -0.5, 9.0]]
+}
+
+/// Wedge one stage while another beats: the watchdog's diagnosis names
+/// the silent stage, the escalation closure writes an emergency
+/// checkpoint and closes the pipeline queue (unblocking the
+/// learner-side recv), and the checkpoint loads back intact.
+#[test]
+fn wedged_stage_trips_watchdog_and_writes_loadable_emergency_checkpoint() {
+    let dir = std::env::temp_dir().join("tb_supervision_watchdog");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("emergency.ckpt");
+    let _ = std::fs::remove_file(&ckpt);
+
+    let reg = HeartbeatRegistry::shared();
+    let hb_actors = reg.register("actors");
+    let _hb_stacker = reg.register("stacker"); // wedged: never bumped
+    let gauges = PipelineGauges::shared();
+    gauges.queue_depth.set(5);
+
+    // a stand-in learner queue: escalation must unblock its consumer
+    let (tx, rx) = batching_queue::<u32>(4);
+
+    let manifest = tiny_manifest();
+    let params = tiny_params();
+    let stall_manifest = manifest.clone();
+    let stall_params = params.clone();
+    let stall_ckpt = ckpt.clone();
+    let fired = Arc::new(AtomicBool::new(false));
+    let fired2 = fired.clone();
+    let wd = Watchdog::start(
+        reg,
+        gauges.clone(),
+        Duration::from_millis(50),
+        move |report| {
+            assert_eq!(report.stage, "stacker");
+            checkpoint::save_retained(&stall_ckpt, &stall_manifest, &stall_params, 9, 2)
+                .expect("emergency checkpoint");
+            tx.close();
+            fired2.store(true, Ordering::SeqCst);
+        },
+    );
+
+    // keep "actors" alive so silence is attributed to the stacker
+    let stop_beating = Arc::new(AtomicBool::new(false));
+    let stop2 = stop_beating.clone();
+    let beater = std::thread::spawn(move || {
+        while !stop2.load(Ordering::SeqCst) {
+            hb_actors.inc();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    });
+
+    // the blocked learner: unblocks only through the escalation path
+    assert!(
+        rx.recv().is_none(),
+        "escalation must close the queue and unblock the learner"
+    );
+
+    // stop() joins the watchdog thread, so the escalation closure (and
+    // its checkpoint write) has fully completed past this point
+    let report = wd.stop().expect("hard stall recorded");
+    assert!(fired.load(Ordering::SeqCst));
+    stop_beating.store(true, Ordering::SeqCst);
+    beater.join().unwrap();
+    assert_eq!(report.stage, "stacker");
+    assert!(report.silent >= Duration::from_millis(100), "{report}");
+    assert!(report.diagnosis.contains("stacker"), "{report}");
+    assert!(
+        report.diagnosis.contains("queue 5"),
+        "diagnosis carries the gauges: {report}"
+    );
+    assert_eq!(gauges.watchdog_stalls.get(), 1);
+
+    // the emergency checkpoint is a complete, verified snapshot
+    let (loaded, version) = checkpoint::load(&ckpt, &manifest).unwrap();
+    assert_eq!(loaded, params);
+    assert_eq!(version, 9);
+}
+
+// ---------------------------------------------------------------------------
+// 4. corruption rejection + fallback
+// ---------------------------------------------------------------------------
+
+/// A bit-flipped weight blob is rejected with a typed error naming the
+/// blob, and resume falls back to the newest intact retained
+/// generation.
+#[test]
+fn bit_flipped_blob_is_named_and_resume_falls_back() {
+    let dir = std::env::temp_dir().join("tb_supervision_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("train.ckpt");
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(checkpoint::retained_path(&path, 1));
+    let _ = std::fs::remove_file(checkpoint::retained_path(&path, 2));
+
+    let m = tiny_manifest();
+    let older = tiny_params();
+    let newer: ParamVecs = vec![vec![4.0, 5.0, 6.0], vec![7.0, 8.0, 9.0, 10.0]];
+    checkpoint::save_retained(&path, &m, &older, 1, 2).unwrap();
+    checkpoint::save_retained(&path, &m, &newer, 2, 2).unwrap();
+
+    // flip one data bit in the newest checkpoint's last blob
+    let mut bytes = std::fs::read(&path).unwrap();
+    let n = bytes.len();
+    bytes[n - 8 - 8 - 4] ^= 0x10;
+    std::fs::write(&path, &bytes).unwrap();
+
+    // direct load: typed rejection naming the corrupt blob
+    let err = checkpoint::load(&path, &m).unwrap_err();
+    match err.downcast_ref::<CheckpointError>() {
+        Some(CheckpointError::CorruptBlob { leaf, .. }) => {
+            assert_eq!(leaf, "conv/w", "rejection names the bad blob");
+        }
+        other => panic!("expected CorruptBlob, got {other:?}: {err:#}"),
+    }
+
+    // resume path: the newest intact generation wins
+    let (params, version, used) = checkpoint::load_with_fallback(&path, &m).unwrap();
+    assert_eq!(params, older);
+    assert_eq!(version, 1);
+    assert_eq!(used, checkpoint::retained_path(&path, 1));
+}

@@ -60,6 +60,13 @@ cargo test --release replay
 echo "== cargo test --release learner_pool =="
 cargo test --release learner_pool
 
+# Run supervision (DESIGN.md §Supervision): respawn bit-identity,
+# restart-budget exhaustion without deadlock, watchdog stall diagnosis
+# + emergency checkpoint, and checkpoint corruption fallback are
+# timing- and unwind-sensitive — they must hold in the release build.
+echo "== cargo test --release --test supervision =="
+cargo test --release --test supervision
+
 # The documentation surface is gated too: rustdoc must build clean
 # (broken intra-doc links and bad doc syntax are warnings -> errors).
 echo "== cargo doc --no-deps (warning-free) =="
