@@ -1,0 +1,103 @@
+//! Bench: the span tracer's record path (DESIGN.md §Tracing).
+//!
+//! Three measurements, all artifact-free:
+//!
+//! 1. **Histogram-only span** — ns per `span(..).finish()` with ring
+//!    buffering off (the always-on cost every pipeline stage pays:
+//!    two clock reads + a handful of relaxed atomics).
+//! 2. **Buffered span** — the same with ring buffering on
+//!    (`--trace_path` mode): histogram record plus the single-producer
+//!    ring push.  The budget is **< 50 ns/span** — cheap enough to
+//!    leave the instrumentation on in production runs.
+//! 3. **Drain throughput** — ns per event for the sampler-side ring
+//!    drain that feeds the Chrome-trace writer.
+//!
+//! `cargo bench --bench trace`.  Pass `-- --json PATH` to also write
+//! the machine-readable summary `scripts/bench.sh` collects into
+//! `BENCH_10.json`.
+
+use std::time::Instant;
+
+use torchbeast::telemetry::trace::{self, Stage, RING_CAPACITY};
+
+/// ns per span over `iters` spans of `stage` on this thread.
+fn span_ns(stage: Stage, iters: u32) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        trace::span(stage).finish();
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    // optional machine-readable output: `-- --json PATH`
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut json_path: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--json" {
+            i += 1;
+            json_path = Some(
+                args.get(i)
+                    .ok_or_else(|| anyhow::anyhow!("--json needs a path"))?
+                    .clone(),
+            );
+        }
+        i += 1;
+    }
+
+    let iters = 2_000_000u32;
+
+    // 1. always-on path: stage histogram + last-completed marker only
+    trace::set_ring_buffering(false);
+    span_ns(Stage::EnvStep, iters / 10); // warm the clock + hist cache lines
+    let hist_ns = span_ns(Stage::EnvStep, iters);
+
+    // 2. --trace_path mode: histogram + single-producer ring push.  The
+    // first buffered span registers this thread's ring (the one
+    // allocation), inside the warm-up.
+    trace::set_ring_buffering(true);
+    span_ns(Stage::EnvStep, iters / 10);
+    let ring_ns = span_ns(Stage::EnvStep, iters);
+    trace::set_ring_buffering(false);
+
+    // 3. sampler-side drain: refill the ring to capacity, then time the
+    // copy-out (the steady-state export cost per event).
+    trace::set_ring_buffering(true);
+    for _ in 0..RING_CAPACITY {
+        trace::span(Stage::EnvStep).finish();
+    }
+    trace::set_ring_buffering(false);
+    let mut out = Vec::with_capacity(2 * RING_CAPACITY);
+    let t0 = Instant::now();
+    trace::drain_spans(&mut out);
+    let drained = out.len().max(1);
+    let drain_ns = t0.elapsed().as_nanos() as f64 / drained as f64;
+
+    println!(
+        "== span tracer ({iters} spans/measurement, ring capacity {RING_CAPACITY}) ==\n\
+         {:>28} {:>10.1} ns\n{:>28} {:>10.1} ns\n{:>28} {:>10.1} ns  ({drained} events)",
+        "histogram-only span", hist_ns, "buffered span (ring on)", ring_ns, "drain per event",
+        drain_ns
+    );
+    let budget = 50.0;
+    println!(
+        "budget: < {budget:.0} ns per buffered span — {}",
+        if ring_ns < budget { "met" } else { "MISSED" }
+    );
+
+    if let Some(path) = json_path {
+        let json = format!(
+            "{{\n  \"bench\": \"trace\",\n  \"span_iters\": {iters},\n  \
+             \"span_hist_ns\": {hist_ns:.1},\n  \
+             \"span_ring_ns\": {ring_ns:.1},\n  \
+             \"drain_ns_per_event\": {drain_ns:.1},\n  \
+             \"budget_ns\": {budget:.0},\n  \
+             \"budget_met\": {}\n}}\n",
+            ring_ns < budget
+        );
+        std::fs::write(&path, json)?;
+        println!("json summary written to {path}");
+    }
+    Ok(())
+}

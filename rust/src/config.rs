@@ -118,7 +118,17 @@ pub struct TrainConfig {
     /// telemetry background sampler); None disables.
     pub gauge_log_path: Option<PathBuf>,
     /// Sampling period of the gauge time series, in milliseconds.
+    /// Doubles as the span-ring drain period when `trace_path` is set.
     pub gauge_sample_ms: u64,
+    /// Chrome-trace output (DESIGN.md §Tracing): per-thread span rings
+    /// drained into `trace_event` JSON at this path — load it in
+    /// `chrome://tracing`.  None disables span buffering (the stage
+    /// histograms stay on).
+    pub trace_path: Option<PathBuf>,
+    /// Metrics exposition endpoint: `host:port` to bind the in-tree
+    /// HTTP `GET /metrics` server on (Prometheus text format; both
+    /// `train` and `policy-server` honor it).  None disables.
+    pub metrics_addr: Option<String>,
     /// Restarts allowed per actor after a panic (DESIGN.md
     /// §Supervision): the supervisor respawns a crashed actor with the
     /// same env id, seed, and version handle, up to this budget.
@@ -170,6 +180,8 @@ impl Default for TrainConfig {
             eval_batch: 0,
             gauge_log_path: None,
             gauge_sample_ms: 100,
+            trace_path: None,
+            metrics_addr: None,
             actor_restarts: 0,
             actor_backoff_ms: 100,
             stall_timeout_ms: 0,
@@ -278,6 +290,8 @@ impl TrainConfig {
             "eval_batch" => self.eval_batch = num(v)? as usize,
             "gauge_log_path" => self.gauge_log_path = Some(PathBuf::from(st(v)?)),
             "gauge_sample_ms" => self.gauge_sample_ms = num(v)? as u64,
+            "trace_path" => self.trace_path = Some(PathBuf::from(st(v)?)),
+            "metrics_addr" => self.metrics_addr = Some(st(v)?),
             "actor_restarts" => self.actor_restarts = num(v)? as u32,
             "actor_backoff_ms" => self.actor_backoff_ms = num(v)? as u64,
             "stall_timeout_ms" => self.stall_timeout_ms = num(v)? as u64,
@@ -486,6 +500,29 @@ mod tests {
         // CLI spelling too
         c.apply_args(&["--envs_per_actor=4".to_string()]).unwrap();
         assert_eq!(c.envs_per_actor, 4);
+    }
+
+    #[test]
+    fn observability_knobs_parse() {
+        let mut c = TrainConfig::default();
+        assert!(c.trace_path.is_none(), "tracing defaults off");
+        assert!(c.metrics_addr.is_none(), "exposition defaults off");
+        let j = Json::parse(
+            r#"{"trace_path": "runs/trace.json", "metrics_addr": "127.0.0.1:9090"}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.trace_path, Some(PathBuf::from("runs/trace.json")));
+        assert_eq!(c.metrics_addr.as_deref(), Some("127.0.0.1:9090"));
+        // CLI spelling too
+        let mut c = TrainConfig::default();
+        c.apply_args(&[
+            "--trace_path=t.json".to_string(),
+            "--metrics_addr=0.0.0.0:9464".to_string(),
+        ])
+        .unwrap();
+        assert_eq!(c.trace_path, Some(PathBuf::from("t.json")));
+        assert_eq!(c.metrics_addr.as_deref(), Some("0.0.0.0:9464"));
         // zero groups are rejected up front, not at spawn time
         let bad = Json::parse(r#"{"envs_per_actor": 0}"#).unwrap();
         assert!(c.apply_json(&bad).is_err());

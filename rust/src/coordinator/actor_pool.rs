@@ -27,6 +27,7 @@ use crate::coordinator::weights::VersionHandle;
 use crate::env::{Environment, SlotStep, VecEnvironment};
 use crate::metrics::Metrics;
 use crate::telemetry::gauges::Counter;
+use crate::telemetry::trace::{self, Stage};
 use crate::util::rng::Rng;
 
 pub struct ActorPool {
@@ -357,6 +358,9 @@ pub(crate) fn actor_loop(
     let mut ep_steps = 0u32;
 
     loop {
+        // one span per unroll: T env steps + inference rounds, up to
+        // (not including) the rollout handoff to the learner queue
+        let sp_unroll = trace::span(Stage::ActorUnroll);
         for i in 0..unroll_length {
             // Batched policy evaluation (blocks on the batcher).
             let Some(_baseline) = client.infer(&obs, &mut logits) else {
@@ -369,7 +373,9 @@ pub(crate) fn actor_loop(
                 return report;
             };
             let action = sample_action_scratch(&logits, &mut probs, &mut rng);
+            let sp_step = trace::span(Stage::EnvStep);
             let step = env.step(action, &mut obs);
+            sp_step.finish();
             heartbeat.inc();
             report.frames += 1;
             metrics.add_frames(1);
@@ -386,6 +392,7 @@ pub(crate) fn actor_loop(
             }
             rollout.set_obs(i + 1, &obs);
         }
+        sp_unroll.finish();
         // Ship the filled buffer itself — no clone; the learner side
         // recycles it into the pool after stacking.
         if queue.send(held.take()).is_err() {
@@ -479,6 +486,9 @@ fn grouped_actor_loop(
     }
 
     loop {
+        // one span per unroll round: B slots stepped T times, up to
+        // (not including) the B-buffer handoff to the learner queue
+        let sp_unroll = trace::span(Stage::ActorUnroll);
         for i in 0..unroll_length {
             // One rendezvous for the whole slice (blocks on the batcher).
             if submitter
@@ -499,7 +509,9 @@ fn grouped_actor_loop(
                     &mut rngs[s],
                 );
             }
+            let sp_step = trace::span(Stage::EnvStep);
             venv.step_batch(&actions, &mut obs_block, &mut steps);
+            sp_step.finish();
             heartbeat.inc();
             // A dead group (remote stream lost) synthesizes terminal
             // steps with replayed observations; keep the loop alive —
@@ -534,6 +546,7 @@ fn grouped_actor_loop(
                 r.set_obs(i + 1, &obs_block[s * obs_len..(s + 1) * obs_len]);
             }
         }
+        sp_unroll.finish();
         // Ship all B filled buffers (slot order, no clone), then rent
         // the next B and carry each slot's bootstrap obs over.  Popped
         // one at a time from the guard so a closed queue leaves the

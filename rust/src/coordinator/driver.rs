@@ -31,8 +31,10 @@ use crate::env::{self, Environment, LocalVecEnv, VecEnvironment};
 use crate::metrics::{CurveLogger, Metrics, Snapshot};
 use crate::rpc::{EnvServer, RemoteEnv, RemoteVecEnv};
 use crate::runtime::{InferenceEngine, LearnerBatch, LearnerEngine, LearnerStats, ParamVecs};
+use crate::telemetry::exporter::MetricsServer;
 use crate::telemetry::gauges::{Counter, GaugesSnapshot, PipelineGauges};
 use crate::telemetry::sampler::GaugeSampler;
+use crate::telemetry::trace::{self, Stage};
 use crate::{tb_info, tb_warn};
 
 /// One row of the training curve (CSV mirror, kept in memory too).
@@ -156,27 +158,46 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
     // pipeline stage bumps its counter once per unit of work, and the
     // watchdog below (opt-in via --stall_timeout_ms) flags silence.
     let heartbeats = HeartbeatRegistry::shared();
-    // Background occupancy time series (started before the pipeline
-    // spins up so warm-up starvation is captured too).
-    let sampler = match &cfg.gauge_log_path {
-        Some(p) => {
-            // The sampler beats once per recorded row — only hold it to
-            // the watchdog's cadence when its period fits well inside
-            // the stall window, or a deliberately slow sampling rate
-            // would read as a stalled pipeline.
-            let hb = if cfg.stall_timeout_ms == 0
-                || cfg.gauge_sample_ms.max(1).saturating_mul(2) < cfg.stall_timeout_ms
-            {
-                heartbeats.register("sampler")
-            } else {
-                Counter::new()
-            };
-            Some(GaugeSampler::start(
-                gauges.clone(),
-                p,
-                Duration::from_millis(cfg.gauge_sample_ms.max(1)),
-                hb,
-            )?)
+    // Background occupancy time series + span-ring drain (started
+    // before the pipeline spins up so warm-up starvation is captured
+    // too).  One thread serves both outputs: --gauge_log_path is the
+    // CSV, --trace_path attaches a Chrome-trace writer whose rings
+    // the same thread drains every period (DESIGN.md §Tracing).
+    let sampler = if cfg.gauge_log_path.is_some() || cfg.trace_path.is_some() {
+        // The sampler beats once per recorded row — only hold it to
+        // the watchdog's cadence when its period fits well inside
+        // the stall window, or a deliberately slow sampling rate
+        // would read as a stalled pipeline.
+        let hb = if cfg.stall_timeout_ms == 0
+            || cfg.gauge_sample_ms.max(1).saturating_mul(2) < cfg.stall_timeout_ms
+        {
+            heartbeats.register("sampler")
+        } else {
+            Counter::new()
+        };
+        Some(GaugeSampler::start_with_trace(
+            gauges.clone(),
+            cfg.gauge_log_path.as_deref(),
+            Duration::from_millis(cfg.gauge_sample_ms.max(1)),
+            hb,
+            cfg.trace_path.as_deref(),
+        )?)
+    } else {
+        None
+    };
+    // Live metrics exposition (--metrics_addr): an in-tree HTTP
+    // GET /metrics endpoint rendering the gauges registry plus every
+    // stage-duration histogram in Prometheus text format.
+    let metrics_server = match &cfg.metrics_addr {
+        Some(addr) => {
+            let srv = MetricsServer::start(addr, gauges.clone())
+                .with_context(|| format!("binding metrics exporter on {addr}"))?;
+            tb_info!(
+                "train",
+                "metrics exposition on http://{}/metrics",
+                srv.local_addr()
+            );
+            Some(srv)
         }
         None => None,
     };
@@ -479,10 +500,12 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                             break;
                         }
                         let t0 = Instant::now();
+                        let sp = trace::span(Stage::StackerAssemble);
                         stack_rollouts(&rollouts, &stacker_manifest, &mut batch);
                         for r in rollouts.drain(..) {
                             stacker_pool.recycle(r);
                         }
+                        sp.finish();
                         stacking += t0.elapsed();
                     }
                     Some(replay) => {
@@ -497,10 +520,13 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                             break;
                         }
                         let t0 = Instant::now();
+                        let sp = trace::span(Stage::StackerAssemble);
                         stack_mixed(&rollouts, replay, replayed, &stacker_manifest, &mut batch);
+                        sp.finish();
                         for r in rollouts.drain(..) {
                             // copy-in-place into a ring slot, then
                             // hand the pooled buffer straight back
+                            // (insert records its own ReplayInsert span)
                             replay.insert(&r);
                             stacker_pool.recycle(r);
                         }
@@ -619,10 +645,14 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
             for &pv in &batch.policy_versions {
                 gauges.policy_lag.record(v.saturating_sub(pv));
             }
+            let sp = trace::span(Stage::LearnerStep);
             let (stats, snapshot) = learner.step(&batch)?;
+            sp.finish();
             // hand the buffer back so the stacker can prefetch step N+2
             let _ = return_tx.send(batch);
+            let sp = trace::span(Stage::WeightPublish);
             weights.publish(snapshot.clone());
+            sp.finish();
             final_params = snapshot;
             record_step(step, &stats)?;
             hb_learner.inc();
@@ -646,6 +676,19 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainReport> {
                 "gauge time series: {rows} samples written to {}",
                 p.display()
             );
+        }
+        if let Some(p) = &cfg.trace_path {
+            tb_info!(
+                "train",
+                "chrome trace written to {} (load it in chrome://tracing)",
+                p.display()
+            );
+        }
+    }
+    if let Some(srv) = metrics_server {
+        let scrapes = srv.shutdown();
+        if scrapes > 0 {
+            tb_info!("train", "metrics endpoint answered {scrapes} scrape(s)");
         }
     }
 

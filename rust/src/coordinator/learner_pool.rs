@@ -37,6 +37,7 @@ use anyhow::Result;
 use crate::coordinator::batching_queue::{batching_queue, QueueReceiver, QueueSender};
 use crate::coordinator::weights::WeightsStore;
 use crate::runtime::{LearnerBatch, LearnerEngine, LearnerStats, ParamVecs};
+use crate::telemetry::trace::{self, Stage};
 use crate::util::sync::{CheckedMutex, LockOrder};
 
 /// Rank of the shard barrier lock in the global acquisition order
@@ -339,6 +340,7 @@ fn worker_loop<E: ShardEngine>(
 ) -> Result<u64> {
     let mut rounds = 0u64;
     while let Some(batch) = input.recv() {
+        let sp = trace::span(Stage::LearnerStep);
         let part = match engine.step_shard(&batch) {
             Ok(p) => p,
             Err(e) => {
@@ -347,10 +349,16 @@ fn worker_loop<E: ShardEngine>(
                 return Err(e);
             }
         };
+        sp.finish();
         // recycle the buffer before the barrier: the stacker prefetches
         // the next round while the shards synchronize
         let _ = returns.send(batch);
-        let (stats, params, opt) = match sync.exchange(idx, part) {
+        // barrier wait — in a healthy pool this span measures shard
+        // skew (slowest minus this worker's step time)
+        let sp = trace::span(Stage::ShardBarrier);
+        let exchanged = sync.exchange(idx, part);
+        sp.finish();
+        let (stats, params, opt) = match exchanged {
             Ok(avg) => avg,
             Err(e) => {
                 results.close();
@@ -365,7 +373,9 @@ fn worker_loop<E: ShardEngine>(
         rounds += 1;
         if idx == 0 {
             if let Some(w) = &weights {
+                let sp = trace::span(Stage::WeightPublish);
                 w.publish(params.clone());
+                sp.finish();
             }
             if results.send(RoundResult { stats, params }).is_err() {
                 break; // driver gone: orderly shutdown

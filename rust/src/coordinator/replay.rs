@@ -38,6 +38,7 @@ use std::sync::Arc;
 use crate::coordinator::rollout::{stack_rollout_into, Rollout};
 use crate::runtime::{LearnerBatch, Manifest};
 use crate::telemetry::gauges::PipelineGauges;
+use crate::telemetry::trace::{self, Stage};
 use crate::util::rng::Rng;
 
 /// Domain-separation constant folded into the run seed for the
@@ -230,6 +231,7 @@ impl ReplayBuffer {
     // tb-lint: no-alloc
     pub fn insert(&mut self, r: &Rollout) {
         debug_assert!(r.is_complete(), "only complete rollouts are replayable");
+        let sp = trace::span(Stage::ReplayInsert);
         self.evict_stale();
         let cap = self.capacity();
         if self.len == cap {
@@ -246,6 +248,7 @@ impl ReplayBuffer {
             self.has_warmed = true;
         }
         self.gauges.replay_size.set(self.len as u64);
+        sp.finish();
     }
 
     /// Sample one stored rollout uniformly (seeded stream, with
@@ -260,9 +263,10 @@ impl ReplayBuffer {
     /// slot — so a returned rollout is **never** older than the bound.
     // tb-lint: no-alloc
     pub fn sample(&mut self) -> Option<&Rollout> {
+        let sp = trace::span(Stage::ReplaySample);
         self.evict_stale();
         if self.len == 0 {
-            return None;
+            return None; // span drop still records the miss
         }
         let mut i = self.rng.below(self.len);
         let mut probed = 0;
@@ -275,6 +279,7 @@ impl ReplayBuffer {
         }
         self.sampled += 1;
         self.gauges.replay_sampled.inc();
+        sp.finish();
         self.get(i)
     }
 

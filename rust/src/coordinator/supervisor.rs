@@ -309,10 +309,14 @@ fn watchdog_loop(
             let report = StallReport {
                 stage,
                 silent,
+                // the span summary names the last span each pipeline
+                // stage *completed* — it points at where work actually
+                // stopped, not just which heartbeat went quiet
                 diagnosis: format!(
-                    "silent stages: [{}]; gauges: {}",
+                    "silent stages: [{}]; gauges: {}; {}",
                     silent_stages.join(", "),
-                    gauges.snapshot()
+                    gauges.snapshot(),
+                    crate::telemetry::trace::last_span_summary()
                 ),
             };
             gauges.watchdog_stalls.inc();

@@ -37,6 +37,10 @@ pub enum Rule {
     Ordering,
     /// Directive problems: unknown rules, unused allows, dangling fences.
     Suppression,
+    /// Duplicate `LockOrder::new(rank, …)` rank across the tree — the
+    /// rank registry (util/sync.rs) must stay globally unique or the
+    /// deadlock-ordering check is meaningless.
+    LockRank,
 }
 
 impl Rule {
@@ -48,11 +52,12 @@ impl Rule {
             Rule::Unwrap => "unwrap",
             Rule::Ordering => "seqcst",
             Rule::Suppression => "suppression",
+            Rule::LockRank => "lockrank",
         }
     }
 
-    /// Parse an allowable rule name (`suppression` findings cannot be
-    /// suppressed, so it does not parse).
+    /// Parse an allowable rule name (`suppression` and `lockrank`
+    /// findings cannot be suppressed, so they do not parse).
     pub fn parse(name: &str) -> Option<Rule> {
         match name {
             "alloc" => Some(Rule::Alloc),
@@ -105,21 +110,73 @@ pub struct TreeReport {
 }
 
 /// Lint every `.rs` file under `src_root` (recursively, sorted order).
+/// Per-file rules run first, then the cross-file lock-rank registry
+/// check ([`lock_rank_findings`]).
 pub fn lint_tree(src_root: &Path) -> anyhow::Result<TreeReport> {
     let mut files: Vec<String> = Vec::new();
     collect_rs(src_root, src_root, &mut files)?;
     files.sort();
     let mut findings = Vec::new();
+    let mut sources: Vec<(String, String)> = Vec::with_capacity(files.len());
     for rel in &files {
         let full = src_root.join(rel);
         let src = std::fs::read_to_string(&full)
             .map_err(|e| anyhow::anyhow!("read {}: {e}", full.display()))?;
         findings.extend(rules::analyze(rel, &src));
+        sources.push((rel.clone(), src));
     }
+    findings.extend(lock_rank_findings(&sources));
     Ok(TreeReport {
         files: files.len(),
         findings,
     })
+}
+
+/// Cross-file registry check: every `LockOrder::new(<literal>, …)` rank
+/// in non-test code must be globally unique — the rank table in
+/// `util/sync.rs` is only a deadlock proof if no two locks share a
+/// rank.  Scanning stops at a file's `#[cfg(test)]` marker (the repo
+/// convention keeps test mods at the file tail); non-literal ranks
+/// (the constructor itself) are ignored.
+pub fn lock_rank_findings(files: &[(String, String)]) -> Vec<Finding> {
+    let mut seen: Vec<(u16, String, usize)> = Vec::new();
+    let mut findings = Vec::new();
+    for (file, src) in files {
+        for (i, line) in src.lines().enumerate() {
+            if line.contains("#[cfg(test)]") {
+                break;
+            }
+            let Some(pos) = line.find("LockOrder::new(") else {
+                continue;
+            };
+            let rest = &line[pos + "LockOrder::new(".len()..];
+            let digits: &str = &rest[..rest
+                .char_indices()
+                .find(|(_, c)| !c.is_ascii_digit())
+                .map(|(j, _)| j)
+                .unwrap_or(rest.len())];
+            let Ok(rank) = digits.parse::<u16>() else {
+                continue;
+            };
+            let first = seen
+                .iter()
+                .find(|(r, _, _)| *r == rank)
+                .map(|(_, f, l)| (f.clone(), *l));
+            match first {
+                Some((first_file, first_line)) => findings.push(Finding {
+                    file: file.clone(),
+                    line: i + 1,
+                    rule: Rule::LockRank,
+                    message: format!(
+                        "lock rank {rank} already registered at {first_file}:{first_line} — \
+                         ranks must be globally unique (util/sync.rs rank table)"
+                    ),
+                }),
+                None => seen.push((rank, file.clone(), i + 1)),
+            }
+        }
+    }
+    findings
 }
 
 fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> anyhow::Result<()> {
@@ -158,6 +215,39 @@ mod tests {
             assert_eq!(Rule::parse(r.name()), Some(r));
         }
         assert_eq!(Rule::parse("suppression"), None);
+        assert_eq!(Rule::parse("lockrank"), None);
         assert_eq!(Rule::parse("bogus"), None);
+    }
+
+    #[test]
+    fn duplicate_lock_ranks_are_findings() {
+        let a = (
+            "x.rs".to_string(),
+            "const A: LockOrder = LockOrder::new(10, \"x.a\");\n".to_string(),
+        );
+        let b = (
+            "y.rs".to_string(),
+            "const B: LockOrder = LockOrder::new(20, \"y.b\");\n\
+             const C: LockOrder = LockOrder::new(10, \"y.c\");\n"
+                .to_string(),
+        );
+        let findings = lock_rank_findings(&[a, b]);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule, Rule::LockRank);
+        assert_eq!((findings[0].file.as_str(), findings[0].line), ("y.rs", 2));
+        assert!(findings[0].message.contains("x.rs:1"), "{}", findings[0].message);
+    }
+
+    #[test]
+    fn test_region_and_nonliteral_ranks_are_exempt() {
+        let src = "\
+fn ctor(rank: u16) { let _ = LockOrder::new(rank, \"dynamic\"); }\n\
+const A: LockOrder = LockOrder::new(7, \"a\");\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    const DUP: LockOrder = LockOrder::new(7, \"test.dup\");\n\
+}\n";
+        let files = [("z.rs".to_string(), src.to_string())];
+        assert_eq!(lock_rank_findings(&files), vec![]);
     }
 }

@@ -27,13 +27,16 @@ fn usage() -> ! {
     eprintln!(
         "usage: torchbeast <command> [--key value ...]\n\
          commands:\n\
-         \x20 train       run the actor-learner system (see config.rs for flags)\n\
+         \x20 train       run the actor-learner system (see config.rs for flags;\n\
+         \x20             --trace_path p.json writes a chrome://tracing timeline,\n\
+         \x20             --metrics_addr host:port serves Prometheus /metrics)\n\
          \x20 env-server  serve environments over TCP (--listen addr:port,\n\
          \x20             --server_cpus N caps serve-loop threads; 0 = unlimited)\n\
          \x20 policy-server  serve batched action inference over TCP (--listen,\n\
          \x20             --artifact_dir, --init_checkpoint, --server_cpus,\n\
          \x20             --max_batch, --slots, --policy_admission_ms,\n\
-         \x20             --retry_after_ms; see DESIGN.md \u{00a7}Policy-Server)\n\
+         \x20             --retry_after_ms, --metrics_addr;\n\
+         \x20             see DESIGN.md \u{00a7}Policy-Server)\n\
          \x20 eval        evaluate a config's artifact with fresh params (--artifact_dir)\n\
          \x20 inspect     print an artifact bundle's manifest (--artifact_dir)"
     );

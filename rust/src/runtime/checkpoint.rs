@@ -101,6 +101,9 @@ pub fn save(path: &Path, manifest: &Manifest, params: &ParamVecs, version: u64) 
         params.len(),
         manifest.params.len()
     );
+    // span covers serialize + fsync + rename (drop records on the
+    // error exits too, so failed writes still show in the histogram)
+    let _sp = crate::telemetry::trace::span(crate::telemetry::trace::Stage::CheckpointWrite);
     let mut w = BufWriter::new(AtomicFile::create(path)?);
     let mut file_hash = Fnv64::new();
     w.write_all(MAGIC)?;

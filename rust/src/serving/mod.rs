@@ -60,6 +60,7 @@ use crate::rpc::codec::{
 use crate::rpc::server::is_timeout;
 use crate::runtime::{InferenceEngine, Manifest, ParamVecs};
 use crate::telemetry::gauges::PipelineGauges;
+use crate::telemetry::trace::{self, Stage};
 use crate::util::rng::Rng;
 
 /// Sizing and admission knobs of one policy server.
@@ -497,6 +498,9 @@ fn serve_round(
     gauges: &PipelineGauges,
     st: &mut StreamState,
 ) -> anyhow::Result<RoundOutcome> {
+    // span drop covers the Busy/Shutdown/error exits, so every round's
+    // wall time lands in the serve_round histogram regardless of outcome
+    let sp = trace::span(Stage::ServeRound);
     codec::decode_obs_batch_into(&st.frame_buf, &mut st.headers, &mut st.obs_block)?;
     let t0 = Instant::now();
     match submitter.submit_slice_bounded(
@@ -513,6 +517,7 @@ fn serve_round(
             codec::write_action_batch(writer, &mut st.write_buf, &st.actions_u32)?;
             gauges.serve_latency.record(t0.elapsed());
             gauges.serve_requests.inc();
+            sp.finish();
             Ok(RoundOutcome::Responded)
         }
         SliceOutcome::Busy => {
@@ -956,8 +961,9 @@ enum RoundResult {
 /// `--slots`, `--retry_after_ms`) are parsed here; everything else
 /// (`--artifact_dir`, `--init_checkpoint`, `--seed`,
 /// `--inference_timeout_us`, `--policy_admission_ms`,
-/// `--gauge_log_path`, `--gauge_sample_ms`, `--log_level`, `--config`)
-/// goes through [`TrainConfig`](crate::config::TrainConfig).
+/// `--gauge_log_path`, `--gauge_sample_ms`, `--metrics_addr`,
+/// `--log_level`, `--config`) goes through
+/// [`TrainConfig`](crate::config::TrainConfig).
 pub fn policy_server_main(args: &[String]) -> anyhow::Result<()> {
     let mut listen = "0.0.0.0:7002".to_string();
     let mut server_cpus = 0usize;
@@ -1039,6 +1045,19 @@ pub fn policy_server_main(args: &[String]) -> anyhow::Result<()> {
             Duration::from_millis(cfg.gauge_sample_ms),
             crate::telemetry::gauges::Counter::new(),
         )?),
+        None => None,
+    };
+    // live Prometheus exposition, same flag as the training driver
+    let _metrics_server = match &cfg.metrics_addr {
+        Some(addr) => {
+            let srv = crate::telemetry::exporter::MetricsServer::start(addr, gauges.clone())?;
+            crate::tb_info!(
+                "policy-server",
+                "metrics exposition on http://{}/metrics",
+                srv.local_addr()
+            );
+            Some(srv)
+        }
         None => None,
     };
     // periodic report line (the served/busy/p50/p99 section)

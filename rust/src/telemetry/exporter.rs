@@ -1,0 +1,569 @@
+//! Metrics exposition endpoint (DESIGN.md §Tracing): a dependency-free
+//! in-tree TCP server answering `GET /metrics` with the full
+//! [`PipelineGauges`] registry plus every stage-duration histogram in
+//! Prometheus text format (`text/plain; version=0.0.4`), so a fleet of
+//! trainers and policy servers can be scraped live.
+//!
+//! Deliberately tiny: HTTP/1.0, `GET /metrics` only, one accept thread
+//! handling connections inline (no per-connection threads to churn or
+//! leak), bounded request reads with a timeout so a stalled client
+//! cannot pin the exporter.  Anything that is not a well-formed
+//! `GET /metrics` gets a typed `400`/`404`/`405` and the connection is
+//! closed — scrape churn and garbage bytes must never panic the
+//! process (`tests/observability.rs` hammers both).
+//!
+//! The render path locks the rank-90 `exporter.registry` mutex — above
+//! every pipeline lock — guarding the gauges handle and a reusable
+//! render scratch, then reads only relaxed atomics; a scrape never
+//! touches the experience path.
+//!
+//! Both `train` (`--metrics_addr`) and `policy-server`
+//! (`--metrics_addr`) start one.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::telemetry::gauges::{PipelineGauges, LAG_BUCKETS};
+use crate::telemetry::hist::Pow2Hist;
+use crate::telemetry::trace::{stage_hist, DUR_BUCKETS, STAGES};
+use crate::util::sync::{CheckedMutex, LockOrder};
+
+const EXPORTER_REGISTRY_ORDER: LockOrder = LockOrder::new(90, "exporter.registry");
+
+/// Longest request head the exporter will read before answering `400`.
+const MAX_REQUEST_BYTES: usize = 1024;
+
+/// Per-connection socket timeout: a client that stops sending or
+/// reading is cut loose after this.
+const CLIENT_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// What the exporter renders on each scrape, behind the rank-90
+/// registry mutex: the gauge registry handle plus a scratch buffer
+/// reused across scrapes (one growing allocation, not one per scrape).
+struct Registry {
+    gauges: Arc<PipelineGauges>,
+    scratch: String,
+}
+
+struct Inner {
+    registry: CheckedMutex<Registry>,
+    stop: AtomicBool,
+}
+
+/// Handle to a running exposition endpoint;
+/// [`shutdown`](MetricsServer::shutdown) (or drop) stops the accept
+/// loop and joins the thread.
+pub struct MetricsServer {
+    inner: Arc<Inner>,
+    local_addr: SocketAddr,
+    handle: Option<JoinHandle<u64>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9090`; port 0 picks a free port —
+    /// read it back from [`local_addr`](MetricsServer::local_addr))
+    /// and serve `GET /metrics` over `gauges` until shutdown.
+    pub fn start(addr: &str, gauges: Arc<PipelineGauges>) -> io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let inner = Arc::new(Inner {
+            registry: CheckedMutex::new(
+                EXPORTER_REGISTRY_ORDER,
+                Registry {
+                    gauges,
+                    scratch: String::new(),
+                },
+            ),
+            stop: AtomicBool::new(false),
+        });
+        let inner2 = Arc::clone(&inner);
+        let handle = std::thread::Builder::new()
+            .name("metrics-exporter".into())
+            .spawn(move || accept_loop(&listener, &inner2))?;
+        Ok(MetricsServer {
+            inner,
+            local_addr,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (the actual port when `addr` asked for `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, join the thread, and return how many scrapes
+    /// were answered with a `200`.
+    pub fn shutdown(mut self) -> u64 {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        match self.handle.take() {
+            Some(h) => h.join().unwrap_or(0),
+            None => 0,
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.inner.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: &TcpListener, inner: &Inner) -> u64 {
+    let mut scrapes = 0u64;
+    loop {
+        if inner.stop.load(Ordering::Relaxed) {
+            return scrapes;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if serve_connection(stream, inner) {
+                    scrapes += 1;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => {
+                // transient accept error (client gone mid-handshake):
+                // keep serving
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Handle one connection inline; returns whether a `200` was served.
+/// Every exit path closes the stream; errors are answered or dropped,
+/// never propagated.
+fn serve_connection(mut stream: TcpStream, inner: &Inner) -> bool {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(CLIENT_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(CLIENT_TIMEOUT));
+    let line = match read_request_line(&mut stream) {
+        Some(line) => line,
+        None => {
+            let _ = respond(&mut stream, "400 Bad Request", "bad request\n");
+            return false;
+        }
+    };
+    let mut parts = line.split_whitespace();
+    let (method, path) = match (parts.next(), parts.next()) {
+        (Some(m), Some(p)) => (m, p),
+        _ => {
+            let _ = respond(&mut stream, "400 Bad Request", "bad request\n");
+            return false;
+        }
+    };
+    if method != "GET" {
+        let _ = respond(&mut stream, "405 Method Not Allowed", "GET only\n");
+        return false;
+    }
+    if path != "/metrics" {
+        let _ = respond(&mut stream, "404 Not Found", "try /metrics\n");
+        return false;
+    }
+    let mut reg = inner.registry.lock();
+    let Registry { gauges, scratch } = &mut *reg;
+    scratch.clear();
+    render_prometheus(gauges, scratch);
+    let ok = respond(&mut stream, "200 OK", scratch).is_ok();
+    drop(reg);
+    ok
+}
+
+/// Read up to the end of the request line (bounded, timed out).
+/// `None` = no parseable line arrived in time.
+fn read_request_line(stream: &mut TcpStream) -> Option<String> {
+    let mut buf = [0u8; MAX_REQUEST_BYTES];
+    let mut len = 0usize;
+    loop {
+        match stream.read(&mut buf[len..]) {
+            Ok(0) => break,
+            Ok(n) => {
+                len += n;
+                if buf[..len].contains(&b'\n') {
+                    break;
+                }
+                if len == buf.len() {
+                    return None; // request line longer than any scrape sends
+                }
+            }
+            Err(_) => break, // timeout or reset: judge what arrived
+        }
+    }
+    let head = &buf[..len];
+    let line_end = head.iter().position(|&b| b == b'\n')?;
+    let line = std::str::from_utf8(&head[..line_end]).ok()?;
+    let line = line.trim_end_matches('\r');
+    if line.is_empty() {
+        return None;
+    }
+    Some(line.to_string())
+}
+
+fn respond(stream: &mut TcpStream, status: &str, body: &str) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+fn fmt_le(bound: u64) -> String {
+    if bound == u64::MAX {
+        "+Inf".to_string()
+    } else {
+        bound.to_string()
+    }
+}
+
+/// Render the full metric inventory (DESIGN.md §Tracing lists it) in
+/// Prometheus text format: every registered gauge and counter exactly
+/// once, the policy-lag histogram, and one labeled histogram series
+/// per pipeline stage.
+pub fn render_prometheus(gauges: &PipelineGauges, out: &mut String) {
+    use std::fmt::Write as _;
+
+    let s = gauges.snapshot();
+    let mut gauge = |name: &str, help: &str, v: u64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {v}");
+    };
+    gauge("tb_pool_free", "Rollout-pool buffers free to rent.", s.pool_free);
+    gauge("tb_pool_rented", "Rollout-pool buffers rented out.", s.pool_rented);
+    gauge("tb_queue_depth", "Rollouts waiting to be stacked.", s.queue_depth);
+    gauge(
+        "tb_batches_ready",
+        "Stacked batches prefetched ahead of the learner.",
+        s.batches_ready,
+    );
+    gauge("tb_slots_in_use", "Inference slots checked out.", s.slots_in_use);
+    gauge("tb_env_streams", "Env-server streams open.", s.env_streams);
+    gauge("tb_replay_size", "Rollouts stored in the replay ring.", s.replay_size);
+    gauge(
+        "tb_serve_latency_p50_us",
+        "Served-request latency p50 over the ring window (µs).",
+        s.serve_p50_us,
+    );
+    gauge(
+        "tb_serve_latency_p99_us",
+        "Served-request latency p99 over the ring window (µs).",
+        s.serve_p99_us,
+    );
+    gauge(
+        "tb_policy_lag_max",
+        "Largest policy lag recorded (versions).",
+        s.lag_max,
+    );
+
+    let mut counter = |name: &str, help: &str, v: u64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    };
+    counter(
+        "tb_pool_rent_waits_total",
+        "Times a renter blocked on a drained rollout pool.",
+        s.pool_rent_waits,
+    );
+    counter(
+        "tb_slot_waits_total",
+        "Times a request blocked on a free inference slot.",
+        s.slot_waits,
+    );
+    counter("tb_env_steps_total", "Env steps served across all streams.", s.env_steps);
+    counter(
+        "tb_env_reconnects_total",
+        "Successful mid-run env-stream reconnects.",
+        s.env_reconnects,
+    );
+    counter(
+        "tb_replay_sampled_total",
+        "Rollouts sampled from the replay ring.",
+        s.replay_sampled,
+    );
+    counter(
+        "tb_replay_evicted_total",
+        "Rollouts evicted from the replay ring (FIFO or staleness).",
+        s.replay_evicted,
+    );
+    counter(
+        "tb_serve_requests_total",
+        "Inference requests answered with an ActionBatch.",
+        s.serve_requests,
+    );
+    counter(
+        "tb_serve_busy_total",
+        "Inference requests rejected with a typed Busy frame.",
+        s.serve_busy,
+    );
+    counter(
+        "tb_actor_panics_total",
+        "Actor-thread panics caught by the supervisor.",
+        s.actor_panics,
+    );
+    counter(
+        "tb_actor_restarts_total",
+        "Actor respawns under the restart budget.",
+        s.actor_restarts,
+    );
+    counter(
+        "tb_actors_lost_total",
+        "Actors permanently lost (restart budget exhausted).",
+        s.actors_lost,
+    );
+    counter(
+        "tb_watchdog_stalls_total",
+        "Hard pipeline stalls the watchdog escalated on.",
+        s.watchdog_stalls,
+    );
+
+    // the policy-lag histogram, cumulative le buckets per the
+    // Prometheus histogram convention
+    let _ = writeln!(out, "# HELP tb_policy_lag Per-batch-column policy lag (versions).");
+    let _ = writeln!(out, "# TYPE tb_policy_lag histogram");
+    let mut cum = 0u64;
+    for (i, b) in s.lag_buckets.iter().enumerate() {
+        cum += b;
+        let _ = writeln!(
+            out,
+            "tb_policy_lag_bucket{{le=\"{}\"}} {cum}",
+            fmt_le(Pow2Hist::<LAG_BUCKETS>::bucket_bound(i))
+        );
+    }
+    let _ = writeln!(out, "tb_policy_lag_sum {}", s.lag_sum);
+    let _ = writeln!(out, "tb_policy_lag_count {}", s.lag_count);
+
+    // one labeled histogram series per pipeline stage, straight off
+    // the tracer's always-on duration histograms
+    let _ = writeln!(
+        out,
+        "# HELP tb_stage_duration_us Pipeline stage span durations (µs)."
+    );
+    let _ = writeln!(out, "# TYPE tb_stage_duration_us histogram");
+    for stage in STAGES {
+        let h = stage_hist(stage);
+        let name = stage.name();
+        let mut cum = 0u64;
+        for (i, b) in h.buckets().iter().enumerate() {
+            cum += b;
+            let _ = writeln!(
+                out,
+                "tb_stage_duration_us_bucket{{stage=\"{name}\",le=\"{}\"}} {cum}",
+                fmt_le(Pow2Hist::<DUR_BUCKETS>::bucket_bound(i))
+            );
+        }
+        let _ = writeln!(out, "tb_stage_duration_us_sum{{stage=\"{name}\"}} {}", h.sum());
+        let _ = writeln!(out, "tb_stage_duration_us_count{{stage=\"{name}\"}} {}", h.count());
+    }
+    let _ = writeln!(
+        out,
+        "# HELP tb_stage_duration_us_max Largest span duration per stage (µs)."
+    );
+    let _ = writeln!(out, "# TYPE tb_stage_duration_us_max gauge");
+    for stage in STAGES {
+        let _ = writeln!(
+            out,
+            "tb_stage_duration_us_max{{stage=\"{}\"}} {}",
+            stage.name(),
+            stage_hist(stage).max()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+
+    fn scrape(addr: SocketAddr, request: &str) -> (String, String) {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(request.as_bytes()).unwrap();
+        let mut text = String::new();
+        stream.read_to_string(&mut text).unwrap();
+        let (head, body) = text.split_once("\r\n\r\n").unwrap_or((&text[..], ""));
+        (head.to_string(), body.to_string())
+    }
+
+    #[test]
+    fn serves_metrics_with_content_length_and_closes() {
+        let g = PipelineGauges::shared();
+        g.pool_capacity.set(8);
+        g.pool_free.set(5);
+        g.env_steps.add(123);
+        let server = MetricsServer::start("127.0.0.1:0", g).unwrap();
+        let (head, body) = scrape(
+            server.local_addr(),
+            "GET /metrics HTTP/1.0\r\nHost: x\r\n\r\n",
+        );
+        assert!(head.starts_with("HTTP/1.0 200 OK"), "{head}");
+        assert!(head.contains("Content-Type: text/plain; version=0.0.4"), "{head}");
+        let len: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .expect("length header")
+            .parse()
+            .expect("numeric length");
+        assert_eq!(len, body.len(), "Content-Length matches the body");
+        assert!(body.contains("tb_pool_free 5\n"), "{body}");
+        assert!(body.contains("tb_pool_rented 3\n"));
+        assert!(body.contains("tb_env_steps_total 123\n"));
+        assert!(body.contains("tb_policy_lag_bucket{le=\"+Inf\"}"));
+        assert!(body.contains("tb_stage_duration_us_bucket{stage=\"learner_step\",le=\"+Inf\"}"));
+        assert_eq!(server.shutdown(), 1, "one 200 served");
+    }
+
+    #[test]
+    fn rejects_wrong_paths_methods_and_garbage() {
+        let server = MetricsServer::start("127.0.0.1:0", PipelineGauges::shared()).unwrap();
+        let addr = server.local_addr();
+        let (head, _) = scrape(addr, "GET /other HTTP/1.0\r\n\r\n");
+        assert!(head.starts_with("HTTP/1.0 404"), "{head}");
+        let (head, _) = scrape(addr, "POST /metrics HTTP/1.0\r\n\r\n");
+        assert!(head.starts_with("HTTP/1.0 405"), "{head}");
+        let (head, _) = scrape(addr, "\r\n\r\n");
+        assert!(head.starts_with("HTTP/1.0 400"), "{head}");
+        // binary garbage is answered (or dropped), never a panic
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(&[0xFF, 0x00, 0xFE, b'\n']).unwrap();
+        let mut text = String::new();
+        let _ = stream.read_to_string(&mut text);
+        assert_eq!(server.shutdown(), 0, "no 200 among the rejects");
+    }
+
+    #[test]
+    fn survives_connection_churn() {
+        let server = MetricsServer::start("127.0.0.1:0", PipelineGauges::shared()).unwrap();
+        let addr = server.local_addr();
+        for _ in 0..20 {
+            // connect-and-slam: open, send nothing or half a line, drop
+            drop(TcpStream::connect(addr).unwrap());
+            let mut s = TcpStream::connect(addr).unwrap();
+            let _ = s.write_all(b"GET /met");
+            drop(s);
+        }
+        // the exporter still answers a well-formed scrape afterwards
+        let (head, body) = scrape(addr, "GET /metrics HTTP/1.0\r\n\r\n");
+        assert!(head.starts_with("HTTP/1.0 200 OK"), "{head}");
+        assert!(body.contains("tb_queue_depth"), "{body}");
+        assert!(server.shutdown() >= 1);
+    }
+
+    #[test]
+    fn every_metric_family_appears_exactly_once() {
+        let g = PipelineGauges::new();
+        let mut body = String::new();
+        render_prometheus(&g, &mut body);
+        for name in [
+            "tb_pool_free",
+            "tb_pool_rented",
+            "tb_queue_depth",
+            "tb_batches_ready",
+            "tb_slots_in_use",
+            "tb_env_streams",
+            "tb_replay_size",
+            "tb_serve_latency_p50_us",
+            "tb_serve_latency_p99_us",
+            "tb_policy_lag_max",
+            "tb_pool_rent_waits_total",
+            "tb_slot_waits_total",
+            "tb_env_steps_total",
+            "tb_env_reconnects_total",
+            "tb_replay_sampled_total",
+            "tb_replay_evicted_total",
+            "tb_serve_requests_total",
+            "tb_serve_busy_total",
+            "tb_actor_panics_total",
+            "tb_actor_restarts_total",
+            "tb_actors_lost_total",
+            "tb_watchdog_stalls_total",
+            "tb_policy_lag_sum",
+            "tb_policy_lag_count",
+        ] {
+            let count = body
+                .lines()
+                .filter(|l| {
+                    l.split_whitespace().next() == Some(name)
+                })
+                .count();
+            assert_eq!(count, 1, "{name} must appear exactly once:\n{body}");
+        }
+        // one histogram series per stage, each with the +Inf closer
+        for stage in STAGES {
+            let closer = format!(
+                "tb_stage_duration_us_bucket{{stage=\"{}\",le=\"+Inf\"}}",
+                stage.name()
+            );
+            assert_eq!(
+                body.lines().filter(|l| l.starts_with(&closer)).count(),
+                1,
+                "{closer}"
+            );
+        }
+    }
+
+    #[test]
+    fn rendered_text_is_valid_prometheus_syntax() {
+        let g = PipelineGauges::new();
+        g.policy_lag.record(2);
+        let mut body = String::new();
+        render_prometheus(&g, &mut body);
+        let reader = BufReader::new(body.as_bytes());
+        for line in reader.lines() {
+            let line = line.unwrap();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# ") {
+                assert!(
+                    rest.starts_with("HELP ") || rest.starts_with("TYPE "),
+                    "comment lines are HELP/TYPE only: {line}"
+                );
+                continue;
+            }
+            // sample line: `name[{labels}] value`
+            let (name_part, value) = line.rsplit_once(' ').expect("name value split");
+            let name_end = name_part.find('{').unwrap_or(name_part.len());
+            let name = &name_part[..name_end];
+            assert!(
+                name.chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name in {line}"
+            );
+            assert!(
+                value.parse::<f64>().is_ok(),
+                "sample value must be numeric: {line}"
+            );
+            if name_end < name_part.len() {
+                assert!(name_part.ends_with('}'), "unclosed label set: {line}");
+            }
+        }
+        // histogram invariants: cumulative buckets, +Inf == count
+        let bucket_vals: Vec<u64> = body
+            .lines()
+            .filter(|l| l.starts_with("tb_policy_lag_bucket"))
+            .map(|l| l.rsplit_once(' ').unwrap().1.parse().unwrap())
+            .collect();
+        assert!(bucket_vals.windows(2).all(|w| w[1] >= w[0]), "{bucket_vals:?}");
+        let count: u64 = body
+            .lines()
+            .find_map(|l| l.strip_prefix("tb_policy_lag_count "))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(*bucket_vals.last().unwrap(), count, "+Inf bucket == count");
+    }
+}

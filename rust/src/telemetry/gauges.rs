@@ -33,6 +33,7 @@ use std::fmt;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::telemetry::hist::Pow2Hist;
 use crate::util::stats::LatencyRing;
 
 /// Monotonic event counter (relaxed atomic add; hot-path safe).
@@ -119,60 +120,13 @@ pub const LAG_BUCKETS: usize = 8;
 /// off-policyness v-trace corrects (DESIGN.md §Sharded-Learner).
 /// Clones share the same underlying counters; a detached default
 /// instance reads all-zero.
-#[derive(Clone, Default)]
-pub struct LagHist {
-    count: Arc<AtomicU64>,
-    sum: Arc<AtomicU64>,
-    max: Arc<AtomicU64>,
-    buckets: Arc<[AtomicU64; LAG_BUCKETS]>,
-}
-
-impl LagHist {
-    pub fn new() -> LagHist {
-        LagHist::default()
-    }
-
-    /// Record one per-column lag observation (hot-path safe: four
-    /// relaxed atomic ops, no locks, no allocation).
-    // tb-lint: no-alloc
-    #[inline]
-    pub fn record(&self, lag: u64) {
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum.fetch_add(lag, Ordering::Relaxed);
-        self.max.fetch_max(lag, Ordering::Relaxed);
-        let b = match lag {
-            0..=3 => lag as usize,
-            4..=7 => 4,
-            8..=15 => 5,
-            16..=31 => 6,
-            _ => 7,
-        };
-        self.buckets[b].fetch_add(1, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    pub fn sum(&self) -> u64 {
-        self.sum.load(Ordering::Relaxed)
-    }
-
-    pub fn max(&self) -> u64 {
-        self.max.load(Ordering::Relaxed)
-    }
-
-    /// Point-in-time bucket counts (independent relaxed reads).
-    pub fn buckets(&self) -> [u64; LAG_BUCKETS] {
-        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
-    }
-}
-
-impl fmt::Debug for LagHist {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "LagHist(n={}, max={})", self.count(), self.max())
-    }
-}
+///
+/// An alias of the shared [`Pow2Hist`] at the documented 8-bucket
+/// layout — the same substrate the span tracer records stage
+/// durations into ([`crate::telemetry::trace`]); the private
+/// implementation this type used to carry lives in
+/// [`crate::telemetry::hist`] now.
+pub type LagHist = Pow2Hist<LAG_BUCKETS>;
 
 /// The occupancy gauges of one training (or evaluation) pipeline.
 /// Handles are `Clone` (shared atomics), so the driver clones
@@ -466,7 +420,9 @@ mod tests {
         assert_eq!(h2.sum(), 62);
         assert_eq!(h2.max(), 40);
         assert_eq!(h2.buckets(), [1, 2, 0, 1, 1, 1, 0, 1]);
-        assert_eq!(format!("{h:?}"), "LagHist(n=7, max=40)");
+        // LagHist is an alias of the shared Pow2Hist now; same numbers,
+        // shared Debug format
+        assert_eq!(format!("{h:?}"), "Pow2Hist(n=7, max=40)");
         // the registry snapshot carries the same numbers
         let p = PipelineGauges::new();
         p.policy_lag.record(2);

@@ -1,0 +1,245 @@
+//! Shared histogram substrate for the telemetry layer.
+//!
+//! Two kinds of distribution live in this crate and both used to have
+//! private implementations: the policy-lag histogram (`LagHist`, eight
+//! pow2 buckets over version lags) and the serve-latency ring's
+//! nearest-rank quantile path (`util::stats::LatencyRing`).  This
+//! module is the single home for both mechanisms:
+//!
+//! * [`Pow2Hist`] — a bucketed, relaxed-atomic, allocation-free
+//!   histogram generalizing the old `LagHist` to any bucket count.
+//!   `telemetry::gauges::LagHist` is now an alias for `Pow2Hist<8>`,
+//!   and the span tracer ([`crate::telemetry::trace`]) records stage
+//!   durations into `Pow2Hist<32>` (microseconds up to ~9 minutes
+//!   before the open tail bucket).
+//! * [`nearest_rank`] — the exact nearest-rank quantile rule the
+//!   latency ring sorts into; kept here so the exposition endpoint,
+//!   the ring, and the gauge snapshot all agree on "p50/p99" exactly.
+//!
+//! The bucket rule (identical to the old `LagHist` when `N == 8`):
+//! values 0–3 get exact buckets, then each bucket covers a power-of-two
+//! range (`4–7`, `8–15`, `16–31`, …) and the last bucket is open-ended.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Bucketed pow2 histogram: count/sum/max plus `N` bucket counters,
+/// all relaxed atomics.  Clones share the same underlying counters
+/// (the [`Counter`](crate::telemetry::gauges::Counter) pattern); a
+/// detached default instance reads all-zero.
+///
+/// The record path is hot-path safe: five relaxed atomic ops, no
+/// locks, no allocation (fenced and gated by `alloc_regression.rs`).
+#[derive(Clone)]
+pub struct Pow2Hist<const N: usize> {
+    count: Arc<AtomicU64>,
+    sum: Arc<AtomicU64>,
+    max: Arc<AtomicU64>,
+    buckets: Arc<[AtomicU64; N]>,
+}
+
+impl<const N: usize> Default for Pow2Hist<N> {
+    fn default() -> Self {
+        Pow2Hist {
+            count: Arc::default(),
+            sum: Arc::default(),
+            max: Arc::default(),
+            buckets: Arc::new(std::array::from_fn(|_| AtomicU64::new(0))),
+        }
+    }
+}
+
+impl<const N: usize> Pow2Hist<N> {
+    pub fn new() -> Pow2Hist<N> {
+        Pow2Hist::default()
+    }
+
+    /// Bucket index for a recorded value: exact for 0–3, then
+    /// `floor(log2(v)) + 2` capped at the open tail bucket `N − 1`.
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        if v < 4 {
+            v as usize
+        } else {
+            ((63 - v.leading_zeros() as usize) + 2).min(N - 1)
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i`; `u64::MAX` marks the
+    /// open-ended tail bucket.  (For `N == 8`: 0, 1, 2, 3, 7, 15, 31,
+    /// then open — the documented `LagHist` layout.)
+    pub fn bucket_bound(i: usize) -> u64 {
+        if i < 4 {
+            i as u64
+        } else if i + 1 >= N {
+            u64::MAX
+        } else {
+            (1u64 << (i - 1)) - 1
+        }
+    }
+
+    /// Record one observation (hot-path safe: five relaxed atomic
+    /// ops, no locks, no allocation).
+    // tb-lint: no-alloc
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time bucket counts (independent relaxed reads).
+    pub fn buckets(&self) -> [u64; N] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Upper bound of the bucket holding the nearest-rank `q`-th
+    /// percentile (`q` in 0–100): the histogram's resolution-limited
+    /// answer to "p50/p99".  The open tail bucket reports the recorded
+    /// max instead of infinity; an empty histogram reports 0.
+    ///
+    /// Reads are independent relaxed loads, so a reading racing a
+    /// record may be off by the in-flight sample — reporting-path
+    /// statistics, not an exact register.
+    pub fn quantile_bound(&self, q: u64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = (q * n).div_ceil(100).clamp(1, n);
+        let mut seen = 0u64;
+        for i in 0..N {
+            seen += self.buckets[i].load(Ordering::Relaxed);
+            if seen >= rank {
+                let bound = Self::bucket_bound(i);
+                return if bound == u64::MAX { self.max() } else { bound };
+            }
+        }
+        // racy under-read of the bucket counters: fall back to max
+        self.max()
+    }
+}
+
+impl<const N: usize> fmt::Debug for Pow2Hist<N> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Pow2Hist(n={}, max={})", self.count(), self.max())
+    }
+}
+
+/// Nearest-rank quantile on a sorted window: `rank = ceil(q·n/100)`,
+/// clamped to at least 1; the sample at index `rank − 1`.  This is the
+/// exact rule the serve-latency ring reports through (p50 of 1..=100
+/// is exactly 50, p99 exactly 99 — pinned by the latency-ring tests).
+pub fn nearest_rank(sorted: &[u64], q: u64) -> u64 {
+    let n = sorted.len() as u64;
+    if n == 0 {
+        return 0;
+    }
+    let rank = (q * n).div_ceil(100).max(1);
+    sorted[(rank - 1) as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_matches_the_documented_lag_hist() {
+        // N = 8: exact 0–3, then 4–7, 8–15, 16–31, 32+.
+        type H = Pow2Hist<8>;
+        for (v, b) in [
+            (0u64, 0usize),
+            (1, 1),
+            (2, 2),
+            (3, 3),
+            (4, 4),
+            (7, 4),
+            (8, 5),
+            (15, 5),
+            (16, 6),
+            (31, 6),
+            (32, 7),
+            (1_000_000, 7),
+        ] {
+            assert_eq!(H::bucket_of(v), b, "value {v}");
+        }
+        assert_eq!(H::bucket_bound(0), 0);
+        assert_eq!(H::bucket_bound(3), 3);
+        assert_eq!(H::bucket_bound(4), 7);
+        assert_eq!(H::bucket_bound(5), 15);
+        assert_eq!(H::bucket_bound(6), 31);
+        assert_eq!(H::bucket_bound(7), u64::MAX);
+    }
+
+    #[test]
+    fn records_count_sum_max_and_buckets_across_clones() {
+        let h: Pow2Hist<8> = Pow2Hist::new();
+        let h2 = h.clone();
+        for v in [0u64, 1, 1, 3, 5, 12, 40] {
+            h.record(v);
+        }
+        assert_eq!(h2.count(), 7, "clones share the counters");
+        assert_eq!(h2.sum(), 62);
+        assert_eq!(h2.max(), 40);
+        assert_eq!(h2.buckets(), [1, 2, 0, 1, 1, 1, 0, 1]);
+        assert_eq!(format!("{h:?}"), "Pow2Hist(n=7, max=40)");
+    }
+
+    #[test]
+    fn wide_histogram_covers_microsecond_ranges() {
+        let h: Pow2Hist<32> = Pow2Hist::new();
+        h.record(1_000_000); // 1 s in µs lands in a finite bucket
+        let b = Pow2Hist::<32>::bucket_of(1_000_000);
+        assert!(b < 31, "1 s must not spill into the open tail");
+        assert_eq!(h.buckets()[b], 1);
+        assert!(Pow2Hist::<32>::bucket_bound(b) >= 1_000_000);
+    }
+
+    #[test]
+    fn quantile_bound_reports_bucket_resolution() {
+        let h: Pow2Hist<32> = Pow2Hist::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        // rank 50 falls in the 32–63 bucket, rank 99 in 64–127
+        assert_eq!(h.quantile_bound(50), 63);
+        assert_eq!(h.quantile_bound(99), 127);
+        assert_eq!(h.quantile_bound(100), 127);
+    }
+
+    #[test]
+    fn quantile_bound_edge_cases() {
+        let h: Pow2Hist<8> = Pow2Hist::new();
+        assert_eq!(h.quantile_bound(50), 0, "empty histogram reads 0");
+        h.record(2);
+        assert_eq!(h.quantile_bound(50), 2, "single sample: its bucket");
+        h.record(1_000);
+        // p99 of {2, 1000} is the open tail bucket: reports the max
+        assert_eq!(h.quantile_bound(99), 1_000);
+    }
+
+    #[test]
+    fn nearest_rank_is_exact() {
+        let sorted: Vec<u64> = (1..=100).collect();
+        assert_eq!(nearest_rank(&sorted, 50), 50);
+        assert_eq!(nearest_rank(&sorted, 99), 99);
+        assert_eq!(nearest_rank(&sorted, 0), 1, "rank clamps to 1");
+        assert_eq!(nearest_rank(&sorted, 100), 100);
+        assert_eq!(nearest_rank(&[], 50), 0, "empty window reads 0");
+        assert_eq!(nearest_rank(&[7], 99), 7);
+    }
+}

@@ -1,8 +1,10 @@
 //! Telemetry: the crate's observability subsystem — a leveled
-//! structured [`log`] with a swappable global sink, and the atomic
-//! occupancy [`gauges`] the pipeline components report into.
+//! structured [`log`] with a swappable global sink, the atomic
+//! occupancy [`gauges`] the pipeline components report into, and the
+//! span [`trace`]r that measures where wall-clock goes.
 //!
-//! The split mirrors the hot-path discipline (DESIGN.md §Telemetry):
+//! The split mirrors the hot-path discipline (DESIGN.md §Telemetry,
+//! §Tracing):
 //!
 //! * **events** (warnings, progress lines, rare state changes) go
 //!   through [`log`] — formatted only when the level filter passes,
@@ -10,14 +12,27 @@
 //! * **occupancy** (pool/queue/slot fill) goes through [`gauges`] —
 //!   one relaxed atomic per update, readable at any time by the
 //!   report path, and safe inside the allocation-free hot loops;
+//! * **durations** (per-stage span latencies) go through [`trace`] —
+//!   a [`hist::Pow2Hist`] per stage plus optional per-thread span
+//!   rings drained into Chrome-trace JSON (`--trace_path`);
 //! * **time series** of the gauges come from [`sampler`] — a
-//!   background thread that snapshots the registry into a CSV, so
-//!   starvation episodes are diagnosable after the run.
+//!   background thread that snapshots the registry into a CSV (and
+//!   drains the span rings), so starvation episodes are diagnosable
+//!   after the run;
+//! * **live scrapes** come from [`exporter`] — an in-tree HTTP/1.0
+//!   `GET /metrics` endpoint (`--metrics_addr`) rendering gauges and
+//!   stage histograms in Prometheus text format.
 
+pub mod exporter;
 pub mod gauges;
+pub mod hist;
 pub mod log;
 pub mod sampler;
+pub mod trace;
 
+pub use exporter::MetricsServer;
 pub use gauges::{Counter, Gauge, GaugesSnapshot, PipelineGauges};
+pub use hist::Pow2Hist;
 pub use log::{CaptureSink, Level, LogSink, Record};
 pub use sampler::GaugeSampler;
+pub use trace::{span, SpanTimer, Stage, TraceWriter};

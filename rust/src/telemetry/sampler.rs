@@ -5,9 +5,13 @@
 //!
 //! The sampler thread wakes every `period`, snapshots the shared
 //! [`PipelineGauges`] registry (relaxed atomic loads — it never
-//! touches the hot path), and appends one CSV row.  The driver starts
-//! one when `--gauge_log_path` is set and stops it before shutdown
-//! tears the pipeline down.
+//! touches the hot path), and appends one CSV row.  The same thread is
+//! the span-ring drain (DESIGN.md §Tracing): when a
+//! [`TraceWriter`](crate::telemetry::trace::TraceWriter) is attached
+//! (`--trace_path`), each wake also drains every per-thread span ring
+//! into the Chrome-trace file.  The driver starts one when
+//! `--gauge_log_path` or `--trace_path` is set and stops it before
+//! shutdown tears the pipeline down.
 //!
 //! Rows stream into `<path>.tmp` and the final file appears atomically
 //! when the sampler stops (temp + fsync + rename, DESIGN.md
@@ -16,6 +20,15 @@
 //! watch a live run.  The driver's emergency-shutdown path (watchdog
 //! stall, learner-shard failure) runs `stop()` before it returns, so
 //! even an aborted run publishes the series it recorded.
+//!
+//! # CSV schema (version 2)
+//!
+//! Version 2 prepends a `schema_version` column (every row carries the
+//! literal version number, so a parser reading a column by position
+//! fails loudly on the very first row of a mismatched file) and
+//! appends per-stage duration quantiles (`<stage>_p50_us`,
+//! `<stage>_p99_us` for each of the ten traced stages, read off the
+//! tracer's always-on pow2 histograms at bucket resolution).
 
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -24,18 +37,31 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::telemetry::gauges::{Counter, PipelineGauges};
+use crate::telemetry::trace::{stage_hist, TraceWriter, STAGES};
 use crate::util::fsio::AtomicFile;
 
-/// CSV header of the gauge time series (mirrors
-/// [`crate::telemetry::gauges::GaugesSnapshot`] field by field).
-pub const GAUGE_CURVE_HEADER: &str = "elapsed_s,pool_free,pool_rented,pool_rent_waits,\
-queue_depth,batches_ready,slots_in_use,slot_waits,env_streams,env_steps,env_reconnects,\
-replay_size,replay_sampled,replay_evicted,lag_count,lag_sum,lag_max,\
+/// Version stamped into every row's leading `schema_version` column.
+/// Bump on any column change so positional parsers fail loudly.
+pub const GAUGE_CURVE_SCHEMA_VERSION: u32 = 2;
+
+/// CSV header of the gauge time series: `schema_version`, the
+/// [`crate::telemetry::gauges::GaugesSnapshot`] fields, then p50/p99
+/// duration columns per traced stage (µs, bucket resolution), in
+/// [`STAGES`] order.
+pub const GAUGE_CURVE_HEADER: &str = "schema_version,elapsed_s,pool_free,pool_rented,\
+pool_rent_waits,queue_depth,batches_ready,slots_in_use,slot_waits,env_streams,env_steps,\
+env_reconnects,replay_size,replay_sampled,replay_evicted,lag_count,lag_sum,lag_max,\
 serve_requests,serve_busy,serve_p50_us,serve_p99_us,\
-actor_panics,actor_restarts,actors_lost,watchdog_stalls";
+actor_panics,actor_restarts,actors_lost,watchdog_stalls,\
+actor_unroll_p50_us,actor_unroll_p99_us,env_step_p50_us,env_step_p99_us,\
+stacker_assemble_p50_us,stacker_assemble_p99_us,learner_step_p50_us,learner_step_p99_us,\
+shard_barrier_p50_us,shard_barrier_p99_us,weight_publish_p50_us,weight_publish_p99_us,\
+replay_insert_p50_us,replay_insert_p99_us,replay_sample_p50_us,replay_sample_p99_us,\
+serve_round_p50_us,serve_round_p99_us,checkpoint_write_p50_us,checkpoint_write_p99_us";
 
 /// Handle to a running gauge sampler; [`stop`](GaugeSampler::stop) (or
-/// drop) joins the thread and publishes the file at its final path.
+/// drop) joins the thread and publishes the file(s) at their final
+/// paths.
 pub struct GaugeSampler {
     stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<u64>>,
@@ -54,11 +80,42 @@ impl GaugeSampler {
         period: Duration,
         heartbeat: Counter,
     ) -> anyhow::Result<GaugeSampler> {
-        use std::io::Write;
+        GaugeSampler::start_with_trace(gauges, Some(path), period, heartbeat, None)
+    }
 
-        let mut file = AtomicFile::create(path)?;
-        writeln!(file, "{GAUGE_CURVE_HEADER}")?;
-        file.flush()?;
+    /// [`start`](GaugeSampler::start), with either output optional:
+    /// `csv` is the gauge time series, `trace_path` attaches a
+    /// [`TraceWriter`] whose span rings this thread drains every
+    /// period (and finishes — final drain, JSON close, atomic commit —
+    /// on stop).  At least one output must be given; the driver maps
+    /// `--gauge_log_path`/`--trace_path` straight onto them.
+    pub fn start_with_trace(
+        gauges: Arc<PipelineGauges>,
+        csv: Option<&Path>,
+        period: Duration,
+        heartbeat: Counter,
+        trace_path: Option<&Path>,
+    ) -> anyhow::Result<GaugeSampler> {
+        use std::fmt::Write as _;
+        use std::io::Write as _;
+
+        anyhow::ensure!(
+            csv.is_some() || trace_path.is_some(),
+            "gauge sampler needs a CSV path, a trace path, or both"
+        );
+        let mut file = match csv {
+            Some(path) => {
+                let mut file = AtomicFile::create(path)?;
+                writeln!(file, "{GAUGE_CURVE_HEADER}")?;
+                file.flush()?;
+                Some(file)
+            }
+            None => None,
+        };
+        let mut trace = match trace_path {
+            Some(path) => Some(TraceWriter::create(path)?),
+            None => None,
+        };
         let period = period.max(Duration::from_millis(1));
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
@@ -67,6 +124,7 @@ impl GaugeSampler {
             .spawn(move || {
                 let t0 = Instant::now();
                 let mut rows = 0u64;
+                let mut line = String::new();
                 // poll the stop flag at a finer grain than the period
                 // so stop() never waits a whole (possibly long) period
                 let poll = period.min(Duration::from_millis(20));
@@ -86,47 +144,84 @@ impl GaugeSampler {
                     // would fabricate a flat regime at one instant
                     // instead of honestly leaving a gap in the series
                     next = now + period;
-                    let s = gauges.snapshot();
-                    let ok = writeln!(
-                        file,
-                        "{:.3},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
-                        t0.elapsed().as_secs_f64(),
-                        s.pool_free,
-                        s.pool_rented,
-                        s.pool_rent_waits,
-                        s.queue_depth,
-                        s.batches_ready,
-                        s.slots_in_use,
-                        s.slot_waits,
-                        s.env_streams,
-                        s.env_steps,
-                        s.env_reconnects,
-                        s.replay_size,
-                        s.replay_sampled,
-                        s.replay_evicted,
-                        s.lag_count,
-                        s.lag_sum,
-                        s.lag_max,
-                        s.serve_requests,
-                        s.serve_busy,
-                        s.serve_p50_us,
-                        s.serve_p99_us,
-                        s.actor_panics,
-                        s.actor_restarts,
-                        s.actors_lost,
-                        s.watchdog_stalls,
-                    )
-                    .is_ok();
-                    if !ok {
-                        break; // disk gone: stop sampling, keep training
+                    if let Some(w) = trace.as_mut() {
+                        // span rings drain on this thread, off the
+                        // recording paths; a full ring overwrites its
+                        // oldest spans rather than blocking a recorder
+                        let _ = w.drain();
                     }
-                    let _ = file.flush();
+                    let mut csv_dead = false;
+                    if let Some(f) = file.as_mut() {
+                        let s = gauges.snapshot();
+                        line.clear();
+                        let _ = write!(
+                            line,
+                            "{},{:.3},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                            GAUGE_CURVE_SCHEMA_VERSION,
+                            t0.elapsed().as_secs_f64(),
+                            s.pool_free,
+                            s.pool_rented,
+                            s.pool_rent_waits,
+                            s.queue_depth,
+                            s.batches_ready,
+                            s.slots_in_use,
+                            s.slot_waits,
+                            s.env_streams,
+                            s.env_steps,
+                            s.env_reconnects,
+                            s.replay_size,
+                            s.replay_sampled,
+                            s.replay_evicted,
+                            s.lag_count,
+                            s.lag_sum,
+                            s.lag_max,
+                            s.serve_requests,
+                            s.serve_busy,
+                            s.serve_p50_us,
+                            s.serve_p99_us,
+                            s.actor_panics,
+                            s.actor_restarts,
+                            s.actors_lost,
+                            s.watchdog_stalls,
+                        );
+                        for stage in STAGES {
+                            let h = stage_hist(stage);
+                            let _ = write!(
+                                line,
+                                ",{},{}",
+                                h.quantile_bound(50),
+                                h.quantile_bound(99)
+                            );
+                        }
+                        if writeln!(f, "{line}").is_err() {
+                            csv_dead = true; // disk gone: stop writing, keep training
+                        } else {
+                            let _ = f.flush();
+                        }
+                    }
+                    if csv_dead {
+                        file = None;
+                        if trace.is_none() {
+                            break;
+                        }
+                    }
                     heartbeat.inc();
                     rows += 1;
                 }
                 // publish the series at its final path (temp + fsync +
                 // rename); on error the .tmp stays behind with the rows
-                let _ = file.commit();
+                if let Some(f) = file {
+                    let _ = f.commit();
+                }
+                if let Some(w) = trace {
+                    match w.finish() {
+                        Ok((events, lost)) => crate::tb_info!(
+                            "telemetry",
+                            "trace committed: {events} span events ({lost} lost to ring overwrite)"
+                        ),
+                        Err(e) => crate::tb_warn!("telemetry", "trace commit failed: {e}"),
+                    }
+                }
                 rows
             })?;
         Ok(GaugeSampler {
@@ -136,7 +231,8 @@ impl GaugeSampler {
     }
 
     /// Stop the sampler and return the number of rows it recorded.
-    /// The CSV is at its final path once this returns.
+    /// The CSV (and the trace, when attached) is at its final path
+    /// once this returns.
     pub fn stop(mut self) -> u64 {
         self.stop.store(true, Ordering::Relaxed);
         match self.handle.take() {
@@ -158,6 +254,7 @@ impl Drop for GaugeSampler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::telemetry::trace::{span, Stage};
 
     #[test]
     fn records_occupancy_rows_until_stopped() {
@@ -178,12 +275,13 @@ mod tests {
         // then flip occupancy and wait for the second regime too.
         // Mid-run the rows live in the `.tmp` sibling — the final path
         // must stay absent until stop() publishes it.
-        let rows_with = |col1: &str| {
+        // pool_free is column 2 now (schema_version, elapsed_s lead).
+        let rows_with = |free: &str| {
             std::fs::read_to_string(&live)
                 .unwrap()
                 .lines()
                 .skip(1)
-                .filter(|r| r.split(',').nth(1) == Some(col1))
+                .filter(|r| r.split(',').nth(2) == Some(free))
                 .count()
         };
         for _ in 0..5000 {
@@ -216,15 +314,19 @@ mod tests {
         }
         // the time series caught both occupancy regimes (free=5 →
         // rented=3, then free=1 → rented=7)
-        assert!(lines[1..].iter().any(|r| r.split(',').nth(1) == Some("5")));
+        assert!(lines[1..].iter().any(|r| r.split(',').nth(2) == Some("5")));
         assert!(
-            lines[1..].iter().any(|r| r.split(',').nth(1) == Some("1")),
+            lines[1..].iter().any(|r| r.split(',').nth(2) == Some("1")),
             "mid-run occupancy change must be visible in the series"
         );
-        // elapsed_s is monotone
+        // every row leads with the schema version
+        assert!(lines[1..]
+            .iter()
+            .all(|r| r.split(',').next() == Some("2")));
+        // elapsed_s (column 1 now) is monotone
         let times: Vec<f64> = lines[1..]
             .iter()
-            .map(|r| r.split(',').next().unwrap().parse().unwrap())
+            .map(|r| r.split(',').nth(1).unwrap().parse().unwrap())
             .collect();
         assert!(times.windows(2).all(|w| w[1] >= w[0]));
     }
@@ -240,5 +342,65 @@ mod tests {
         assert_eq!(sampler.stop(), 0);
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 1, "header only");
+    }
+
+    #[test]
+    fn header_pins_schema_version_and_stage_column_arity() {
+        // v2 = schema_version + elapsed_s + 24 snapshot columns +
+        // (p50, p99) per traced stage.  A column change without a
+        // version bump fails here; a version bump without updating
+        // this pin fails here too.
+        assert_eq!(GAUGE_CURVE_SCHEMA_VERSION, 2);
+        let cols: Vec<&str> = GAUGE_CURVE_HEADER.split(',').collect();
+        assert_eq!(cols.len(), 26 + 2 * STAGES.len(), "header arity");
+        assert_eq!(cols[0], "schema_version");
+        assert_eq!(cols[1], "elapsed_s");
+        // stage columns come last, in STAGES order, p50 before p99
+        for (i, stage) in STAGES.iter().enumerate() {
+            assert_eq!(cols[26 + 2 * i], format!("{}_p50_us", stage.name()));
+            assert_eq!(cols[26 + 2 * i + 1], format!("{}_p99_us", stage.name()));
+        }
+    }
+
+    #[test]
+    fn stage_duration_columns_carry_recorded_spans() {
+        let dir = std::env::temp_dir().join("tb_gauge_sampler_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("gauges_stages.csv");
+        let _ = std::fs::remove_file(&path);
+        // stage histograms are process-global: record a slow-ish span
+        // so the ActorUnroll columns are nonzero whatever other tests
+        // in this binary recorded before us
+        {
+            let sp = span(Stage::ActorUnroll);
+            std::thread::sleep(Duration::from_millis(2));
+            sp.finish();
+        }
+        let sampler = GaugeSampler::start(
+            PipelineGauges::shared(),
+            &path,
+            Duration::from_millis(5),
+            Counter::new(),
+        )
+        .unwrap();
+        let live = AtomicFile::tmp_path(&path);
+        for _ in 0..5000 {
+            let rows = std::fs::read_to_string(&live)
+                .map(|t| t.lines().count())
+                .unwrap_or(0);
+            if rows >= 2 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(sampler.stop() >= 1);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let row = text.lines().nth(1).expect("at least one data row");
+        let cols: Vec<&str> = row.split(',').collect();
+        assert_eq!(cols.len(), GAUGE_CURVE_HEADER.split(',').count());
+        let p50: u64 = cols[26].parse().expect("actor_unroll_p50_us numeric");
+        let p99: u64 = cols[27].parse().expect("actor_unroll_p99_us numeric");
+        assert!(p99 >= p50, "quantiles are ordered: p50={p50} p99={p99}");
+        assert!(p99 >= 1, "the 2 ms span must register in p99 (µs)");
     }
 }

@@ -1,0 +1,592 @@
+//! Pipeline span tracing (DESIGN.md §Tracing): where wall-clock goes,
+//! per stage, with distribution — not just the point-in-time occupancy
+//! the gauges give.
+//!
+//! Three layers, cheapest first:
+//!
+//! 1. **Stage histograms** — every [`SpanTimer`] drop records its
+//!    duration (µs) into a process-wide [`Pow2Hist`] for its [`Stage`]
+//!    and stamps the stage's last-completed marker.  Always on, a
+//!    handful of relaxed atomics per span, allocation-free (fenced,
+//!    gated by `alloc_regression.rs`).  Read by the `/metrics`
+//!    exposition endpoint ([`crate::telemetry::exporter`]), the
+//!    `GaugeSampler` CSV (p50/p99 columns per stage), and the
+//!    watchdog's stall diagnosis ([`last_span_summary`]).
+//! 2. **Span rings** — when ring buffering is on (`--trace_path`),
+//!    each recording thread also appends `(stage, t0, dur)` into its
+//!    own preallocated single-producer ring.  The write is two relaxed
+//!    stores plus a release bump of the head cursor; an undrained ring
+//!    overwrites its oldest spans (the drain reports how many were
+//!    lost — tracing never applies backpressure to the pipeline).
+//! 3. **Chrome-trace export** — the sampler thread drains all rings
+//!    every period through a [`TraceWriter`], which streams Chrome
+//!    `trace_event` JSON (complete `"X"` events; one `pid` per
+//!    process, one `tid` per recording thread, `thread_name` metadata)
+//!    into `--trace_path` via [`AtomicFile`]: load the committed file
+//!    in `chrome://tracing` (or Perfetto) to see actor/learner overlap.
+//!
+//! The tracer is process-global (like a real profiler): threads
+//! register their ring lazily on their first buffered span, under the
+//! rank-80 `trace.rings` mutex — above every pipeline lock, so a first
+//! span recorded while holding a batcher or barrier lock cannot
+//! invert the lock order.
+//!
+//! Drain protocol: each ring's `head` counts spans ever recorded; the
+//! drain reads `head` with acquire ordering, copies slots
+//! `drained..head` (jumping forward and counting losses if the writer
+//! lapped the ring), and advances its private `drained` cursor.  A
+//! writer racing the drain inside one slot can tear that single event
+//! — bounded, and only when the ring is at capacity.
+
+use std::io::{self, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::telemetry::hist::Pow2Hist;
+use crate::util::fsio::AtomicFile;
+use crate::util::sync::{CheckedMutex, LockOrder};
+
+/// Buckets of every stage-duration histogram: µs resolution, pow2
+/// ranges up to ~2^29 µs (9 minutes) before the open tail bucket.
+pub const DUR_BUCKETS: usize = 32;
+
+/// Spans a ring holds before the writer laps the drain (per thread).
+pub const RING_CAPACITY: usize = 16_384;
+
+/// The instrumented pipeline stages, one histogram + one
+/// last-completed marker each.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Stage {
+    /// One actor unroll: `unroll_length` env steps + inference rounds
+    /// up to (not including) the rollout handoff.
+    ActorUnroll = 0,
+    /// One environment step — in poly mode this is a full RPC round
+    /// (action out, observation frame back).
+    EnvStep = 1,
+    /// One stacker round: queue drain + time-major (mixed) stack.
+    StackerAssemble = 2,
+    /// One learner optimizer step (`step` / `step_full`).
+    LearnerStep = 3,
+    /// One shard's wait at the barrier-average exchange.
+    ShardBarrier = 4,
+    /// One versioned weight publish into the `WeightsStore`.
+    WeightPublish = 5,
+    /// One rollout copy-in-place into the replay ring.
+    ReplayInsert = 6,
+    /// One uniform draw from the replay ring.
+    ReplaySample = 7,
+    /// One served inference round (decode → infer → respond).
+    ServeRound = 8,
+    /// One checkpoint write (serialize + fsync + rename).
+    CheckpointWrite = 9,
+}
+
+/// Number of instrumented stages.
+pub const STAGE_COUNT: usize = 10;
+
+/// All stages, in `Stage` discriminant order (the CSV column order).
+pub const STAGES: [Stage; STAGE_COUNT] = [
+    Stage::ActorUnroll,
+    Stage::EnvStep,
+    Stage::StackerAssemble,
+    Stage::LearnerStep,
+    Stage::ShardBarrier,
+    Stage::WeightPublish,
+    Stage::ReplayInsert,
+    Stage::ReplaySample,
+    Stage::ServeRound,
+    Stage::CheckpointWrite,
+];
+
+impl Stage {
+    /// Stable snake_case name (CSV columns, Prometheus labels, Chrome
+    /// event names).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::ActorUnroll => "actor_unroll",
+            Stage::EnvStep => "env_step",
+            Stage::StackerAssemble => "stacker_assemble",
+            Stage::LearnerStep => "learner_step",
+            Stage::ShardBarrier => "shard_barrier",
+            Stage::WeightPublish => "weight_publish",
+            Stage::ReplayInsert => "replay_insert",
+            Stage::ReplaySample => "replay_sample",
+            Stage::ServeRound => "serve_round",
+            Stage::CheckpointWrite => "checkpoint_write",
+        }
+    }
+}
+
+const TRACE_RINGS_ORDER: LockOrder = LockOrder::new(80, "trace.rings");
+
+/// Duration mask of the packed slot word (stage lives in the top byte).
+const DUR_MASK: u64 = (1 << 56) - 1;
+
+struct SpanSlot {
+    t0_us: AtomicU64,
+    packed: AtomicU64,
+}
+
+/// One thread's preallocated span buffer (single producer: only the
+/// owning thread writes; only the drain thread reads and advances
+/// `drained`).
+struct SpanRing {
+    tid: u32,
+    name: String,
+    /// Spans ever recorded; `head % RING_CAPACITY` is the next slot.
+    head: AtomicU64,
+    /// Spans already drained (drain-thread private, atomic so the ring
+    /// itself stays `Sync`).
+    drained: AtomicU64,
+    slots: Box<[SpanSlot]>,
+}
+
+impl SpanRing {
+    /// Append one span. Single-producer: two relaxed slot stores, then
+    /// a release head bump that publishes them to the drain thread.
+    // tb-lint: no-alloc
+    #[inline]
+    fn push(&self, stage: Stage, t0_us: u64, dur_us: u64) {
+        let head = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(head % RING_CAPACITY as u64) as usize];
+        slot.t0_us.store(t0_us, Ordering::Relaxed);
+        slot
+            .packed
+            .store(((stage as u64) << 56) | dur_us.min(DUR_MASK), Ordering::Relaxed);
+        self.head.store(head + 1, Ordering::Release); // publish the slot words
+    }
+
+    /// Copy undrained spans into `out`; returns how many were lost to
+    /// ring overwrite since the previous drain.
+    fn drain_into(&self, out: &mut Vec<SpanEvent>) -> u64 {
+        let head = self.head.load(Ordering::Acquire);
+        let mut start = self.drained.load(Ordering::Relaxed);
+        let mut lost = 0u64;
+        if head.saturating_sub(start) > RING_CAPACITY as u64 {
+            lost = head - start - RING_CAPACITY as u64;
+            start = head - RING_CAPACITY as u64;
+        }
+        for seq in start..head {
+            let slot = &self.slots[(seq % RING_CAPACITY as u64) as usize];
+            let t0_us = slot.t0_us.load(Ordering::Relaxed);
+            let packed = slot.packed.load(Ordering::Relaxed);
+            let stage = STAGES[((packed >> 56) as usize).min(STAGE_COUNT - 1)];
+            out.push(SpanEvent {
+                tid: self.tid,
+                stage,
+                t0_us,
+                dur_us: packed & DUR_MASK,
+            });
+        }
+        self.drained.store(head, Ordering::Relaxed);
+        lost
+    }
+}
+
+/// One drained span, ready for export.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    /// Trace-local thread id (assigned at ring registration).
+    pub tid: u32,
+    pub stage: Stage,
+    /// Span start, µs since the tracer's epoch.
+    pub t0_us: u64,
+    pub dur_us: u64,
+}
+
+struct TraceState {
+    epoch: Instant,
+    hists: [Pow2Hist<DUR_BUCKETS>; STAGE_COUNT],
+    /// Per stage: µs-since-epoch of the last completed span, plus one
+    /// (0 = no span of that stage has ever completed).
+    last_done_us: [AtomicU64; STAGE_COUNT],
+    ring_enabled: AtomicBool,
+    rings: CheckedMutex<Vec<Arc<SpanRing>>>,
+    next_tid: AtomicU32,
+}
+
+static STATE: OnceLock<TraceState> = OnceLock::new();
+
+fn state() -> &'static TraceState {
+    STATE.get_or_init(|| TraceState {
+        epoch: Instant::now(),
+        hists: std::array::from_fn(|_| Pow2Hist::default()),
+        last_done_us: std::array::from_fn(|_| AtomicU64::new(0)),
+        ring_enabled: AtomicBool::new(false),
+        rings: CheckedMutex::new(TRACE_RINGS_ORDER, Vec::new()),
+        next_tid: AtomicU32::new(1),
+    })
+}
+
+thread_local! {
+    static LOCAL_RING: std::cell::OnceCell<Arc<SpanRing>> = std::cell::OnceCell::new();
+}
+
+/// Register this thread's span ring (first buffered span only; the
+/// one place the record path may allocate, and it happens once per
+/// thread, before steady state).
+fn register_ring() -> Arc<SpanRing> {
+    let s = state();
+    let tid = s.next_tid.fetch_add(1, Ordering::Relaxed);
+    let name = match std::thread::current().name() {
+        Some(n) => n.to_string(),
+        None => format!("thread-{tid}"),
+    };
+    let slots: Box<[SpanSlot]> = (0..RING_CAPACITY)
+        .map(|_| SpanSlot {
+            t0_us: AtomicU64::new(0),
+            packed: AtomicU64::new(0),
+        })
+        .collect();
+    let ring = Arc::new(SpanRing {
+        tid,
+        name,
+        head: AtomicU64::new(0),
+        drained: AtomicU64::new(0),
+        slots,
+    });
+    s.rings.lock().push(Arc::clone(&ring));
+    ring
+}
+
+/// Record one completed span: stage histogram + last-completed marker,
+/// plus a ring append when buffering is on.  Hot-path safe after a
+/// thread's first buffered span.
+// tb-lint: no-alloc
+fn record(stage: Stage, t0: Instant, end: Instant) {
+    let s = state();
+    let dur_us = u64::try_from(end.saturating_duration_since(t0).as_micros()).unwrap_or(u64::MAX);
+    let i = stage as usize;
+    s.hists[i].record(dur_us);
+    let end_us =
+        u64::try_from(end.saturating_duration_since(s.epoch).as_micros()).unwrap_or(u64::MAX);
+    s.last_done_us[i].store(end_us.saturating_add(1), Ordering::Relaxed);
+    if s.ring_enabled.load(Ordering::Relaxed) {
+        let t0_us = end_us.saturating_sub(dur_us);
+        LOCAL_RING.with(|cell| cell.get_or_init(register_ring).push(stage, t0_us, dur_us));
+    }
+}
+
+/// A running span: created by [`span`], records on drop (or
+/// [`finish`](SpanTimer::finish)).  Zero-alloc; the monotonic clock is
+/// read once at start and once at drop.
+#[must_use = "a span records its duration when dropped"]
+pub struct SpanTimer {
+    stage: Stage,
+    t0: Instant,
+}
+
+/// Start timing one unit of `stage` work.
+#[inline]
+pub fn span(stage: Stage) -> SpanTimer {
+    SpanTimer {
+        stage,
+        t0: Instant::now(),
+    }
+}
+
+impl SpanTimer {
+    /// End the span now (drop does the same; this reads better at
+    /// call sites that would otherwise need an explicit `drop`).
+    #[inline]
+    pub fn finish(self) {}
+}
+
+impl Drop for SpanTimer {
+    // tb-lint: no-alloc
+    #[inline]
+    fn drop(&mut self) {
+        record(self.stage, self.t0, Instant::now());
+    }
+}
+
+/// Turn per-thread span buffering on or off (`--trace_path` turns it
+/// on for the run; the stage histograms are always recorded).
+pub fn set_ring_buffering(on: bool) {
+    state().ring_enabled.store(on, Ordering::Relaxed);
+}
+
+/// The process-wide duration histogram of one stage (µs).
+pub fn stage_hist(stage: Stage) -> &'static Pow2Hist<DUR_BUCKETS> {
+    &state().hists[stage as usize]
+}
+
+/// Drain every registered ring into `out`; returns spans lost to ring
+/// overwrite since the previous drain.  Reporting path (the sampler
+/// thread); holds the rank-80 rings lock for the copy.
+pub fn drain_spans(out: &mut Vec<SpanEvent>) -> u64 {
+    let rings = state().rings.lock();
+    let mut lost = 0u64;
+    for ring in rings.iter() {
+        lost += ring.drain_into(out);
+    }
+    lost
+}
+
+/// `(tid, thread name)` of every registered ring (Chrome `thread_name`
+/// metadata).
+pub fn ring_names() -> Vec<(u32, String)> {
+    let rings = state().rings.lock();
+    rings.iter().map(|r| (r.tid, r.name.clone())).collect()
+}
+
+/// Per stage: time since its last completed span (`None` = never).
+pub fn last_completed() -> [(&'static str, Option<Duration>); STAGE_COUNT] {
+    let s = state();
+    let now_us = u64::try_from(
+        Instant::now()
+            .saturating_duration_since(s.epoch)
+            .as_micros(),
+    )
+    .unwrap_or(u64::MAX);
+    std::array::from_fn(|i| {
+        let v = s.last_done_us[i].load(Ordering::Relaxed);
+        let age = if v == 0 {
+            None
+        } else {
+            Some(Duration::from_micros(now_us.saturating_sub(v - 1)))
+        };
+        (STAGES[i].name(), age)
+    })
+}
+
+/// One-line summary of the last-completed span per stage, for the
+/// watchdog's stall diagnosis: ages for stages that have run, then the
+/// stages that never completed a span.  Reporting path only.
+pub fn last_span_summary() -> String {
+    use std::fmt::Write as _;
+    let mut seen = String::new();
+    let mut never = String::new();
+    for (name, age) in last_completed() {
+        match age {
+            Some(age) => {
+                if !seen.is_empty() {
+                    seen.push_str(", ");
+                }
+                let _ = write!(seen, "{name} {:.1}s ago", age.as_secs_f64());
+            }
+            None => {
+                if !never.is_empty() {
+                    never.push_str(", ");
+                }
+                never.push_str(name);
+            }
+        }
+    }
+    let mut out = String::from("last spans: ");
+    out.push_str(if seen.is_empty() { "(none)" } else { &seen });
+    if !never.is_empty() {
+        out.push_str("; never ran: ");
+        out.push_str(&never);
+    }
+    out
+}
+
+/// Streaming Chrome-trace writer: drains the span rings into a JSON
+/// array of complete (`"X"`) `trace_event` records at `path`, via
+/// [`AtomicFile`] (the valid, committed file appears on
+/// [`finish`](TraceWriter::finish); mid-run the events stream into the
+/// `.tmp` sibling).  Creating the writer turns ring buffering on;
+/// finishing turns it off.
+pub struct TraceWriter {
+    file: AtomicFile,
+    pid: u32,
+    events: u64,
+    lost: u64,
+    wrote_any: bool,
+    named_tids: Vec<u32>,
+    scratch: Vec<SpanEvent>,
+    line: String,
+}
+
+impl TraceWriter {
+    pub fn create(path: &Path) -> io::Result<TraceWriter> {
+        let mut file = AtomicFile::create(path)?;
+        file.write_all(b"[")?;
+        set_ring_buffering(true);
+        Ok(TraceWriter {
+            file,
+            pid: std::process::id(),
+            events: 0,
+            lost: 0,
+            wrote_any: false,
+            named_tids: Vec::new(),
+            scratch: Vec::new(),
+            line: String::new(),
+        })
+    }
+
+    fn emit(&mut self) -> io::Result<()> {
+        use std::fmt::Write as _;
+        self.line.clear();
+        // thread_name metadata for rings first seen this drain
+        for (tid, name) in ring_names() {
+            if self.named_tids.contains(&tid) {
+                continue;
+            }
+            self.named_tids.push(tid);
+            let safe: String = name
+                .chars()
+                .map(|c| if c == '"' || c == '\\' || c.is_control() { '_' } else { c })
+                .collect();
+            let _ = write!(
+                self.line,
+                "{}\n{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":{tid},\
+                 \"args\":{{\"name\":\"{safe}\"}}}}",
+                if self.wrote_any { "," } else { "" },
+                self.pid,
+            );
+            self.wrote_any = true;
+        }
+        for ev in &self.scratch {
+            let _ = write!(
+                self.line,
+                "{}\n{{\"name\":\"{}\",\"cat\":\"pipeline\",\"ph\":\"X\",\"pid\":{},\
+                 \"tid\":{},\"ts\":{},\"dur\":{}}}",
+                if self.wrote_any { "," } else { "" },
+                ev.stage.name(),
+                self.pid,
+                ev.tid,
+                ev.t0_us,
+                ev.dur_us,
+            );
+            self.wrote_any = true;
+        }
+        self.events += self.scratch.len() as u64;
+        self.file.write_all(self.line.as_bytes())
+    }
+
+    /// Drain all rings and stream the new events out (the sampler
+    /// calls this once per period).
+    pub fn drain(&mut self) -> io::Result<()> {
+        self.scratch.clear();
+        self.lost += drain_spans(&mut self.scratch);
+        if self.scratch.is_empty() && self.named_tids.len() == ring_names().len() {
+            return Ok(());
+        }
+        self.emit()
+    }
+
+    /// Final drain, close the JSON array, and commit the file at its
+    /// final path.  Returns `(events written, spans lost to ring
+    /// overwrite)`.
+    pub fn finish(mut self) -> io::Result<(u64, u64)> {
+        set_ring_buffering(false);
+        self.scratch.clear();
+        self.lost += drain_spans(&mut self.scratch);
+        self.emit()?;
+        self.file.write_all(b"\n]\n")?;
+        self.file.flush()?;
+        let (events, lost) = (self.events, self.lost);
+        self.file.commit()?;
+        Ok((events, lost))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_are_unique_and_ordered() {
+        for (i, st) in STAGES.iter().enumerate() {
+            assert_eq!(*st as usize, i, "STAGES must follow discriminant order");
+        }
+        for a in 0..STAGE_COUNT {
+            for b in (a + 1)..STAGE_COUNT {
+                assert_ne!(STAGES[a].name(), STAGES[b].name());
+            }
+        }
+    }
+
+    #[test]
+    fn span_records_into_the_stage_hist_and_last_completed() {
+        let h = stage_hist(Stage::CheckpointWrite);
+        let before = h.count();
+        {
+            let sp = span(Stage::CheckpointWrite);
+            std::thread::sleep(Duration::from_millis(2));
+            sp.finish();
+        }
+        assert!(h.count() > before, "drop must record the span");
+        let last = last_completed();
+        let (name, age) = last[Stage::CheckpointWrite as usize];
+        assert_eq!(name, "checkpoint_write");
+        let age = age.expect("stage just completed a span");
+        assert!(age < Duration::from_secs(30), "fresh completion, got {age:?}");
+        let summary = last_span_summary();
+        assert!(summary.contains("checkpoint_write"), "{summary}");
+    }
+
+    #[test]
+    fn ring_captures_buffered_spans_per_thread() {
+        set_ring_buffering(true);
+        let handle = std::thread::Builder::new()
+            .name("trace-test-ring".into())
+            .spawn(|| {
+                for _ in 0..5 {
+                    span(Stage::ShardBarrier).finish();
+                }
+                // this thread's tid, straight off its registered ring
+                LOCAL_RING.with(|cell| cell.get().map(|r| r.tid))
+            })
+            .expect("spawn");
+        let tid = handle.join().expect("join").expect("ring registered");
+        let mut out = Vec::new();
+        drain_spans(&mut out);
+        let mine: Vec<&SpanEvent> = out.iter().filter(|e| e.tid == tid).collect();
+        assert_eq!(mine.len(), 5, "all five buffered spans drained");
+        assert!(mine.iter().all(|e| e.stage == Stage::ShardBarrier));
+        assert!(
+            ring_names().iter().any(|(t, n)| *t == tid && n == "trace-test-ring"),
+            "ring carries the thread name"
+        );
+        set_ring_buffering(false);
+    }
+
+    #[test]
+    fn trace_writer_produces_loadable_chrome_json() {
+        use crate::util::json::Json;
+
+        let dir = std::env::temp_dir().join("tb_trace_writer_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        let _ = std::fs::remove_file(&path);
+
+        let mut w = TraceWriter::create(&path).unwrap();
+        let t = std::thread::Builder::new()
+            .name("trace-test-writer".into())
+            .spawn(|| {
+                for _ in 0..3 {
+                    span(Stage::WeightPublish).finish();
+                }
+            })
+            .unwrap();
+        t.join().unwrap();
+        w.drain().unwrap();
+        let (events, _lost) = w.finish().unwrap();
+        assert!(events >= 3, "wrote only {events} events");
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let root = Json::parse(&text).expect("trace file must be valid JSON");
+        let arr = root.as_arr().expect("top level is the event array");
+        assert!(arr.len() as u64 >= events);
+        let mut publishes = 0usize;
+        for ev in arr {
+            let ph = ev.get("ph").and_then(|p| p.as_str()).expect("ph");
+            assert!(ph == "X" || ph == "M", "only complete + metadata events");
+            assert!(ev.get("pid").is_some());
+            assert!(ev.get("tid").is_some());
+            if ph == "X" {
+                assert!(ev.get("ts").is_some() && ev.get("dur").is_some());
+                if ev.get("name").and_then(|n| n.as_str()) == Some("weight_publish") {
+                    publishes += 1;
+                }
+            }
+        }
+        assert!(publishes >= 3, "the three buffered spans are in the file");
+    }
+}

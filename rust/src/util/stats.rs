@@ -6,6 +6,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::telemetry::hist::nearest_rank;
 use crate::util::sync::{CheckedMutex, LockOrder};
 
 /// Streaming summary of a series of f64 samples.
@@ -183,20 +184,15 @@ impl LatencyRing {
         }
         let window = &mut scratch[..live];
         window.sort_unstable();
+        // exact nearest-rank quantiles via the shared telemetry rule
+        // (telemetry::hist) — the ring, the gauge snapshot, and the
+        // /metrics exposition all report the same p50/p99 numbers
         LatencyQuantiles {
             count,
             p50_us: nearest_rank(window, 50),
             p99_us: nearest_rank(window, 99),
         }
     }
-}
-
-/// Nearest-rank quantile on a sorted window: `rank = ceil(q·n/100)`,
-/// clamped to at least 1; the sample at index `rank − 1`.
-fn nearest_rank(sorted: &[u64], q: u64) -> u64 {
-    let n = sorted.len() as u64;
-    let rank = (q * n).div_ceil(100).max(1);
-    sorted[(rank - 1) as usize]
 }
 
 /// Exponential moving average (for returns / loss curves).

@@ -28,6 +28,8 @@
 //! | 50   | `learner_pool` `sync`             |
 //! | 60   | `stats.latency_ring` scratch      |
 //! | 70   | `supervisor` heartbeat registry   |
+//! | 80   | `trace.rings` span-ring registry  |
+//! | 90   | `exporter.registry` render state  |
 
 use std::ops::{Deref, DerefMut};
 use std::sync::{Condvar, Mutex, MutexGuard};

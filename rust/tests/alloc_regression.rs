@@ -6,6 +6,9 @@
 //! buffer → learner queue → time-major stacking → pool recycle — under
 //! the counting global allocator and asserts the steady state performs
 //! **zero** heap allocations per env step and per rollout handoff.
+//! Span-ring tracing is switched on for the measured windows, so the
+//! tracer's record path (histogram + ring push) rides inside the same
+//! zero budget (DESIGN.md §Tracing).
 //!
 //! Run explicitly (scripts/ci.sh does):
 //!     cargo test --release --test alloc_regression
@@ -76,6 +79,10 @@ fn stub_manifest(obs_shape: [usize; 3], num_actions: usize) -> Manifest {
 #[test]
 fn actor_to_learner_path_is_allocation_free_at_steady_state() {
     let _serial = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // measure the fully traced path: with ring buffering on, every
+    // ActorUnroll/EnvStep span also appends to its thread's span ring
+    // (registration allocates once per thread, during warm-up)
+    torchbeast::telemetry::trace::set_ring_buffering(true);
     // frame_stack = 2 exercises the FrameStack ring's in-place writes
     // (it used to allocate a scratch Vec per env step)
     let wrappers = WrapperCfg {
@@ -167,6 +174,7 @@ fn actor_to_learner_path_is_allocation_free_at_steady_state() {
     client.shutdown_for_tests();
     let exits = pool.join();
     infer_thread.join().unwrap();
+    torchbeast::telemetry::trace::set_ring_buffering(false);
     assert_eq!(exits.len(), ACTORS);
     let produced: u64 = exits
         .iter()
@@ -499,6 +507,10 @@ fn served_inference_round_is_allocation_free_at_steady_state() {
     use torchbeast::telemetry::gauges::PipelineGauges;
 
     let _serial = MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // span the serve rounds into the tracer's rings too: the per-round
+    // ring push must be as allocation-free as the round itself (the
+    // one-time per-thread ring registration lands in warm-up)
+    torchbeast::telemetry::trace::set_ring_buffering(true);
     const B: usize = 4;
     let obs_len = 6usize;
     let num_actions = 4usize;
@@ -561,6 +573,7 @@ fn served_inference_round_is_allocation_free_at_steady_state() {
     drop(client);
     server.shutdown();
     backend.join().unwrap();
+    torchbeast::telemetry::trace::set_ring_buffering(false);
     let snap = gauges.snapshot();
     assert_eq!(snap.serve_requests, (warmup + measure) as u64);
     assert_eq!(snap.serve_busy, 0, "a lone stream must never draw Busy");

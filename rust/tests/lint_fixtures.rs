@@ -4,7 +4,7 @@
 //! the crate's own `src/` tree must lint clean — the same self-hosting
 //! gate `scripts/ci.sh` enforces via the `tb_lint` binary.
 
-use torchbeast::lint::{lint_source, lint_tree, Rule};
+use torchbeast::lint::{lint_source, lint_tree, lock_rank_findings, Rule};
 
 /// Findings of a fixture as comparable `(rule, line)` pairs.
 fn rules_at(file: &str, src: &str) -> Vec<(Rule, usize)> {
@@ -114,6 +114,40 @@ fn finding_renders_file_line_rule() {
     assert_eq!(
         findings[0].to_string(),
         "sub/dir/bad_print.rs:4: [print] `println!` outside telemetry/ and main.rs — use tb_info!/tb_warn!"
+    );
+}
+
+/// The cross-file lock-rank registry check (util/sync.rs rank table):
+/// two locks sharing a rank is a finding that names the first
+/// registration; unique ranks are clean.
+#[test]
+fn duplicate_lock_rank_across_files_is_a_finding() {
+    let clean = [
+        (
+            "a.rs".to_string(),
+            "const A: LockOrder = LockOrder::new(10, \"a\");\n".to_string(),
+        ),
+        (
+            "b.rs".to_string(),
+            "const B: LockOrder = LockOrder::new(90, \"b\");\n".to_string(),
+        ),
+    ];
+    assert_eq!(lock_rank_findings(&clean), vec![]);
+
+    let dup = [
+        clean[0].clone(),
+        (
+            "c.rs".to_string(),
+            "const C: LockOrder = LockOrder::new(10, \"c\");\n".to_string(),
+        ),
+    ];
+    let findings = lock_rank_findings(&dup);
+    assert_eq!(findings.len(), 1);
+    assert_eq!(findings[0].rule, Rule::LockRank);
+    assert_eq!(
+        findings[0].to_string(),
+        "c.rs:1: [lockrank] lock rank 10 already registered at a.rs:1 — \
+         ranks must be globally unique (util/sync.rs rank table)"
     );
 }
 

@@ -1,0 +1,225 @@
+//! Observability integration: the tracer, the gauge-CSV stage columns
+//! and the /metrics exposition endpoint exercised against live
+//! pipelines (DESIGN.md §Tracing).
+//!
+//! The exporter test runs artifact-free against a real policy-serving
+//! stack; the trainer tests need `make artifacts` (skipped loudly
+//! otherwise, like `train_integration.rs`).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+
+use torchbeast::config::TrainConfig;
+use torchbeast::coordinator;
+use torchbeast::serving::{run_inference_loop, PolicyClient, PolicyServer, PolicyServerConfig};
+use torchbeast::telemetry::exporter::MetricsServer;
+use torchbeast::telemetry::gauges::PipelineGauges;
+use torchbeast::telemetry::sampler::{GAUGE_CURVE_HEADER, GAUGE_CURVE_SCHEMA_VERSION};
+use torchbeast::util::json::Json;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/catch");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/catch missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn base_cfg(dir: PathBuf) -> TrainConfig {
+    TrainConfig {
+        artifact_dir: dir,
+        num_actors: 4,
+        total_steps: 8,
+        seed: 3,
+        log_interval: 0,
+        ..TrainConfig::default()
+    }
+}
+
+fn scrape(addr: std::net::SocketAddr) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(b"GET /metrics HTTP/1.0\r\nHost: test\r\n\r\n")
+        .unwrap();
+    let mut text = String::new();
+    stream.read_to_string(&mut text).unwrap();
+    let (head, body) = text.split_once("\r\n\r\n").expect("header/body split");
+    (head.to_string(), body.to_string())
+}
+
+/// Pull one sample value out of a Prometheus text body by its exact
+/// name-plus-labels prefix.
+fn sample_value(body: &str, series: &str) -> u64 {
+    body.lines()
+        .find_map(|l| l.strip_prefix(series))
+        .unwrap_or_else(|| panic!("series {series:?} missing from:\n{body}"))
+        .trim()
+        .parse()
+        .expect("numeric sample")
+}
+
+/// Artifact-free end-to-end scrape: a live policy-serving stack and a
+/// metrics endpoint share one gauge registry; after real served
+/// rounds, `GET /metrics` must reflect both the serving counters and
+/// the `serve_round` stage histogram the spans recorded.
+#[test]
+fn metrics_endpoint_reflects_live_policy_serving() {
+    let gauges = PipelineGauges::shared();
+    let cfg = PolicyServerConfig::new([1, 2, 2], 3, 4);
+    let mut server =
+        PolicyServer::start_with_gauges("127.0.0.1:0", cfg, gauges.clone()).unwrap();
+    let stream = server.take_batch_stream().unwrap();
+    let backend = std::thread::spawn(move || {
+        run_inference_loop(&stream, 3, |_obs, n, logits, baselines| {
+            logits.clear();
+            baselines.clear();
+            logits.resize(n * 3, 0.5);
+            baselines.resize(n, 0.0);
+            Ok(())
+        })
+        .unwrap();
+    });
+    let metrics = MetricsServer::start("127.0.0.1:0", gauges.clone()).unwrap();
+
+    let addr = server.addr.to_string();
+    let mut client = PolicyClient::connect(&[addr], &[7, 8]).unwrap();
+    let mut actions = [0usize; 2];
+    for round in 0..5 {
+        let obs: Vec<f32> = (0..8).map(|i| (round * 8 + i) as f32 * 0.01).collect();
+        client.act(&obs, &mut actions).unwrap();
+    }
+
+    let (head, body) = scrape(metrics.local_addr());
+    assert!(head.starts_with("HTTP/1.0 200 OK"), "{head}");
+    assert_eq!(sample_value(&body, "tb_serve_requests_total "), 5);
+    assert_eq!(sample_value(&body, "tb_serve_busy_total "), 0);
+    assert!(
+        sample_value(&body, "tb_serve_latency_p99_us ") > 0,
+        "latency ring must have recorded the rounds:\n{body}"
+    );
+    // every served round ran inside a serve_round span; the histogram
+    // is process-global, so other tests can only add to the count
+    assert!(
+        sample_value(&body, "tb_stage_duration_us_count{stage=\"serve_round\"} ") >= 5,
+        "serve_round spans missing from the stage histogram:\n{body}"
+    );
+    assert!(
+        body.contains("tb_stage_duration_us_bucket{stage=\"serve_round\",le=\"+Inf\"}"),
+        "{body}"
+    );
+
+    drop(client);
+    server.shutdown();
+    backend.join().unwrap();
+    assert!(metrics.shutdown() >= 1, "at least our scrape was answered");
+}
+
+/// `--trace_path` through the real driver: the committed file is a
+/// loadable Chrome `trace_event` JSON array whose `"X"` events carry
+/// the pipeline stage names, with actor and learner work both present.
+#[test]
+fn train_with_trace_path_writes_loadable_chrome_trace() {
+    let Some(dir) = artifact_dir() else { return };
+    let tmp = std::env::temp_dir().join("tb_observability_trace");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let trace = tmp.join("trace.json");
+    let _ = std::fs::remove_file(&trace);
+
+    let mut cfg = base_cfg(dir);
+    cfg.trace_path = Some(trace.clone());
+    cfg.gauge_sample_ms = 20;
+    let report = coordinator::train(&cfg).unwrap();
+    assert_eq!(report.steps, 8);
+
+    let text = std::fs::read_to_string(&trace).expect("trace file committed");
+    let root = Json::parse(&text).expect("trace must be valid JSON");
+    let events = root.as_arr().expect("top level is the event array");
+    assert!(!events.is_empty(), "a live run must emit spans");
+    let known: Vec<&str> = torchbeast::telemetry::trace::STAGES
+        .iter()
+        .map(|s| s.name())
+        .collect();
+    let mut seen_stages: Vec<&str> = Vec::new();
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str()).expect("ph field");
+        assert!(ph == "X" || ph == "M", "unexpected phase {ph:?}");
+        assert!(ev.get("pid").is_some() && ev.get("tid").is_some());
+        if ph == "X" {
+            assert!(ev.get("ts").is_some() && ev.get("dur").is_some());
+            let name = ev.get("name").and_then(|n| n.as_str()).expect("name");
+            assert!(known.contains(&name), "unknown stage {name:?}");
+            if !seen_stages.contains(&name) {
+                seen_stages.push(name);
+            }
+        }
+    }
+    for must in ["actor_unroll", "env_step", "learner_step", "weight_publish"] {
+        assert!(
+            seen_stages.contains(&must),
+            "stage {must} missing from the trace (saw {seen_stages:?})"
+        );
+    }
+}
+
+/// `--metrics_addr` through the real driver: the endpoint starts with
+/// the run and shuts down cleanly with it (port 0 keeps the test
+/// parallel-safe; the exporter's scrape contract is pinned above and
+/// in the exporter's own suite).
+#[test]
+fn train_with_metrics_addr_starts_and_stops_cleanly() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut cfg = base_cfg(dir);
+    cfg.total_steps = 4;
+    cfg.metrics_addr = Some("127.0.0.1:0".to_string());
+    let report = coordinator::train(&cfg).unwrap();
+    assert_eq!(report.steps, 4);
+}
+
+/// The gauge CSV after the v2 schema bump: every row leads with the
+/// schema version, matches the header arity, and the per-stage
+/// duration columns carry real span quantiles from the run.
+#[test]
+fn gauge_csv_v2_carries_stage_duration_columns() {
+    let Some(dir) = artifact_dir() else { return };
+    let tmp = std::env::temp_dir().join("tb_observability_csv");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let csv = tmp.join("gauges.csv");
+    let _ = std::fs::remove_file(&csv);
+
+    let mut cfg = base_cfg(dir);
+    cfg.gauge_log_path = Some(csv.clone());
+    cfg.gauge_sample_ms = 10;
+    let report = coordinator::train(&cfg).unwrap();
+    assert_eq!(report.steps, 8);
+
+    let text = std::fs::read_to_string(&csv).unwrap();
+    let mut lines = text.lines();
+    let header = lines.next().expect("header row");
+    assert_eq!(header, GAUGE_CURVE_HEADER);
+    let cols = header.split(',').count();
+    let version_col = GAUGE_CURVE_SCHEMA_VERSION.to_string();
+    let p50_col = header
+        .split(',')
+        .position(|c| c == "learner_step_p50_us")
+        .expect("stage column in header");
+    let mut rows = 0usize;
+    let mut learner_p50_seen = false;
+    for row in lines {
+        rows += 1;
+        let fields: Vec<&str> = row.split(',').collect();
+        assert_eq!(fields.len(), cols, "row arity matches header: {row}");
+        assert_eq!(fields[0], version_col, "schema version leads every row");
+        let p50: u64 = fields[p50_col].parse().expect("numeric stage column");
+        if p50 > 0 {
+            learner_p50_seen = true;
+        }
+    }
+    assert!(rows >= 1, "the 10ms sampler must land rows in an 8-step run");
+    assert!(
+        learner_p50_seen,
+        "learner_step p50 stays zero despite 8 real learner steps:\n{text}"
+    );
+}

@@ -2,7 +2,7 @@
 # Bench artifact harness:  scripts/bench.sh [out.json]
 #
 # Runs the stub-policy benches (no AOT artifacts needed) and writes a
-# machine-readable summary — default BENCH_8.json at the repo root —
+# machine-readable summary — default BENCH_10.json at the repo root —
 # so the repo's perf trajectory is diffable from PR 5 on:
 #
 #   * benches/replay.rs   -> replay insert/sample ns + end-to-end fps
@@ -14,15 +14,19 @@
 #   * benches/rpc.rs      -> env-serving round-trip latency plus the
 #                            served-inference sweep (policy-server
 #                            tier: streams x group_B, actions/s + p99)
+#   * benches/trace.rs    -> span tracer ns/span, histogram-only vs
+#                            ring-buffered, plus drain ns/event
+#                            (budget: < 50 ns per buffered span)
 #   * benches/throughput.rs (grouped-actor section; the artifact-bound
 #                            E2 section self-skips without artifacts)
 #
 # Human-readable tables go to stdout; the JSON sections come from the
-# replay/shards/rpc benches' --json flags and are merged into one object.
+# replay/shards/rpc/trace benches' --json flags and are merged into one
+# object.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
-out="${1:-BENCH_8.json}"
+out="${1:-BENCH_10.json}"
 case "$out" in
     /*) ;;
     *) out="$(pwd)/$out" ;;
@@ -33,7 +37,8 @@ cd rust
 tmp_replay="$(mktemp)"
 tmp_shards="$(mktemp)"
 tmp_rpc="$(mktemp)"
-trap 'rm -f "$tmp_replay" "$tmp_shards" "$tmp_rpc"' EXIT
+tmp_trace="$(mktemp)"
+trap 'rm -f "$tmp_replay" "$tmp_shards" "$tmp_rpc" "$tmp_trace"' EXIT
 
 echo "== cargo bench --bench replay =="
 cargo bench --bench replay -- --json "$tmp_replay"
@@ -43,6 +48,9 @@ cargo bench --bench shards -- --json "$tmp_shards"
 
 echo "== cargo bench --bench rpc (env serving + served inference) =="
 cargo bench --bench rpc -- --json "$tmp_rpc"
+
+echo "== cargo bench --bench trace (span tracer record path) =="
+cargo bench --bench trace -- --json "$tmp_trace"
 
 echo "== cargo bench --bench throughput (stub grouped-actor section) =="
 cargo bench --bench throughput
@@ -58,6 +66,9 @@ cargo bench --bench throughput
     echo '  ,'
     echo '  "rpc":'
     sed 's/^/  /' "$tmp_rpc"
+    echo '  ,'
+    echo '  "trace":'
+    sed 's/^/  /' "$tmp_trace"
     echo '}'
 } > "$out"
 

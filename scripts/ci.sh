@@ -60,6 +60,17 @@ cargo test --release replay
 echo "== cargo test --release learner_pool =="
 cargo test --release learner_pool
 
+# The tracer + exposition endpoint (DESIGN.md §Tracing): span-ring
+# drain protocol, Chrome-trace JSON validity, Prometheus scrape syntax
+# and connection-churn behaviour are timing-sensitive — they must hold
+# in the optimized build.  `telemetry::` picks up the trace + exporter
+# unit suites; the observability integration suite drives them through
+# real serving/training pipelines.
+echo "== cargo test --release telemetry:: =="
+cargo test --release telemetry::
+echo "== cargo test --release --test observability =="
+cargo test --release --test observability -- --nocapture
+
 # Run supervision (DESIGN.md §Supervision): respawn bit-identity,
 # restart-budget exhaustion without deadlock, watchdog stall diagnosis
 # + emergency checkpoint, and checkpoint corruption fallback are
